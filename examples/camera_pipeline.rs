@@ -1,0 +1,87 @@
+//! Fig 19 / Fig 20 reproduction: the camera-powered deep learning
+//! pipeline — the Halide-style camera stages run functionally on a
+//! synthetic 720p Bayer frame (CPU-timed), then CNN10 classifies the
+//! downsampled frame on the systolic-array backend, against a 30 FPS
+//! (33.3 ms) frame-time budget. A PE-configuration sweep shows where the
+//! real-time constraint breaks.
+//!
+//! Run: `cargo run --release --example camera_pipeline`
+
+use smaug::camera::{self, RawFrame};
+use smaug::config::{AccelKind, SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::trace::Timeline;
+use smaug::util::fmt_ns;
+
+fn dnn_latency_ns(rows: usize, cols: usize) -> anyhow::Result<f64> {
+    let mut soc = SocConfig::default();
+    soc.systolic_rows = rows;
+    soc.systolic_cols = cols;
+    let opts = SimOptions {
+        accel_kind: AccelKind::Systolic,
+        ..SimOptions::default()
+    };
+    let g = nets::build_network("cnn10")?;
+    Ok(Simulator::new(soc, opts).run(&g)?.total_ns)
+}
+
+fn main() -> anyhow::Result<()> {
+    let budget_ms = 1000.0 / 30.0;
+    let soc = SocConfig::default();
+
+    // --- Fig 19: one frame through the full pipeline, with trace.
+    println!("=== camera vision pipeline, one 720p frame (Fig 19) ===");
+    let raw = RawFrame::synthetic(1280, 720, 42);
+    let mut tl = Timeline::new(true);
+    let (rgb, stages) = camera::run_pipeline(&raw, &soc, 1, Some(&mut tl));
+    let cam_ns = camera::pipeline_ns(&stages);
+    for s in &stages {
+        println!("  {:<14} {:>12}", s.name, fmt_ns(s.ns));
+    }
+    // Downsample to the DNN input (functional).
+    let small = camera::downsample(&rgb, 32, 32);
+    assert_eq!(small.data.len(), 32 * 32 * 3);
+    let dnn_ns = dnn_latency_ns(8, 8)?;
+    println!(
+        "  camera {} + DNN {} = frame {} (budget {:.1} ms, slack {:.1} ms)",
+        fmt_ns(cam_ns),
+        fmt_ns(dnn_ns),
+        fmt_ns(cam_ns + dnn_ns),
+        budget_ms,
+        budget_ms - (cam_ns + dnn_ns) / 1e6
+    );
+    println!("\n{}", tl.ascii_gantt(90));
+
+    // --- Fig 20: PE-array sweep.
+    println!("=== systolic PE sweep (Fig 20) ===");
+    println!(
+        "{:<8} {:>12} {:>12} {:>10}",
+        "PEs", "DNN", "frame", "30 FPS?"
+    );
+    let budget60_ms = 1000.0 / 60.0;
+    println!(
+        "{:<8} {:>12} {:>12} {:>10} {:>10}",
+        "PEs", "DNN", "frame", "30 FPS?", "60 FPS?"
+    );
+    for (r, c) in [(8usize, 8usize), (4, 8), (4, 4), (2, 4), (2, 2), (1, 2), (1, 1)] {
+        let dnn = dnn_latency_ns(r, c)?;
+        let frame = cam_ns + dnn;
+        let verdict = |b: f64| if frame / 1e6 <= b { "meets" } else { "VIOLATES" };
+        println!(
+            "{:<8} {:>12} {:>12} {:>10} {:>10}",
+            format!("{r}x{c}"),
+            fmt_ns(dnn),
+            fmt_ns(frame),
+            verdict(budget_ms),
+            verdict(budget60_ms)
+        );
+    }
+    println!(
+        "\n(paper's testbed breaks at 4x4 @30FPS; our transaction-level\n\
+         systolic model is faster per-tile, so the 30 FPS crossover shifts\n\
+         to a smaller array, while at 60 FPS it lands near the paper's 4x4.\n\
+         The qualitative cliff is preserved. See EXPERIMENTS.md.)"
+    );
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Quickstart: build a small network with the declarative graph builder
+//! (the Rust mirror of SMAUG's Python frontend, paper Fig 2), simulate a
+//! forward pass on the baseline SoC, and print the latency breakdown.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use smaug::config::{SimOptions, SocConfig};
+use smaug::graph::{Activation, GraphBuilder, Padding};
+use smaug::sim::Simulator;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's Fig-2 example: a residual unit.
+    let mut g = GraphBuilder::new("residual_unit");
+    let input = g.input("input", 1, 32, 32, 8);
+    let conv0 = g.conv("conv0", input, 64, 3, 1, Padding::Same, Some(Activation::Relu));
+    let conv1 = g.conv("conv1", conv0, 8, 3, 1, Padding::Same, None);
+    g.add("add", conv1, input, Some(Activation::Relu));
+    let mut graph = g.build();
+    graph.fuse(); // automatic conv + element-wise fusion
+    println!("{}\n", graph.summary());
+
+    // Baseline SoC (paper Table II): 1 NVDLA-style engine, DMA, 1 thread.
+    let sim = Simulator::new(SocConfig::default(), SimOptions::default());
+    let report = sim.run(&graph)?;
+    println!("{}\n", report.breakdown_table());
+    println!("{}", report.per_op_table());
+
+    // The paper's optimized configuration: ACP + 8 accels + 8 threads.
+    let fast = Simulator::new(SocConfig::default(), SimOptions::optimized());
+    let opt = fast.run(&graph)?;
+    println!(
+        "optimized (ACP + 8 accels + 8 threads): {} ({:.2}x speedup)",
+        smaug::util::fmt_ns(opt.total_ns),
+        report.total_ns / opt.total_ns
+    );
+    Ok(())
+}

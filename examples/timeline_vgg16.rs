@@ -1,0 +1,61 @@
+//! Fig 14 reproduction: accelerator-utilization timeline of VGG16's last
+//! ten layers on an 8-accelerator system.
+//!
+//! The paper's observations to look for in the output:
+//! * layers whose reduction-group count is below 8 cannot fill the pool
+//!   (in-place channel reduction pins a group to one command queue);
+//! * after a conv finishes, a long CPU "data finalization" gap follows
+//!   (gathering output tiles) before the next layer starts.
+//!
+//! Run: `cargo run --release --example timeline_vgg16`
+
+use smaug::config::{SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::util::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    let graph = nets::build_network("vgg16")?;
+    let opts = SimOptions {
+        num_accels: 8,
+        ..SimOptions::default()
+    };
+    let sim = Simulator::new(SocConfig::default(), opts);
+    let (report, timeline) = sim.run_with_timeline(&graph)?;
+
+    println!("VGG16, 8 accelerators, DMA, 1 sw thread\n");
+    println!("{}", timeline.ascii_gantt(110));
+
+    // Per-op utilization of the pool during each op's hardware phase.
+    println!(
+        "\n{:<10} {:>4} {:>8} {:>10} {:>12} {:>10}",
+        "op", "tag", "groups", "tiles", "span", "pool util"
+    );
+    for op in report.ops.iter().filter(|o| o.tiles > 0) {
+        let hw_t0 = op.start_ns + op.prep_ns;
+        let hw_t1 = hw_t0 + op.accel_ns + op.transfer_ns;
+        let util = timeline.accel_utilization(8, hw_t0, hw_t1);
+        println!(
+            "{:<10} {:>4} {:>8} {:>10} {:>12} {:>9.0}%",
+            op.name,
+            op.tag,
+            op.reduce_groups,
+            op.tiles,
+            fmt_ns(op.span_ns()),
+            util * 100.0
+        );
+    }
+    println!("\ntotal: {}", fmt_ns(report.total_ns));
+
+    // The Fig-14 phenomenon: at least one conv layer has < 8 reduction
+    // groups and therefore cannot use the whole pool.
+    let starved = report
+        .ops
+        .iter()
+        .filter(|o| o.tag == "C" && o.reduce_groups > 0 && o.reduce_groups < 8)
+        .count();
+    println!(
+        "layers unable to fill the 8-accelerator pool (reduce groups < 8): {starved}"
+    );
+    Ok(())
+}

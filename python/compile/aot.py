@@ -1,0 +1,79 @@
+"""AOT pipeline: lower the L2 model (with its L1 Pallas kernels) to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the published ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs, under ``--out-dir`` (default ``artifacts/``):
+
+  gemm_m{M}_k{K}_n{N}_{variant}.hlo.txt   one per canonical tile shape
+  manifest.txt                            one line per artifact:
+      gemm <M> <K> <N> <variant> <relative-path>
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated m,k,n,variant filter for quick rebuilds",
+    )
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = None
+    if args.only:
+        parts = args.only.split(",")
+        only = (int(parts[0]), int(parts[1]), int(parts[2]), parts[3])
+
+    manifest_lines = []
+    count = 0
+    for m, k, n, variant in model.canonical_shapes():
+        if only is not None and (m, k, n, variant) != only:
+            continue
+        name = f"gemm_m{m}_k{k}_n{n}_{variant}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        lowered = model.lower_tile(m, k, n, variant)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"gemm {m} {k} {n} {variant} {name}")
+        count += 1
+        if count % 16 == 0:
+            print(f"  ... {count} artifacts", file=sys.stderr)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest_path, "w") as f:
+        f.write("# kind M K N variant path\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {count} HLO artifacts + manifest to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,146 @@
+"""Layer-1 Pallas kernel: the NVDLA convolution-engine dataflow as a GEMM tile.
+
+The NVDLA-inspired engine in SMAUG (paper Fig. 4) is built from 8 PEs, each
+a 32-way multiply-accumulate array that reduces partial products across a
+32-element *channel block* per cycle, with weights register-resident
+(L0 weight-stationary) and inputs/outputs SRAM-resident (L1 input/output
+stationary).  After im2col, a convolution tile is exactly a GEMM
+
+    out[M, N] = A[M, K] @ W[K, N]      M = out rows*cols of the tile
+                                       K = R*S*C_tile (reduced channel dim)
+                                       N = output channels of the tile
+
+and the NVDLA dataflow is a K-blocked accumulation with block size 32.
+
+Hardware adaptation (TPU-style, per DESIGN.md §Hardware-Adaptation): the
+paper's DRAM->scratchpad tiling becomes the BlockSpec HBM->VMEM schedule;
+the 32-wide channel reduction becomes the innermost contraction block; the
+8-PE output-channel parallelism is the kernel grid's N dimension.  The
+kernel is lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls); on a real TPU the same kernel maps the contraction onto the
+MXU.
+
+Functional note: SMAUG's hardware uses 16-bit fixed point with 32-bit
+accumulation.  We compute in f32 (accumulate in f32) and model the 16-bit
+datapath in the Rust timing/energy models; numerics here are the
+*functional* reference semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The NVDLA MACC array reduces 32 channel elements per PE per cycle; the
+# kernel accumulates over K in blocks of this size.
+CHANNEL_BLOCK = 32
+
+
+def _nvdla_gemm_kernel(a_ref, w_ref, o_ref):
+    """K-blocked accumulating GEMM kernel body (grid = K / CHANNEL_BLOCK)."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _nvdla_gemm_bias_act_kernel(a_ref, w_ref, b_ref, o_ref, *, activation):
+    """Fused GEMM + bias + activation (SMAUG fuses conv + element-wise)."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "none":
+            pass
+        else:  # pragma: no cover - guarded by caller
+            raise ValueError(f"unknown activation {activation}")
+        o_ref[...] = acc
+
+
+def _kblock(k: int) -> int:
+    """Channel-block size: 32 when K allows it, else the whole of K."""
+    if k % CHANNEL_BLOCK == 0:
+        return CHANNEL_BLOCK
+    return k
+
+
+def nvdla_gemm(a: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """``a[M,K] @ w[K,N]`` via the NVDLA-dataflow Pallas kernel."""
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    kb = _kblock(k)
+    grid = (k // kb,)
+    return pl.pallas_call(
+        _nvdla_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, kb), lambda i: (0, i)),
+            pl.BlockSpec((kb, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, w)
+
+
+def nvdla_gemm_bias_act(
+    a: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    *,
+    activation: str = "relu",
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused ``act(a @ w + bias)`` via the NVDLA-dataflow Pallas kernel.
+
+    ``bias`` has shape ``(1, N)`` and is broadcast over rows, matching the
+    per-output-channel bias of a convolution layer.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert bias.shape == (1, n), f"bias shape {bias.shape} != (1, {n})"
+    kb = _kblock(k)
+    grid = (k // kb,)
+    kernel = functools.partial(_nvdla_gemm_bias_act_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, kb), lambda i: (0, i)),
+            pl.BlockSpec((kb, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, w, bias)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int, elem_bytes: int = 4) -> int:
+    """Estimated VMEM-resident bytes for one grid step of the kernel.
+
+    Mirrors the paper's three-scratchpad budget (inputs, weights, outputs,
+    32 KB each): one A block (m x kb), one W block (kb x n), and the
+    accumulating output block (m x n).
+    """
+    kb = _kblock(k)
+    return elem_bytes * (m * kb + kb * n + m * n)

@@ -1,0 +1,149 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model ops.
+
+Everything here is deliberately written with plain jnp / lax primitives
+(no Pallas) so pytest can compare kernel output against an independent
+implementation.  These are also the semantics the Rust reference executor
+(`rust/src/refexec/`) mirrors, so the whole stack shares one functional
+contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def gemm(a: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain ``a[M,K] @ w[K,N]`` in f32."""
+    return jnp.dot(
+        a.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gemm_bias_act(
+    a: jax.Array, w: jax.Array, bias: jax.Array, activation: str = "relu"
+) -> jax.Array:
+    out = gemm(a, w) + bias.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation}")
+    return out
+
+
+def conv2d_nhwc(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jax.Array:
+    """NHWC convolution; ``w`` is ``(K, R, S, C)`` (SMAUG's weight layout)."""
+    # lax wants HWIO for rhs.
+    w_hwio = jnp.transpose(w, (1, 2, 3, 0))
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w_hwio.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def max_pool_nhwc(x: jax.Array, size: int = 2, stride: int = 2) -> jax.Array:
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, size, size, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def avg_pool_nhwc(x: jax.Array, size: int, stride: int) -> jax.Array:
+    summed = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(1, size, size, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+    return summed / float(size * size)
+
+
+def batch_norm_nhwc(
+    x: jax.Array,
+    mean: jax.Array,
+    var: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    eps: float = 1e-5,
+) -> jax.Array:
+    inv = gamma / jnp.sqrt(var + eps)
+    return x * inv + (beta - mean * inv)
+
+
+def im2col_nhwc(
+    x: jax.Array, r: int, s: int, *, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """Unfold an NHWC image into the ``(M, K)`` GEMM operand.
+
+    M = N*H_out*W_out rows, K = r*s*C columns, ordered (kr, kc, c) to match
+    the NVDLA weight layout — the same transform SMAUG's software stack
+    performs during data preparation.
+    """
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        out_h = -(-h // stride)
+        out_w = -(-w // stride)
+        pad_h = max((out_h - 1) * stride + r - h, 0)
+        pad_w = max((out_w - 1) * stride + s - w, 0)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+                (0, 0),
+            ),
+        )
+    elif padding == "VALID":
+        out_h = (h - r) // stride + 1
+        out_w = (w - s) // stride + 1
+    else:
+        raise ValueError(padding)
+    cols = []
+    for kr in range(r):
+        for kc in range(s):
+            patch = lax.dynamic_slice(
+                x,
+                (0, kr, kc, 0),
+                (n, (out_h - 1) * stride + 1, (out_w - 1) * stride + 1, c),
+            )
+            patch = patch[:, ::stride, ::stride, :]
+            cols.append(patch.reshape(n * out_h * out_w, c))
+    # Interleave so each row is ordered (kr, kc, c) fastest-to-slowest = c.
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv2d_via_gemm(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """Convolution through im2col + GEMM — validates the lowering the Rust
+    scheduler uses on the accelerator path."""
+    k, r, s, c = w.shape
+    n, h, wid, _ = x.shape
+    a = im2col_nhwc(x, r, s, stride=stride, padding=padding)
+    w_mat = jnp.transpose(w.reshape(k, r * s * c))  # (K_gemm, N=k)
+    out = gemm(a, w_mat)
+    if padding == "SAME":
+        out_h = -(-h // stride)
+        out_w = -(-wid // stride)
+    else:
+        out_h = (h - r) // stride + 1
+        out_w = (wid - s) // stride + 1
+    return out.reshape(n, out_h, out_w, k)

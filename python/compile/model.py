@@ -1,0 +1,68 @@
+"""Layer-2 JAX model: the operator library SMAUG's accelerator path executes.
+
+Each function here is the compute graph for one *canonical accelerator
+tile*: the Rust scheduler (L3) im2cols a convolution tile, pads it to the
+nearest canonical (M, K, N), and executes the matching AOT-compiled HLO on
+the PJRT CPU client.  All functions call the L1 Pallas kernel so the NVDLA
+dataflow lowers into the artifact.
+
+This module is build-time only: `aot.py` lowers it once into
+``artifacts/*.hlo.txt`` and Python never runs on the simulation path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import nvdla_gemm as knl
+
+# Canonical tile grid.  The tiling optimizer in Rust guarantees tiles fit
+# the paper's 32 KB scratchpads (<= 16 Ki 16-bit elements per operand), so
+# after im2col: M = out rows*cols <= 1024, K = R*S*C_tile <= 2048,
+# N = out channels <= 256.  Rust pads each tile up to the nearest entry.
+CANONICAL_M = (16, 64, 256, 1024)
+CANONICAL_K = (32, 128, 512, 2048)
+CANONICAL_N = (16, 64, 256)
+VARIANTS = ("none", "relu")  # fused epilogue: plain, or +bias+relu
+
+
+def gemm_tile(a: jax.Array, w: jax.Array) -> tuple[jax.Array]:
+    """Plain accelerator GEMM tile (partial-product tiles, no epilogue)."""
+    return (knl.nvdla_gemm(a, w),)
+
+
+def gemm_tile_bias_relu(
+    a: jax.Array, w: jax.Array, bias: jax.Array
+) -> tuple[jax.Array]:
+    """Fused GEMM + bias + ReLU tile (SMAUG's conv+elementwise fusion)."""
+    return (knl.nvdla_gemm_bias_act(a, w, bias, activation="relu"),)
+
+
+def lower_tile(m: int, k: int, n: int, variant: str):
+    """Lower one canonical tile to a jax ``Lowered`` object."""
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    if variant == "none":
+        return jax.jit(gemm_tile).lower(a, w)
+    if variant == "relu":
+        b = jax.ShapeDtypeStruct((1, n), jnp.float32)
+        return jax.jit(gemm_tile_bias_relu).lower(a, w, b)
+    raise ValueError(f"unknown variant {variant}")
+
+
+def canonical_shapes():
+    """Yield every (m, k, n, variant) in the artifact grid."""
+    for m in CANONICAL_M:
+        for k in CANONICAL_K:
+            for n in CANONICAL_N:
+                for v in VARIANTS:
+                    yield m, k, n, v
+
+
+def round_up(value: int, grid: tuple[int, ...]) -> int:
+    """Round ``value`` up to the nearest grid entry (mirrors Rust side)."""
+    for g in grid:
+        if value <= g:
+            return g
+    raise ValueError(f"{value} exceeds canonical grid max {grid[-1]}")

@@ -1,0 +1,59 @@
+"""AOT pipeline: the artifact grid must stay consistent with the Rust
+runtime's canonical grids, and emitted HLO must be loadable text."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+# Mirror of rust/src/runtime/manifest.rs — a drift here breaks the
+# runtime's padding contract.
+RUST_CANONICAL_M = (16, 64, 256, 1024)
+RUST_CANONICAL_K = (32, 128, 512, 2048)
+RUST_CANONICAL_N = (16, 64, 256)
+
+
+def test_grids_match_rust_runtime():
+    assert tuple(model.CANONICAL_M) == RUST_CANONICAL_M
+    assert tuple(model.CANONICAL_K) == RUST_CANONICAL_K
+    assert tuple(model.CANONICAL_N) == RUST_CANONICAL_N
+
+
+def test_variants_match_manifest_vocabulary():
+    assert set(model.VARIANTS) == {"none", "relu"}
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.txt")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_covers_full_grid():
+    with open(os.path.join(ART_DIR, "manifest.txt")) as f:
+        lines = [
+            l.split() for l in f if l.strip() and not l.startswith("#")
+        ]
+    entries = {(int(m), int(k), int(n), v) for _, m, k, n, v, _ in lines}
+    expected = {
+        (m, k, n, v) for m, k, n, v in model.canonical_shapes()
+    }
+    assert entries == expected
+    # Every referenced file exists and looks like HLO text.
+    for _, _, _, _, _, path in lines[:8]:
+        full = os.path.join(ART_DIR, path)
+        assert os.path.exists(full), path
+        with open(full) as f:
+            head = f.read(200)
+        assert "HloModule" in head, path
+
+
+def test_single_artifact_lowering_roundtrip(tmp_path):
+    rc = aot.main(["--out-dir", str(tmp_path), "--only", "16,32,16,relu"])
+    assert rc == 0
+    files = os.listdir(tmp_path)
+    assert "manifest.txt" in files
+    assert "gemm_m16_k32_n16_relu.hlo.txt" in files
+    text = (tmp_path / "gemm_m16_k32_n16_relu.hlo.txt").read_text()
+    assert "HloModule" in text and "f32[16,32]" in text

@@ -1,0 +1,73 @@
+"""L2 model: canonical-shape grid, rounding contract, and HLO lowering."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile import aot
+from compile.kernels import ref
+
+
+def test_canonical_grid_size():
+    shapes = list(model.canonical_shapes())
+    expected = (
+        len(model.CANONICAL_M)
+        * len(model.CANONICAL_K)
+        * len(model.CANONICAL_N)
+        * len(model.VARIANTS)
+    )
+    assert len(shapes) == expected
+    assert len(set(shapes)) == expected
+
+
+def test_round_up_exact_and_between():
+    assert model.round_up(16, model.CANONICAL_M) == 16
+    assert model.round_up(17, model.CANONICAL_M) == 64
+    assert model.round_up(1, model.CANONICAL_M) == 16
+    assert model.round_up(1024, model.CANONICAL_M) == 1024
+    with pytest.raises(ValueError):
+        model.round_up(4096, model.CANONICAL_M)
+
+
+def test_grid_covers_scratchpad_tiles():
+    # Any tile respecting the 32KB/16-bit scratchpad budget must round into
+    # the grid: M <= 1024, K <= 2048, N <= 256 (DESIGN.md).
+    model.round_up(1024, model.CANONICAL_M)
+    model.round_up(2048, model.CANONICAL_K)
+    model.round_up(256, model.CANONICAL_N)
+
+
+def test_lower_tile_produces_hlo_text():
+    lowered = model.lower_tile(16, 32, 16, "none")
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[16,32]" in text
+    assert "f32[32,16]" in text
+
+
+def test_lower_fused_tile_has_bias_param():
+    lowered = model.lower_tile(16, 32, 16, "relu")
+    text = aot.to_hlo_text(lowered)
+    assert "f32[1,16]" in text  # bias parameter present
+
+
+def test_lower_tile_rejects_unknown_variant():
+    with pytest.raises(ValueError):
+        model.lower_tile(16, 32, 16, "gelu")
+
+
+def test_gemm_tile_numerics():
+    a = jnp.ones((16, 32), jnp.float32)
+    w = jnp.ones((32, 16), jnp.float32) * 0.5
+    (out,) = model.gemm_tile(a, w)
+    np.testing.assert_allclose(out, ref.gemm(a, w), rtol=1e-6)
+
+
+def test_fused_tile_numerics():
+    a = jnp.ones((16, 32), jnp.float32) * -1.0
+    w = jnp.ones((32, 16), jnp.float32)
+    b = jnp.full((1, 16), 5.0, jnp.float32)
+    (out,) = model.gemm_tile_bias_relu(a, w, b)
+    # -32 + 5 = -27 -> relu -> 0
+    np.testing.assert_allclose(out, jnp.zeros((16, 16)))

@@ -1,0 +1,92 @@
+"""Oracle self-consistency: conv-via-GEMM (the accelerator lowering the Rust
+scheduler uses) must equal direct lax convolution, plus pool/BN semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "h,w,c,k,r,stride,padding",
+    [
+        (8, 8, 4, 8, 3, 1, "SAME"),
+        (16, 16, 8, 16, 3, 1, "SAME"),
+        (8, 8, 4, 8, 1, 1, "SAME"),
+        (9, 9, 3, 6, 3, 2, "SAME"),
+        (8, 8, 4, 8, 3, 1, "VALID"),
+        (32, 32, 3, 8, 3, 2, "SAME"),
+    ],
+)
+def test_conv_via_gemm_matches_lax(h, w, c, k, r, stride, padding):
+    x = _rand((1, h, w, c), 0)
+    wt = _rand((k, r, r, c), 1)
+    got = ref.conv2d_via_gemm(x, wt, stride=stride, padding=padding)
+    want = ref.conv2d_nhwc(x, wt, stride=stride, padding=padding)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    c=st.sampled_from([1, 3, 4, 8]),
+    k=st.sampled_from([2, 4, 8]),
+    r=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_via_gemm_property(h, c, k, r, stride, seed):
+    x = _rand((1, h, h, c), seed)
+    wt = _rand((k, r, r, c), seed + 1)
+    got = ref.conv2d_via_gemm(x, wt, stride=stride, padding="SAME")
+    want = ref.conv2d_nhwc(x, wt, stride=stride, padding="SAME")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_dimensions():
+    x = _rand((1, 8, 8, 4), 2)
+    a = ref.im2col_nhwc(x, 3, 3, stride=1, padding="SAME")
+    assert a.shape == (64, 36)
+
+
+def test_im2col_1x1_is_reshape():
+    x = _rand((1, 6, 6, 8), 3)
+    a = ref.im2col_nhwc(x, 1, 1, stride=1, padding="SAME")
+    np.testing.assert_allclose(a, x.reshape(36, 8))
+
+
+def test_max_pool():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    out = ref.max_pool_nhwc(x, 2, 2)
+    np.testing.assert_allclose(out.reshape(-1), [5.0, 7.0, 13.0, 15.0])
+
+
+def test_avg_pool():
+    x = jnp.ones((1, 4, 4, 2))
+    out = ref.avg_pool_nhwc(x, 2, 2)
+    np.testing.assert_allclose(out, jnp.ones((1, 2, 2, 2)))
+
+
+def test_batch_norm_identity():
+    x = _rand((1, 4, 4, 8), 4)
+    c = x.shape[-1]
+    out = ref.batch_norm_nhwc(
+        x, jnp.zeros(c), jnp.ones(c), jnp.ones(c), jnp.zeros(c), eps=0.0
+    )
+    np.testing.assert_allclose(out, x, rtol=1e-6)
+
+
+def test_batch_norm_normalizes():
+    x = _rand((1, 8, 8, 4), 5) * 3.0 + 2.0
+    mean = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.var(x, axis=(0, 1, 2))
+    out = ref.batch_norm_nhwc(x, mean, var, jnp.ones(4), jnp.zeros(4))
+    np.testing.assert_allclose(jnp.mean(out, axis=(0, 1, 2)), jnp.zeros(4), atol=1e-4)
+    np.testing.assert_allclose(jnp.var(out, axis=(0, 1, 2)), jnp.ones(4), atol=1e-3)

@@ -1,0 +1,78 @@
+//! Ablation bench: the two scheduler extensions DESIGN.md calls out —
+//! double buffering (the NVDLA convolution buffer the paper explicitly
+//! does not model) and inter-accelerator reduction (the paper's §IV-B
+//! future work) — individually and combined, across configurations.
+
+use smaug::config::{SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::util::fmt_ns;
+
+fn run(net: &str, opts: SimOptions) -> anyhow::Result<(f64, u64)> {
+    let g = nets::build_network(net)?;
+    let r = Simulator::new(SocConfig::default(), opts).run(&g)?;
+    Ok((r.total_ns, r.dram_bytes))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("Ablation — scheduler extensions (baseline: DMA, 1 thread)");
+    println!(
+        "{:<10} {:>3} {:>14} {:>14} {:>14} {:>14}",
+        "net", "acc", "baseline", "+dbuf", "+inter-red", "+both"
+    );
+    for net in ["cnn10", "vgg16", "elu24"] {
+        for accels in [1usize, 8] {
+            let base = SimOptions {
+                num_accels: accels,
+                ..SimOptions::default()
+            };
+            let (t0, _) = run(net, base.clone())?;
+            let (t1, _) = run(
+                net,
+                SimOptions {
+                    double_buffer: true,
+                    ..base.clone()
+                },
+            )?;
+            let (t2, b2) = run(
+                net,
+                SimOptions {
+                    inter_accel_reduction: true,
+                    ..base.clone()
+                },
+            )?;
+            let (t3, _) = run(
+                net,
+                SimOptions {
+                    double_buffer: true,
+                    inter_accel_reduction: true,
+                    ..base.clone()
+                },
+            )?;
+            println!(
+                "{:<10} {:>3} {:>14} {:>13}{} {:>13}{} {:>13}{}",
+                net,
+                accels,
+                fmt_ns(t0),
+                fmt_ns(t1),
+                mark(t0, t1),
+                fmt_ns(t2),
+                mark(t0, t2),
+                fmt_ns(t3),
+                mark(t0, t3),
+            );
+            let _ = b2;
+        }
+    }
+    println!("  (* = >2% faster than baseline; inter-reduction trades extra");
+    println!("   partial-sum traffic for pool utilization on starved layers)");
+    Ok(())
+}
+
+fn mark(base: f64, v: f64) -> &'static str {
+    if v < base * 0.98 {
+        "*"
+    } else {
+        " "
+    }
+}

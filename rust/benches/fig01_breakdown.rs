@@ -1,0 +1,14 @@
+//! Bench harness for paper Fig 1: end-to-end latency breakdown on the
+//! baseline SoC (1x NVDLA, DMA, single-threaded software stack) across
+//! the full network zoo. Run with `cargo bench --bench fig01_breakdown`.
+
+use smaug::figures;
+use smaug::nets::ALL_NETWORKS;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let rows = figures::fig01(ALL_NETWORKS)?;
+    figures::print_fig01(&rows);
+    println!("(harness wall-clock: {:.2?})", t0.elapsed());
+    Ok(())
+}

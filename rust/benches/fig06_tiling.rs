@@ -1,0 +1,9 @@
+//! Bench harness for paper Fig 5/6: memcpy cost of different tiling
+//! strategies on the paper's medium and large NHWC tensors.
+
+use smaug::figures;
+
+fn main() {
+    let rows = figures::fig06();
+    figures::print_fig06(&rows);
+}

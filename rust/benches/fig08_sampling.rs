@@ -1,0 +1,9 @@
+//! Bench harness for paper Fig 7/8: Aladdin-style loop-sampling
+//! validation — exact vs maximally-sampled cycle estimates per kernel.
+
+use smaug::figures;
+
+fn main() {
+    let rows = figures::fig08();
+    figures::print_fig08(&rows);
+}

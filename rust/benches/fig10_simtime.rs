@@ -1,0 +1,22 @@
+//! Bench harness for paper Fig 10: simulator wall-clock per network
+//! (the paper reports gem5-Aladdin hours; our transaction-level
+//! simulator runs the same sweeps in milliseconds-to-seconds).
+
+use smaug::config::SimOptions;
+use smaug::figures;
+use smaug::nets::ALL_NETWORKS;
+
+fn main() -> anyhow::Result<()> {
+    println!("Fig 10 — simulation wall-clock per network (paper: minutes-hours on gem5)");
+    for net in ALL_NETWORKS {
+        let t0 = std::time::Instant::now();
+        let r = figures::run_net(net, SimOptions::default())?;
+        println!(
+            "  {:<10} simulated {:>12}   host wall-clock {:>10.2?}",
+            net,
+            smaug::util::fmt_ns(r.total_ns),
+            t0.elapsed()
+        );
+    }
+    Ok(())
+}

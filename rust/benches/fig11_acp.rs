@@ -1,0 +1,11 @@
+//! Bench harness for paper Fig 11: ACP vs DMA performance and energy
+//! across the network zoo (paper: 17-55% speedup, up to 56% energy win).
+
+use smaug::figures;
+use smaug::nets::ALL_NETWORKS;
+
+fn main() -> anyhow::Result<()> {
+    let rows = figures::fig11(ALL_NETWORKS)?;
+    figures::print_fig11(&rows);
+    Ok(())
+}

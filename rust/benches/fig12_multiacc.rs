@@ -1,0 +1,11 @@
+//! Bench harness for paper Fig 12: execution time of multi-accelerator
+//! systems (1, 2, 4, 8 accelerators) across the network zoo.
+
+use smaug::figures;
+use smaug::nets::ALL_NETWORKS;
+
+fn main() -> anyhow::Result<()> {
+    let rows = figures::fig12(ALL_NETWORKS, &[1, 2, 4, 8])?;
+    figures::print_fig12(&rows);
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Bench harness for paper Fig 13: DRAM traffic growth and bandwidth
+//! utilization as the accelerator count scales (paper: <=6% growth,
+//! better utilization, ~60% transfer-time drop).
+
+use smaug::figures;
+use smaug::nets::ALL_NETWORKS;
+
+fn main() -> anyhow::Result<()> {
+    let rows = figures::fig12(ALL_NETWORKS, &[1, 2, 4, 8])?;
+    figures::print_fig13(&rows);
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Bench harness for paper Fig 15: the baseline software stack's time
+//! split into data preparation / finalization / other (paper: prep +
+//! finalization ~85% of software time).
+
+use smaug::figures;
+use smaug::nets::ALL_NETWORKS;
+
+fn main() -> anyhow::Result<()> {
+    let rows = figures::fig01(ALL_NETWORKS)?;
+    figures::print_fig15(&rows);
+    Ok(())
+}

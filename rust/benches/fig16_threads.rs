@@ -1,0 +1,12 @@
+//! Bench harness for paper Fig 16: multithreaded data management
+//! (1, 2, 4, 8 software threads; paper: 3-4x prep/finalize speedup,
+//! up to 37% end-to-end).
+
+use smaug::figures;
+use smaug::nets::ALL_NETWORKS;
+
+fn main() -> anyhow::Result<()> {
+    let rows = figures::fig16(ALL_NETWORKS, &[1, 2, 4, 8])?;
+    figures::print_fig16(&rows);
+    Ok(())
+}

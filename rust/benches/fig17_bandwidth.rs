@@ -1,0 +1,11 @@
+//! Bench harness for paper Fig 17: DRAM bandwidth utilization during the
+//! data preparation/gathering phases, 1 vs 8 threads (paper: ~2.7x on
+//! ResNet50; small nets like Minerva gain little).
+
+use smaug::figures;
+
+fn main() -> anyhow::Result<()> {
+    let rows = figures::fig16(&["minerva", "cnn10", "vgg16", "elu24", "resnet50"], &[1, 8])?;
+    figures::print_fig17(&rows);
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Bench harness for paper Fig 18: combined effect of ACP + 8
+//! accelerators + 8 software threads (paper: 42-80% latency reduction,
+//! 1.8-5x speedup).
+
+use smaug::figures;
+use smaug::nets::ALL_NETWORKS;
+
+fn main() -> anyhow::Result<()> {
+    let rows = figures::fig18(ALL_NETWORKS)?;
+    figures::print_fig18(&rows);
+    Ok(())
+}

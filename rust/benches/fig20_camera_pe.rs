@@ -1,0 +1,11 @@
+//! Bench harness for paper Fig 19/20: the camera + CNN10 pipeline on
+//! systolic arrays of decreasing size against the 30 FPS budget.
+
+use smaug::figures;
+
+fn main() -> anyhow::Result<()> {
+    let (cam_ns, rows) =
+        figures::fig20(&[(8, 8), (4, 8), (4, 4), (2, 4), (2, 2), (1, 2), (1, 1)])?;
+    figures::print_fig20(cam_ns, &rows);
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Performance microbenchmarks of the simulator's own hot paths (the
+//! EXPERIMENTS.md SS-Perf targets): tiling-plan construction, bandwidth-
+//! timeline requests, end-to-end simulation throughput.
+
+use smaug::config::{SimOptions, SocConfig};
+use smaug::mem::BandwidthTimeline;
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::tiling::{plan_conv, ConvParams};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {name:<36} {:>12.3} us/iter", per * 1e6);
+}
+
+fn main() {
+    println!("perf_hotpath — simulator hot-path microbenchmarks");
+    let soc = SocConfig::default();
+
+    let conv = ConvParams {
+        h: 32, w: 32, c: 512, k: 512, r: 3, s: 3, stride: 1, pad_same: true,
+    };
+    bench("plan_conv(vgg-style 512ch)", 50, || {
+        std::hint::black_box(plan_conv(&conv, &soc));
+    });
+
+    bench("bandwidth_timeline 10k requests", 10, || {
+        let mut bw = BandwidthTimeline::new(20.0);
+        let mut t = 0.0;
+        for i in 0..10_000u64 {
+            let (_, e) = bw.request(t, 1000 + (i % 97) * 64, 20.0);
+            if i % 3 == 0 {
+                t = e;
+            }
+        }
+        std::hint::black_box(bw.total_bytes());
+    });
+
+    for net in ["cnn10", "vgg16", "resnet50"] {
+        let g = nets::build_network(net).unwrap();
+        let iters = if net == "resnet50" { 3 } else { 20 };
+        bench(&format!("simulate {net} (baseline)"), iters, || {
+            let sim = Simulator::new(SocConfig::default(), SimOptions::default());
+            std::hint::black_box(sim.run(&g).unwrap());
+        });
+    }
+    let g = nets::build_network("vgg16").unwrap();
+    bench("simulate vgg16 (8 accel, acp, 8thr)", 10, || {
+        let sim = Simulator::new(SocConfig::default(), SimOptions::optimized());
+        std::hint::black_box(sim.run(&g).unwrap());
+    });
+}

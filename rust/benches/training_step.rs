@@ -1,0 +1,36 @@
+//! Training-step bench (extension — the paper plans training support):
+//! simulates one SGD training step (forward + dX/dW backward GEMMs +
+//! parameter updates) vs a forward-only pass, baseline and optimized.
+
+use smaug::config::{SimOptions, SocConfig};
+use smaug::graph::training_step;
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::util::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    println!("Training-step extension — one SGD step vs single-batch inference");
+    println!(
+        "{:<10} {:>14} {:>14} {:>7} {:>16}",
+        "net", "inference", "train step", "ratio", "train(optimized)"
+    );
+    for net in ["minerva", "lenet5", "cnn10", "vgg16", "elu16"] {
+        let fwd = nets::build_network(net)?;
+        let train = training_step(&fwd);
+        let run = |g, o| -> anyhow::Result<f64> {
+            Ok(Simulator::new(SocConfig::default(), o).run(g)?.total_ns)
+        };
+        let infer = run(&fwd, SimOptions::default())?;
+        let step = run(&train, SimOptions::default())?;
+        let opt = run(&train, SimOptions::optimized())?;
+        println!(
+            "{:<10} {:>14} {:>14} {:>6.2}x {:>16}",
+            net,
+            fmt_ns(infer),
+            fmt_ns(step),
+            step / infer,
+            fmt_ns(opt)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Accelerator backend models (paper §II-D).
+//!
+//! Two backends, mirroring the paper: an NVDLA-inspired convolution engine
+//! (Aladdin-style loop-nest model, [`nvdla`]) and a configurable
+//! output-stationary systolic array (native cycle-level model,
+//! [`systolic`]). Both consume [`crate::tiling::WorkItem`]s and report
+//! cycles plus the activity counts the energy model charges.
+
+pub mod nvdla;
+pub mod sampling;
+pub mod systolic;
+
+pub use nvdla::NvdlaEngine;
+pub use systolic::SystolicArray;
+
+use crate::config::{AccelKind, SocConfig};
+use crate::tiling::WorkItem;
+
+/// Which kernel family a work item belongs to (decides the datapath used).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    /// Convolution lowered to GEMM (im2col'd by the software stack).
+    ConvGemm,
+    /// Inner product (GEMM with m = 1).
+    FcGemm,
+    /// Pooling (vector datapath, window reduction).
+    Pool,
+    /// Element-wise op; `ops` = arithmetic ops per element (BN = 2, add = 1).
+    Eltwise {
+        /// Arithmetic operations per output element.
+        ops: u32,
+    },
+}
+
+/// Cycles + activity counts for one work item on an accelerator.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TileCost {
+    /// Accelerator cycles to compute the tile (excludes data transfer).
+    pub cycles: f64,
+    /// Multiply-accumulate operations executed (useful work).
+    pub macc_ops: u64,
+    /// Scratchpad read accesses (element granularity).
+    pub spad_reads: u64,
+    /// Scratchpad write accesses (element granularity).
+    pub spad_writes: u64,
+}
+
+/// Common interface for accelerator timing models.
+pub trait AccelModel: Send + Sync {
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Cycles + activity to execute `item` of class `class`.
+    ///
+    /// `sampling_factor` applies Aladdin-style loop sampling to the
+    /// model's compute loops (1 = exact).
+    fn tile_cost(&self, class: KernelClass, item: &WorkItem, sampling_factor: usize) -> TileCost;
+}
+
+/// Instantiate the configured accelerator model.
+pub fn build_model(kind: AccelKind, soc: &SocConfig) -> Box<dyn AccelModel> {
+    match kind {
+        AccelKind::Nvdla => Box::new(NvdlaEngine::new(soc)),
+        AccelKind::Systolic => Box::new(SystolicArray::new(soc)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use crate::tiling::{GemmDims, Region, WorkItem};
+
+    /// A bare GEMM work item for model unit tests.
+    pub(crate) fn gemm_item(m: usize, k: usize, n: usize) -> WorkItem {
+        WorkItem {
+            in_region: Region::new(&[0, 0], &[1, k]),
+            pad_lo: [0; 4],
+            pad_hi: [0; 4],
+            out_region: Region::new(&[0, 0], &[1, n]),
+            c_range: (0, k),
+            k_range: (0, n),
+            reduce_group: 0,
+            last_in_group: true,
+            gemm: GemmDims { m, k, n },
+            macs: (m * k * n) as u64,
+            in_bytes: (m * k * 2) as u64,
+            wgt_bytes: (k * n * 2) as u64,
+            out_bytes: (m * n * 2) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_both_models() {
+        let soc = SocConfig::default();
+        assert_eq!(build_model(AccelKind::Nvdla, &soc).name(), "nvdla");
+        assert_eq!(build_model(AccelKind::Systolic, &soc).name(), "systolic");
+    }
+}

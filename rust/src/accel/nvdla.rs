@@ -1,0 +1,192 @@
+//! NVDLA-inspired convolution engine timing model (paper Fig 4, §II-D).
+//!
+//! Eight PEs, each a 32-way multiply-accumulate array operating on a
+//! different output feature map. The dataflow is L0 weight-stationary
+//! (weights register-resident within a MACC array) and L1 input/output
+//! stationary (inputs re-read from SRAM per weight; outputs accumulate
+//! in place). Inputs/weights are 16-bit, accumulation 32-bit.
+//!
+//! The model walks the Fig-4 loop nest per work item, exactly as the
+//! Aladdin model walks its trace, so Aladdin-style per-loop sampling
+//! ([`super::sampling`]) applies directly — including its small
+//! non-uniform-edge error (validated in Fig 8's reproduction).
+
+use super::sampling::sampled_sum;
+use super::{AccelModel, KernelClass, TileCost};
+use crate::config::SocConfig;
+use crate::tiling::WorkItem;
+use crate::util::ceil_div;
+
+/// Pipeline fill/drain overhead per tile dispatch (cycles).
+const TILE_FILL_CYCLES: f64 = 24.0;
+/// Cycles to load one weight register block per channel element.
+const WGT_LOAD_PER_ELEM: f64 = 1.0;
+/// Vector datapath lanes for pooling / element-wise kernels.
+const VECTOR_LANES: usize = 32;
+
+/// The NVDLA-style convolution engine.
+#[derive(Debug, Clone)]
+pub struct NvdlaEngine {
+    pes: usize,
+    macc_width: usize,
+}
+
+impl NvdlaEngine {
+    /// Build from the SoC configuration.
+    pub fn new(soc: &SocConfig) -> Self {
+        Self {
+            pes: soc.nvdla_pes,
+            macc_width: soc.nvdla_macc_width,
+        }
+    }
+
+    /// Walk the Fig-4 loop nest for a GEMM-shaped tile:
+    ///
+    /// ```text
+    /// for pe_group in 0..ceil(n / PES):          // output channels, 8-wide
+    ///   for blk in 0..ceil(k / 32):              // flattened kr, kc, cb
+    ///     load weight regs (blk_depth cycles)    //   8 PEs in parallel
+    ///     for px in 0..m:                        // output rows x cols
+    ///       32-way MACC, 1 cycle                 //   all PEs in parallel
+    /// ```
+    fn gemm_cycles(&self, m: usize, k: usize, n: usize, sampling: usize) -> f64 {
+        let pe_groups = ceil_div(n, self.pes) as u64;
+        let blocks = ceil_div(k, self.macc_width) as u64;
+        let k_rem = k % self.macc_width;
+        let per_group = sampled_sum(blocks, sampling, |b| {
+            // Edge block loads fewer weight registers (non-uniform:
+            // this is what sampling error comes from).
+            let depth = if b == blocks - 1 && k_rem != 0 {
+                k_rem
+            } else {
+                self.macc_width
+            };
+            depth as f64 * WGT_LOAD_PER_ELEM + m as f64
+        });
+        TILE_FILL_CYCLES + pe_groups as f64 * per_group
+    }
+
+    /// Vector kernel (pool / element-wise): `total_ops` ops across
+    /// `VECTOR_LANES` lanes, one op per lane per cycle.
+    fn vector_cycles(&self, total_ops: u64, sampling: usize) -> f64 {
+        let trips = total_ops.div_ceil(VECTOR_LANES as u64);
+        TILE_FILL_CYCLES + sampled_sum(trips, sampling, |_| 1.0)
+    }
+}
+
+impl AccelModel for NvdlaEngine {
+    fn name(&self) -> &'static str {
+        "nvdla"
+    }
+
+    fn tile_cost(&self, class: KernelClass, item: &WorkItem, sampling_factor: usize) -> TileCost {
+        let g = item.gemm;
+        match class {
+            KernelClass::ConvGemm | KernelClass::FcGemm => {
+                let cycles = self.gemm_cycles(g.m, g.k, g.n, sampling_factor);
+                let pe_groups = ceil_div(g.n, self.pes) as u64;
+                TileCost {
+                    cycles,
+                    macc_ops: item.macs,
+                    // Inputs re-read per PE group (input-stationary in SRAM,
+                    // not in regs); weights read once; outputs accumulate.
+                    spad_reads: (g.m * g.k) as u64 * pe_groups + (g.k * g.n) as u64,
+                    spad_writes: (g.m * g.n) as u64,
+                }
+            }
+            KernelClass::Pool => TileCost {
+                cycles: self.vector_cycles(item.macs, sampling_factor),
+                macc_ops: item.macs,
+                spad_reads: item.macs, // one read per window element
+                spad_writes: (item.out_region.elems()) as u64,
+            },
+            KernelClass::Eltwise { ops } => {
+                let total = item.macs * ops as u64;
+                TileCost {
+                    cycles: self.vector_cycles(total, sampling_factor),
+                    macc_ops: total,
+                    spad_reads: item.in_bytes / 2,
+                    spad_writes: item.out_bytes.max(2) / 2,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::test_util::gemm_item;
+
+    fn engine() -> NvdlaEngine {
+        NvdlaEngine::new(&SocConfig::default())
+    }
+
+    #[test]
+    fn aligned_gemm_cycle_count() {
+        // m=64, k=32 (one block), n=8 (one PE group):
+        // fill + (32 load + 64 px) = 24 + 96.
+        let c = engine().gemm_cycles(64, 32, 8, 1);
+        assert_eq!(c, 24.0 + 96.0);
+    }
+
+    #[test]
+    fn pe_groups_scale_cycles() {
+        let e = engine();
+        let c8 = e.gemm_cycles(64, 32, 8, 1);
+        let c16 = e.gemm_cycles(64, 32, 16, 1);
+        // Two PE groups ~= twice the per-group work (fill amortized).
+        assert!((c16 - 24.0) / (c8 - 24.0) > 1.99);
+    }
+
+    #[test]
+    fn partial_channel_block_cheaper() {
+        let e = engine();
+        let full = e.gemm_cycles(16, 64, 8, 1); // two full blocks
+        let partial = e.gemm_cycles(16, 48, 8, 1); // full + 16-deep edge
+        assert!(partial < full);
+    }
+
+    #[test]
+    fn sampling_error_small_for_deep_k() {
+        // L-Conv-like tile: 256 output px, k = 3*3*64 = 576.
+        let e = engine();
+        let exact = e.gemm_cycles(256, 576, 8, 1);
+        let sampled = e.gemm_cycles(256, 576, 8, 1000); // max sampling
+        let err = (sampled - exact).abs() / exact;
+        assert!(err < 0.06, "err {err}");
+    }
+
+    #[test]
+    fn tile_cost_counts_activity() {
+        let item = gemm_item(64, 64, 16);
+        let cost = engine().tile_cost(KernelClass::ConvGemm, &item, 1);
+        assert_eq!(cost.macc_ops, 64 * 64 * 16);
+        // inputs re-read per PE group (2 groups of 8).
+        assert_eq!(cost.spad_reads, (64 * 64 * 2 + 64 * 16) as u64);
+        assert_eq!(cost.spad_writes, (64 * 16) as u64);
+        assert!(cost.cycles > 0.0);
+    }
+
+    #[test]
+    fn eltwise_vector_cost() {
+        let mut item = gemm_item(1024, 1, 1);
+        item.macs = 1024;
+        let cost = engine().tile_cost(KernelClass::Eltwise { ops: 2 }, &item, 1);
+        // 2048 ops over 32 lanes = 64 cycles + fill.
+        assert_eq!(cost.cycles, 24.0 + 64.0);
+        assert_eq!(cost.macc_ops, 2048);
+    }
+
+    #[test]
+    fn utilization_reaches_high_fraction_on_big_tiles() {
+        // MACC utilization = macs / (cycles * lanes) should approach 1 for
+        // large aligned tiles (compute-bound).
+        let e = engine();
+        let (m, k, n) = (256, 512, 64);
+        let cycles = e.gemm_cycles(m, k, n, 1);
+        let lanes = (8 * 32) as f64;
+        let util = (m * k * n) as f64 / (cycles * lanes);
+        assert!(util > 0.85, "util {util}");
+    }
+}

@@ -1,0 +1,179 @@
+//! Configurable output-stationary systolic array (paper §II-D, §V).
+//!
+//! A native cycle-level model (the paper implements this one as a gem5
+//! object rather than with Aladdin): an R x C grid of PEs. Inputs stream
+//! in from the left, weights from the top; each PE accumulates one output
+//! element in place (output-stationary). Fetch and commit units move data
+//! between the three scratchpads and the array edges.
+//!
+//! Dataflow inspired by SCALE-Sim, but — like SMAUG's — execution-driven:
+//! the scheduler hands it live tiles whose transfers contend for real
+//! SoC bandwidth, rather than generating standalone traces.
+
+use super::sampling::sampled_sum;
+use super::{AccelModel, KernelClass, TileCost};
+use crate::config::SocConfig;
+use crate::tiling::WorkItem;
+use crate::util::ceil_div;
+
+/// Per-tile dispatch overhead (command decode, fetch-unit setup).
+const TILE_SETUP_CYCLES: f64 = 32.0;
+/// Vector lanes for non-GEMM kernels (pool/eltwise use the commit unit's
+/// ALUs).
+const VECTOR_LANES: usize = 16;
+
+/// Output-stationary systolic array model.
+#[derive(Debug, Clone)]
+pub struct SystolicArray {
+    rows: usize,
+    cols: usize,
+}
+
+impl SystolicArray {
+    /// Build from the SoC configuration (`systolic_rows` x `systolic_cols`).
+    pub fn new(soc: &SocConfig) -> Self {
+        Self {
+            rows: soc.systolic_rows,
+            cols: soc.systolic_cols,
+        }
+    }
+
+    /// Build with explicit dimensions (Fig 20's PE sweep).
+    pub fn with_dims(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        Self { rows, cols }
+    }
+
+    /// Array dimensions.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Cycle count for an `m x k x n` GEMM tile.
+    ///
+    /// The output is folded into `ceil(m/R) * ceil(n/C)` blocks. Each block
+    /// wavefront: `k` accumulation cycles once full, plus `R + C - 2` fill
+    /// skew, plus `R` drain cycles for the commit unit to walk the rows.
+    /// Consecutive blocks overlap fill with the previous drain (pipelined
+    /// across blocks with one-block initiation interval).
+    fn gemm_cycles(&self, m: usize, k: usize, n: usize, sampling: usize) -> f64 {
+        let blocks = (ceil_div(m, self.rows) * ceil_div(n, self.cols)) as u64;
+        let fill = (self.rows + self.cols - 2) as f64;
+        let drain = self.rows as f64;
+        let per_block = k as f64 + fill;
+        // First block pays fill + k + drain; subsequent blocks hide their
+        // fill under the previous drain when k >= drain.
+        let steady = sampled_sum(blocks.saturating_sub(1), sampling, |_| {
+            per_block.max(drain)
+        });
+        TILE_SETUP_CYCLES + per_block + drain + steady
+    }
+}
+
+impl AccelModel for SystolicArray {
+    fn name(&self) -> &'static str {
+        "systolic"
+    }
+
+    fn tile_cost(&self, class: KernelClass, item: &WorkItem, sampling_factor: usize) -> TileCost {
+        let g = item.gemm;
+        match class {
+            KernelClass::ConvGemm | KernelClass::FcGemm => {
+                let cycles = self.gemm_cycles(g.m, g.k, g.n, sampling_factor);
+                let blocks = (ceil_div(g.m, self.rows) * ceil_div(g.n, self.cols)) as u64;
+                TileCost {
+                    cycles,
+                    macc_ops: item.macs,
+                    // Fetch unit streams the input block rows and weight
+                    // block cols per fold; outputs written once per block.
+                    spad_reads: (self.rows * g.k) as u64 * blocks
+                        + (self.cols * g.k) as u64 * blocks,
+                    spad_writes: (g.m * g.n) as u64,
+                }
+            }
+            KernelClass::Pool => {
+                let trips = item.macs.div_ceil(VECTOR_LANES as u64);
+                TileCost {
+                    cycles: TILE_SETUP_CYCLES + sampled_sum(trips, sampling_factor, |_| 1.0),
+                    macc_ops: item.macs,
+                    spad_reads: item.macs,
+                    spad_writes: item.out_region.elems() as u64,
+                }
+            }
+            KernelClass::Eltwise { ops } => {
+                let total = item.macs * ops as u64;
+                let trips = total.div_ceil(VECTOR_LANES as u64);
+                TileCost {
+                    cycles: TILE_SETUP_CYCLES + sampled_sum(trips, sampling_factor, |_| 1.0),
+                    macc_ops: total,
+                    spad_reads: item.in_bytes / 2,
+                    spad_writes: item.out_bytes.max(2) / 2,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::test_util::gemm_item;
+
+    fn arr(r: usize, c: usize) -> SystolicArray {
+        SystolicArray::with_dims(r, c)
+    }
+
+    #[test]
+    fn single_block_cycles() {
+        // 8x8 array, one 8x8 output block, k=64:
+        // setup + (64 + 14) + 8 drain.
+        let c = arr(8, 8).gemm_cycles(8, 64, 8, 1);
+        assert_eq!(c, 32.0 + 64.0 + 14.0 + 8.0);
+    }
+
+    #[test]
+    fn blocks_scale_linearly() {
+        let a = arr(8, 8);
+        let one = a.gemm_cycles(8, 128, 8, 1);
+        let four = a.gemm_cycles(16, 128, 16, 1);
+        let ratio = (four - 32.0) / (one - 32.0);
+        assert!(ratio > 3.0 && ratio < 4.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn smaller_array_is_slower() {
+        // Fig 20: shrinking the PE array increases DNN latency.
+        let (m, k, n) = (256, 256, 64);
+        let c88 = arr(8, 8).gemm_cycles(m, k, n, 1);
+        let c48 = arr(4, 8).gemm_cycles(m, k, n, 1);
+        let c44 = arr(4, 4).gemm_cycles(m, k, n, 1);
+        assert!(c48 > c88 * 1.5, "{c48} vs {c88}");
+        assert!(c44 > c48 * 1.5, "{c44} vs {c48}");
+    }
+
+    #[test]
+    fn utilization_high_for_aligned_tiles() {
+        let a = arr(8, 8);
+        let (m, k, n) = (64, 512, 64);
+        let cycles = a.gemm_cycles(m, k, n, 1);
+        let util = (m * k * n) as f64 / (cycles * 64.0);
+        assert!(util > 0.80, "util {util}");
+    }
+
+    #[test]
+    fn sampling_close_to_exact() {
+        let a = arr(8, 8);
+        let exact = a.gemm_cycles(256, 320, 64, 1);
+        let sampled = a.gemm_cycles(256, 320, 64, 64);
+        let err = (sampled - exact).abs() / exact;
+        assert!(err < 0.05, "err {err}");
+    }
+
+    #[test]
+    fn tile_cost_macs_preserved() {
+        let item = gemm_item(32, 64, 16);
+        let cost = arr(8, 8).tile_cost(KernelClass::ConvGemm, &item, 1);
+        assert_eq!(cost.macc_ops, 32 * 64 * 16);
+        assert!(cost.cycles > 0.0);
+    }
+}

@@ -1,0 +1,371 @@
+//! Camera vision pipeline (paper §V): a functional + timed model of the
+//! Halide camera pipeline feeding a DNN.
+//!
+//! Stages (as shipped with Halide and integrated into SMAUG): hot-pixel
+//! suppression, deinterleaving, demosaicing, white balancing, sharpening.
+//! The pipeline converts a raw Bayer sensor image into an RGB frame; the
+//! frame is then downsampled to the DNN's input size and classified.
+//! The paper runs the camera stages on the CPU and CNN10 on the 8x8
+//! systolic array, against a 30 FPS (33 ms) frame-time budget.
+
+use crate::config::SocConfig;
+use crate::cpu::{CpuModel, LAYOUT_CYCLES_PER_ELEM};
+use crate::trace::{EventKind, Lane, Timeline};
+use crate::util::Rng;
+
+/// A raw Bayer frame (GRBG mosaic), u16 sensor counts.
+#[derive(Debug, Clone)]
+pub struct RawFrame {
+    /// Width in pixels.
+    pub width: usize,
+    /// Height in pixels.
+    pub height: usize,
+    /// Sensor values, row-major.
+    pub data: Vec<u16>,
+}
+
+impl RawFrame {
+    /// Synthesize a plausible raw frame: smooth gradient + noise + a few
+    /// hot pixels (so hot-pixel suppression has something to do).
+    pub fn synthetic(width: usize, height: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0u16; width * height];
+        for y in 0..height {
+            for x in 0..width {
+                let base = (x * 40 / width + y * 30 / height) as u16 * 400 + 2000;
+                let noise = (rng.next_u64() % 201) as i32 - 100;
+                data[y * width + x] = (base as i32 + noise).clamp(0, 65535) as u16;
+            }
+        }
+        // Sprinkle hot pixels (~1 per 100k).
+        let hot = (width * height / 100_000).max(4);
+        for _ in 0..hot {
+            let i = rng.below(width * height);
+            data[i] = 65535;
+        }
+        Self {
+            width,
+            height,
+            data,
+        }
+    }
+
+    #[inline]
+    fn at(&self, x: usize, y: usize) -> u16 {
+        self.data[y * self.width + x]
+    }
+}
+
+/// An RGB frame, f32 per channel in [0, 1].
+#[derive(Debug, Clone)]
+pub struct RgbFrame {
+    /// Width in pixels.
+    pub width: usize,
+    /// Height in pixels.
+    pub height: usize,
+    /// Interleaved RGB, row-major.
+    pub data: Vec<f32>,
+}
+
+/// Hot-pixel suppression: clamp each pixel to the max of its 4-neighbours
+/// (a hot pixel is an isolated outlier).
+pub fn hot_pixel_suppression(f: &RawFrame) -> RawFrame {
+    let mut out = f.clone();
+    for y in 1..f.height - 1 {
+        for x in 1..f.width - 1 {
+            let nmax = f
+                .at(x - 1, y)
+                .max(f.at(x + 1, y))
+                .max(f.at(x, y - 1))
+                .max(f.at(x, y + 1));
+            let v = f.at(x, y);
+            out.data[y * f.width + x] = v.min(nmax.saturating_add(1000));
+        }
+    }
+    out
+}
+
+/// Deinterleave the GRBG mosaic into 4 quarter-res planes (G1, R, B, G2).
+pub fn deinterleave(f: &RawFrame) -> [Vec<u16>; 4] {
+    let (hw, hh) = (f.width / 2, f.height / 2);
+    let mut planes = [
+        vec![0u16; hw * hh],
+        vec![0u16; hw * hh],
+        vec![0u16; hw * hh],
+        vec![0u16; hw * hh],
+    ];
+    for y in 0..hh {
+        for x in 0..hw {
+            planes[0][y * hw + x] = f.at(2 * x, 2 * y); // G1
+            planes[1][y * hw + x] = f.at(2 * x + 1, 2 * y); // R
+            planes[2][y * hw + x] = f.at(2 * x, 2 * y + 1); // B
+            planes[3][y * hw + x] = f.at(2 * x + 1, 2 * y + 1); // G2
+        }
+    }
+    planes
+}
+
+/// Bilinear demosaic from the quarter-res planes to full-res RGB.
+pub fn demosaic(planes: &[Vec<u16>; 4], width: usize, height: usize) -> RgbFrame {
+    let (hw, hh) = (width / 2, height / 2);
+    let mut out = vec![0.0f32; width * height * 3];
+    let scale = 1.0 / 65535.0;
+    for y in 0..height {
+        for x in 0..width {
+            let (px, py) = ((x / 2).min(hw - 1), (y / 2).min(hh - 1));
+            let r = planes[1][py * hw + px] as f32;
+            let b = planes[2][py * hw + px] as f32;
+            let g = 0.5 * (planes[0][py * hw + px] as f32 + planes[3][py * hw + px] as f32);
+            let o = (y * width + x) * 3;
+            out[o] = r * scale;
+            out[o + 1] = g * scale;
+            out[o + 2] = b * scale;
+        }
+    }
+    RgbFrame {
+        width,
+        height,
+        data: out,
+    }
+}
+
+/// White balance: per-channel gains.
+pub fn white_balance(f: &mut RgbFrame, gains: [f32; 3]) {
+    for px in f.data.chunks_mut(3) {
+        px[0] = (px[0] * gains[0]).min(1.0);
+        px[1] = (px[1] * gains[1]).min(1.0);
+        px[2] = (px[2] * gains[2]).min(1.0);
+    }
+}
+
+/// Unsharp-mask sharpening with a 3x3 blur kernel.
+pub fn sharpen(f: &RgbFrame, amount: f32) -> RgbFrame {
+    let mut out = f.clone();
+    let (w, h) = (f.width, f.height);
+    for y in 1..h - 1 {
+        for x in 1..w - 1 {
+            for c in 0..3 {
+                let mut blur = 0.0f32;
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        blur += f.data[((y + dy - 1) * w + (x + dx - 1)) * 3 + c];
+                    }
+                }
+                blur /= 9.0;
+                let v = f.data[(y * w + x) * 3 + c];
+                out.data[(y * w + x) * 3 + c] = (v + amount * (v - blur)).clamp(0.0, 1.0);
+            }
+        }
+    }
+    out
+}
+
+/// Box-downsample the RGB frame to (dw, dh) (DNN input resolution).
+pub fn downsample(f: &RgbFrame, dw: usize, dh: usize) -> RgbFrame {
+    let mut out = vec![0.0f32; dw * dh * 3];
+    for y in 0..dh {
+        for x in 0..dw {
+            let (sy0, sy1) = (y * f.height / dh, ((y + 1) * f.height / dh).max(y * f.height / dh + 1));
+            let (sx0, sx1) = (x * f.width / dw, ((x + 1) * f.width / dw).max(x * f.width / dw + 1));
+            let mut acc = [0.0f32; 3];
+            let mut count = 0.0;
+            for sy in sy0..sy1 {
+                for sx in sx0..sx1 {
+                    for c in 0..3 {
+                        acc[c] += f.data[(sy * f.width + sx) * 3 + c];
+                    }
+                    count += 1.0;
+                }
+            }
+            for c in 0..3 {
+                out[(y * dw + x) * 3 + c] = acc[c] / count;
+            }
+        }
+    }
+    RgbFrame {
+        width: dw,
+        height: dh,
+        data: out,
+    }
+}
+
+/// Per-stage timing record.
+#[derive(Debug, Clone)]
+pub struct StageTime {
+    /// Stage name.
+    pub name: &'static str,
+    /// Modeled duration, ns.
+    pub ns: f64,
+}
+
+/// Run the full camera pipeline functionally and model its CPU time.
+///
+/// Per-stage cost: `ops_per_pixel` scalar operations at the CPU model's
+/// layout-transform rate (these stages are exactly the pointwise/stencil
+/// loops that rate describes), `threads`-way parallel.
+pub fn run_pipeline(
+    raw: &RawFrame,
+    soc: &SocConfig,
+    threads: usize,
+    timeline: Option<&mut Timeline>,
+) -> (RgbFrame, Vec<StageTime>) {
+    let cpu = CpuModel::new(soc);
+    let px = (raw.width * raw.height) as f64;
+    // ops/pixel estimates for each stage's inner loop (loads+ALU+stores).
+    let stage_cost = |ops_per_px: f64| {
+        cpu.cycles_ns(LAYOUT_CYCLES_PER_ELEM * ops_per_px * px)
+            / threads.min(soc.cpu_cores).max(1) as f64
+    };
+    let mut stages = Vec::new();
+    let mut t = 0.0f64;
+
+    // ops/px calibrated so a single-threaded 720p frame lands at the
+    // paper's measured ~13.2 ms (Fig 19); the per-stage split follows the
+    // relative stencil sizes (sharpen's 3x3x3-channel loop dominates).
+    let hp = hot_pixel_suppression(raw);
+    stages.push(StageTime { name: "hot_pixel", ns: stage_cost(3.0) });
+    let planes = deinterleave(&hp);
+    stages.push(StageTime { name: "deinterleave", ns: stage_cost(1.0) });
+    let mut rgb = demosaic(&planes, raw.width, raw.height);
+    stages.push(StageTime { name: "demosaic", ns: stage_cost(5.0) });
+    white_balance(&mut rgb, [1.9, 1.0, 1.6]);
+    stages.push(StageTime { name: "white_balance", ns: stage_cost(2.0) });
+    let sharp = sharpen(&rgb, 0.8);
+    stages.push(StageTime { name: "sharpen", ns: stage_cost(7.0) });
+
+    if let Some(tl) = timeline {
+        for s in &stages {
+            tl.push(t, t + s.ns, Lane::Camera, EventKind::CameraStage, s.name);
+            t += s.ns;
+        }
+    }
+    (sharp, stages)
+}
+
+/// Total camera-pipeline time in ns.
+pub fn pipeline_ns(stages: &[StageTime]) -> f64 {
+    stages.iter().map(|s| s.ns).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame() -> RawFrame {
+        RawFrame::synthetic(128, 96, 42)
+    }
+
+    #[test]
+    fn synthetic_frame_has_hot_pixels() {
+        let f = frame();
+        assert!(f.data.iter().any(|&v| v == 65535));
+    }
+
+    #[test]
+    fn hot_pixel_suppression_removes_outliers() {
+        let f = frame();
+        let cleaned = hot_pixel_suppression(&f);
+        let max_before = *f.data.iter().max().unwrap();
+        let max_after = *cleaned.data[f.width..f.data.len() - f.width]
+            .iter()
+            .max()
+            .unwrap();
+        assert_eq!(max_before, 65535);
+        assert!(max_after < 65535, "hot pixel survived: {max_after}");
+    }
+
+    #[test]
+    fn deinterleave_splits_planes() {
+        let f = frame();
+        let planes = deinterleave(&f);
+        for p in &planes {
+            assert_eq!(p.len(), (f.width / 2) * (f.height / 2));
+        }
+        assert_eq!(planes[0][0], f.at(0, 0));
+        assert_eq!(planes[1][0], f.at(1, 0));
+        assert_eq!(planes[2][0], f.at(0, 1));
+        assert_eq!(planes[3][0], f.at(1, 1));
+    }
+
+    #[test]
+    fn demosaic_produces_unit_range_rgb() {
+        let f = frame();
+        let rgb = demosaic(&deinterleave(&f), f.width, f.height);
+        assert_eq!(rgb.data.len(), f.width * f.height * 3);
+        assert!(rgb.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn constant_raw_gives_constant_rgb() {
+        let f = RawFrame {
+            width: 8,
+            height: 8,
+            data: vec![32768; 64],
+        };
+        let rgb = demosaic(&deinterleave(&f), 8, 8);
+        let first = &rgb.data[0..3];
+        for px in rgb.data.chunks(3) {
+            assert_eq!(px, first);
+        }
+    }
+
+    #[test]
+    fn white_balance_scales_channels() {
+        let mut rgb = RgbFrame {
+            width: 1,
+            height: 1,
+            data: vec![0.1, 0.2, 0.3],
+        };
+        white_balance(&mut rgb, [2.0, 1.0, 0.5]);
+        assert_eq!(rgb.data, vec![0.2, 0.2, 0.15]);
+    }
+
+    #[test]
+    fn sharpen_increases_edge_contrast() {
+        // A step edge: sharpening should push values apart at the edge.
+        let w = 8;
+        let mut data = vec![0.0f32; w * w * 3];
+        for y in 0..w {
+            for x in w / 2..w {
+                for c in 0..3 {
+                    data[(y * w + x) * 3 + c] = 1.0;
+                }
+            }
+        }
+        let f = RgbFrame { width: w, height: w, data };
+        let s = sharpen(&f, 1.0);
+        // Just inside the bright side of the edge: overshoot (clamped <=1
+        // but darker neighbour dips below original 0).
+        let dark_side = s.data[(3 * w + (w / 2 - 1)) * 3];
+        assert!(dark_side <= 0.0 + 1e-6);
+    }
+
+    #[test]
+    fn downsample_preserves_mean_roughly() {
+        let f = frame();
+        let rgb = demosaic(&deinterleave(&f), f.width, f.height);
+        let small = downsample(&rgb, 32, 32);
+        let mean_big: f32 = rgb.data.iter().sum::<f32>() / rgb.data.len() as f32;
+        let mean_small: f32 = small.data.iter().sum::<f32>() / small.data.len() as f32;
+        assert!((mean_big - mean_small).abs() < 0.05);
+    }
+
+    #[test]
+    fn pipeline_timing_scales_with_threads() {
+        let f = RawFrame::synthetic(256, 128, 1);
+        let soc = SocConfig::default();
+        let (_, s1) = run_pipeline(&f, &soc, 1, None);
+        let (_, s8) = run_pipeline(&f, &soc, 8, None);
+        assert!(pipeline_ns(&s1) > pipeline_ns(&s8) * 7.0);
+    }
+
+    #[test]
+    fn pipeline_720p_time_order_of_ms() {
+        // Paper Fig 19: camera pipeline ~13.2 ms on 720p.
+        let f = RawFrame::synthetic(1280, 720, 2);
+        let soc = SocConfig::default();
+        let (_, stages) = run_pipeline(&f, &soc, 1, None);
+        let ms = pipeline_ns(&stages) / 1e6;
+        assert!((5.0..40.0).contains(&ms), "{ms:.1} ms");
+    }
+}

@@ -1,0 +1,380 @@
+//! SoC configuration (paper Table II) and simulation options.
+//!
+//! The defaults reproduce the paper's baseline SoC:
+//!
+//! | Component | Parameters |
+//! |---|---|
+//! | CPU | 8 OoO x86 cores @ 2.5 GHz, 8-uop issue, 192-entry ROB |
+//! | L1  | 64 KB I+D, 4-way, 32 B lines, 2-cycle |
+//! | L2 (LLC) | 2 MB, 16-way, MESI, 20-cycle |
+//! | DRAM | LP-DDR4 @1600 MHz, 4 GB, 4 channels, 25.6 GB/s |
+//! | Accels | NVDLA-style conv engine + others; 8x8 systolic array; 1 GHz; 32 KB scratchpads |
+
+use std::fmt;
+
+/// Which accelerator backend executes the accelerated kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccelKind {
+    /// NVDLA-inspired convolution engine: 8 PEs x 32-way MACC (paper Fig 4).
+    Nvdla,
+    /// Output-stationary systolic array (native cycle-level model).
+    Systolic,
+}
+
+impl fmt::Display for AccelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AccelKind::Nvdla => write!(f, "nvdla"),
+            AccelKind::Systolic => write!(f, "systolic"),
+        }
+    }
+}
+
+/// SoC-accelerator interface (paper §IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InterfaceKind {
+    /// Software-managed DMA over private scratchpads: the CPU must flush /
+    /// invalidate cache lines before/after each transfer.
+    Dma,
+    /// Accelerator Coherency Port: one-way coherent requests into the LLC
+    /// (20-cycle hit latency measured from an A53 Verilog testbench).
+    Acp,
+}
+
+impl fmt::Display for InterfaceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InterfaceKind::Dma => write!(f, "dma"),
+            InterfaceKind::Acp => write!(f, "acp"),
+        }
+    }
+}
+
+/// How the simulator executes tile numerics (timing is always modeled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionalMode {
+    /// No functional execution (timing/energy study only).
+    Off,
+    /// Execute every accelerator tile through the AOT PJRT artifacts.
+    Pjrt,
+    /// Execute every accelerator tile with the native Rust reference.
+    Native,
+}
+
+/// SoC microarchitectural parameters (paper Table II).
+#[derive(Debug, Clone)]
+pub struct SocConfig {
+    /// Number of CPU cores.
+    pub cpu_cores: usize,
+    /// CPU clock in GHz.
+    pub cpu_ghz: f64,
+    /// Accelerator clock in GHz.
+    pub accel_ghz: f64,
+    /// Cache line size in bytes.
+    pub cacheline_bytes: usize,
+    /// LLC capacity in bytes (2 MB).
+    pub llc_bytes: usize,
+    /// LLC associativity.
+    pub llc_ways: usize,
+    /// LLC access latency in CPU cycles (also the ACP hit latency).
+    pub llc_latency_cycles: u64,
+    /// DRAM peak bandwidth in GB/s (4 channels LP-DDR4 => 25.6).
+    pub dram_gbps: f64,
+    /// Number of DRAM channels.
+    pub dram_channels: usize,
+    /// Achievable fraction of peak DRAM bandwidth for streaming access.
+    pub dram_efficiency: f64,
+    /// Accelerator scratchpad size in bytes (each of input/weight/output).
+    pub spad_bytes: usize,
+    /// Datapath element size in bytes (16-bit fixed point in the paper).
+    pub elem_bytes: usize,
+    /// NVDLA engine: number of PEs (each owns one output feature map).
+    pub nvdla_pes: usize,
+    /// NVDLA engine: MACC width per PE (32-way channel reduction).
+    pub nvdla_macc_width: usize,
+    /// Systolic array rows.
+    pub systolic_rows: usize,
+    /// Systolic array cols.
+    pub systolic_cols: usize,
+}
+
+impl Default for SocConfig {
+    fn default() -> Self {
+        Self {
+            cpu_cores: 8,
+            cpu_ghz: 2.5,
+            accel_ghz: 1.0,
+            cacheline_bytes: 32,
+            llc_bytes: 2 * 1024 * 1024,
+            llc_ways: 16,
+            llc_latency_cycles: 20,
+            dram_gbps: 25.6,
+            dram_channels: 4,
+            dram_efficiency: 0.80,
+            spad_bytes: 32 * 1024,
+            elem_bytes: 2,
+            nvdla_pes: 8,
+            nvdla_macc_width: 32,
+            systolic_rows: 8,
+            systolic_cols: 8,
+        }
+    }
+}
+
+impl SocConfig {
+    /// Nanoseconds per CPU cycle.
+    #[inline]
+    pub fn cpu_cycle_ns(&self) -> f64 {
+        1.0 / self.cpu_ghz
+    }
+
+    /// Nanoseconds per accelerator cycle.
+    #[inline]
+    pub fn accel_cycle_ns(&self) -> f64 {
+        1.0 / self.accel_ghz
+    }
+
+    /// Maximum scratchpad-resident elements per operand.
+    #[inline]
+    pub fn spad_elems(&self) -> usize {
+        self.spad_bytes / self.elem_bytes
+    }
+
+    /// Effective streaming DRAM bandwidth in bytes/ns (= GB/s).
+    #[inline]
+    pub fn dram_eff_bytes_per_ns(&self) -> f64 {
+        self.dram_gbps * self.dram_efficiency
+    }
+
+    /// Render the configuration as a Table-II-style listing.
+    pub fn table(&self) -> String {
+        format!(
+            "Component   Parameters\n\
+             CPU Core    {} OoO x86 cores @{:.1}GHz\n\
+             LLC (L2)    {} KiB, {}-way, MESI, {}-cycle access\n\
+             DRAM        LP-DDR4, {} channels, {:.1} GB/s peak ({:.0}% eff.)\n\
+             Accels      NVDLA conv engine ({} PEs x {}-way MACC), systolic ({}x{}), @{:.1}GHz\n\
+             Scratchpads {} KiB each (in/wgt/out), {}-bit datapath",
+            self.cpu_cores,
+            self.cpu_ghz,
+            self.llc_bytes / 1024,
+            self.llc_ways,
+            self.llc_latency_cycles,
+            self.dram_channels,
+            self.dram_gbps,
+            self.dram_efficiency * 100.0,
+            self.nvdla_pes,
+            self.nvdla_macc_width,
+            self.systolic_rows,
+            self.systolic_cols,
+            self.accel_ghz,
+            self.spad_bytes / 1024,
+            self.elem_bytes * 8,
+        )
+    }
+}
+
+impl SocConfig {
+    /// Parse a SoC config file: one `key = value` per line, `#` comments.
+    /// Unknown keys are an error (catches typos in experiment scripts).
+    ///
+    /// ```text
+    /// # my_soc.cfg
+    /// cpu_cores = 4
+    /// dram_gbps = 12.8
+    /// systolic_rows = 16
+    /// ```
+    pub fn from_str_cfg(text: &str) -> Result<Self, String> {
+        let mut c = SocConfig::default();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", no + 1))?;
+            let (key, val) = (key.trim(), val.trim());
+            let err = |e: &str| format!("line {}: {key}: {e}", no + 1);
+            macro_rules! set {
+                ($field:ident, $ty:ty) => {
+                    c.$field = val.parse::<$ty>().map_err(|e| err(&e.to_string()))?
+                };
+            }
+            match key {
+                "cpu_cores" => set!(cpu_cores, usize),
+                "cpu_ghz" => set!(cpu_ghz, f64),
+                "accel_ghz" => set!(accel_ghz, f64),
+                "cacheline_bytes" => set!(cacheline_bytes, usize),
+                "llc_bytes" => set!(llc_bytes, usize),
+                "llc_ways" => set!(llc_ways, usize),
+                "llc_latency_cycles" => set!(llc_latency_cycles, u64),
+                "dram_gbps" => set!(dram_gbps, f64),
+                "dram_channels" => set!(dram_channels, usize),
+                "dram_efficiency" => set!(dram_efficiency, f64),
+                "spad_bytes" => set!(spad_bytes, usize),
+                "elem_bytes" => set!(elem_bytes, usize),
+                "nvdla_pes" => set!(nvdla_pes, usize),
+                "nvdla_macc_width" => set!(nvdla_macc_width, usize),
+                "systolic_rows" => set!(systolic_rows, usize),
+                "systolic_cols" => set!(systolic_cols, usize),
+                other => return Err(format!("line {}: unknown key '{other}'", no + 1)),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Load a SoC config file from disk.
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_str_cfg(&text)
+    }
+}
+
+/// Per-run simulation options (the paper's experiment knobs).
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Which accelerator backend runs conv/FC kernels.
+    pub accel_kind: AccelKind,
+    /// Number of accelerator instances in the worker pool (1..).
+    pub num_accels: usize,
+    /// SoC-accelerator interface.
+    pub interface: InterfaceKind,
+    /// Software-stack threads for data preparation/finalization (1..).
+    pub sw_threads: usize,
+    /// Aladdin-style loop sampling factor (1 = no sampling).
+    pub sampling_factor: usize,
+    /// Functional execution mode.
+    pub functional: FunctionalMode,
+    /// Capture a detailed event timeline (Fig 14/19 style).
+    pub capture_timeline: bool,
+    /// RNG seed for synthetic weights/inputs.
+    pub seed: u64,
+    /// Extension (paper §II-D notes NVDLA's convolution buffer is *not*
+    /// modeled): double-buffer the scratchpads so the next tile's
+    /// transfer overlaps the current tile's compute.
+    pub double_buffer: bool,
+    /// Extension (paper §IV-B leaves this as future work): allow a
+    /// reduction group's channel blocks to spread across accelerators,
+    /// with an explicit inter-accelerator partial-sum merge.
+    pub inter_accel_reduction: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self {
+            accel_kind: AccelKind::Nvdla,
+            num_accels: 1,
+            interface: InterfaceKind::Dma,
+            sw_threads: 1,
+            sampling_factor: 1,
+            functional: FunctionalMode::Off,
+            capture_timeline: false,
+            seed: 0xC0FFEE,
+            double_buffer: false,
+            inter_accel_reduction: false,
+        }
+    }
+}
+
+impl SimOptions {
+    /// The paper's fully-optimized configuration (Fig 18): ACP + 8 accels +
+    /// 8 software threads.
+    pub fn optimized() -> Self {
+        Self {
+            interface: InterfaceKind::Acp,
+            num_accels: 8,
+            sw_threads: 8,
+            ..Self::default()
+        }
+    }
+
+    /// Parse an `AccelKind` CLI value.
+    pub fn parse_accel(s: &str) -> Result<AccelKind, String> {
+        match s {
+            "nvdla" => Ok(AccelKind::Nvdla),
+            "systolic" => Ok(AccelKind::Systolic),
+            other => Err(format!("unknown accelerator '{other}' (nvdla|systolic)")),
+        }
+    }
+
+    /// Parse an `InterfaceKind` CLI value.
+    pub fn parse_interface(s: &str) -> Result<InterfaceKind, String> {
+        match s {
+            "dma" => Ok(InterfaceKind::Dma),
+            "acp" => Ok(InterfaceKind::Acp),
+            other => Err(format!("unknown interface '{other}' (dma|acp)")),
+        }
+    }
+
+    /// Parse a `FunctionalMode` CLI value.
+    pub fn parse_functional(s: &str) -> Result<FunctionalMode, String> {
+        match s {
+            "off" => Ok(FunctionalMode::Off),
+            "pjrt" => Ok(FunctionalMode::Pjrt),
+            "native" => Ok(FunctionalMode::Native),
+            other => Err(format!("unknown functional mode '{other}' (off|pjrt|native)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_ii_defaults() {
+        let c = SocConfig::default();
+        assert_eq!(c.cpu_cores, 8);
+        assert_eq!(c.llc_bytes, 2 * 1024 * 1024);
+        assert_eq!(c.dram_gbps, 25.6);
+        assert_eq!(c.spad_elems(), 16384);
+        assert!((c.cpu_cycle_ns() - 0.4).abs() < 1e-12);
+        assert!((c.accel_cycle_ns() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimized_options_match_fig18() {
+        let o = SimOptions::optimized();
+        assert_eq!(o.num_accels, 8);
+        assert_eq!(o.sw_threads, 8);
+        assert_eq!(o.interface, InterfaceKind::Acp);
+    }
+
+    #[test]
+    fn parsers() {
+        assert_eq!(SimOptions::parse_accel("nvdla").unwrap(), AccelKind::Nvdla);
+        assert_eq!(
+            SimOptions::parse_interface("acp").unwrap(),
+            InterfaceKind::Acp
+        );
+        assert!(SimOptions::parse_functional("bogus").is_err());
+    }
+
+    #[test]
+    fn table_rendering_mentions_key_params() {
+        let t = SocConfig::default().table();
+        assert!(t.contains("25.6 GB/s"));
+        assert!(t.contains("8 PEs x 32-way"));
+    }
+
+    #[test]
+    fn cfg_file_overrides_defaults() {
+        let c = SocConfig::from_str_cfg(
+            "# test\ncpu_cores = 4\ndram_gbps = 12.8\nsystolic_rows=16 # inline\n",
+        )
+        .unwrap();
+        assert_eq!(c.cpu_cores, 4);
+        assert_eq!(c.dram_gbps, 12.8);
+        assert_eq!(c.systolic_rows, 16);
+        // Untouched keys keep Table II defaults.
+        assert_eq!(c.llc_bytes, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn cfg_rejects_unknown_keys_and_garbage() {
+        assert!(SocConfig::from_str_cfg("cpu_coresss = 4\n").is_err());
+        assert!(SocConfig::from_str_cfg("cpu_cores four\n").is_err());
+        assert!(SocConfig::from_str_cfg("cpu_cores = four\n").is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! CPU software-stack cost model (paper §IV-C).
+//!
+//! The software stack's time splits into *data preparation* (layout
+//! transforms + tiling memcpys), *data finalization* (untiling), and
+//! *other* (control flow, memory management, glue, synchronization). The
+//! memcpy model has a per-call fixed overhead plus streaming time through
+//! the shared DRAM bandwidth — short runs (channel-wise tiling) are
+//! overhead-bound, long runs are bandwidth-bound, reproducing Fig 6.
+
+pub mod threadpool;
+
+pub use threadpool::{capped_makespan, round_robin_makespan};
+
+use crate::config::SocConfig;
+use crate::tiling::CopyStats;
+
+/// Fixed CPU overhead per memcpy call, ns (call + loop setup + first-miss).
+pub const PER_COPY_NS: f64 = 32.0;
+/// Single-core streaming copy bandwidth, bytes/ns (load+store pipeline;
+/// payload rate — read+write traffic is twice this).
+pub const CORE_COPY_BW: f64 = 3.0;
+/// Per-operator framework dispatch overhead, CPU cycles.
+pub const OP_DISPATCH_CYCLES: f64 = 12_000.0;
+/// Per-tile scheduling/tracking overhead, CPU cycles.
+pub const TILE_DISPATCH_CYCLES: f64 = 500.0;
+/// Thread-pool synchronization cost per phase per thread, CPU cycles.
+pub const SYNC_CYCLES_PER_THREAD: f64 = 2_500.0;
+/// CPU cycles per element for scalar layout transforms (NCHW<->NHWC).
+pub const LAYOUT_CYCLES_PER_ELEM: f64 = 2.0;
+
+/// CPU cost model parameters derived from the SoC config.
+#[derive(Debug, Clone)]
+pub struct CpuModel {
+    /// Number of cores available to the software stack.
+    pub cores: usize,
+    cycle_ns: f64,
+    dram_rate: f64,
+}
+
+/// Duration breakdown of one software phase.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseTime {
+    /// Wall-clock span of the phase, ns.
+    pub span_ns: f64,
+    /// Memory traffic generated (bytes, read+write).
+    pub traffic_bytes: u64,
+}
+
+impl CpuModel {
+    /// Build from the SoC configuration.
+    pub fn new(soc: &SocConfig) -> Self {
+        Self {
+            cores: soc.cpu_cores,
+            cycle_ns: soc.cpu_cycle_ns(),
+            dram_rate: soc.dram_eff_bytes_per_ns(),
+        }
+    }
+
+    /// Nanoseconds for `cycles` CPU cycles.
+    #[inline]
+    pub fn cycles_ns(&self, cycles: f64) -> f64 {
+        cycles * self.cycle_ns
+    }
+
+    /// Time for one thread to execute a batch of memcpys described by
+    /// `stats` (overhead + streaming at core bandwidth).
+    pub fn memcpy_task_ns(&self, stats: CopyStats) -> f64 {
+        stats.memcpys as f64 * PER_COPY_NS + stats.bytes as f64 / CORE_COPY_BW
+    }
+
+    /// Wall time of a tiling phase: `tasks` per-tile copy jobs spread
+    /// round-robin over `threads` workers, capped by aggregate DRAM
+    /// bandwidth. Returns the phase span; traffic is read+write.
+    pub fn tiling_phase(&self, tasks: &[CopyStats], threads: usize) -> PhaseTime {
+        let threads = threads.min(self.cores).max(1);
+        let durations: Vec<f64> = tasks.iter().map(|s| self.memcpy_task_ns(*s)).collect();
+        let total_bytes: u64 = tasks.iter().map(|s| s.bytes).sum();
+        // Read + write both stream through the memory system.
+        let traffic = 2 * total_bytes;
+        let span = capped_makespan(
+            &durations,
+            threads,
+            traffic as f64,
+            self.dram_rate,
+        );
+        // Thread-pool dispatch + join overhead.
+        let sync = self.cycles_ns(SYNC_CYCLES_PER_THREAD * threads as f64);
+        PhaseTime {
+            span_ns: span + if total_bytes > 0 { sync } else { 0.0 },
+            traffic_bytes: traffic,
+        }
+    }
+
+    /// Scalar layout-transform time (NCHW <-> NHWC) over `elems` elements
+    /// with `threads` workers.
+    pub fn layout_transform_ns(&self, elems: usize, threads: usize) -> f64 {
+        let threads = threads.min(self.cores).max(1) as f64;
+        self.cycles_ns(LAYOUT_CYCLES_PER_ELEM * elems as f64) / threads
+    }
+
+    /// Per-operator "other software" overhead (control flow, memory
+    /// management, glue): dispatch plus per-tile tracking.
+    pub fn op_overhead_ns(&self, num_tiles: usize) -> f64 {
+        self.cycles_ns(OP_DISPATCH_CYCLES + TILE_DISPATCH_CYCLES * num_tiles as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CpuModel {
+        CpuModel::new(&SocConfig::default())
+    }
+
+    fn stats(memcpys: u64, bytes: u64) -> CopyStats {
+        CopyStats { memcpys, bytes }
+    }
+
+    #[test]
+    fn fig6_medium_tensor_ratio() {
+        // Paper Fig 6 medium tensor (1x16x16x128, 64 KB):
+        // channel-wise = 512 copies of 128 B; row-wise = 2 copies of 32 KB.
+        // Paper measures row-wise 1.78x faster.
+        let m = model();
+        let ch = m.memcpy_task_ns(stats(512, 512 * 128));
+        let row = m.memcpy_task_ns(stats(2, 2 * 32 * 1024));
+        let ratio = ch / row;
+        assert!((1.3..2.4).contains(&ratio), "ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn fig6_large_tensor_ratio() {
+        // Large tensor (1x64x64x512, 4 Mi elems): DimHW = 128 copies of
+        // 32 KB; DimCH = 262144 copies of 16 B. Paper: 6.5x faster.
+        let m = model();
+        let hw = m.memcpy_task_ns(stats(128, 128 * 32 * 1024));
+        let ch = m.memcpy_task_ns(stats(262_144, 262_144 * 16));
+        let ratio = ch / hw;
+        assert!((4.0..9.5).contains(&ratio), "ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn multithreading_speeds_up_prep() {
+        // Many uniform tile-copy tasks: 8 threads should give ~3-4x
+        // (bandwidth-capped), as in paper Fig 16.
+        let m = model();
+        let tasks: Vec<CopyStats> = (0..256).map(|_| stats(16, 16 * 2048)).collect();
+        let t1 = m.tiling_phase(&tasks, 1).span_ns;
+        let t8 = m.tiling_phase(&tasks, 8).span_ns;
+        let speedup = t1 / t8;
+        assert!((2.5..4.5).contains(&speedup), "speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn few_tiles_limit_thread_scaling() {
+        // A single task cannot parallelize (paper: Minerva gains little).
+        let m = model();
+        let tasks = [stats(4, 4 * 4096)];
+        let t1 = m.tiling_phase(&tasks, 1).span_ns;
+        let t8 = m.tiling_phase(&tasks, 8).span_ns;
+        assert!(t8 >= t1 * 0.8, "t1 {t1} t8 {t8}");
+    }
+
+    #[test]
+    fn traffic_counts_read_plus_write() {
+        let m = model();
+        let ph = m.tiling_phase(&[stats(10, 1000)], 2);
+        assert_eq!(ph.traffic_bytes, 2000);
+    }
+
+    #[test]
+    fn op_overhead_scales_with_tiles() {
+        let m = model();
+        assert!(m.op_overhead_ns(100) > m.op_overhead_ns(1));
+    }
+
+    #[test]
+    fn layout_transform_parallelizes() {
+        let m = model();
+        let t1 = m.layout_transform_ns(1_000_000, 1);
+        let t8 = m.layout_transform_ns(1_000_000, 8);
+        assert!((t1 / t8 - 8.0).abs() < 1e-9);
+    }
+}

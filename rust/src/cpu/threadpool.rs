@@ -1,0 +1,83 @@
+//! The SMAUG thread-pool model (paper §II-E3).
+//!
+//! gem5's syscall-emulation mode has no kernel thread scheduler, so SMAUG
+//! implements a user-level pool: tasks are pushed to a work queue and
+//! handed to threads round-robin; each task runs to completion before the
+//! thread takes another. Idle threads quiesce (no spinning cost).
+//!
+//! This module computes makespans for that policy — the simulator's model
+//! of multithreaded data preparation/finalization.
+
+/// Makespan of `tasks` (durations) distributed round-robin over `threads`
+/// workers, each executing its queue serially (SMAUG's policy: tasks are
+/// assigned in arrival order, not work-stealing).
+pub fn round_robin_makespan(tasks: &[f64], threads: usize) -> f64 {
+    assert!(threads > 0);
+    let mut loads = vec![0.0f64; threads];
+    for (i, &t) in tasks.iter().enumerate() {
+        loads[i % threads] += t;
+    }
+    loads.into_iter().fold(0.0, f64::max)
+}
+
+/// Makespan with a global throughput cap: per-thread serialization (round
+/// robin) and an aggregate resource bound (e.g. DRAM bandwidth shared by
+/// all copy threads) — whichever binds.
+pub fn capped_makespan(tasks: &[f64], threads: usize, total_work: f64, agg_rate: f64) -> f64 {
+    let rr = round_robin_makespan(tasks, threads);
+    let bw_bound = if agg_rate > 0.0 { total_work / agg_rate } else { 0.0 };
+    rr.max(bw_bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_thread_sums() {
+        assert_eq!(round_robin_makespan(&[1.0, 2.0, 3.0], 1), 6.0);
+    }
+
+    #[test]
+    fn perfect_split_two_threads() {
+        // RR: t0 gets [1,3], t1 gets [2,4] -> makespan 6.
+        assert_eq!(round_robin_makespan(&[1.0, 2.0, 3.0, 4.0], 2), 6.0);
+    }
+
+    #[test]
+    fn imbalance_hurts_round_robin() {
+        // One huge task pinned to thread 0 alongside its RR share.
+        let tasks = [10.0, 1.0, 1.0, 1.0];
+        assert_eq!(round_robin_makespan(&tasks, 2), 11.0);
+    }
+
+    #[test]
+    fn makespan_bounds() {
+        // Round-robin isn't strictly monotone in thread count, but it is
+        // always bounded by total work and the per-thread lower bound.
+        let tasks: Vec<f64> = (0..37).map(|i| 1.0 + (i % 5) as f64).collect();
+        let total: f64 = tasks.iter().sum();
+        let max_task = tasks.iter().cloned().fold(0.0, f64::max);
+        for t in 1..=8 {
+            let m = round_robin_makespan(&tasks, t);
+            assert!(m <= total + 1e-9, "threads {t}");
+            assert!(m >= (total / t as f64).max(max_task) - 1e-9, "threads {t}");
+        }
+        // And 8 threads beats 1 thread on this workload.
+        assert!(round_robin_makespan(&tasks, 8) < round_robin_makespan(&tasks, 1));
+    }
+
+    #[test]
+    fn bandwidth_cap_binds() {
+        let tasks = [1.0; 8];
+        // 8 threads would make it 1.0, but the shared resource allows
+        // only total_work/agg_rate = 4.0.
+        let m = capped_makespan(&tasks, 8, 8.0, 2.0);
+        assert_eq!(m, 4.0);
+    }
+
+    #[test]
+    fn empty_tasks() {
+        assert_eq!(round_robin_makespan(&[], 4), 0.0);
+    }
+}

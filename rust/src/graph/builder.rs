@@ -1,0 +1,280 @@
+//! Declarative graph builder mirroring SMAUG's Python frontend (Fig 2).
+//!
+//! ```no_run
+//! use smaug::graph::{Activation, GraphBuilder, Padding};
+//! let mut g = GraphBuilder::new("residual");
+//! let x = g.input("input", 1, 32, 32, 8);
+//! let a = g.conv("conv0", x, 64, 3, 1, Padding::Same, Some(Activation::Relu));
+//! let b = g.conv("conv1", a, 8, 3, 1, Padding::Same, None);
+//! g.add("add", b, x, Some(Activation::Relu));
+//! let graph = g.build();
+//! assert_eq!(graph.ops.len(), 4);
+//! ```
+
+use super::{Activation, Graph, Op, OpKind, TensorId};
+use crate::tensor::TensorDesc;
+use crate::tiling::{ConvParams, FcParams, PoolParams};
+
+/// Convolution padding mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// Zero-pad so output spatial dims = ceil(input / stride).
+    Same,
+    /// No padding.
+    Valid,
+}
+
+/// Incremental graph builder.
+#[derive(Debug)]
+pub struct GraphBuilder {
+    name: String,
+    ops: Vec<Op>,
+    tensors: Vec<TensorDesc>,
+}
+
+impl GraphBuilder {
+    /// Start a new graph.
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            ops: Vec::new(),
+            tensors: Vec::new(),
+        }
+    }
+
+    fn push_tensor(&mut self, d: TensorDesc) -> TensorId {
+        self.tensors.push(d);
+        self.tensors.len() - 1
+    }
+
+    fn push_op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        output: TensorId,
+        param_elems: usize,
+    ) -> TensorId {
+        assert!(
+            !self.ops.iter().any(|o| o.name == name),
+            "duplicate op name '{name}'"
+        );
+        let id = self.ops.len();
+        self.ops.push(Op {
+            id,
+            name: name.to_string(),
+            kind,
+            inputs,
+            output,
+            param_elems,
+        });
+        output
+    }
+
+    /// Network input (NHWC).
+    pub fn input(&mut self, name: &str, n: usize, h: usize, w: usize, c: usize) -> TensorId {
+        let t = self.push_tensor(TensorDesc::nhwc16(n, h, w, c));
+        self.push_op(name, OpKind::Input, vec![], t, 0)
+    }
+
+    /// 2-D convolution with `k` output channels, square `r x r` kernel.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        k: usize,
+        r: usize,
+        stride: usize,
+        padding: Padding,
+        activation: Option<Activation>,
+    ) -> TensorId {
+        let xs = self.tensors[x].shape.clone();
+        assert_eq!(xs.rank(), 4, "conv input must be NHWC");
+        let params = ConvParams {
+            h: xs.h(),
+            w: xs.w(),
+            c: xs.c(),
+            k,
+            r,
+            s: r,
+            stride,
+            pad_same: padding == Padding::Same,
+        };
+        let (oh, ow) = params.out_dims();
+        let out = self.push_tensor(TensorDesc::nhwc16(xs.n(), oh, ow, k));
+        let param_elems = k * r * r * xs.c() + k; // weights + bias
+        self.push_op(
+            name,
+            OpKind::Conv { params, activation },
+            vec![x],
+            out,
+            param_elems,
+        )
+    }
+
+    /// Inner product (fully connected) to `c_out` features.
+    pub fn fc(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        c_out: usize,
+        activation: Option<Activation>,
+    ) -> TensorId {
+        let xs = &self.tensors[x].shape;
+        assert_eq!(xs.rank(), 2, "fc input must be flattened (use flatten)");
+        let c_in = xs.dim(1);
+        let out = self.push_tensor(TensorDesc::nc16(xs.dim(0), c_out));
+        self.push_op(
+            name,
+            OpKind::InnerProduct {
+                params: FcParams { c_in, c_out },
+                activation,
+            },
+            vec![x],
+            out,
+            c_in * c_out + c_out,
+        )
+    }
+
+    /// Max pooling with square window.
+    pub fn max_pool(&mut self, name: &str, x: TensorId, size: usize, stride: usize) -> TensorId {
+        let xs = self.tensors[x].shape.clone();
+        let params = PoolParams {
+            h: xs.h(),
+            w: xs.w(),
+            c: xs.c(),
+            size,
+            stride,
+        };
+        let (oh, ow) = params.out_dims();
+        let out = self.push_tensor(TensorDesc::nhwc16(xs.n(), oh, ow, xs.c()));
+        self.push_op(name, OpKind::MaxPool(params), vec![x], out, 0)
+    }
+
+    /// Average pooling with square window.
+    pub fn avg_pool(&mut self, name: &str, x: TensorId, size: usize, stride: usize) -> TensorId {
+        let xs = self.tensors[x].shape.clone();
+        let params = PoolParams {
+            h: xs.h(),
+            w: xs.w(),
+            c: xs.c(),
+            size,
+            stride,
+        };
+        let (oh, ow) = params.out_dims();
+        let out = self.push_tensor(TensorDesc::nhwc16(xs.n(), oh, ow, xs.c()));
+        self.push_op(name, OpKind::AvgPool(params), vec![x], out, 0)
+    }
+
+    /// Inference batch normalization (per-channel scale + shift).
+    pub fn batch_norm(&mut self, name: &str, x: TensorId) -> TensorId {
+        let d = self.tensors[x].clone();
+        let c = *d.shape.dims().last().unwrap();
+        let out = self.push_tensor(d);
+        // mean, var, gamma, beta per channel.
+        self.push_op(name, OpKind::BatchNorm, vec![x], out, 4 * c)
+    }
+
+    /// Element-wise addition (residual connection).
+    pub fn add(
+        &mut self,
+        name: &str,
+        a: TensorId,
+        b: TensorId,
+        activation: Option<Activation>,
+    ) -> TensorId {
+        assert_eq!(
+            self.tensors[a].shape, self.tensors[b].shape,
+            "eltwise add shape mismatch"
+        );
+        let d = self.tensors[a].clone();
+        let out = self.push_tensor(d);
+        self.push_op(name, OpKind::EltwiseAdd { activation }, vec![a, b], out, 0)
+    }
+
+    /// Standalone ReLU (usually fused by [`Graph::fuse`]).
+    pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
+        let d = self.tensors[x].clone();
+        let out = self.push_tensor(d);
+        self.push_op(name, OpKind::Act(Activation::Relu), vec![x], out, 0)
+    }
+
+    /// Standalone ELU.
+    pub fn elu(&mut self, name: &str, x: TensorId) -> TensorId {
+        let d = self.tensors[x].clone();
+        let out = self.push_tensor(d);
+        self.push_op(name, OpKind::Act(Activation::Elu), vec![x], out, 0)
+    }
+
+    /// Flatten NHWC to NC for the classifier head.
+    pub fn flatten(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = self.tensors[x].shape.clone();
+        let out = self.push_tensor(TensorDesc::nc16(xs.dim(0), xs.elems() / xs.dim(0)));
+        self.push_op(name, OpKind::Flatten, vec![x], out, 0)
+    }
+
+    /// Finish and return the graph.
+    pub fn build(self) -> Graph {
+        assert!(!self.ops.is_empty(), "empty graph");
+        Graph {
+            name: self.name,
+            ops: self.ops,
+            tensors: self.tensors,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_style_chain() {
+        let mut g = GraphBuilder::new("lenet-ish");
+        let x = g.input("in", 1, 28, 28, 1);
+        let c1 = g.conv("c1", x, 32, 3, 1, Padding::Same, Some(Activation::Relu));
+        let c2 = g.conv("c2", c1, 32, 3, 1, Padding::Same, Some(Activation::Relu));
+        let p = g.max_pool("p", c2, 2, 2);
+        let f = g.flatten("fl", p);
+        let f1 = g.fc("f1", f, 128, Some(Activation::Relu));
+        g.fc("f2", f1, 10, None);
+        let graph = g.build();
+        assert_eq!(graph.ops.len(), 7);
+        // Flatten produced 14*14*32 features.
+        let fc1 = graph.ops.iter().find(|o| o.name == "f1").unwrap();
+        if let OpKind::InnerProduct { params, .. } = &fc1.kind {
+            assert_eq!(params.c_in, 14 * 14 * 32);
+        } else {
+            panic!("expected fc");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate op name")]
+    fn rejects_duplicate_names() {
+        let mut g = GraphBuilder::new("dup");
+        let x = g.input("a", 1, 4, 4, 1);
+        g.conv("a", x, 4, 3, 1, Padding::Same, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn rejects_mismatched_add() {
+        let mut g = GraphBuilder::new("bad");
+        let x = g.input("x", 1, 4, 4, 2);
+        let y = g.conv("c", x, 4, 3, 1, Padding::Same, None);
+        g.add("add", x, y, None);
+    }
+
+    #[test]
+    fn strided_conv_shapes() {
+        let mut g = GraphBuilder::new("s");
+        let x = g.input("x", 1, 224, 224, 3);
+        let c = g.conv("c", x, 64, 7, 2, Padding::Same, None);
+        let graph = g.build();
+        let out = &graph.tensors[graph.ops.iter().find(|o| o.name == "c").unwrap().output];
+        assert_eq!(out.shape.dims(), &[1, 112, 112, 64]);
+        let _ = c;
+    }
+}

@@ -1,0 +1,323 @@
+//! Operator graph IR (paper §II, §II-A).
+//!
+//! Networks are dataflow graphs of operators over tensors — not linear
+//! layer stacks, so residual branches (ResNet) schedule naturally. The
+//! [`builder::GraphBuilder`] mirrors SMAUG's declarative Python frontend
+//! (paper Fig 2); the [`Graph::fuse`] pass applies the same automatic
+//! conv + element-wise fusion the framework performs.
+
+mod builder;
+pub mod training;
+
+pub use builder::{GraphBuilder, Padding};
+pub use training::training_step;
+
+use crate::tensor::TensorDesc;
+use crate::tiling::{ConvParams, FcParams, PoolParams};
+use std::collections::HashMap;
+
+/// Fused activation function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// max(x, 0)
+    Relu,
+    /// Exponential linear unit (ELU nets).
+    Elu,
+}
+
+/// Operator kind with its parameters.
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// Network input placeholder.
+    Input,
+    /// 2-D convolution (NHWC activations, KRSC weights).
+    Conv {
+        /// Geometry/stride/padding parameters.
+        params: ConvParams,
+        /// Fused activation, if any.
+        activation: Option<Activation>,
+    },
+    /// Inner product (fully connected).
+    InnerProduct {
+        /// Feature dimensions.
+        params: FcParams,
+        /// Fused activation, if any.
+        activation: Option<Activation>,
+    },
+    /// Max pooling.
+    MaxPool(PoolParams),
+    /// Average pooling.
+    AvgPool(PoolParams),
+    /// Inference-time batch normalization (scale + shift per channel).
+    BatchNorm,
+    /// Element-wise addition (residual connections).
+    EltwiseAdd {
+        /// Fused activation, if any.
+        activation: Option<Activation>,
+    },
+    /// Standalone activation (fused away by [`Graph::fuse`] when possible).
+    Act(Activation),
+    /// Flatten NHWC -> NC for the classifier head (a layout transform:
+    /// pure software data movement).
+    Flatten,
+}
+
+impl OpKind {
+    /// Short kind tag for reports/timelines (paper Fig 14 uses C/P/F/B).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            OpKind::Input => "I",
+            OpKind::Conv { .. } => "C",
+            OpKind::InnerProduct { .. } => "F",
+            OpKind::MaxPool(_) | OpKind::AvgPool(_) => "P",
+            OpKind::BatchNorm => "B",
+            OpKind::EltwiseAdd { .. } => "E",
+            OpKind::Act(_) => "A",
+            OpKind::Flatten => "R",
+        }
+    }
+
+    /// Does this op run on the accelerator (vs. the CPU software stack)?
+    pub fn accelerated(&self) -> bool {
+        !matches!(self, OpKind::Input | OpKind::Flatten)
+    }
+}
+
+/// Tensor id within a graph.
+pub type TensorId = usize;
+/// Operator id within a graph.
+pub type OpId = usize;
+
+/// One operator node.
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// Stable id (index into `Graph::ops`).
+    pub id: OpId,
+    /// Human-readable unique name.
+    pub name: String,
+    /// Kind + parameters.
+    pub kind: OpKind,
+    /// Input activation tensor ids.
+    pub inputs: Vec<TensorId>,
+    /// Output activation tensor id.
+    pub output: TensorId,
+    /// Parameter (weight/bias/scale) element count.
+    pub param_elems: usize,
+}
+
+/// A dataflow graph of operators.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Graph name (network name).
+    pub name: String,
+    /// Operators, indexed by [`OpId`].
+    pub ops: Vec<Op>,
+    /// Activation tensor descriptions, indexed by [`TensorId`].
+    pub tensors: Vec<TensorDesc>,
+}
+
+impl Graph {
+    /// Topological order of operator ids (Kahn's algorithm). Panics on
+    /// cycles — builder-produced graphs are acyclic by construction.
+    pub fn topo_order(&self) -> Vec<OpId> {
+        let mut producer: HashMap<TensorId, OpId> = HashMap::new();
+        for op in &self.ops {
+            producer.insert(op.output, op.id);
+        }
+        let mut indeg = vec![0usize; self.ops.len()];
+        let mut consumers: Vec<Vec<OpId>> = vec![Vec::new(); self.ops.len()];
+        for op in &self.ops {
+            for &t in &op.inputs {
+                if let Some(&p) = producer.get(&t) {
+                    indeg[op.id] += 1;
+                    consumers[p].push(op.id);
+                }
+            }
+        }
+        let mut queue: Vec<OpId> = (0..self.ops.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.ops.len());
+        while let Some(id) = queue.pop() {
+            order.push(id);
+            for &c in &consumers[id] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.ops.len(), "cycle in graph {}", self.name);
+        // Stable-ish: sort ready sets by id for deterministic schedules.
+        order
+    }
+
+    /// Total parameter element count (Table III's "Parameters" column is
+    /// this x 2 bytes).
+    pub fn param_elems(&self) -> usize {
+        self.ops.iter().map(|o| o.param_elems).sum()
+    }
+
+    /// Total parameter bytes at the modeled 16-bit storage.
+    pub fn param_bytes(&self) -> u64 {
+        2 * self.param_elems() as u64
+    }
+
+    /// Number of operators of each tag, e.g. `[("C", 4), ("F", 2), ...]`.
+    pub fn op_census(&self) -> Vec<(&'static str, usize)> {
+        let mut counts: HashMap<&'static str, usize> = HashMap::new();
+        for op in &self.ops {
+            *counts.entry(op.kind.tag()).or_default() += 1;
+        }
+        let mut v: Vec<_> = counts.into_iter().collect();
+        v.sort();
+        v
+    }
+
+    /// Fuse standalone activations into their producing conv / inner
+    /// product / eltwise-add (SMAUG applies conv + element-wise fusion
+    /// automatically — paper §II-A). Returns the number of ops fused.
+    pub fn fuse(&mut self) -> usize {
+        let mut fused = 0usize;
+        loop {
+            // Find an Act op whose single input is produced by a fusable op
+            // and consumed only by this Act.
+            let mut target: Option<(OpId, OpId, Activation)> = None;
+            'search: for op in &self.ops {
+                if let OpKind::Act(a) = op.kind {
+                    let t = op.inputs[0];
+                    let Some(prod) = self.ops.iter().find(|p| p.output == t) else {
+                        continue;
+                    };
+                    let consumers = self
+                        .ops
+                        .iter()
+                        .filter(|o| o.inputs.contains(&t))
+                        .count();
+                    if consumers != 1 {
+                        continue;
+                    }
+                    let fusable = matches!(
+                        prod.kind,
+                        OpKind::Conv { activation: None, .. }
+                            | OpKind::InnerProduct { activation: None, .. }
+                            | OpKind::EltwiseAdd { activation: None }
+                    );
+                    if fusable {
+                        target = Some((prod.id, op.id, a));
+                        break 'search;
+                    }
+                }
+            }
+            let Some((pid, aid, act)) = target else { break };
+            // Rewire: producer writes the Act's output tensor directly.
+            let act_out = self.ops[aid].output;
+            match &mut self.ops[pid].kind {
+                OpKind::Conv { activation, .. }
+                | OpKind::InnerProduct { activation, .. }
+                | OpKind::EltwiseAdd { activation } => *activation = Some(act),
+                _ => unreachable!(),
+            }
+            self.ops[pid].output = act_out;
+            self.ops.remove(aid);
+            // Reindex ids.
+            for (i, op) in self.ops.iter_mut().enumerate() {
+                op.id = i;
+            }
+            fused += 1;
+        }
+        fused
+    }
+
+    /// One-line summary, e.g. `vgg16: 21 ops (13C 5P 2F ...), 17.0 MiB params`.
+    pub fn summary(&self) -> String {
+        let census: Vec<String> = self
+            .op_census()
+            .iter()
+            .map(|(t, c)| format!("{c}{t}"))
+            .collect();
+        format!(
+            "{}: {} ops ({}), {} params",
+            self.name,
+            self.ops.len(),
+            census.join(" "),
+            crate::util::fmt_bytes(self.param_bytes()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn residual_unit() -> Graph {
+        // The paper's Fig-2 example: two convs + residual add.
+        let mut g = GraphBuilder::new("residual");
+        let x = g.input("input", 1, 32, 32, 8);
+        let a = g.conv("conv0", x, 64, 3, 1, Padding::Same, Some(Activation::Relu));
+        let b = g.conv("conv1", a, 8, 3, 1, Padding::Same, None);
+        g.add("add", b, x, Some(Activation::Relu));
+        g.build()
+    }
+
+    #[test]
+    fn residual_graph_builds() {
+        let g = residual_unit();
+        assert_eq!(g.ops.len(), 4); // input + 2 conv + add
+        let order = g.topo_order();
+        assert_eq!(order.len(), 4);
+        // Input first, add last.
+        assert!(matches!(g.ops[order[0]].kind, OpKind::Input));
+        assert!(matches!(
+            g.ops[*order.last().unwrap()].kind,
+            OpKind::EltwiseAdd { .. }
+        ));
+    }
+
+    #[test]
+    fn fusion_merges_standalone_relu() {
+        let mut g = GraphBuilder::new("f");
+        let x = g.input("in", 1, 8, 8, 8);
+        let c = g.conv("conv", x, 8, 3, 1, Padding::Same, None);
+        let r = g.relu("relu", c);
+        g.conv("conv2", r, 8, 3, 1, Padding::Same, None);
+        let mut graph = g.build();
+        let before = graph.ops.len();
+        let fused = graph.fuse();
+        assert_eq!(fused, 1);
+        assert_eq!(graph.ops.len(), before - 1);
+        // conv now carries the activation and feeds conv2.
+        let conv = graph.ops.iter().find(|o| o.name == "conv").unwrap();
+        assert!(matches!(
+            conv.kind,
+            OpKind::Conv { activation: Some(Activation::Relu), .. }
+        ));
+        graph.topo_order(); // still a DAG
+    }
+
+    #[test]
+    fn fusion_skips_multi_consumer_tensors() {
+        let mut g = GraphBuilder::new("f2");
+        let x = g.input("in", 1, 8, 8, 8);
+        let c = g.conv("conv", x, 8, 3, 1, Padding::Same, None);
+        let r = g.relu("relu", c);
+        // c is consumed by both relu and add: cannot fuse.
+        g.add("add", c, r, None);
+        let mut graph = g.build();
+        assert_eq!(graph.fuse(), 0);
+    }
+
+    #[test]
+    fn param_count_conv() {
+        let g = residual_unit();
+        // conv0: 64*3*3*8 + 64 bias; conv1: 8*3*3*64 + 8 bias.
+        assert_eq!(g.param_elems(), 64 * 3 * 3 * 8 + 64 + 8 * 3 * 3 * 64 + 8);
+    }
+
+    #[test]
+    fn census_and_summary() {
+        let g = residual_unit();
+        let census = g.op_census();
+        assert!(census.contains(&("C", 2)));
+        assert!(g.summary().contains("residual"));
+    }
+}

@@ -1,0 +1,210 @@
+//! Training-step graph generation (extension — paper §I: "SMAUG
+//! currently is targeted at DNN inference, but we plan to incorporate
+//! support for training as well").
+//!
+//! For timing/energy simulation the backward pass is a graph of
+//! GEMM-class operators with the same data volumes as the forward pass:
+//! for each conv/FC layer, the input-gradient and weight-gradient
+//! computations each cost the same MACs as the forward op; parameter
+//! updates are element-wise sweeps over the weights. This builder appends
+//! those operators (plus backward ops for pool/activation/BN/add) to a
+//! forward graph, producing a complete training-step graph the scheduler
+//! simulates like any other.
+
+use super::{Graph, Op, OpKind};
+use crate::tensor::TensorDesc;
+use crate::tiling::{ConvParams, FcParams};
+
+/// Build the training-step graph for a forward graph: forward ops, then
+/// backward ops in reverse topological order, then parameter updates.
+pub fn training_step(fwd: &Graph) -> Graph {
+    let mut g = fwd.clone();
+    g.name = format!("{}_train", fwd.name);
+    let order = fwd.topo_order();
+    for &oid in order.iter().rev() {
+        let op = &fwd.ops[oid];
+        match &op.kind {
+            OpKind::Conv { params, .. } => {
+                // dX: conv of dY with the transposed filter (channels
+                // swapped); dW: correlation of X with dY. Both move the
+                // same MACs as the forward conv.
+                let (oh, ow) = params.out_dims();
+                let dx = ConvParams {
+                    h: oh,
+                    w: ow,
+                    c: params.k,
+                    k: params.c,
+                    r: params.r,
+                    s: params.s,
+                    stride: 1, // transposed conv: unit-stride over dY
+                    pad_same: true,
+                };
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd_dx", op.name),
+                    OpKind::Conv { params: dx, activation: None },
+                    TensorDesc::nhwc16(1, params.h, params.w, params.c),
+                    0,
+                );
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd_dw", op.name),
+                    OpKind::Conv { params: *params, activation: None },
+                    TensorDesc::nhwc16(1, oh, ow, params.k),
+                    0,
+                );
+                push_update(&mut g, op);
+            }
+            OpKind::InnerProduct { params, .. } => {
+                let dx = FcParams {
+                    c_in: params.c_out,
+                    c_out: params.c_in,
+                };
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd_dx", op.name),
+                    OpKind::InnerProduct { params: dx, activation: None },
+                    TensorDesc::nc16(1, params.c_in),
+                    0,
+                );
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd_dw", op.name),
+                    OpKind::InnerProduct { params: *params, activation: None },
+                    TensorDesc::nc16(1, params.c_out),
+                    0,
+                );
+                push_update(&mut g, op);
+            }
+            OpKind::MaxPool(_)
+            | OpKind::AvgPool(_)
+            | OpKind::BatchNorm
+            | OpKind::EltwiseAdd { .. }
+            | OpKind::Act(_) => {
+                // Backward of these is an element-wise sweep over the
+                // op's input-sized gradient.
+                let desc = fwd.tensors[op.inputs[0]].clone();
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd", op.name),
+                    OpKind::EltwiseAdd { activation: None },
+                    desc,
+                    0,
+                );
+            }
+            OpKind::Input | OpKind::Flatten => {}
+        }
+    }
+    g
+}
+
+/// Append a backward op that consumes the source op's output tensor.
+fn push_clone(
+    g: &mut Graph,
+    src: &Op,
+    name: &str,
+    kind: OpKind,
+    out_desc: TensorDesc,
+    param_elems: usize,
+) {
+    let needs_two = matches!(kind, OpKind::EltwiseAdd { .. });
+    g.tensors.push(out_desc);
+    let out = g.tensors.len() - 1;
+    let id = g.ops.len();
+    let mut inputs = vec![src.output];
+    if needs_two {
+        inputs.push(src.output);
+    }
+    g.ops.push(Op {
+        id,
+        name: name.to_string(),
+        kind,
+        inputs,
+        output: out,
+        param_elems,
+    });
+}
+
+/// Append the SGD parameter-update op for a layer (element-wise over its
+/// parameters).
+fn push_update(g: &mut Graph, src: &Op) {
+    if src.param_elems == 0 {
+        return;
+    }
+    g.tensors.push(TensorDesc::nc16(1, src.param_elems));
+    let out = g.tensors.len() - 1;
+    let id = g.ops.len();
+    g.ops.push(Op {
+        id,
+        name: format!("{}_update", src.name),
+        kind: OpKind::EltwiseAdd { activation: None },
+        inputs: vec![src.output, src.output],
+        output: out,
+        param_elems: 0,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SimOptions, SocConfig};
+    use crate::nets;
+    use crate::sched::Scheduler;
+
+    #[test]
+    fn training_graph_grows_correctly() {
+        let fwd = nets::build_network("cnn10").unwrap();
+        let train = training_step(&fwd);
+        assert!(train.ops.len() > 2 * fwd.ops.len());
+        assert_eq!(train.topo_order().len(), train.ops.len()); // still a DAG
+        // Every conv/fc got dx + dw + update.
+        for op in &fwd.ops {
+            if matches!(op.kind, OpKind::Conv { .. } | OpKind::InnerProduct { .. }) {
+                for suffix in ["_bwd_dx", "_bwd_dw", "_update"] {
+                    let name = format!("{}{}", op.name, suffix);
+                    assert!(
+                        train.ops.iter().any(|o| o.name == name),
+                        "missing {name}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn training_step_costs_2_to_4x_inference() {
+        let fwd = nets::build_network("cnn10").unwrap();
+        let train = training_step(&fwd);
+        let run = |g: &Graph| {
+            Scheduler::new(SocConfig::default(), SimOptions::default())
+                .run(g)
+                .total_ns
+        };
+        let ratio = run(&train) / run(&fwd);
+        assert!((2.0..4.5).contains(&ratio), "train/infer ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn training_macs_about_triple() {
+        // dX + dW each replay the forward MACs.
+        let fwd = nets::build_network("vgg16").unwrap();
+        let train = training_step(&fwd);
+        let macs = |g: &Graph| -> u64 {
+            g.ops
+                .iter()
+                .filter_map(|o| match &o.kind {
+                    OpKind::Conv { params, .. } => Some(params.total_macs()),
+                    OpKind::InnerProduct { params, .. } => Some(params.total_macs()),
+                    _ => None,
+                })
+                .sum()
+        };
+        let ratio = macs(&train) as f64 / macs(&fwd) as f64;
+        assert!((2.5..3.5).contains(&ratio), "mac ratio {ratio:.2}");
+    }
+}

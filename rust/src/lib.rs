@@ -1,0 +1,57 @@
+//! # SMAUG — end-to-end full-stack simulation infrastructure for DNN workloads
+//!
+//! A reproduction of *SMAUG: End-to-End Full-Stack Simulation Infrastructure
+//! for Deep Learning Workloads* (Xi, Yao, Bhardwaj, Whatmough, Wei, Brooks —
+//! Harvard, 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the SMAUG system itself: operator graph and
+//!   runtime scheduler, per-dataflow tiling optimizer, accelerator timing
+//!   models (NVDLA-style convolution engine, cycle-level systolic array),
+//!   SoC memory system (LLC, DRAM bandwidth sharing, DMA vs. ACP
+//!   interfaces), CPU software-stack cost model with a thread-pool model,
+//!   Aladdin-style loop sampling, an energy model, and timeline tracing.
+//! * **L2 (python/compile/model.py)** — the JAX operator library for the
+//!   accelerator's canonical tiles, lowered AOT to HLO text.
+//! * **L1 (python/compile/kernels/)** — the NVDLA dataflow as a Pallas
+//!   kernel, verified against a pure-jnp oracle.
+//!
+//! The simulator is *execution-driven*: accelerator tiles can be executed
+//! functionally through the AOT artifacts on the PJRT CPU client
+//! ([`runtime`]), while timing and energy come from the microarchitectural
+//! models. Python never runs at simulation time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use smaug::config::{SimOptions, SocConfig};
+//! use smaug::nets;
+//! use smaug::sim::Simulator;
+//!
+//! let graph = nets::build_network("cnn10").unwrap();
+//! let soc = SocConfig::default();
+//! let opts = SimOptions::default();
+//! let report = Simulator::new(soc, opts).run(&graph).unwrap();
+//! println!("{}", report.breakdown_table());
+//! ```
+
+pub mod accel;
+pub mod camera;
+pub mod config;
+pub mod cpu;
+pub mod energy;
+pub mod figures;
+pub mod graph;
+pub mod mem;
+pub mod nets;
+pub mod refexec;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod stats;
+pub mod tensor;
+pub mod tiling;
+pub mod trace;
+pub mod util;
+
+/// Crate version string, reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,245 @@
+//! `smaug` — CLI launcher for the SMAUG full-stack DNN SoC simulator.
+//!
+//! ```text
+//! smaug run --net vgg16 [--accels 8] [--interface acp] [--threads 8]
+//!           [--accel nvdla|systolic] [--sampling N] [--soc file.cfg]
+//!           [--functional off|native|pjrt] [--train]
+//!           [--double-buffer] [--inter-accel-reduction]
+//!           [--report breakdown|ops|timeline|json|csv|trace-json]
+//! smaug sweep --net cnn10 --accels 1,2,4,8
+//! smaug camera [--pe 8x8] [--threads 1] [--fps 30]
+//! smaug config
+//! smaug nets
+//! ```
+
+use anyhow::{bail, Context, Result};
+use smaug::camera;
+use smaug::config::{AccelKind, SimOptions, SocConfig};
+use smaug::graph::training_step;
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::util::fmt_ns;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("camera") => cmd_camera(&args[1..]),
+        Some("config") => {
+            println!("{}", SocConfig::default().table());
+            Ok(())
+        }
+        Some("nets") => {
+            for n in nets::ALL_NETWORKS {
+                let g = nets::build_network(n)?;
+                println!("{}", g.summary());
+            }
+            Ok(())
+        }
+        Some("--version") => {
+            println!("smaug {}", smaug::VERSION);
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "smaug {} — full-stack DNN SoC simulator (SMAUG reproduction)\n\n\
+                 usage:\n  smaug run --net <name> [--accels N] [--interface dma|acp]\n\
+                 \x20          [--threads N] [--accel nvdla|systolic] [--sampling N]\n\
+                 \x20          [--functional off|native|pjrt] [--report breakdown|ops|timeline|json|csv|trace-json]\n\
+                 \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction]\n\
+                 \x20 smaug sweep --net <name> [--accels 1,2,4,8]\n\
+                 \x20 smaug camera [--pe RxC] [--threads N] [--fps N]\n\
+                 \x20 smaug config   smaug nets",
+                smaug::VERSION
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Fetch the value following `--flag`.
+fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn parse_opts(args: &[String]) -> Result<SimOptions> {
+    let mut o = SimOptions::default();
+    if let Some(v) = flag(args, "--accels") {
+        o.num_accels = v.parse().context("--accels")?;
+    }
+    if let Some(v) = flag(args, "--threads") {
+        o.sw_threads = v.parse().context("--threads")?;
+    }
+    if let Some(v) = flag(args, "--interface") {
+        o.interface = SimOptions::parse_interface(v).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = flag(args, "--accel") {
+        o.accel_kind = SimOptions::parse_accel(v).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = flag(args, "--sampling") {
+        o.sampling_factor = v.parse().context("--sampling")?;
+    }
+    if let Some(v) = flag(args, "--functional") {
+        o.functional = SimOptions::parse_functional(v).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(v) = flag(args, "--seed") {
+        o.seed = v.parse().context("--seed")?;
+    }
+    if args.iter().any(|a| a == "--double-buffer") {
+        o.double_buffer = true;
+    }
+    if args.iter().any(|a| a == "--inter-accel-reduction") {
+        o.inter_accel_reduction = true;
+    }
+    Ok(o)
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let net = flag(args, "--net").context("--net <name> is required (see `smaug nets`)")?;
+    let report_kind = flag(args, "--report").unwrap_or("breakdown");
+    let opts = parse_opts(args)?;
+    let mut graph = nets::build_network(net)?;
+    if args.iter().any(|a| a == "--train") {
+        graph = training_step(&graph);
+    }
+    let soc = match flag(args, "--soc") {
+        Some(path) => SocConfig::from_file(std::path::Path::new(path))
+            .map_err(anyhow::Error::msg)?,
+        None => SocConfig::default(),
+    };
+    let sim = Simulator::new(soc, opts.clone());
+
+    use smaug::config::FunctionalMode;
+    if opts.functional != FunctionalMode::Off {
+        let run = sim.run_functional(&graph, None)?;
+        println!("{}", run.report.breakdown_table());
+        println!(
+            "functional: backend={} max |tiled-direct| divergence = {:.2e}",
+            run.backend, run.max_divergence
+        );
+        return Ok(());
+    }
+    match report_kind {
+        "breakdown" => {
+            let r = sim.run(&graph)?;
+            println!("{}", r.breakdown_table());
+        }
+        "ops" => {
+            let r = sim.run(&graph)?;
+            println!("{}", r.per_op_table());
+        }
+        "timeline" => {
+            let (r, tl) = sim.run_with_timeline(&graph)?;
+            println!("{}", tl.ascii_gantt(100));
+            println!("total: {}", fmt_ns(r.total_ns));
+        }
+        "json" => {
+            let r = sim.run(&graph)?;
+            println!("{}", r.to_json());
+        }
+        "csv" => {
+            let r = sim.run(&graph)?;
+            print!("{}", r.per_op_csv());
+        }
+        "trace-json" => {
+            let (_r, tl) = sim.run_with_timeline(&graph)?;
+            println!("{}", tl.to_json());
+        }
+        other => bail!("unknown report '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let net = flag(args, "--net").context("--net required")?;
+    let accels: Vec<usize> = flag(args, "--accels")
+        .unwrap_or("1,2,4,8")
+        .split(',')
+        .map(|s| s.parse().context("--accels list"))
+        .collect::<Result<_>>()?;
+    let graph = nets::build_network(net)?;
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "accels", "total", "accel", "transfer", "cpu", "speedup"
+    );
+    let mut base = None;
+    for n in accels {
+        let opts = SimOptions {
+            num_accels: n,
+            ..parse_opts(args)?
+        };
+        let r = Simulator::new(SocConfig::default(), opts).run(&graph)?;
+        let b = &r.breakdown;
+        let baseline = *base.get_or_insert(r.total_ns);
+        println!(
+            "{:<8} {:>12} {:>12} {:>12} {:>12} {:>7.2}x",
+            n,
+            fmt_ns(r.total_ns),
+            fmt_ns(b.accel_ns),
+            fmt_ns(b.transfer_ns),
+            fmt_ns(b.cpu_ns()),
+            baseline / r.total_ns
+        );
+    }
+    Ok(())
+}
+
+fn cmd_camera(args: &[String]) -> Result<()> {
+    let pe = flag(args, "--pe").unwrap_or("8x8");
+    let threads: usize = flag(args, "--threads").unwrap_or("1").parse()?;
+    let fps: f64 = flag(args, "--fps").unwrap_or("30").parse()?;
+    let (rows, cols) = {
+        let mut it = pe.split('x');
+        let r: usize = it.next().context("--pe RxC")?.parse()?;
+        let c: usize = it.next().context("--pe RxC")?.parse()?;
+        (r, c)
+    };
+    let budget_ms = 1000.0 / fps;
+
+    // Camera pipeline on the CPU.
+    let raw = camera::RawFrame::synthetic(1280, 720, 42);
+    let soc = SocConfig::default();
+    let (_rgb, stages) = camera::run_pipeline(&raw, &soc, threads, None);
+    let cam_ns = camera::pipeline_ns(&stages);
+
+    // CNN10 on the systolic array (paper §V).
+    let mut cam_soc = soc.clone();
+    cam_soc.systolic_rows = rows;
+    cam_soc.systolic_cols = cols;
+    let opts = SimOptions {
+        accel_kind: AccelKind::Systolic,
+        ..SimOptions::default()
+    };
+    let g = nets::build_network("cnn10")?;
+    let r = Simulator::new(cam_soc, opts).run(&g)?;
+
+    println!("camera pipeline (720p, {threads} thread(s)):");
+    for s in &stages {
+        println!("  {:<14} {}", s.name, fmt_ns(s.ns));
+    }
+    println!("  {:<14} {}", "total", fmt_ns(cam_ns));
+    println!("DNN (cnn10 on {rows}x{cols} systolic): {}", fmt_ns(r.total_ns));
+    let total = cam_ns + r.total_ns;
+    println!(
+        "frame time: {} / budget {:.1} ms -> {}",
+        fmt_ns(total),
+        budget_ms,
+        if total / 1e6 <= budget_ms {
+            format!("MEETS {fps:.0} FPS (slack {:.1} ms)", budget_ms - total / 1e6)
+        } else {
+            format!("VIOLATES {fps:.0} FPS by {:.1} ms", total / 1e6 - budget_ms)
+        }
+    );
+    Ok(())
+}

@@ -1,0 +1,255 @@
+//! Shared-bandwidth timeline: the DRAM channels as a fluid-flow resource.
+//!
+//! Every transfer in the SoC (DMA streams, ACP misses, CPU tiling copies)
+//! draws from the same peak bandwidth; concurrent transfers share it.
+//! The timeline is a piecewise-constant usage function over time: a new
+//! request consumes `min(requested rate, remaining capacity)` in each
+//! segment it crosses, which yields both the transfer's finish time and —
+//! after the run — the utilization-over-time series of Fig 13b / Fig 17.
+
+/// One piecewise segment of bandwidth usage.
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    t0: f64,
+    t1: f64,
+    /// Bandwidth in use during [t0, t1), bytes/ns.
+    used: f64,
+}
+
+/// A shared bandwidth resource with a piecewise-usage timeline.
+#[derive(Debug, Clone)]
+pub struct BandwidthTimeline {
+    /// Capacity in bytes/ns (= GB/s).
+    cap: f64,
+    /// Disjoint, sorted segments with non-zero usage; gaps are idle.
+    segs: Vec<Seg>,
+}
+
+impl BandwidthTimeline {
+    /// New timeline with `cap_bytes_per_ns` capacity.
+    pub fn new(cap_bytes_per_ns: f64) -> Self {
+        assert!(cap_bytes_per_ns > 0.0);
+        Self {
+            cap: cap_bytes_per_ns,
+            segs: Vec::new(),
+        }
+    }
+
+    /// Capacity in bytes/ns.
+    pub fn capacity(&self) -> f64 {
+        self.cap
+    }
+
+    /// Schedule a transfer of `bytes` starting no earlier than `earliest`,
+    /// drawing at most `max_rate` bytes/ns. Returns (start, end) in ns.
+    ///
+    /// The transfer starts immediately (contention slows it down rather
+    /// than queueing it — DRAM controllers interleave requestors).
+    pub fn request(&mut self, earliest: f64, bytes: u64, max_rate: f64) -> (f64, f64) {
+        if bytes == 0 {
+            return (earliest, earliest);
+        }
+        let max_rate = max_rate.min(self.cap).max(1e-9);
+        let mut remaining = bytes as f64;
+        let mut t = earliest;
+        let mut new_segs: Vec<Seg> = Vec::new();
+        let mut i = self.segs.partition_point(|s| s.t1 <= t);
+        loop {
+            // Determine the window [t, window_end) and available bandwidth.
+            let (window_end, used_here, in_seg) = if i < self.segs.len() {
+                let s = self.segs[i];
+                if t < s.t0 {
+                    (s.t0, 0.0, false)
+                } else {
+                    (s.t1, s.used, true)
+                }
+            } else {
+                (f64::INFINITY, 0.0, false)
+            };
+            let avail = (self.cap - used_here).max(0.0);
+            let rate = avail.min(max_rate);
+            if rate <= 1e-12 {
+                // Saturated segment: wait it out.
+                t = window_end;
+                i += 1;
+                continue;
+            }
+            let span = window_end - t;
+            let can = rate * span;
+            if can >= remaining {
+                let end = t + remaining / rate;
+                new_segs.push(Seg { t0: t, t1: end, used: rate });
+                self.merge(new_segs);
+                return (earliest, end);
+            }
+            remaining -= can;
+            new_segs.push(Seg { t0: t, t1: window_end, used: rate });
+            t = window_end;
+            if in_seg {
+                i += 1;
+            }
+        }
+    }
+
+    /// Merge additional usage segments into the timeline. Only the window
+    /// the new segments touch is rebuilt (requests arrive roughly in time
+    /// order, so this stays near the tail — O(local) per request instead
+    /// of a global rebuild).
+    fn merge(&mut self, add: Vec<Seg>) {
+        if add.is_empty() {
+            return;
+        }
+        let w0 = add.iter().map(|s| s.t0).fold(f64::INFINITY, f64::min);
+        let w1 = add.iter().map(|s| s.t1).fold(0.0, f64::max);
+        // Existing segments overlapping [w0, w1].
+        let lo = self.segs.partition_point(|s| s.t1 <= w0);
+        let hi = self.segs.partition_point(|s| s.t0 < w1);
+        let mut local: Vec<Seg> = self.segs[lo..hi].to_vec();
+        local.extend(add);
+        let mut bounds: Vec<f64> = local.iter().flat_map(|s| [s.t0, s.t1]).collect();
+        bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        let mut out: Vec<Seg> = Vec::with_capacity(bounds.len());
+        for w in bounds.windows(2) {
+            let (t0, t1) = (w[0], w[1]);
+            let mid = 0.5 * (t0 + t1);
+            let used: f64 = local
+                .iter()
+                .filter(|s| s.t0 <= mid && mid < s.t1)
+                .map(|s| s.used)
+                .sum();
+            if used > 1e-12 {
+                if let Some(last) = out.last_mut() {
+                    if (last.t1 - t0).abs() < 1e-12 && (last.used - used).abs() < 1e-9 {
+                        last.t1 = t1;
+                        continue;
+                    }
+                }
+                out.push(Seg { t0, t1, used });
+            }
+        }
+        self.segs.splice(lo..hi, out);
+    }
+
+    /// Total bytes transferred so far.
+    pub fn total_bytes(&self) -> f64 {
+        self.segs.iter().map(|s| s.used * (s.t1 - s.t0)).sum()
+    }
+
+    /// Mean utilization (fraction of capacity) over [t0, t1).
+    pub fn utilization_between(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let busy: f64 = self
+            .segs
+            .iter()
+            .map(|s| {
+                let lo = s.t0.max(t0);
+                let hi = s.t1.min(t1);
+                if hi > lo {
+                    s.used * (hi - lo)
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        busy / (self.cap * (t1 - t0))
+    }
+
+    /// Utilization series in `bin_ns` bins over [0, horizon).
+    pub fn utilization_bins(&self, bin_ns: f64, horizon: f64) -> Vec<f64> {
+        let n = (horizon / bin_ns).ceil() as usize;
+        (0..n)
+            .map(|i| self.utilization_between(i as f64 * bin_ns, (i + 1) as f64 * bin_ns))
+            .collect()
+    }
+
+    /// End time of the last scheduled usage.
+    pub fn horizon(&self) -> f64 {
+        self.segs.last().map(|s| s.t1).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_transfer_at_full_rate() {
+        let mut bw = BandwidthTimeline::new(20.0); // 20 GB/s
+        let (s, e) = bw.request(0.0, 20_000, 100.0);
+        assert_eq!(s, 0.0);
+        assert!((e - 1000.0).abs() < 1e-6, "{e}");
+    }
+
+    #[test]
+    fn rate_cap_respected() {
+        let mut bw = BandwidthTimeline::new(20.0);
+        let (_, e) = bw.request(0.0, 10_000, 5.0);
+        assert!((e - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_overlapping_transfers_share() {
+        let mut bw = BandwidthTimeline::new(20.0);
+        let (_, e1) = bw.request(0.0, 20_000, 20.0);
+        assert!((e1 - 1000.0).abs() < 1e-6);
+        // Second transfer overlapping fully-saturated window waits, then
+        // streams at full rate.
+        let (s2, e2) = bw.request(0.0, 20_000, 20.0);
+        assert_eq!(s2, 0.0);
+        assert!((e2 - 2000.0).abs() < 1e-6, "{e2}");
+    }
+
+    #[test]
+    fn partial_contention() {
+        let mut bw = BandwidthTimeline::new(20.0);
+        // First stream uses half the bandwidth.
+        bw.request(0.0, 10_000, 10.0); // 0..1000 at 10
+        // Second can take the other half concurrently.
+        let (_, e2) = bw.request(0.0, 10_000, 20.0);
+        // 10 B/ns available until t=1000 -> done exactly at t=1000.
+        assert!((e2 - 1000.0).abs() < 1e-6, "{e2}");
+    }
+
+    #[test]
+    fn total_bytes_accounted() {
+        let mut bw = BandwidthTimeline::new(20.0);
+        bw.request(0.0, 12_345, 20.0);
+        bw.request(100.0, 54_321, 7.0);
+        assert!((bw.total_bytes() - (12_345.0 + 54_321.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn utilization_measured() {
+        let mut bw = BandwidthTimeline::new(20.0);
+        bw.request(0.0, 20_000, 20.0); // busy 0..1000 at 100%
+        assert!((bw.utilization_between(0.0, 1000.0) - 1.0).abs() < 1e-6);
+        assert!((bw.utilization_between(0.0, 2000.0) - 0.5).abs() < 1e-6);
+        let bins = bw.utilization_bins(500.0, 2000.0);
+        assert_eq!(bins.len(), 4);
+        assert!(bins[0] > 0.99 && bins[3] < 0.01);
+    }
+
+    #[test]
+    fn zero_byte_transfer() {
+        let mut bw = BandwidthTimeline::new(20.0);
+        let (s, e) = bw.request(5.0, 0, 20.0);
+        assert_eq!((s, e), (5.0, 5.0));
+    }
+
+    #[test]
+    fn many_transfers_keep_timeline_consistent() {
+        let mut bw = BandwidthTimeline::new(20.0);
+        let mut t = 0.0;
+        for i in 0..200 {
+            let (_, e) = bw.request(t, 1000 + i * 13, 20.0);
+            if i % 3 == 0 {
+                t = e * 0.9;
+            }
+        }
+        let total: f64 = (0..200).map(|i| 1000.0 + (i * 13) as f64).sum();
+        assert!((bw.total_bytes() - total).abs() / total < 1e-6);
+    }
+}

@@ -1,0 +1,62 @@
+//! CNN10 (Table III): a 10-layer CIFAR-10 CNN with 3x3 kernels —
+//! 4 CONV [32, 32, 64, 64], 2 BN, 2 POOL, 2 FC [512, 10]; 4.2 MB params.
+
+use crate::graph::{Activation, Graph, GraphBuilder, Padding};
+
+/// Build CNN10 for CIFAR-10 (32x32x3).
+pub fn cnn10() -> Graph {
+    let mut g = GraphBuilder::new("cnn10");
+    let x = g.input("input", 1, 32, 32, 3);
+    let c0 = g.conv("conv0", x, 32, 3, 1, Padding::Same, Some(Activation::Relu));
+    let c1 = g.conv("conv1", c0, 32, 3, 1, Padding::Same, None);
+    let b0 = g.batch_norm("bn0", c1);
+    let r0 = g.relu("relu_bn0", b0);
+    let p0 = g.max_pool("pool0", r0, 2, 2);
+    let c2 = g.conv("conv2", p0, 64, 3, 1, Padding::Same, Some(Activation::Relu));
+    let c3 = g.conv("conv3", c2, 64, 3, 1, Padding::Same, None);
+    let b1 = g.batch_norm("bn1", c3);
+    let r1 = g.relu("relu_bn1", b1);
+    let p1 = g.max_pool("pool1", r1, 2, 2);
+    let f = g.flatten("flatten", p1);
+    let h = g.fc("fc0", f, 512, Some(Activation::Relu));
+    g.fc("fc1", h, 10, None);
+    g.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_footprint_4_2mb() {
+        let g = cnn10();
+        let mb = g.param_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((3.8..4.6).contains(&mb), "{mb:.2} MB");
+    }
+
+    #[test]
+    fn structure_counts() {
+        let g = cnn10();
+        let count = |tag: &str| {
+            g.ops
+                .iter()
+                .filter(|o| o.kind.tag() == tag)
+                .count()
+        };
+        assert_eq!(count("C"), 4);
+        assert_eq!(count("B"), 2);
+        assert_eq!(count("P"), 2);
+        assert_eq!(count("F"), 2);
+    }
+
+    #[test]
+    fn fc_input_is_8x8x64() {
+        let g = cnn10();
+        let fc = g.ops.iter().find(|o| o.name == "fc0").unwrap();
+        if let crate::graph::OpKind::InnerProduct { params, .. } = &fc.kind {
+            assert_eq!(params.c_in, 8 * 8 * 64);
+        } else {
+            panic!()
+        }
+    }
+}

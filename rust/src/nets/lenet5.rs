@@ -1,0 +1,39 @@
+//! LeNet5 (LeCun et al.) as specified in Table III: a 5-layer CNN with
+//! 3x3 kernels — 2 CONV [32, 32], POOL, FC [128, 10]; 1.2 MB params.
+//! VALID convolutions (28 -> 26 -> 24 -> pool -> 12) reproduce the paper's
+//! 1.2 MB parameter footprint.
+
+use crate::graph::{Activation, Graph, GraphBuilder, Padding};
+
+/// Build LeNet5 for MNIST (28x28x1).
+pub fn lenet5() -> Graph {
+    let mut g = GraphBuilder::new("lenet5");
+    let x = g.input("input", 1, 28, 28, 1);
+    let c0 = g.conv("conv0", x, 32, 3, 1, Padding::Valid, Some(Activation::Relu));
+    let c1 = g.conv("conv1", c0, 32, 3, 1, Padding::Valid, Some(Activation::Relu));
+    let p = g.max_pool("pool", c1, 2, 2);
+    let f = g.flatten("flatten", p);
+    let h = g.fc("fc0", f, 128, Some(Activation::Relu));
+    g.fc("fc1", h, 10, None);
+    g.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_follow_valid_convs() {
+        let g = lenet5();
+        let pool = g.ops.iter().find(|o| o.name == "pool").unwrap();
+        let out = &g.tensors[pool.output];
+        assert_eq!(out.shape.dims(), &[1, 12, 12, 32]);
+    }
+
+    #[test]
+    fn param_footprint_1_2mb() {
+        let g = lenet5();
+        let mb = g.param_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((1.0..1.4).contains(&mb), "{mb:.2} MB");
+    }
+}

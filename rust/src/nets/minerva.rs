@@ -1,0 +1,44 @@
+//! Minerva (Reagen et al., ISCA'16): a 4-layer MLP on MNIST.
+//! Table III: 4 FC layers [784, 256, 256, 10], 665 KB of 16-bit params.
+
+use crate::graph::{Activation, Graph, GraphBuilder};
+
+/// Build Minerva: 784 -> 256 -> 256 -> 256 -> 10.
+pub fn minerva() -> Graph {
+    let mut g = GraphBuilder::new("minerva");
+    let x = g.input("input", 1, 28, 28, 1);
+    let f = g.flatten("flatten", x);
+    let h1 = g.fc("fc0", f, 256, Some(Activation::Relu));
+    let h2 = g.fc("fc1", h1, 256, Some(Activation::Relu));
+    let h3 = g.fc("fc2", h2, 256, Some(Activation::Relu));
+    g.fc("fc3", h3, 10, None);
+    g.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_footprint_matches_table_iii() {
+        let g = minerva();
+        // 784*256 + 256*256 + 256*256 + 256*10 weights (+ biases).
+        let weights = 784 * 256 + 256 * 256 + 256 * 256 + 256 * 10;
+        let biases = 256 + 256 + 256 + 10;
+        assert_eq!(g.param_elems(), weights + biases);
+        // ~654 KB at 16-bit vs paper's 665 KB.
+        let kb = g.param_bytes() as f64 / 1024.0;
+        assert!((600.0..700.0).contains(&kb), "{kb:.0} KB");
+    }
+
+    #[test]
+    fn four_fc_layers() {
+        let g = minerva();
+        let fcs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::graph::OpKind::InnerProduct { .. }))
+            .count();
+        assert_eq!(fcs, 4);
+    }
+}

@@ -1,0 +1,127 @@
+//! The network zoo (paper Table III): seven image-classification networks
+//! across MNIST, CIFAR-10, CIFAR-100 and ImageNet.
+//!
+//! Weights are synthetic (random) — no experiment in the paper depends on
+//! accuracy, only on topologies, parameter sizes, and data volumes. Each
+//! builder reproduces the paper's layer structure; parameter footprints
+//! are asserted against Table III in the tests.
+
+mod cnn10;
+mod elu;
+mod lenet5;
+mod minerva;
+mod resnet50;
+mod vgg16;
+
+pub use cnn10::cnn10;
+pub use elu::{elu16, elu24};
+pub use lenet5::lenet5;
+pub use minerva::minerva;
+pub use resnet50::resnet50;
+pub use vgg16::vgg16;
+
+use crate::graph::Graph;
+use anyhow::{bail, Result};
+
+/// All network names, in the paper's Table III order.
+pub const ALL_NETWORKS: &[&str] = &[
+    "minerva", "lenet5", "cnn10", "vgg16", "elu16", "elu24", "resnet50",
+];
+
+/// Networks small enough for quick CI runs (everything but ResNet50).
+pub const FAST_NETWORKS: &[&str] =
+    &["minerva", "lenet5", "cnn10", "vgg16", "elu16", "elu24"];
+
+/// Build a network by name (fused, ready to simulate).
+pub fn build_network(name: &str) -> Result<Graph> {
+    let mut g = match name {
+        "minerva" => minerva(),
+        "lenet5" => lenet5(),
+        "cnn10" => cnn10(),
+        "vgg16" => vgg16(),
+        "elu16" => elu16(),
+        "elu24" => elu24(),
+        "resnet50" => resnet50(),
+        other => bail!("unknown network '{other}' (try one of {ALL_NETWORKS:?})"),
+    };
+    g.fuse();
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mb(bytes: u64) -> f64 {
+        bytes as f64 / (1024.0 * 1024.0)
+    }
+
+    /// Table III parameter footprints (16-bit storage), with tolerance for
+    /// the structural details the paper leaves unspecified.
+    #[test]
+    fn table_iii_param_sizes() {
+        let cases: &[(&str, f64, f64)] = &[
+            // (net, paper MB, relative tolerance)
+            ("minerva", 0.65, 0.10),
+            ("lenet5", 1.2, 0.25),
+            ("cnn10", 4.2, 0.15),
+            ("vgg16", 17.4, 0.10),
+            ("elu16", 3.3, 0.35),
+            ("elu24", 75.0, 0.35),
+        ];
+        for &(name, paper_mb, tol) in cases {
+            let g = build_network(name).unwrap();
+            let got = mb(g.param_bytes());
+            let rel = (got - paper_mb).abs() / paper_mb;
+            assert!(
+                rel <= tol,
+                "{name}: {got:.2} MB vs paper {paper_mb} MB (rel {rel:.2})"
+            );
+        }
+    }
+
+    #[test]
+    fn resnet50_param_count() {
+        // Standard ResNet50 is ~25.5M parameters.
+        let g = build_network("resnet50").unwrap();
+        let m = g.param_elems() as f64 / 1e6;
+        assert!((23.0..28.0).contains(&m), "{m:.1}M params");
+    }
+
+    #[test]
+    fn all_networks_build_and_are_dags() {
+        for name in ALL_NETWORKS {
+            let g = build_network(name).unwrap();
+            let order = g.topo_order();
+            assert_eq!(order.len(), g.ops.len(), "{name}");
+            assert!(g.ops.len() >= 4, "{name} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn unknown_network_errors() {
+        assert!(build_network("alexnet").is_err());
+    }
+
+    #[test]
+    fn resnet50_has_residual_adds() {
+        let g = build_network("resnet50").unwrap();
+        let adds = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::graph::OpKind::EltwiseAdd { .. }))
+            .count();
+        assert_eq!(adds, 16); // 3 + 4 + 6 + 3 bottleneck blocks
+    }
+
+    #[test]
+    fn vgg16_conv_count() {
+        let g = build_network("vgg16").unwrap();
+        let convs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::graph::OpKind::Conv { .. }))
+            .count();
+        assert_eq!(convs, 10); // paper's CIFAR VGG variant: 10 convs + 2 FC
+    }
+}

@@ -1,0 +1,115 @@
+//! ResNet50 (He et al., CVPR'16) on ImageNet (224x224x3) — Table III's
+//! largest workload and the paper's motivating example for inter-layer
+//! tiling cost (50 layers with expensive data reorganization between each).
+
+use crate::graph::{Activation, Graph, GraphBuilder, Padding, TensorId};
+
+/// One bottleneck block: 1x1 reduce, 3x3, 1x1 expand + residual add.
+fn bottleneck(
+    g: &mut GraphBuilder,
+    x: TensorId,
+    prefix: &str,
+    mid: usize,
+    out: usize,
+    stride: usize,
+    project: bool,
+) -> TensorId {
+    let relu = Some(Activation::Relu);
+    let a = g.conv(&format!("{prefix}_a"), x, mid, 1, stride, Padding::Same, relu);
+    let b = g.conv(&format!("{prefix}_b"), a, mid, 3, 1, Padding::Same, relu);
+    let c = g.conv(&format!("{prefix}_c"), b, out, 1, 1, Padding::Same, None);
+    let shortcut = if project {
+        g.conv(
+            &format!("{prefix}_proj"),
+            x,
+            out,
+            1,
+            stride,
+            Padding::Same,
+            None,
+        )
+    } else {
+        x
+    };
+    g.add(&format!("{prefix}_add"), c, shortcut, relu)
+}
+
+/// Build ResNet50: conv7x7/2, maxpool/2, stages of [3, 4, 6, 3]
+/// bottlenecks at (64,256), (128,512), (256,1024), (512,2048), global
+/// average pool, FC-1000.
+pub fn resnet50() -> Graph {
+    let mut g = GraphBuilder::new("resnet50");
+    let x = g.input("input", 1, 224, 224, 3);
+    let relu = Some(Activation::Relu);
+    let c1 = g.conv("conv1", x, 64, 7, 2, Padding::Same, relu);
+    let mut t = g.max_pool("pool1", c1, 2, 2); // 3x3/2 in the original; 2x2/2 here
+    let stages: &[(usize, usize, usize, usize)] = &[
+        // (blocks, mid, out, first stride)
+        (3, 64, 256, 1),
+        (4, 128, 512, 2),
+        (6, 256, 1024, 2),
+        (3, 512, 2048, 2),
+    ];
+    for (si, &(blocks, mid, out, stride0)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if b == 0 { stride0 } else { 1 };
+            let project = b == 0;
+            t = bottleneck(
+                &mut g,
+                t,
+                &format!("s{}b{}", si + 2, b),
+                mid,
+                out,
+                stride,
+                project,
+            );
+        }
+    }
+    let t = g.avg_pool("avgpool", t, 7, 7);
+    let f = g.flatten("flatten", t);
+    g.fc("fc1000", f, 1000, None);
+    g.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifty_ish_weight_layers() {
+        let g = resnet50();
+        let convs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::graph::OpKind::Conv { .. }))
+            .count();
+        // 1 stem + 16 blocks * 3 + 4 projections = 53 convs (+ 1 FC).
+        assert_eq!(convs, 53);
+    }
+
+    #[test]
+    fn param_count_25m() {
+        let g = resnet50();
+        let m = g.param_elems() as f64 / 1e6;
+        assert!((23.0..28.0).contains(&m), "{m:.1}M");
+    }
+
+    #[test]
+    fn final_feature_map_is_7x7x2048() {
+        let g = resnet50();
+        let last_add = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, crate::graph::OpKind::EltwiseAdd { .. }))
+            .next_back()
+            .unwrap();
+        assert_eq!(g.tensors[last_add.output].shape.dims(), &[1, 7, 7, 2048]);
+    }
+
+    #[test]
+    fn schedules_as_dag_with_branches() {
+        let g = resnet50();
+        let order = g.topo_order();
+        assert_eq!(order.len(), g.ops.len());
+    }
+}

@@ -1,0 +1,61 @@
+//! VGG16 (CIFAR-10 variant, Table III): 3x3 CNN —
+//! 2 CONV [64, 128], POOL, 2 CONV [128, 128], POOL, 3 CONV [256 x3], POOL,
+//! 3 CONV [512 x3], POOL, 2 FC [512, 10]; 17.4 MB params.
+
+use crate::graph::{Activation, Graph, GraphBuilder, Padding};
+
+/// Build the CIFAR VGG16 variant (32x32x3 input).
+pub fn vgg16() -> Graph {
+    let mut g = GraphBuilder::new("vgg16");
+    let x = g.input("input", 1, 32, 32, 3);
+    let relu = Some(Activation::Relu);
+    let c = g.conv("conv0", x, 64, 3, 1, Padding::Same, relu);
+    let c = g.conv("conv1", c, 128, 3, 1, Padding::Same, relu);
+    let c = g.max_pool("pool0", c, 2, 2);
+    let c = g.conv("conv2", c, 128, 3, 1, Padding::Same, relu);
+    let c = g.conv("conv3", c, 128, 3, 1, Padding::Same, relu);
+    let c = g.max_pool("pool1", c, 2, 2);
+    let c = g.conv("conv4", c, 256, 3, 1, Padding::Same, relu);
+    let c = g.conv("conv5", c, 256, 3, 1, Padding::Same, relu);
+    let c = g.conv("conv6", c, 256, 3, 1, Padding::Same, relu);
+    let c = g.max_pool("pool2", c, 2, 2);
+    let c = g.conv("conv7", c, 512, 3, 1, Padding::Same, relu);
+    let c = g.conv("conv8", c, 512, 3, 1, Padding::Same, relu);
+    let c = g.conv("conv9", c, 512, 3, 1, Padding::Same, relu);
+    let c = g.max_pool("pool3", c, 2, 2);
+    let f = g.flatten("flatten", c);
+    let h = g.fc("fc0", f, 512, relu);
+    g.fc("fc1", h, 10, None);
+    g.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_footprint_17_4mb() {
+        let g = vgg16();
+        let mb = g.param_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((16.0..18.5).contains(&mb), "{mb:.2} MB");
+    }
+
+    #[test]
+    fn final_spatial_is_2x2x512() {
+        let g = vgg16();
+        let p = g.ops.iter().find(|o| o.name == "pool3").unwrap();
+        assert_eq!(g.tensors[p.output].shape.dims(), &[1, 2, 2, 512]);
+    }
+
+    #[test]
+    fn last_ten_layers_match_fig14() {
+        // Fig 14 plots the last 10 layers: 6 big convs, 2 pools, 2 FCs.
+        let g = vgg16();
+        let tags: Vec<&str> = g.ops.iter().map(|o| o.kind.tag()).collect();
+        let last10: Vec<&str> = tags[tags.len() - 11..].to_vec(); // + flatten
+        let convs = last10.iter().filter(|t| **t == "C").count();
+        let pools = last10.iter().filter(|t| **t == "P").count();
+        let fcs = last10.iter().filter(|t| **t == "F").count();
+        assert_eq!((convs, pools, fcs), (6, 2, 2));
+    }
+}

@@ -1,0 +1,336 @@
+//! Native reference executor: the functional semantics of every operator,
+//! in plain Rust. This is the oracle for the tiled/PJRT execution paths
+//! (mirrors `python/compile/kernels/ref.py`) and the executor for ops the
+//! accelerator backend does not cover.
+
+use crate::graph::Activation;
+use crate::tensor::{Tensor, TensorDesc};
+use crate::tiling::ConvParams;
+
+/// Apply an activation in place.
+pub fn activate(data: &mut [f32], act: Option<Activation>) {
+    match act {
+        None => {}
+        Some(Activation::Relu) => {
+            for v in data.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        Some(Activation::Elu) => {
+            for v in data.iter_mut() {
+                if *v < 0.0 {
+                    *v = v.exp_m1();
+                }
+            }
+        }
+    }
+}
+
+/// Plain GEMM: `a[m,k] @ w[k,n] (+ bias) (+ relu)`, f32 accumulation.
+pub fn gemm(a: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += av * wv;
+            }
+        }
+    }
+    out
+}
+
+/// im2col over a dense NHWC tile buffer of shape (1, h, w, c): produces
+/// the (m, k) GEMM operand with rows ordered (kr, kc, c) — matching
+/// `ref.im2col_nhwc` and the NVDLA weight layout. The tile is assumed
+/// already zero-padded (halo included), `stride` applies to the output.
+pub fn im2col_tile(
+    tile: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    r: usize,
+    s: usize,
+    stride: usize,
+) -> (Vec<f32>, usize) {
+    let oh = (h - r) / stride + 1;
+    let ow = (w - s) / stride + 1;
+    let m = oh * ow;
+    let kdim = r * s * c;
+    let mut out = vec![0.0f32; m * kdim];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            for kr in 0..r {
+                for kc in 0..s {
+                    let src = ((oy * stride + kr) * w + (ox * stride + kc)) * c;
+                    let dst = row * kdim + (kr * s + kc) * c;
+                    out[dst..dst + c].copy_from_slice(&tile[src..src + c]);
+                }
+            }
+        }
+    }
+    (out, m)
+}
+
+/// Direct NHWC convolution (weights KRSC), SAME/VALID via pre-padded
+/// input handled by the caller's `ConvParams`.
+pub fn conv2d(x: &Tensor, w: &[f32], bias: &[f32], p: &ConvParams) -> Tensor {
+    let (oh, ow) = p.out_dims();
+    let (pad_h, pad_w) = if p.pad_same {
+        (
+            ((oh - 1) * p.stride + p.r).saturating_sub(p.h),
+            ((ow - 1) * p.stride + p.s).saturating_sub(p.w),
+        )
+    } else {
+        (0, 0)
+    };
+    let (pt, pl) = (pad_h / 2, pad_w / 2);
+    let mut out = Tensor::zeros(TensorDesc::nhwc16(1, oh, ow, p.k));
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ko in 0..p.k {
+                let mut acc = bias[ko];
+                for kr in 0..p.r {
+                    let iy = (oy * p.stride + kr) as isize - pt as isize;
+                    if iy < 0 || iy >= p.h as isize {
+                        continue;
+                    }
+                    for kc in 0..p.s {
+                        let ix = (ox * p.stride + kc) as isize - pl as isize;
+                        if ix < 0 || ix >= p.w as isize {
+                            continue;
+                        }
+                        let xi = ((iy as usize) * p.w + ix as usize) * p.c;
+                        let wi = ((ko * p.r + kr) * p.s + kc) * p.c;
+                        for ci in 0..p.c {
+                            acc += x.data[xi + ci] * w[wi + ci];
+                        }
+                    }
+                }
+                let oi = (oy * ow + ox) * p.k + ko;
+                out.data[oi] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Fully connected: x (1, c_in) -> (1, c_out); weights (c_in, c_out)
+/// row-major, plus bias.
+pub fn fc(x: &[f32], w: &[f32], bias: &[f32], c_in: usize, c_out: usize) -> Vec<f32> {
+    let mut out = gemm(x, w, 1, c_in, c_out);
+    for (o, b) in out.iter_mut().zip(bias) {
+        *o += b;
+    }
+    out
+}
+
+/// Max pooling (VALID) on NHWC.
+pub fn max_pool(x: &Tensor, size: usize, stride: usize) -> Tensor {
+    let s = &x.desc.shape;
+    let (h, w, c) = (s.h(), s.w(), s.c());
+    let oh = (h - size) / stride + 1;
+    let ow = (w - size) / stride + 1;
+    let mut out = Tensor::zeros(TensorDesc::nhwc16(1, oh, ow, c));
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ci in 0..c {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..size {
+                    for kx in 0..size {
+                        m = m.max(x.at4(0, oy * stride + ky, ox * stride + kx, ci));
+                    }
+                }
+                let oi = (oy * ow + ox) * c + ci;
+                out.data[oi] = m;
+            }
+        }
+    }
+    out
+}
+
+/// Average pooling (VALID) on NHWC.
+pub fn avg_pool(x: &Tensor, size: usize, stride: usize) -> Tensor {
+    let s = &x.desc.shape;
+    let (h, w, c) = (s.h(), s.w(), s.c());
+    let oh = (h - size) / stride + 1;
+    let ow = (w - size) / stride + 1;
+    let mut out = Tensor::zeros(TensorDesc::nhwc16(1, oh, ow, c));
+    let inv = 1.0 / (size * size) as f32;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ci in 0..c {
+                let mut acc = 0.0;
+                for ky in 0..size {
+                    for kx in 0..size {
+                        acc += x.at4(0, oy * stride + ky, ox * stride + kx, ci);
+                    }
+                }
+                out.data[(oy * ow + ox) * c + ci] = acc * inv;
+            }
+        }
+    }
+    out
+}
+
+/// Inference batch norm: per-channel `x * scale + shift` (scale/shift
+/// folded from gamma/beta/mean/var).
+pub fn batch_norm(x: &mut Tensor, scale: &[f32], shift: &[f32]) {
+    let c = *x.desc.shape.dims().last().unwrap();
+    for (i, v) in x.data.iter_mut().enumerate() {
+        let ci = i % c;
+        *v = *v * scale[ci] + shift[ci];
+    }
+}
+
+/// Element-wise addition.
+pub fn eltwise_add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gemm_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(gemm(&a, &eye, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn gemm_known_values() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![1.0, 1.0, 1.0, 1.0];
+        assert_eq!(gemm(&a, &w, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn conv_1x1_is_channel_mix() {
+        // 1x1 conv with identity-ish weights = per-pixel linear map.
+        let mut rng = Rng::new(1);
+        let x = Tensor::random(TensorDesc::nhwc16(1, 4, 4, 3), &mut rng);
+        let p = ConvParams {
+            h: 4,
+            w: 4,
+            c: 3,
+            k: 3,
+            r: 1,
+            s: 1,
+            stride: 1,
+            pad_same: true,
+        };
+        // w[k][0][0][c] = 1 if k==c else 0 -> identity.
+        let mut w = vec![0.0; 9];
+        for k in 0..3 {
+            w[k * 3 + k] = 1.0;
+        }
+        let out = conv2d(&x, &w, &[0.0; 3], &p);
+        crate::util::max_abs_diff(&out.data, &x.data);
+        assert_eq!(out.data, x.data);
+    }
+
+    #[test]
+    fn conv_same_padding_sums_window() {
+        // All-ones input and weights: center pixels sum 9, corners 4.
+        let x = Tensor::from_data(TensorDesc::nhwc16(1, 3, 3, 1), vec![1.0; 9]);
+        let p = ConvParams {
+            h: 3,
+            w: 3,
+            c: 1,
+            k: 1,
+            r: 3,
+            s: 3,
+            stride: 1,
+            pad_same: true,
+        };
+        let out = conv2d(&x, &[1.0; 9], &[0.0], &p);
+        assert_eq!(out.at4(0, 1, 1, 0), 9.0);
+        assert_eq!(out.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(out.at4(0, 0, 1, 0), 6.0);
+    }
+
+    #[test]
+    fn im2col_matches_direct_conv() {
+        let mut rng = Rng::new(2);
+        let (h, w, c, k, r) = (6, 6, 4, 5, 3);
+        let x = Tensor::random(TensorDesc::nhwc16(1, h, w, c), &mut rng);
+        let wts = rng.vec_f32(k * r * r * c, -1.0, 1.0);
+        let p = ConvParams {
+            h,
+            w,
+            c,
+            k,
+            r,
+            s: r,
+            stride: 1,
+            pad_same: false,
+        };
+        let direct = conv2d(&x, &wts, &vec![0.0; k], &p);
+        // im2col path (no padding -> whole tensor is the tile).
+        let (a, m) = im2col_tile(&x.data, h, w, c, r, r, 1);
+        // Weight matrix (kdim, k): rows (kr,kc,c), cols k.
+        let kdim = r * r * c;
+        let mut wm = vec![0.0f32; kdim * k];
+        for ko in 0..k {
+            for row in 0..kdim {
+                wm[row * k + ko] = wts[ko * kdim + row];
+            }
+        }
+        let got = gemm(&a, &wm, m, kdim, k);
+        let diff = crate::util::max_abs_diff(&got, &direct.data);
+        assert!(diff < 1e-4, "diff {diff}");
+    }
+
+    #[test]
+    fn max_pool_picks_max() {
+        let x = Tensor::from_data(
+            TensorDesc::nhwc16(1, 2, 2, 1),
+            vec![1.0, 5.0, 3.0, 2.0],
+        );
+        let out = max_pool(&x, 2, 2);
+        assert_eq!(out.data, vec![5.0]);
+    }
+
+    #[test]
+    fn avg_pool_averages() {
+        let x = Tensor::from_data(
+            TensorDesc::nhwc16(1, 2, 2, 1),
+            vec![1.0, 5.0, 3.0, 3.0],
+        );
+        assert_eq!(avg_pool(&x, 2, 2).data, vec![3.0]);
+    }
+
+    #[test]
+    fn bn_applies_scale_shift() {
+        let mut x = Tensor::from_data(
+            TensorDesc::nhwc16(1, 1, 2, 2),
+            vec![1.0, 2.0, 3.0, 4.0],
+        );
+        batch_norm(&mut x, &[2.0, 0.5], &[0.0, 1.0]);
+        assert_eq!(x.data, vec![2.0, 2.0, 6.0, 3.0]);
+    }
+
+    #[test]
+    fn relu_and_elu() {
+        let mut d = vec![-1.0, 0.5];
+        activate(&mut d, Some(Activation::Relu));
+        assert_eq!(d, vec![0.0, 0.5]);
+        let mut d = vec![-1.0f32, 0.5];
+        activate(&mut d, Some(Activation::Elu));
+        assert!((d[0] - (-0.632_120_56)).abs() < 1e-6);
+        assert_eq!(d[1], 0.5);
+    }
+}

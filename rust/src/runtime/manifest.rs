@@ -1,0 +1,150 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. One line per AOT-compiled canonical tile:
+//!
+//! ```text
+//! gemm <M> <K> <N> <variant> <relative-path>
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Canonical M grid (must mirror `python/compile/model.py`).
+pub const CANONICAL_M: &[usize] = &[16, 64, 256, 1024];
+/// Canonical K grid.
+pub const CANONICAL_K: &[usize] = &[32, 128, 512, 2048];
+/// Canonical N grid.
+pub const CANONICAL_N: &[usize] = &[16, 64, 256];
+
+/// Fused-epilogue variant of a GEMM artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Plain GEMM (partial-product tiles).
+    Plain,
+    /// Fused bias + ReLU epilogue.
+    BiasRelu,
+}
+
+impl Variant {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(Variant::Plain),
+            "relu" => Ok(Variant::BiasRelu),
+            other => bail!("unknown artifact variant '{other}'"),
+        }
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Canonical GEMM rows.
+    pub m: usize,
+    /// Canonical contraction size.
+    pub k: usize,
+    /// Canonical columns.
+    pub n: usize,
+    /// Epilogue variant.
+    pub variant: Variant,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// All artifact entries.
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 6 || f[0] != "gemm" {
+                bail!("manifest line {} malformed: '{line}'", lineno + 1);
+            }
+            entries.push(Entry {
+                m: f[1].parse()?,
+                k: f[2].parse()?,
+                n: f[3].parse()?,
+                variant: Variant::parse(f[4])?,
+                path: dir.join(f[5]),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest at {path:?} has no entries");
+        }
+        Ok(Self { entries })
+    }
+
+    /// Find the entry for exact canonical dims + variant.
+    pub fn find(&self, m: usize, k: usize, n: usize, variant: Variant) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.m == m && e.k == k && e.n == n && e.variant == variant)
+    }
+}
+
+/// Round `v` up to the nearest canonical grid entry.
+pub fn round_up_grid(v: usize, grid: &[usize]) -> Result<usize> {
+    for &g in grid {
+        if v <= g {
+            return Ok(g);
+        }
+    }
+    bail!("dimension {v} exceeds canonical grid max {}", grid.last().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_rounding() {
+        assert_eq!(round_up_grid(1, CANONICAL_M).unwrap(), 16);
+        assert_eq!(round_up_grid(65, CANONICAL_M).unwrap(), 256);
+        assert_eq!(round_up_grid(2048, CANONICAL_K).unwrap(), 2048);
+        assert!(round_up_grid(4096, CANONICAL_K).is_err());
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("smaug_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# kind M K N variant path\ngemm 16 32 16 none a.hlo.txt\ngemm 16 32 16 relu b.hlo.txt\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert!(m.find(16, 32, 16, Variant::Plain).is_some());
+        assert!(m.find(16, 32, 16, Variant::BiasRelu).is_some());
+        assert!(m.find(64, 32, 16, Variant::Plain).is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let dir = std::env::temp_dir().join("smaug_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "gemm 16 zz\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn grids_cover_scratchpad_tiles() {
+        // Tiling guarantees m <= 1024, k <= 2048, n <= 256.
+        assert_eq!(*CANONICAL_M.last().unwrap(), 1024);
+        assert_eq!(*CANONICAL_K.last().unwrap(), 2048);
+        assert_eq!(*CANONICAL_N.last().unwrap(), 256);
+    }
+}

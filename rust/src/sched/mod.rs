@@ -1,0 +1,632 @@
+//! Runtime scheduler (paper §II-C): dispatches tiled work to the
+//! accelerator worker pool, tracks reduction-group dependencies, and
+//! charges the CPU software stack for data preparation/finalization.
+//!
+//! Execution per operator:
+//!
+//! 1. **Data preparation** (CPU thread pool): tile the input tensor per
+//!    the tiling plan (layout transforms + memcpys).
+//! 2. **Accelerator phase**: reduction groups are assigned round-robin to
+//!    the accelerator pool's command queues; each queue executes its items
+//!    serially (in-place partial-product reduction requires group
+//!    affinity — the paper's Fig-14 underutilization effect). Each item:
+//!    transfer in (DMA or ACP) -> compute -> transfer out (on the last
+//!    channel block of its group).
+//! 3. **Data finalization** (CPU thread pool): gather output tiles into a
+//!    contiguous tensor.
+//!
+//! Operators execute in topological order; tile-level parallelism is
+//! exploited within an operator (the paper's choice).
+
+use crate::accel::{build_model, AccelModel, KernelClass};
+use crate::config::{InterfaceKind, SimOptions, SocConfig};
+use crate::cpu::CpuModel;
+use crate::energy::EnergyAccount;
+use crate::graph::{Graph, Op, OpKind};
+use crate::mem::{MemorySystem, TrafficClass, TransferReq, LLC_USABLE_FRAC};
+use crate::stats::{Breakdown, OpRecord, SimReport};
+use crate::tiling::{plan_conv, plan_eltwise, plan_fc, plan_pool, TilingPlan};
+use crate::trace::{EventKind, Lane, Timeline};
+
+/// The runtime scheduler and its SoC state.
+pub struct Scheduler {
+    soc: SocConfig,
+    opts: SimOptions,
+    model: Box<dyn AccelModel>,
+    /// Memory system (public for inspection by harnesses).
+    pub mem: MemorySystem,
+    cpu: CpuModel,
+    /// Event timeline (enabled via [`SimOptions::capture_timeline`]).
+    pub timeline: Timeline,
+    /// Energy account.
+    pub energy: EnergyAccount,
+    /// Windows of CPU prep/finalize activity, for Fig-17's
+    /// bandwidth-during-software-phases metric.
+    sw_windows: Vec<(f64, f64)>,
+}
+
+/// A tiling plan plus the kernel class it runs as.
+pub struct PlannedOp {
+    /// The tiling plan.
+    pub plan: TilingPlan,
+    /// Kernel family.
+    pub class: KernelClass,
+}
+
+/// Plan any accelerated operator (public: harnesses reuse it).
+pub fn plan_op(op: &Op, graph: &Graph, soc: &SocConfig) -> Option<PlannedOp> {
+    match &op.kind {
+        OpKind::Conv { params, .. } => Some(PlannedOp {
+            plan: plan_conv(params, soc),
+            class: KernelClass::ConvGemm,
+        }),
+        OpKind::InnerProduct { params, .. } => Some(PlannedOp {
+            plan: plan_fc(params, soc),
+            class: KernelClass::FcGemm,
+        }),
+        OpKind::MaxPool(p) | OpKind::AvgPool(p) => Some(PlannedOp {
+            plan: plan_pool(p, soc),
+            class: KernelClass::Pool,
+        }),
+        OpKind::BatchNorm => {
+            let elems = graph.tensors[op.inputs[0]].shape.elems();
+            Some(PlannedOp {
+                plan: plan_eltwise(elems, 1, soc),
+                class: KernelClass::Eltwise { ops: 2 },
+            })
+        }
+        OpKind::EltwiseAdd { .. } => {
+            let elems = graph.tensors[op.inputs[0]].shape.elems();
+            Some(PlannedOp {
+                plan: plan_eltwise(elems, 2, soc),
+                class: KernelClass::Eltwise { ops: 1 },
+            })
+        }
+        OpKind::Act(_) => {
+            let elems = graph.tensors[op.inputs[0]].shape.elems();
+            Some(PlannedOp {
+                plan: plan_eltwise(elems, 1, soc),
+                class: KernelClass::Eltwise { ops: 1 },
+            })
+        }
+        OpKind::Input | OpKind::Flatten => None,
+    }
+}
+
+impl Scheduler {
+    /// Build a scheduler for one simulation run.
+    pub fn new(soc: SocConfig, opts: SimOptions) -> Self {
+        let model: Box<dyn AccelModel> = build_model(opts.accel_kind, &soc);
+        let mem = MemorySystem::new(&soc, opts.interface);
+        let cpu = CpuModel::new(&soc);
+        let timeline = Timeline::new(opts.capture_timeline);
+        Self {
+            soc,
+            opts,
+            model,
+            mem,
+            cpu,
+            timeline,
+            energy: EnergyAccount::default(),
+            sw_windows: Vec::new(),
+        }
+    }
+
+    /// Human-readable configuration string.
+    pub fn config_string(&self) -> String {
+        format!(
+            "{}x {} / {} / {} sw thread(s){}",
+            self.opts.num_accels,
+            self.model.name(),
+            self.opts.interface,
+            self.opts.sw_threads,
+            if self.opts.sampling_factor > 1 {
+                format!(" / sampling {}", self.opts.sampling_factor)
+            } else {
+                String::new()
+            }
+        )
+    }
+
+    /// LLC-residency fraction for an op's streaming working set under ACP.
+    fn llc_frac(&self, working_set_bytes: u64) -> f64 {
+        if self.mem.interface() != InterfaceKind::Acp {
+            return 0.0;
+        }
+        let usable = LLC_USABLE_FRAC * self.soc.llc_bytes as f64;
+        (usable / working_set_bytes.max(1) as f64).min(1.0)
+    }
+
+    /// Simulate one forward pass; returns the report.
+    pub fn run(&mut self, graph: &Graph) -> SimReport {
+        let wall_start = std::time::Instant::now();
+        let mut now = 0.0f64;
+        let mut records: Vec<OpRecord> = Vec::new();
+        let order = graph.topo_order();
+        for &oid in &order {
+            let op = &graph.ops[oid];
+            match plan_op(op, graph, &self.soc) {
+                None => {
+                    // Input / Flatten: reshape-only (NHWC flatten is
+                    // contiguous), charge dispatch overhead.
+                    if matches!(op.kind, OpKind::Flatten) {
+                        let other = self.cpu.op_overhead_ns(0);
+                        self.timeline
+                            .push(now, now + other, Lane::Cpu, EventKind::Other, &op.name);
+                        records.push(OpRecord {
+                            name: op.name.clone(),
+                            tag: op.kind.tag().into(),
+                            strategy: "-".into(),
+                            start_ns: now,
+                            end_ns: now + other,
+                            other_ns: other,
+                            ..Default::default()
+                        });
+                        now += other;
+                    }
+                }
+                Some(planned) => {
+                    let rec = self.run_op(op, &planned, now);
+                    now = rec.end_ns;
+                    records.push(rec);
+                }
+            }
+        }
+        self.finish_report(graph, records, now, wall_start.elapsed().as_nanos() as f64)
+    }
+
+    /// Simulate one accelerated operator starting at `start`.
+    fn run_op(&mut self, op: &Op, planned: &PlannedOp, start: f64) -> OpRecord {
+        let plan = &planned.plan;
+        let threads = self.opts.sw_threads;
+        let n_accels = self.opts.num_accels.max(1);
+        let accel_cycle = self.soc.accel_cycle_ns();
+
+        // ---- Phase 1: data preparation (CPU thread pool).
+        let prep_phase = self.cpu.tiling_phase(&plan.prep_tasks, threads);
+        let prep_end = start + prep_phase.span_ns;
+        if prep_phase.traffic_bytes > 0 {
+            let rate = prep_phase.traffic_bytes as f64 / prep_phase.span_ns.max(1e-9);
+            self.mem.cpu_traffic(start, prep_phase.traffic_bytes, rate);
+            self.sw_windows.push((start, prep_end));
+        }
+        self.timeline
+            .push(start, prep_end, Lane::Cpu, EventKind::Prep, &op.name);
+        self.energy
+            .charge_cpu_ns(prep_phase.span_ns, self.soc.cpu_ghz);
+
+        // ---- Phase 2: accelerator pool.
+        // Working set for LLC-residency heuristics (ACP): activations in
+        // flight for this op.
+        let act_bytes: u64 = plan.items.iter().map(|i| i.in_bytes + i.out_bytes).sum();
+        let llc_frac = self.llc_frac(act_bytes);
+        // Per-accelerator availability. With double buffering (extension:
+        // the paper excludes NVDLA's convolution buffer), the transfer
+        // engine and the datapath are tracked separately so tile n+1's
+        // transfer overlaps tile n's compute; otherwise both advance in
+        // lockstep (load -> compute -> store per tile).
+        let mut xfer_free = vec![prep_end; n_accels];
+        let mut compute_free = vec![prep_end; n_accels];
+        let mut busy = vec![prep_end; n_accels];
+        let mut compute_busy = vec![0.0f64; n_accels];
+        // Inter-accelerator reduction (extension: paper §IV-B future
+        // work): channel blocks of a group spread over the pool; partial
+        // sums are written back per block and merged at the end.
+        let inter = self.opts.inter_accel_reduction;
+        #[derive(Default, Clone, Copy)]
+        struct GroupAcc {
+            blocks: u32,
+            max_end: f64,
+            mn: usize,
+        }
+        let mut groups: std::collections::HashMap<u32, GroupAcc> =
+            std::collections::HashMap::new();
+        // Group sizes are only needed when spreading reductions (skip the
+        // map entirely on the common path).
+        let group_sizes: std::collections::HashMap<u32, u32> = if inter {
+            let mut m = std::collections::HashMap::new();
+            for item in &plan.items {
+                *m.entry(item.reduce_group).or_insert(0u32) += 1;
+            }
+            m
+        } else {
+            Default::default()
+        };
+        for (idx, item) in plan.items.iter().enumerate() {
+            let spread = inter && group_sizes[&item.reduce_group] > 1;
+            let a = if spread {
+                idx % n_accels
+            } else {
+                (item.reduce_group as usize) % n_accels
+            };
+            let t0 = if self.opts.double_buffer {
+                xfer_free[a]
+            } else {
+                busy[a]
+            };
+            // Transfer in: input tile + weight tile.
+            let rin = self.mem.transfer(TransferReq {
+                bytes: item.in_bytes,
+                earliest_ns: t0,
+                class: TrafficClass::Input,
+                llc_resident_frac: llc_frac,
+            });
+            let rwgt = self.mem.transfer(TransferReq {
+                bytes: item.wgt_bytes,
+                earliest_ns: t0,
+                class: TrafficClass::Weight,
+                llc_resident_frac: 0.0,
+            });
+            let xfer_in_end = rin.end_ns.max(rwgt.end_ns);
+            // Compute.
+            let cost = self
+                .model
+                .tile_cost(planned.class, item, self.opts.sampling_factor);
+            let c0 = if self.opts.double_buffer {
+                xfer_in_end.max(compute_free[a])
+            } else {
+                xfer_in_end
+            };
+            let c1 = c0 + cost.cycles * accel_cycle;
+            // Transfer out on the last channel block of the group — or on
+            // *every* block when the group is spread across accelerators
+            // (partial sums must leave the scratchpad: the extra traffic
+            // the paper warns about).
+            let eb = self.soc.elem_bytes;
+            let out_bytes = if spread {
+                (item.gemm.m * item.gemm.n * eb) as u64
+            } else {
+                item.out_bytes
+            };
+            let end = if out_bytes > 0 {
+                let rout = self.mem.transfer(TransferReq {
+                    bytes: out_bytes,
+                    earliest_ns: c1,
+                    class: TrafficClass::Output,
+                    llc_resident_frac: llc_frac,
+                });
+                rout.end_ns
+            } else {
+                c1
+            };
+            self.timeline
+                .push(t0, c0, Lane::Transfer(a), EventKind::Transfer, &op.name);
+            self.timeline
+                .push(c0, c1, Lane::Accel(a), EventKind::Compute, &op.name);
+            self.timeline
+                .push(c1, end, Lane::Transfer(a), EventKind::Transfer, &op.name);
+            self.energy.charge_compute(
+                cost.macc_ops,
+                (cost.spad_reads + cost.spad_writes) * self.soc.elem_bytes as u64,
+                cost.cycles,
+            );
+            compute_busy[a] += c1 - c0;
+            xfer_free[a] = xfer_in_end.max(if self.opts.double_buffer { t0 } else { end });
+            compute_free[a] = c1;
+            busy[a] = busy[a].max(end);
+            if spread {
+                let g = groups.entry(item.reduce_group).or_default();
+                g.blocks += 1;
+                g.max_end = g.max_end.max(end);
+                g.mn = item.gemm.m * item.gemm.n;
+            }
+        }
+        // Merge spread reduction groups: stream the partial sums back into
+        // one accelerator and vector-add them.
+        for (_gid, g) in groups.iter().filter(|(_, g)| g.blocks > 1) {
+            let a = (0..n_accels)
+                .min_by(|&x, &y| busy[x].partial_cmp(&busy[y]).unwrap())
+                .unwrap();
+            let merge_bytes = ((g.blocks - 1) as usize * g.mn * self.soc.elem_bytes) as u64;
+            let rin = self.mem.transfer(TransferReq {
+                bytes: merge_bytes,
+                earliest_ns: g.max_end.max(busy[a]),
+                class: TrafficClass::Input,
+                llc_resident_frac: llc_frac,
+            });
+            let add_ops = (g.blocks - 1) as u64 * g.mn as u64;
+            let merge_cycles = add_ops.div_ceil(32) as f64 + 24.0;
+            let m0 = rin.end_ns;
+            let m1 = m0 + merge_cycles * accel_cycle;
+            self.timeline
+                .push(m0, m1, Lane::Accel(a), EventKind::Compute, &op.name);
+            self.energy.charge_compute(add_ops, 2 * merge_bytes, merge_cycles);
+            compute_busy[a] += m1 - m0;
+            busy[a] = busy[a].max(m1);
+        }
+        let hw_end = busy.iter().cloned().fold(prep_end, f64::max);
+        let hw_span = hw_end - prep_end;
+        // Critical-path attribution: the compute component is the busiest
+        // accelerator's compute time; the rest of the span is transfer.
+        let accel_ns = compute_busy.iter().cloned().fold(0.0, f64::max);
+        let transfer_ns = (hw_span - accel_ns).max(0.0);
+
+        // ---- Phase 3: data finalization (CPU thread pool).
+        let fin_phase = self.cpu.tiling_phase(&plan.finalize_tasks, threads);
+        let fin_end = hw_end + fin_phase.span_ns;
+        if fin_phase.traffic_bytes > 0 {
+            let rate = fin_phase.traffic_bytes as f64 / fin_phase.span_ns.max(1e-9);
+            self.mem.cpu_traffic(hw_end, fin_phase.traffic_bytes, rate);
+            self.sw_windows.push((hw_end, fin_end));
+        }
+        self.timeline
+            .push(hw_end, fin_end, Lane::Cpu, EventKind::Finalize, &op.name);
+        self.energy
+            .charge_cpu_ns(fin_phase.span_ns, self.soc.cpu_ghz);
+
+        // ---- Other software: dispatch + per-tile tracking + sync.
+        let other = self.cpu.op_overhead_ns(plan.items.len());
+        self.timeline
+            .push(fin_end, fin_end + other, Lane::Cpu, EventKind::Other, &op.name);
+        self.energy.charge_cpu_ns(other, self.soc.cpu_ghz);
+
+        OpRecord {
+            name: op.name.clone(),
+            tag: op.kind.tag().into(),
+            strategy: plan.strategy.name(),
+            start_ns: start,
+            end_ns: fin_end + other,
+            accel_ns,
+            transfer_ns,
+            prep_ns: prep_phase.span_ns,
+            finalize_ns: fin_phase.span_ns,
+            other_ns: other,
+            tiles: plan.items.len(),
+            reduce_groups: plan.num_reduce_groups,
+            macs: plan.total_macs(),
+            dram_bytes: plan.transfer_bytes(),
+        }
+    }
+
+    fn finish_report(
+        &mut self,
+        graph: &Graph,
+        ops: Vec<OpRecord>,
+        total_ns: f64,
+        wallclock_ns: f64,
+    ) -> SimReport {
+        let mut b = Breakdown::default();
+        for r in &ops {
+            b.accel_ns += r.accel_ns;
+            b.transfer_ns += r.transfer_ns;
+            b.prep_ns += r.prep_ns;
+            b.finalize_ns += r.finalize_ns;
+            b.other_ns += r.other_ns;
+        }
+        // Memory-system energy from aggregate traffic.
+        self.energy
+            .charge_traffic(self.mem.stats.dram_bytes, self.mem.stats.llc_bytes);
+        let sw_util = {
+            let (mut busy, mut span) = (0.0, 0.0);
+            for &(t0, t1) in &self.sw_windows {
+                busy += self.mem.dram.utilization_between(t0, t1) * (t1 - t0);
+                span += t1 - t0;
+            }
+            if span > 0.0 {
+                busy / span
+            } else {
+                0.0
+            }
+        };
+        SimReport {
+            network: graph.name.clone(),
+            config: self.config_string(),
+            total_ns,
+            breakdown: b,
+            ops,
+            dram_bytes: self.mem.stats.dram_bytes,
+            llc_bytes: self.mem.stats.llc_bytes,
+            dram_utilization: self.mem.dram.utilization_between(0.0, total_ns),
+            sw_phase_dram_utilization: sw_util,
+            energy: self.energy,
+            sim_wallclock_ns: wallclock_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AccelKind, FunctionalMode};
+    use crate::nets;
+
+    fn opts() -> SimOptions {
+        SimOptions::default()
+    }
+
+    fn run(net: &str, o: SimOptions) -> SimReport {
+        let g = nets::build_network(net).unwrap();
+        Scheduler::new(SocConfig::default(), o).run(&g)
+    }
+
+    #[test]
+    fn cnn10_baseline_runs() {
+        let r = run("cnn10", opts());
+        assert!(r.total_ns > 0.0);
+        // All components present.
+        assert!(r.breakdown.accel_ns > 0.0);
+        assert!(r.breakdown.transfer_ns > 0.0);
+        assert!(r.breakdown.cpu_ns() > 0.0);
+        // Breakdown sums to (roughly) the total.
+        let sum = r.breakdown.total_ns();
+        assert!((sum - r.total_ns).abs() / r.total_ns < 0.05, "{sum} vs {}", r.total_ns);
+    }
+
+    #[test]
+    fn fig1_shape_accelerator_is_minority() {
+        // Paper Fig 1: accel compute ~25% on average; never the majority
+        // on the baseline system.
+        for net in ["cnn10", "vgg16"] {
+            let r = run(net, opts());
+            let (a, _, _) = r.breakdown.fractions();
+            assert!(a < 0.55, "{net}: accel fraction {a:.2}");
+        }
+    }
+
+    #[test]
+    fn acp_is_faster_than_dma() {
+        let dma = run("cnn10", opts());
+        let acp = run(
+            "cnn10",
+            SimOptions {
+                interface: InterfaceKind::Acp,
+                ..opts()
+            },
+        );
+        assert!(
+            acp.total_ns < dma.total_ns,
+            "acp {} dma {}",
+            acp.total_ns,
+            dma.total_ns
+        );
+        // And consumes less energy (DRAM -> LLC conversion).
+        assert!(acp.energy.total_pj() < dma.energy.total_pj());
+    }
+
+    #[test]
+    fn more_accelerators_reduce_latency() {
+        let one = run("vgg16", opts());
+        let eight = run(
+            "vgg16",
+            SimOptions {
+                num_accels: 8,
+                ..opts()
+            },
+        );
+        assert!(eight.total_ns < one.total_ns);
+        // Compute component scales down strongly.
+        assert!(eight.breakdown.accel_ns < one.breakdown.accel_ns / 3.0);
+    }
+
+    #[test]
+    fn more_threads_reduce_sw_time() {
+        let one = run("vgg16", opts());
+        let eight = run(
+            "vgg16",
+            SimOptions {
+                sw_threads: 8,
+                ..opts()
+            },
+        );
+        let sw1 = one.breakdown.prep_ns + one.breakdown.finalize_ns;
+        let sw8 = eight.breakdown.prep_ns + eight.breakdown.finalize_ns;
+        assert!(sw8 < sw1, "{sw8} vs {sw1}");
+    }
+
+    #[test]
+    fn sampling_changes_little_but_runs() {
+        let exact = run("cnn10", opts());
+        let sampled = run(
+            "cnn10",
+            SimOptions {
+                sampling_factor: 1000,
+                ..opts()
+            },
+        );
+        let err = (sampled.total_ns - exact.total_ns).abs() / exact.total_ns;
+        assert!(err < 0.06, "sampling error {err:.3}");
+    }
+
+    #[test]
+    fn timeline_capture_produces_events() {
+        let r = {
+            let g = nets::build_network("lenet5").unwrap();
+            let mut s = Scheduler::new(
+                SocConfig::default(),
+                SimOptions {
+                    capture_timeline: true,
+                    ..opts()
+                },
+            );
+            let rep = s.run(&g);
+            assert!(!s.timeline.events.is_empty());
+            assert!(s.timeline.ascii_gantt(60).contains("accel0"));
+            rep
+        };
+        assert!(r.total_ns > 0.0);
+    }
+
+    #[test]
+    fn systolic_backend_runs() {
+        let r = run(
+            "cnn10",
+            SimOptions {
+                accel_kind: AccelKind::Systolic,
+                ..opts()
+            },
+        );
+        assert!(r.total_ns > 0.0);
+        let _ = FunctionalMode::Off;
+    }
+
+    #[test]
+    fn double_buffering_helps_or_is_neutral() {
+        let base = run("cnn10", opts());
+        let dbuf = run(
+            "cnn10",
+            SimOptions {
+                double_buffer: true,
+                ..opts()
+            },
+        );
+        assert!(
+            dbuf.total_ns <= base.total_ns * 1.001,
+            "dbuf {} base {}",
+            dbuf.total_ns,
+            base.total_ns
+        );
+        // On a transfer-heavy baseline it should be a real win.
+        assert!(dbuf.total_ns < base.total_ns * 0.95);
+    }
+
+    #[test]
+    fn inter_accel_reduction_fills_the_pool() {
+        // A deep-channel conv with one spatial tile and one output-channel
+        // block has a single reduction group — the Fig-14 starvation case:
+        // baseline scheduling pins it to one of the 8 accelerators, the
+        // inter-accelerator-reduction extension spreads its channel blocks.
+        use crate::graph::{GraphBuilder, Padding};
+        let mut b = GraphBuilder::new("starved");
+        let x = b.input("in", 1, 8, 8, 2048);
+        b.conv("deep", x, 8, 3, 1, Padding::Same, None);
+        let g = b.build();
+        let run8 = |inter: bool| {
+            Scheduler::new(
+                SocConfig::default(),
+                SimOptions {
+                    num_accels: 8,
+                    inter_accel_reduction: inter,
+                    ..opts()
+                },
+            )
+            .run(&g)
+        };
+        let base = run8(false);
+        let spread = run8(true);
+        let conv_base = &base.ops.iter().find(|o| o.name == "deep").unwrap();
+        assert_eq!(conv_base.reduce_groups, 1, "test premise: one group");
+        assert!(
+            spread.total_ns < base.total_ns,
+            "spread {} base {}",
+            spread.total_ns,
+            base.total_ns
+        );
+        // ...at the cost of extra partial-sum traffic.
+        assert!(spread.dram_bytes > base.dram_bytes);
+    }
+
+    #[test]
+    fn traffic_grows_mildly_with_accels() {
+        // Fig 13a: total memory traffic grows by at most a few percent.
+        let one = run("cnn10", opts());
+        let eight = run(
+            "cnn10",
+            SimOptions {
+                num_accels: 8,
+                ..opts()
+            },
+        );
+        let growth = eight.dram_bytes as f64 / one.dram_bytes as f64;
+        assert!(growth < 1.10, "traffic growth {growth:.3}");
+    }
+}

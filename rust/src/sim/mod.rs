@@ -1,0 +1,130 @@
+//! Top-level simulator facade: ties the scheduler (timing/energy), the
+//! functional execution paths, and reporting together.
+
+pub mod functional;
+
+pub use functional::{direct_forward, gen_input, gen_params, tiled_forward};
+
+use crate::config::{FunctionalMode, SimOptions, SocConfig};
+use crate::graph::Graph;
+use crate::runtime::{GemmExec, NativeGemm, PjrtRuntime};
+use crate::sched::Scheduler;
+use crate::stats::SimReport;
+use crate::tensor::Tensor;
+use crate::trace::Timeline;
+use crate::util::max_abs_diff;
+use anyhow::{Context, Result};
+
+/// The SMAUG simulator: one SoC configuration + run options.
+pub struct Simulator {
+    soc: SocConfig,
+    opts: SimOptions,
+}
+
+/// Result of a functional (execution-driven) run.
+pub struct FunctionalRun {
+    /// Timing/energy report.
+    pub report: SimReport,
+    /// Final network output.
+    pub output: Tensor,
+    /// Max |tiled - direct| across all op outputs (composition check).
+    pub max_divergence: f32,
+    /// Which GEMM backend executed the tiles.
+    pub backend: &'static str,
+}
+
+impl Simulator {
+    /// Create a simulator.
+    pub fn new(soc: SocConfig, opts: SimOptions) -> Self {
+        Self { soc, opts }
+    }
+
+    /// Timing/energy simulation of one forward pass.
+    pub fn run(&self, graph: &Graph) -> Result<SimReport> {
+        let mut sched = Scheduler::new(self.soc.clone(), self.opts.clone());
+        Ok(sched.run(graph))
+    }
+
+    /// Timing simulation that also returns the captured timeline.
+    pub fn run_with_timeline(&self, graph: &Graph) -> Result<(SimReport, Timeline)> {
+        let mut opts = self.opts.clone();
+        opts.capture_timeline = true;
+        let mut sched = Scheduler::new(self.soc.clone(), opts);
+        let report = sched.run(graph);
+        Ok((report, std::mem::take(&mut sched.timeline)))
+    }
+
+    /// Execution-driven run: timing simulation plus a functional forward
+    /// pass through the tiling plans, validated against the direct
+    /// reference. The backend follows [`SimOptions::functional`]
+    /// (`Pjrt` = AOT artifacts on the PJRT CPU client).
+    pub fn run_functional(&self, graph: &Graph, input: Option<Tensor>) -> Result<FunctionalRun> {
+        let report = self.run(graph)?;
+        let params = functional::gen_params(graph, self.opts.seed);
+        let input = input.unwrap_or_else(|| functional::gen_input(graph, self.opts.seed ^ 0xABCD));
+        let mut native = NativeGemm;
+        let mut pjrt_holder: Option<PjrtRuntime> = None;
+        let exec: &mut dyn GemmExec = match self.opts.functional {
+            FunctionalMode::Pjrt => {
+                pjrt_holder = Some(PjrtRuntime::new(None).context("loading AOT artifacts")?);
+                pjrt_holder.as_mut().unwrap()
+            }
+            FunctionalMode::Native | FunctionalMode::Off => &mut native,
+        };
+        let backend = exec.name();
+        let tiled = functional::tiled_forward(graph, &input, &params, &self.soc, exec)?;
+        let direct = functional::direct_forward(graph, &input, &params);
+        let mut max_div = 0.0f32;
+        for op in &graph.ops {
+            max_div = max_div.max(max_abs_diff(&tiled[&op.id].data, &direct[&op.id].data));
+        }
+        let last = *graph.topo_order().last().unwrap();
+        let output = tiled[&last].clone();
+        drop(pjrt_holder);
+        Ok(FunctionalRun {
+            report,
+            output,
+            max_divergence: max_div,
+            backend,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn simulator_runs_timing() {
+        let g = nets::build_network("lenet5").unwrap();
+        let r = Simulator::new(SocConfig::default(), SimOptions::default())
+            .run(&g)
+            .unwrap();
+        assert!(r.total_ns > 0.0);
+    }
+
+    #[test]
+    fn functional_native_validates() {
+        let g = nets::build_network("lenet5").unwrap();
+        let opts = SimOptions {
+            functional: FunctionalMode::Native,
+            ..SimOptions::default()
+        };
+        let run = Simulator::new(SocConfig::default(), opts)
+            .run_functional(&g, None)
+            .unwrap();
+        assert_eq!(run.backend, "native");
+        assert!(run.max_divergence < 1e-3, "div {}", run.max_divergence);
+        assert_eq!(run.output.data.len(), 10); // 10-class head
+    }
+
+    #[test]
+    fn timeline_returned() {
+        let g = nets::build_network("minerva").unwrap();
+        let (_r, tl) = Simulator::new(SocConfig::default(), SimOptions::default())
+            .run_with_timeline(&g)
+            .unwrap();
+        assert!(!tl.events.is_empty());
+    }
+}

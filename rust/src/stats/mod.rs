@@ -1,0 +1,335 @@
+//! Per-operator records and end-to-end reports (Fig 1 / 12 / 15 / 18).
+
+use crate::energy::EnergyAccount;
+use crate::util::{fmt_bytes, fmt_ns, fmt_pj};
+
+/// Timing/traffic record for one operator.
+#[derive(Debug, Clone, Default)]
+pub struct OpRecord {
+    /// Operator name.
+    pub name: String,
+    /// Kind tag (C/P/F/B/E/...).
+    pub tag: String,
+    /// Tiling strategy chosen.
+    pub strategy: String,
+    /// Wall start (ns).
+    pub start_ns: f64,
+    /// Wall end (ns).
+    pub end_ns: f64,
+    /// Accelerator-compute component (critical-path attribution), ns.
+    pub accel_ns: f64,
+    /// Data-transfer component (incl. DMA coherency management), ns.
+    pub transfer_ns: f64,
+    /// CPU data preparation (layout transform + tiling), ns.
+    pub prep_ns: f64,
+    /// CPU data finalization (untiling), ns.
+    pub finalize_ns: f64,
+    /// Other CPU software time (dispatch, tracking, sync), ns.
+    pub other_ns: f64,
+    /// Number of accelerator work items.
+    pub tiles: usize,
+    /// Independent reduction groups (max tile-level parallelism).
+    pub reduce_groups: u32,
+    /// MACs executed.
+    pub macs: u64,
+    /// DRAM bytes moved for this op.
+    pub dram_bytes: u64,
+}
+
+impl OpRecord {
+    /// Wall duration of the op.
+    pub fn span_ns(&self) -> f64 {
+        self.end_ns - self.start_ns
+    }
+}
+
+/// End-to-end latency breakdown (paper Fig 1's three components, with the
+/// software stack further split as in Fig 15).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    /// Accelerator compute, ns.
+    pub accel_ns: f64,
+    /// Data transfer (payload + coherency management), ns.
+    pub transfer_ns: f64,
+    /// CPU data preparation, ns.
+    pub prep_ns: f64,
+    /// CPU data finalization, ns.
+    pub finalize_ns: f64,
+    /// Other CPU software, ns.
+    pub other_ns: f64,
+}
+
+impl Breakdown {
+    /// Total of all components.
+    pub fn total_ns(&self) -> f64 {
+        self.accel_ns + self.transfer_ns + self.cpu_ns()
+    }
+
+    /// Total CPU software-stack time.
+    pub fn cpu_ns(&self) -> f64 {
+        self.prep_ns + self.finalize_ns + self.other_ns
+    }
+
+    /// Fractions (accel, transfer, cpu) of total.
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total_ns().max(1e-12);
+        (
+            self.accel_ns / t,
+            self.transfer_ns / t,
+            self.cpu_ns() / t,
+        )
+    }
+}
+
+/// Complete simulation report for one forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// Network name.
+    pub network: String,
+    /// Configuration description (accels/interface/threads).
+    pub config: String,
+    /// End-to-end latency, ns.
+    pub total_ns: f64,
+    /// Component breakdown.
+    pub breakdown: Breakdown,
+    /// Per-op records in execution order.
+    pub ops: Vec<OpRecord>,
+    /// Total DRAM traffic, bytes.
+    pub dram_bytes: u64,
+    /// Total LLC traffic, bytes.
+    pub llc_bytes: u64,
+    /// Mean DRAM bandwidth utilization over the run.
+    pub dram_utilization: f64,
+    /// Mean DRAM bandwidth utilization during prep/finalize phases only
+    /// (Fig 17's metric).
+    pub sw_phase_dram_utilization: f64,
+    /// Energy account.
+    pub energy: EnergyAccount,
+    /// Host wall-clock spent simulating, ns (Fig 10's metric).
+    pub sim_wallclock_ns: f64,
+}
+
+impl SimReport {
+    /// Fig-1-style one-line row: components as % of total.
+    pub fn breakdown_row(&self) -> String {
+        let (a, t, c) = self.breakdown.fractions();
+        format!(
+            "{:<10} total {:>12}  accel {:>5.1}%  transfer {:>5.1}%  cpu {:>5.1}%",
+            self.network,
+            fmt_ns(self.total_ns),
+            a * 100.0,
+            t * 100.0,
+            c * 100.0
+        )
+    }
+
+    /// Multi-line human-readable report.
+    pub fn breakdown_table(&self) -> String {
+        let b = &self.breakdown;
+        format!(
+            "network   : {}\nconfig    : {}\nlatency   : {}\n  accel compute  : {} ({:.1}%)\n  data transfer  : {} ({:.1}%)\n  data prep      : {} ({:.1}%)\n  data finalize  : {} ({:.1}%)\n  other software : {} ({:.1}%)\ndram traffic : {}\nllc traffic  : {}\ndram util    : {:.1}%\nenergy       : {} (dram {}, llc {}, macc {}, cpu {})",
+            self.network,
+            self.config,
+            fmt_ns(self.total_ns),
+            fmt_ns(b.accel_ns),
+            100.0 * b.accel_ns / self.total_ns.max(1e-12),
+            fmt_ns(b.transfer_ns),
+            100.0 * b.transfer_ns / self.total_ns.max(1e-12),
+            fmt_ns(b.prep_ns),
+            100.0 * b.prep_ns / self.total_ns.max(1e-12),
+            fmt_ns(b.finalize_ns),
+            100.0 * b.finalize_ns / self.total_ns.max(1e-12),
+            fmt_ns(b.other_ns),
+            100.0 * b.other_ns / self.total_ns.max(1e-12),
+            fmt_bytes(self.dram_bytes),
+            fmt_bytes(self.llc_bytes),
+            self.dram_utilization * 100.0,
+            fmt_pj(self.energy.total_pj()),
+            fmt_pj(self.energy.dram_pj),
+            fmt_pj(self.energy.llc_pj),
+            fmt_pj(self.energy.macc_pj),
+            fmt_pj(self.energy.cpu_pj),
+        )
+    }
+
+    /// Machine-readable JSON of the whole report (for plotting scripts).
+    pub fn to_json(&self) -> String {
+        let mut w = crate::util::JsonWriter::new();
+        w.begin_object();
+        w.key("network").string(&self.network);
+        w.key("config").string(&self.config);
+        w.key("total_ns").number(self.total_ns);
+        w.key("breakdown").begin_object();
+        w.key("accel_ns").number(self.breakdown.accel_ns);
+        w.key("transfer_ns").number(self.breakdown.transfer_ns);
+        w.key("prep_ns").number(self.breakdown.prep_ns);
+        w.key("finalize_ns").number(self.breakdown.finalize_ns);
+        w.key("other_ns").number(self.breakdown.other_ns);
+        w.end_object();
+        w.key("dram_bytes").uint(self.dram_bytes);
+        w.key("llc_bytes").uint(self.llc_bytes);
+        w.key("dram_utilization").number(self.dram_utilization);
+        w.key("sw_phase_dram_utilization")
+            .number(self.sw_phase_dram_utilization);
+        w.key("energy_pj").begin_object();
+        w.key("total").number(self.energy.total_pj());
+        w.key("soc").number(self.energy.soc_pj());
+        w.key("dram").number(self.energy.dram_pj);
+        w.key("llc").number(self.energy.llc_pj);
+        w.key("macc").number(self.energy.macc_pj);
+        w.key("spad").number(self.energy.spad_pj);
+        w.key("cpu").number(self.energy.cpu_pj);
+        w.end_object();
+        w.key("ops").begin_array();
+        for op in &self.ops {
+            w.begin_object();
+            w.key("name").string(&op.name);
+            w.key("tag").string(&op.tag);
+            w.key("strategy").string(&op.strategy);
+            w.key("start_ns").number(op.start_ns);
+            w.key("end_ns").number(op.end_ns);
+            w.key("accel_ns").number(op.accel_ns);
+            w.key("transfer_ns").number(op.transfer_ns);
+            w.key("prep_ns").number(op.prep_ns);
+            w.key("finalize_ns").number(op.finalize_ns);
+            w.key("other_ns").number(op.other_ns);
+            w.key("tiles").uint(op.tiles as u64);
+            w.key("reduce_groups").uint(op.reduce_groups as u64);
+            w.key("macs").uint(op.macs);
+            w.key("dram_bytes").uint(op.dram_bytes);
+            w.end_object();
+        }
+        w.end_array();
+        w.end_object();
+        w.finish()
+    }
+
+    /// Per-op CSV (header + one row per op) for spreadsheet/plot import.
+    pub fn per_op_csv(&self) -> String {
+        let mut s = String::from(
+            "name,tag,strategy,start_ns,end_ns,accel_ns,transfer_ns,prep_ns,finalize_ns,other_ns,tiles,reduce_groups,macs,dram_bytes\n",
+        );
+        for op in &self.ops {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                op.name,
+                op.tag,
+                op.strategy,
+                op.start_ns,
+                op.end_ns,
+                op.accel_ns,
+                op.transfer_ns,
+                op.prep_ns,
+                op.finalize_ns,
+                op.other_ns,
+                op.tiles,
+                op.reduce_groups,
+                op.macs,
+                op.dram_bytes
+            ));
+        }
+        s
+    }
+
+    /// Per-op table (name, tag, strategy, span, components).
+    pub fn per_op_table(&self) -> String {
+        let mut s = format!(
+            "{:<16} {:>3} {:>7} {:>12} {:>12} {:>12} {:>12} {:>6}\n",
+            "op", "tag", "strat", "span", "accel", "xfer", "cpu", "tiles"
+        );
+        for op in &self.ops {
+            s.push_str(&format!(
+                "{:<16} {:>3} {:>7} {:>12} {:>12} {:>12} {:>12} {:>6}\n",
+                op.name,
+                op.tag,
+                op.strategy,
+                fmt_ns(op.span_ns()),
+                fmt_ns(op.accel_ns),
+                fmt_ns(op.transfer_ns),
+                fmt_ns(op.prep_ns + op.finalize_ns + op.other_ns),
+                op.tiles
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let b = Breakdown {
+            accel_ns: 25.0,
+            transfer_ns: 34.0,
+            prep_ns: 20.0,
+            finalize_ns: 15.0,
+            other_ns: 6.0,
+        };
+        let (a, t, c) = b.fractions();
+        assert!((a + t + c - 1.0).abs() < 1e-12);
+        assert_eq!(b.total_ns(), 100.0);
+        assert_eq!(b.cpu_ns(), 41.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut r = SimReport {
+            network: "cnn10".into(),
+            config: "1x nvdla, dma, 1 thread".into(),
+            total_ns: 1e6,
+            ..Default::default()
+        };
+        r.breakdown.accel_ns = 2.5e5;
+        r.breakdown.transfer_ns = 3.4e5;
+        r.breakdown.prep_ns = 4.1e5;
+        let row = r.breakdown_row();
+        assert!(row.contains("cnn10"));
+        assert!(r.breakdown_table().contains("accel compute"));
+    }
+
+    #[test]
+    fn json_export_contains_components() {
+        let mut r = SimReport {
+            network: "x".into(),
+            total_ns: 100.0,
+            ..Default::default()
+        };
+        r.ops.push(OpRecord {
+            name: "conv0".into(),
+            tag: "C".into(),
+            ..Default::default()
+        });
+        let j = r.to_json();
+        assert!(j.contains("\"network\":\"x\""));
+        assert!(j.contains("\"conv0\""));
+        assert!(j.contains("\"energy_pj\""));
+    }
+
+    #[test]
+    fn csv_export_has_header_and_rows() {
+        let mut r = SimReport::default();
+        r.ops.push(OpRecord {
+            name: "fc".into(),
+            tag: "F".into(),
+            strategy: "DimC".into(),
+            tiles: 3,
+            ..Default::default()
+        });
+        let csv = r.per_op_csv();
+        assert!(csv.starts_with("name,tag,"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("fc,F,DimC"));
+    }
+
+    #[test]
+    fn op_record_span() {
+        let r = OpRecord {
+            start_ns: 10.0,
+            end_ns: 25.0,
+            ..Default::default()
+        };
+        assert_eq!(r.span_ns(), 15.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Physical data layouts and layout transformations.
+//!
+//! Layout transformations (e.g. NCHW -> NHWC) are part of SMAUG's "data
+//! preparation" cost (paper §IV-C): they are executed functionally here and
+//! their memcpy behaviour is accounted by the caller through
+//! [`crate::tiling::CopyStats`].
+
+use super::{Shape, Tensor};
+
+/// Physical layout of a tensor's backing buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Rank-4, channels innermost (SMAUG's native activation layout).
+    Nhwc,
+    /// Rank-4, width innermost (framework-import layout).
+    Nchw,
+    /// Rank-2 row-major (FC activations / weight matrices).
+    Nc,
+}
+
+impl Layout {
+    /// Human-readable name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::Nhwc => "NHWC",
+            Layout::Nchw => "NCHW",
+            Layout::Nc => "NC",
+        }
+    }
+}
+
+/// Transform `src` (rank-4) between NHWC and NCHW, returning the new data
+/// vector in destination order. Element count is preserved.
+///
+/// This is a genuine data movement: the functional path uses the result,
+/// and the CPU model charges one scalar-granularity pass over the tensor
+/// (layout transposes have no long contiguous runs in the general case).
+pub fn transform_layout(t: &Tensor, dst: Layout) -> Vec<f32> {
+    let src = t.desc.layout;
+    if src == dst {
+        return t.data.clone();
+    }
+    let s: &Shape = &t.desc.shape;
+    assert_eq!(s.rank(), 4, "layout transform requires rank-4");
+    let (n, h, w, c) = (s.n(), s.h(), s.w(), s.c());
+    let mut out = vec![0.0f32; t.data.len()];
+    match (src, dst) {
+        (Layout::Nhwc, Layout::Nchw) => {
+            for ni in 0..n {
+                for hi in 0..h {
+                    for wi in 0..w {
+                        for ci in 0..c {
+                            out[((ni * c + ci) * h + hi) * w + wi] =
+                                t.data[((ni * h + hi) * w + wi) * c + ci];
+                        }
+                    }
+                }
+            }
+        }
+        (Layout::Nchw, Layout::Nhwc) => {
+            for ni in 0..n {
+                for ci in 0..c {
+                    for hi in 0..h {
+                        for wi in 0..w {
+                            out[((ni * h + hi) * w + wi) * c + ci] =
+                                t.data[((ni * c + ci) * h + hi) * w + wi];
+                        }
+                    }
+                }
+            }
+        }
+        (a, b) => panic!("unsupported layout transform {a:?} -> {b:?}"),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorDesc;
+
+    fn seq_tensor(n: usize, h: usize, w: usize, c: usize) -> Tensor {
+        let d = TensorDesc::nhwc16(n, h, w, c);
+        let data = (0..d.shape.elems()).map(|i| i as f32).collect();
+        Tensor::from_data(d, data)
+    }
+
+    #[test]
+    fn nhwc_to_nchw_roundtrip() {
+        let t = seq_tensor(2, 3, 4, 5);
+        let nchw = transform_layout(&t, Layout::Nchw);
+        let mut t2 = t.clone();
+        t2.data = nchw;
+        t2.desc.layout = Layout::Nchw;
+        let back = transform_layout(&t2, Layout::Nhwc);
+        assert_eq!(back, t.data);
+    }
+
+    #[test]
+    fn nhwc_to_nchw_places_channels() {
+        let t = seq_tensor(1, 1, 2, 3); // NHWC data = [0,1,2, 3,4,5]
+        let nchw = transform_layout(&t, Layout::Nchw);
+        // NCHW: c0 plane [0,3], c1 plane [1,4], c2 plane [2,5]
+        assert_eq!(nchw, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn identity_transform_is_copy() {
+        let t = seq_tensor(1, 2, 2, 2);
+        assert_eq!(transform_layout(&t, Layout::Nhwc), t.data);
+    }
+}

@@ -1,0 +1,234 @@
+//! Tensors, shapes, and data layouts.
+//!
+//! The simulator distinguishes *descriptions* ([`TensorDesc`]: shape +
+//! layout + element size, used by the tiling optimizer and scheduler for
+//! timing/traffic accounting) from *materialized tensors* ([`Tensor`]:
+//! description + f32 data, used on the functional path). Hardware elements
+//! are 16-bit fixed point (paper Table III); functional data is stored as
+//! f32 and the 16-bit width only enters the byte accounting.
+
+mod layout;
+
+pub use layout::{transform_layout, Layout};
+
+use crate::util::Rng;
+use std::fmt;
+
+/// Tensor shape: up to 4 logical dimensions, NHWC convention for rank 4.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    /// Build a shape from a slice of dimensions.
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(!dims.is_empty() && dims.len() <= 4, "rank 1..=4 supported");
+        assert!(dims.iter().all(|&d| d > 0), "zero-sized dim in {dims:?}");
+        Self { dims: dims.to_vec() }
+    }
+
+    /// NHWC convenience constructor.
+    pub fn nhwc(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Self::new(&[n, h, w, c])
+    }
+
+    /// Rank-2 (N, C) convenience constructor (FC activations).
+    pub fn nc(n: usize, c: usize) -> Self {
+        Self::new(&[n, c])
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Dimension `i`.
+    pub fn dim(&self, i: usize) -> usize {
+        self.dims[i]
+    }
+
+    /// All dimensions.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// NHWC accessors (rank must be 4).
+    pub fn n(&self) -> usize {
+        assert_eq!(self.rank(), 4);
+        self.dims[0]
+    }
+    /// Height (rank-4 NHWC).
+    pub fn h(&self) -> usize {
+        assert_eq!(self.rank(), 4);
+        self.dims[1]
+    }
+    /// Width (rank-4 NHWC).
+    pub fn w(&self) -> usize {
+        assert_eq!(self.rank(), 4);
+        self.dims[2]
+    }
+    /// Channels (rank-4 NHWC).
+    pub fn c(&self) -> usize {
+        assert_eq!(self.rank(), 4);
+        self.dims[3]
+    }
+
+    /// Row-major strides (in elements) for this shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Description of a tensor: shape, layout, element width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDesc {
+    /// Logical shape (layout-independent, NHWC convention).
+    pub shape: Shape,
+    /// Physical data layout.
+    pub layout: Layout,
+    /// Bytes per element on the modeled hardware (2 = 16-bit fixed point).
+    pub elem_bytes: usize,
+}
+
+impl TensorDesc {
+    /// NHWC, 16-bit description.
+    pub fn nhwc16(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Self {
+            shape: Shape::nhwc(n, h, w, c),
+            layout: Layout::Nhwc,
+            elem_bytes: 2,
+        }
+    }
+
+    /// Rank-2 (N, C), 16-bit description.
+    pub fn nc16(n: usize, c: usize) -> Self {
+        Self {
+            shape: Shape::nc(n, c),
+            layout: Layout::Nc,
+            elem_bytes: 2,
+        }
+    }
+
+    /// Modeled size in bytes.
+    pub fn bytes(&self) -> u64 {
+        (self.shape.elems() * self.elem_bytes) as u64
+    }
+}
+
+/// A materialized tensor: description plus f32 data on the functional path.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    /// Tensor description (shape/layout/element width).
+    pub desc: TensorDesc,
+    /// Row-major f32 data in `desc.layout` order.
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(desc: TensorDesc) -> Self {
+        let n = desc.shape.elems();
+        Self {
+            desc,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Tensor with data from the given slice (length must match).
+    pub fn from_data(desc: TensorDesc, data: Vec<f32>) -> Self {
+        assert_eq!(desc.shape.elems(), data.len(), "data length mismatch");
+        Self { desc, data }
+    }
+
+    /// Random-uniform tensor in [-1, 1) (synthetic weights/inputs).
+    pub fn random(desc: TensorDesc, rng: &mut Rng) -> Self {
+        let n = desc.shape.elems();
+        Self {
+            data: rng.vec_f32(n, -1.0, 1.0),
+            desc,
+        }
+    }
+
+    /// Linear index for NHWC coordinates.
+    #[inline]
+    pub fn idx4(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        let s = &self.desc.shape;
+        ((n * s.h() + h) * s.w() + w) * s.c() + c
+    }
+
+    /// Element at NHWC coordinates.
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        self.data[self.idx4(n, h, w, c)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_basics() {
+        let s = Shape::nhwc(1, 16, 16, 128);
+        assert_eq!(s.elems(), 32768);
+        assert_eq!(s.c(), 128);
+        assert_eq!(s.strides(), vec![32768, 2048, 128, 1]);
+        assert_eq!(s.to_string(), "(1x16x16x128)");
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-sized")]
+    fn shape_rejects_zero_dim() {
+        Shape::new(&[1, 0, 4]);
+    }
+
+    #[test]
+    fn desc_bytes_are_16bit() {
+        let d = TensorDesc::nhwc16(1, 16, 16, 128);
+        assert_eq!(d.bytes(), 65536);
+    }
+
+    #[test]
+    fn tensor_indexing() {
+        let d = TensorDesc::nhwc16(1, 2, 3, 4);
+        let mut t = Tensor::zeros(d);
+        let i = t.idx4(0, 1, 2, 3);
+        t.data[i] = 7.0;
+        assert_eq!(t.at4(0, 1, 2, 3), 7.0);
+        assert_eq!(i, 23);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let d = TensorDesc::nhwc16(1, 4, 4, 4);
+        assert_eq!(
+            Tensor::random(d.clone(), &mut r1).data,
+            Tensor::random(d, &mut r2).data
+        );
+    }
+}

@@ -1,0 +1,585 @@
+//! Convolution tiling: the NVDLA-dataflow-specialized optimizer.
+//!
+//! Handles the edge cases the paper calls out: halo regions from SAME
+//! zero-padding, overlapping input rows between adjacent spatial tiles,
+//! stride > 1 interactions, and non-uniform edge tiles.
+
+use super::{
+    region_copy_stats, CopyStats, GemmDims, Region, TilingPlan, TilingStrategy,
+    WorkItem,
+};
+use crate::config::SocConfig;
+use crate::tensor::Shape;
+use crate::util::ceil_div;
+
+/// Convolution operator parameters (single-batch NHWC input).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvParams {
+    /// Input rows.
+    pub h: usize,
+    /// Input cols.
+    pub w: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Output channels.
+    pub k: usize,
+    /// Kernel rows (R).
+    pub r: usize,
+    /// Kernel cols (S).
+    pub s: usize,
+    /// Stride (same in both spatial dims).
+    pub stride: usize,
+    /// SAME zero padding (else VALID).
+    pub pad_same: bool,
+}
+
+impl ConvParams {
+    /// Output spatial dims.
+    pub fn out_dims(&self) -> (usize, usize) {
+        if self.pad_same {
+            (ceil_div(self.h, self.stride), ceil_div(self.w, self.stride))
+        } else {
+            (
+                (self.h - self.r) / self.stride + 1,
+                (self.w - self.s) / self.stride + 1,
+            )
+        }
+    }
+
+    /// Total zero padding in (rows, cols) for SAME.
+    fn total_pad(&self) -> (usize, usize) {
+        if !self.pad_same {
+            return (0, 0);
+        }
+        let (oh, ow) = self.out_dims();
+        (
+            ((oh - 1) * self.stride + self.r).saturating_sub(self.h),
+            ((ow - 1) * self.stride + self.s).saturating_sub(self.w),
+        )
+    }
+
+    /// Total multiply-accumulates for the layer.
+    pub fn total_macs(&self) -> u64 {
+        let (oh, ow) = self.out_dims();
+        (oh * ow * self.k * self.r * self.s * self.c) as u64
+    }
+}
+
+/// Tile extents chosen by the optimizer (output-space spatial extents).
+#[derive(Debug, Clone, Copy)]
+struct TileDims {
+    oh_t: usize,
+    ow_t: usize,
+    c_t: usize,
+    k_t: usize,
+}
+
+/// Shrink tile dims under `strategy` until all scratchpad constraints fit.
+/// Returns `None` if the strategy cannot satisfy the constraints.
+fn fit_tile(p: &ConvParams, strategy: TilingStrategy, soc: &SocConfig) -> Option<TileDims> {
+    let (oh, ow) = p.out_dims();
+    let spad = soc.spad_elems();
+    let macc = soc.nvdla_macc_width;
+    let mut d = TileDims {
+        oh_t: oh,
+        ow_t: ow,
+        c_t: p.c,
+        k_t: p.k,
+    };
+    // Input tile includes the halo; sizes in input space.
+    let in_elems = |d: &TileDims| {
+        let ih = (d.oh_t - 1) * p.stride + p.r;
+        let iw = (d.ow_t - 1) * p.stride + p.s;
+        ih * iw * d.c_t
+    };
+    let wgt_elems = |d: &TileDims| d.k_t * p.r * p.s * d.c_t;
+    let out_elems = |d: &TileDims| d.oh_t * d.ow_t * d.k_t;
+    // GEMM command-descriptor limits: one accelerator pass handles at most
+    // M=1024 output pixels, K=2048 reduction depth, N=256 output channels
+    // (the canonical tile grid the AOT artifacts are compiled for).
+    let gemm_ok = |d: &TileDims| {
+        d.oh_t * d.ow_t <= crate::runtime::CANONICAL_M[crate::runtime::CANONICAL_M.len() - 1]
+            && p.r * p.s * d.c_t
+                <= crate::runtime::CANONICAL_K[crate::runtime::CANONICAL_K.len() - 1]
+            && d.k_t <= crate::runtime::CANONICAL_N[crate::runtime::CANONICAL_N.len() - 1]
+    };
+
+    // The output-channel dimension of the *weights* is always tileable
+    // (it has no software-copy cost: weights are pre-tiled offline).
+    // First shrink K to the PE count granularity while weights/outputs
+    // overflow and shrinking K alone can help.
+    let pes = soc.nvdla_pes;
+    let n_cap = crate::runtime::CANONICAL_N[crate::runtime::CANONICAL_N.len() - 1];
+    d.k_t = d.k_t.min(n_cap);
+    while (wgt_elems(&d) > spad || out_elems(&d) > spad) && d.k_t > pes {
+        d.k_t = ((d.k_t / 2).max(pes) / pes) * pes;
+    }
+    // Then shrink the strategy's tiled dimensions in preference order
+    // H -> W -> C (H/W halve; C steps down in MACC-width multiples).
+    let mut guard = 0;
+    while in_elems(&d) > spad || wgt_elems(&d) > spad || out_elems(&d) > spad || !gemm_ok(&d) {
+        guard += 1;
+        if guard > 64 {
+            return None;
+        }
+        // K-depth cap can only be fixed by shrinking channels.
+        let k_cap = crate::runtime::CANONICAL_K[crate::runtime::CANONICAL_K.len() - 1];
+        let m_cap = crate::runtime::CANONICAL_M[crate::runtime::CANONICAL_M.len() - 1];
+        let need_c = p.r * p.s * d.c_t > k_cap;
+        let need_m = d.oh_t * d.ow_t > m_cap;
+        if need_c && d.c_t > 1 {
+            if !strategy.c {
+                return None;
+            }
+            if d.c_t > macc {
+                d.c_t = ((d.c_t - 1) / macc).max(1) * macc;
+            } else {
+                d.c_t = ceil_div(d.c_t, 2);
+            }
+            continue;
+        }
+        if need_m && (strategy.h || strategy.w) {
+            if strategy.h && d.oh_t >= d.ow_t && d.oh_t > 1 {
+                d.oh_t = ceil_div(d.oh_t, 2);
+                continue;
+            }
+            if strategy.w && d.ow_t > 1 {
+                d.ow_t = ceil_div(d.ow_t, 2);
+                continue;
+            }
+        }
+        if strategy.h && d.oh_t > 1 {
+            d.oh_t = ceil_div(d.oh_t, 2);
+            continue;
+        }
+        if strategy.w && d.ow_t > 1 {
+            d.ow_t = ceil_div(d.ow_t, 2);
+            continue;
+        }
+        if strategy.c && d.c_t > macc {
+            // Largest multiple of the MACC width below current.
+            d.c_t = ((d.c_t - 1) / macc).max(1) * macc;
+            continue;
+        }
+        if strategy.c && d.c_t > 1 && d.c_t <= macc {
+            d.c_t = ceil_div(d.c_t, 2);
+            continue;
+        }
+        return None; // Constraints unsatisfiable under this strategy.
+    }
+    Some(d)
+}
+
+/// Cheap cost summary of a fitted tile shape, without materializing the
+/// work items (strategy ranking is on the hot path: every conv in every
+/// simulated network plans here).
+struct PlanEstimate {
+    prep: CopyStats,
+    finalize: CopyStats,
+    macs: u64,
+    transfer_bytes: u64,
+    utilization: f64,
+}
+
+fn estimate_plan(p: &ConvParams, d: TileDims, soc: &SocConfig) -> PlanEstimate {
+    let (oh, ow) = p.out_dims();
+    let in_shape = Shape::nhwc(1, p.h, p.w, p.c);
+    let out_shape = Shape::nhwc(1, oh, ow, p.k);
+    let eb = soc.elem_bytes;
+    let n_oh = ceil_div(oh, d.oh_t);
+    let n_ow = ceil_div(ow, d.ow_t);
+    let n_c = ceil_div(p.c, d.c_t);
+    let n_k = ceil_div(p.k, d.k_t);
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut transfer = 0u64;
+    // Tile extents only vary at the edges: iterate the distinct extents
+    // per dimension (interior + edge) with multiplicities instead of
+    // every tile.
+    let dim_cases = |full: usize, tile: usize| -> Vec<(usize, usize)> {
+        let n = ceil_div(full, tile);
+        let edge = full - (n - 1) * tile;
+        if n == 1 {
+            vec![(full, 1)]
+        } else if edge == tile {
+            vec![(tile, n)]
+        } else {
+            vec![(tile, n - 1), (edge, 1)]
+        }
+    };
+    for (ohe, ohn) in dim_cases(oh, d.oh_t) {
+        for (owe, own) in dim_cases(ow, d.ow_t) {
+            let mult_sp = (ohn * own) as u64;
+            let ih = ((ohe - 1) * p.stride + p.r).min(p.h);
+            let iw = ((owe - 1) * p.stride + p.s).min(p.w);
+            for (ce, cn) in dim_cases(p.c, d.c_t) {
+                let r = Region::new(&[0, 0, 0, 0], &[1, ih, iw, ce]);
+                let st = region_copy_stats(&in_shape, &r, eb);
+                let mult = mult_sp * cn as u64;
+                prep.add(CopyStats {
+                    memcpys: st.memcpys * mult,
+                    bytes: st.bytes * mult,
+                });
+                // Input + weight transfer per (spatial, c, k) item.
+                transfer += mult
+                    * n_k as u64
+                    * ((ih * iw * ce + d.k_t.min(p.k) * p.r * p.s * ce) * eb) as u64;
+            }
+            for (ke, kn) in dim_cases(p.k, d.k_t) {
+                let r = Region::new(&[0, 0, 0, 0], &[1, ohe, owe, ke]);
+                let st = region_copy_stats(&out_shape, &r, eb);
+                let mult = mult_sp * kn as u64;
+                finalize.add(CopyStats {
+                    memcpys: st.memcpys * mult,
+                    bytes: st.bytes * mult,
+                });
+                transfer += mult * (ohe * owe * ke * eb) as u64;
+            }
+        }
+    }
+    let occupied_c = {
+        let c_last = p.c - (n_c - 1) * d.c_t;
+        ((n_c - 1) * ceil_div(d.c_t, soc.nvdla_macc_width)
+            + ceil_div(c_last, soc.nvdla_macc_width))
+            * soc.nvdla_macc_width
+    };
+    let occupied_k = {
+        let k_last = p.k - (n_k - 1) * d.k_t;
+        ((n_k - 1) * ceil_div(d.k_t, soc.nvdla_pes) + ceil_div(k_last, soc.nvdla_pes))
+            * soc.nvdla_pes
+    };
+    let _ = (n_oh, n_ow);
+    PlanEstimate {
+        prep,
+        finalize,
+        macs: p.total_macs(),
+        transfer_bytes: transfer,
+        utilization: (p.c as f64 / occupied_c as f64) * (p.k as f64 / occupied_k as f64),
+    }
+}
+
+/// Generate work items + software copy stats for a fitted tile shape.
+fn build_plan(p: &ConvParams, strategy: TilingStrategy, d: TileDims, soc: &SocConfig) -> TilingPlan {
+    let (oh, ow) = p.out_dims();
+    let (pad_h, pad_w) = p.total_pad();
+    let (pad_top, pad_left) = (pad_h / 2, pad_w / 2);
+    let in_shape = Shape::nhwc(1, p.h, p.w, p.c);
+    let out_shape = Shape::nhwc(1, oh, ow, p.k);
+    let eb = soc.elem_bytes;
+
+    let n_oh = ceil_div(oh, d.oh_t);
+    let n_ow = ceil_div(ow, d.ow_t);
+    let n_c = ceil_div(p.c, d.c_t);
+    let n_k = ceil_div(p.k, d.k_t);
+
+    let mut items = Vec::new();
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut prep_tasks: Vec<CopyStats> = Vec::new();
+    let mut finalize_tasks: Vec<CopyStats> = Vec::new();
+    let mut group: u32 = 0;
+
+    for kb in 0..n_k {
+        let k0 = kb * d.k_t;
+        let k1 = (k0 + d.k_t).min(p.k);
+        for ohb in 0..n_oh {
+            let oh0 = ohb * d.oh_t;
+            let oh1 = (oh0 + d.oh_t).min(oh);
+            for owb in 0..n_ow {
+                let ow0 = owb * d.ow_t;
+                let ow1 = (ow0 + d.ow_t).min(ow);
+                // Input rows the output range needs (with halo), in padded
+                // coordinates, then clamped to the real tensor.
+                let ih0p = oh0 * p.stride;
+                let ih1p = (oh1 - 1) * p.stride + p.r;
+                let iw0p = ow0 * p.stride;
+                let iw1p = (ow1 - 1) * p.stride + p.s;
+                let ih0 = ih0p.saturating_sub(pad_top);
+                let ih1 = (ih1p.saturating_sub(pad_top)).min(p.h);
+                let iw0 = iw0p.saturating_sub(pad_left);
+                let iw1 = (iw1p.saturating_sub(pad_left)).min(p.w);
+                let pad_lo_h = pad_top.saturating_sub(ih0p);
+                let pad_hi_h = (ih1p.saturating_sub(pad_top)).saturating_sub(p.h);
+                let pad_lo_w = pad_left.saturating_sub(iw0p);
+                let pad_hi_w = (iw1p.saturating_sub(pad_left)).saturating_sub(p.w);
+
+                let out_region = Region::new(
+                    &[0, oh0, ow0, k0],
+                    &[1, oh1 - oh0, ow1 - ow0, k1 - k0],
+                );
+                // Finalization gathers the output tile once per group.
+                let fstat = region_copy_stats(&out_shape, &out_region, eb);
+                finalize.add(fstat);
+                finalize_tasks.push(fstat);
+
+                for cb in 0..n_c {
+                    let c0 = cb * d.c_t;
+                    let c1 = (c0 + d.c_t).min(p.c);
+                    let in_region = Region::new(
+                        &[0, ih0, iw0, c0],
+                        &[1, ih1 - ih0, iw1 - iw0, c1 - c0],
+                    );
+                    // Preparation copies each input tile. Only count the
+                    // copy once per (spatial, channel) block — output
+                    // channel blocks reuse the same prepared tile.
+                    if kb == 0 {
+                        let pstat = region_copy_stats(&in_shape, &in_region, eb);
+                        prep.add(pstat);
+                        prep_tasks.push(pstat);
+                    }
+                    let m = (oh1 - oh0) * (ow1 - ow0);
+                    let kdim = p.r * p.s * (c1 - c0);
+                    let n = k1 - k0;
+                    let last = cb == n_c - 1;
+                    items.push(WorkItem {
+                        in_region,
+                        pad_lo: [0, pad_lo_h, pad_lo_w, 0],
+                        pad_hi: [0, pad_hi_h, pad_hi_w, 0],
+                        out_region: out_region.clone(),
+                        c_range: (c0, c1),
+                        k_range: (k0, k1),
+                        reduce_group: group,
+                        last_in_group: last,
+                        gemm: GemmDims { m, k: kdim, n },
+                        macs: (m * kdim * n) as u64,
+                        in_bytes: (in_region_padded_elems(
+                            ih1 - ih0 + pad_lo_h + pad_hi_h,
+                            iw1 - iw0 + pad_lo_w + pad_hi_w,
+                            c1 - c0,
+                        ) * eb) as u64,
+                        wgt_bytes: (n * kdim * eb) as u64,
+                        out_bytes: if last { (m * n * eb) as u64 } else { 0 },
+                    });
+                }
+                group += 1;
+            }
+        }
+    }
+
+    // Datapath lane utilization = useful lanes / occupied lanes: channel
+    // blocks round up to the 32-wide MACC, output-channel blocks round up
+    // to the 8 PEs; edge tiles waste lanes.
+    let occupied_c = {
+        let c_last = p.c - (n_c - 1) * d.c_t;
+        ((n_c - 1) * ceil_div(d.c_t, soc.nvdla_macc_width)
+            + ceil_div(c_last, soc.nvdla_macc_width))
+            * soc.nvdla_macc_width
+    };
+    let occupied_k = {
+        let k_last = p.k - (n_k - 1) * d.k_t;
+        ((n_k - 1) * ceil_div(d.k_t, soc.nvdla_pes) + ceil_div(k_last, soc.nvdla_pes))
+            * soc.nvdla_pes
+    };
+    let utilization =
+        (p.c as f64 / occupied_c as f64) * (p.k as f64 / occupied_k as f64);
+
+    TilingPlan {
+        strategy,
+        items,
+        prep,
+        finalize,
+        prep_tasks,
+        finalize_tasks,
+        weight_bytes: (p.k * p.r * p.s * p.c * eb) as u64,
+        num_reduce_groups: group,
+        utilization,
+    }
+}
+
+fn in_region_padded_elems(h: usize, w: usize, c: usize) -> usize {
+    h * w * c
+}
+
+/// Rough software+compute cost in ns used to rank strategies.
+fn estimate_cost(est: &PlanEstimate, soc: &SocConfig) -> f64 {
+    // Software copy model (single-threaded rank heuristic): per-memcpy
+    // overhead + streaming bytes. Mirrors the `cpu` model's constants so
+    // the ranking matches the simulated outcome.
+    let per_copy_ns = crate::cpu::PER_COPY_NS;
+    let bytes_per_ns = crate::cpu::CORE_COPY_BW;
+    let sw = (est.prep.memcpys + est.finalize.memcpys) as f64 * per_copy_ns
+        + (est.prep.bytes + est.finalize.bytes) as f64 / bytes_per_ns;
+    // Compute: MACs / (PEs * MACC width) cycles at utilization.
+    let lanes = (soc.nvdla_pes * soc.nvdla_macc_width) as f64;
+    let compute =
+        est.macs as f64 / lanes / est.utilization.max(0.05) * soc.accel_cycle_ns();
+    // Transfers at effective DRAM bandwidth.
+    let xfer = est.transfer_bytes as f64 / soc.dram_eff_bytes_per_ns();
+    sw + compute + xfer
+}
+
+/// Plan a convolution: enumerate candidate strategies, fit tile shapes,
+/// rank by a closed-form cost estimate, and materialize only the winning
+/// plan (perf: building full item lists per candidate dominated planning
+/// time — see EXPERIMENTS.md §Perf).
+pub fn plan_conv(p: &ConvParams, soc: &SocConfig) -> TilingPlan {
+    let mut best: Option<(f64, TilingStrategy, TileDims)> = None;
+    for strat in TilingStrategy::conv_candidates() {
+        let Some(dims) = fit_tile(p, strat, soc) else {
+            continue;
+        };
+        let cost = estimate_cost(&estimate_plan(p, dims, soc), soc);
+        if best.as_ref().map(|(c, _, _)| cost < *c).unwrap_or(true) {
+            best = Some((cost, strat, dims));
+        }
+    }
+    let (_, strat, dims) =
+        best.expect("no feasible tiling strategy — tensor too large even fully tiled");
+    build_plan(p, strat, dims, soc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn soc() -> SocConfig {
+        SocConfig::default()
+    }
+
+    fn small_conv() -> ConvParams {
+        ConvParams {
+            h: 32,
+            w: 32,
+            c: 32,
+            k: 32,
+            r: 3,
+            s: 3,
+            stride: 1,
+            pad_same: true,
+        }
+    }
+
+    #[test]
+    fn small_conv_single_or_few_tiles() {
+        // 32*32*32 = 32768 elems > 16384 -> needs tiling.
+        let plan = plan_conv(&small_conv(), &soc());
+        assert!(!plan.items.is_empty());
+        // Output coverage: union of out_regions must cover the output.
+        let total_out: usize = plan
+            .items
+            .iter()
+            .filter(|i| i.last_in_group)
+            .map(|i| i.out_region.elems())
+            .sum();
+        assert_eq!(total_out, 32 * 32 * 32);
+    }
+
+    #[test]
+    fn macs_are_preserved_by_tiling() {
+        let p = small_conv();
+        let plan = plan_conv(&p, &soc());
+        assert_eq!(plan.total_macs(), p.total_macs());
+    }
+
+    #[test]
+    fn vgg_style_layer_tiles_fit_scratchpads() {
+        let p = ConvParams {
+            h: 32,
+            w: 32,
+            c: 512,
+            k: 512,
+            r: 3,
+            s: 3,
+            stride: 1,
+            pad_same: true,
+        };
+        let soc = soc();
+        let plan = plan_conv(&p, &soc);
+        for item in &plan.items {
+            let in_el = item.in_region.elems();
+            assert!(in_el <= soc.spad_elems(), "input tile {in_el}");
+            let wgt_el = item.gemm.k * item.gemm.n;
+            assert!(wgt_el <= soc.spad_elems(), "weight tile {wgt_el}");
+            let out_el = item.gemm.m * item.gemm.n;
+            assert!(out_el <= soc.spad_elems(), "output tile {out_el}");
+        }
+        assert_eq!(plan.total_macs(), p.total_macs());
+    }
+
+    #[test]
+    fn strided_conv_output_dims() {
+        let p = ConvParams {
+            h: 224,
+            w: 224,
+            c: 3,
+            k: 64,
+            r: 7,
+            s: 7,
+            stride: 2,
+            pad_same: true,
+        };
+        assert_eq!(p.out_dims(), (112, 112));
+        let plan = plan_conv(&p, &soc());
+        assert_eq!(plan.total_macs(), p.total_macs());
+        let total_out: usize = plan
+            .items
+            .iter()
+            .filter(|i| i.last_in_group)
+            .map(|i| i.out_region.elems())
+            .sum();
+        assert_eq!(total_out, 112 * 112 * 64);
+    }
+
+    #[test]
+    fn valid_padding_conv() {
+        let p = ConvParams {
+            h: 8,
+            w: 8,
+            c: 8,
+            k: 8,
+            r: 3,
+            s: 3,
+            stride: 1,
+            pad_same: false,
+        };
+        assert_eq!(p.out_dims(), (6, 6));
+        let plan = plan_conv(&p, &soc());
+        for i in &plan.items {
+            assert_eq!(i.pad_lo, [0, 0, 0, 0]);
+            assert_eq!(i.pad_hi, [0, 0, 0, 0]);
+        }
+    }
+
+    #[test]
+    fn reduction_groups_share_output_region() {
+        // Force channel tiling with a deep input.
+        let p = ConvParams {
+            h: 16,
+            w: 16,
+            c: 1024,
+            k: 64,
+            r: 3,
+            s: 3,
+            stride: 1,
+            pad_same: true,
+        };
+        let plan = plan_conv(&p, &soc());
+        let mut last_seen = std::collections::HashMap::new();
+        for item in &plan.items {
+            let e = last_seen
+                .entry(item.reduce_group)
+                .or_insert_with(|| item.out_region.clone());
+            assert_eq!(*e, item.out_region, "group output mismatch");
+        }
+        // Exactly one last_in_group item per group.
+        let lasts = plan.items.iter().filter(|i| i.last_in_group).count();
+        assert_eq!(lasts as u32, plan.num_reduce_groups);
+    }
+
+    #[test]
+    fn halo_padding_on_border_tiles() {
+        let p = small_conv();
+        let plan = plan_conv(&p, &soc());
+        // SAME 3x3 conv: some tile must have top padding of 1.
+        assert!(plan
+            .items
+            .iter()
+            .any(|i| i.pad_lo[1] == 1 || i.pad_hi[1] == 1));
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let plan = plan_conv(&small_conv(), &soc());
+        assert!(plan.utilization > 0.0 && plan.utilization <= 1.0);
+    }
+}

@@ -1,0 +1,297 @@
+//! Memcpy accounting for tiling/untiling (paper Fig 5/6).
+//!
+//! Tiling copies non-contiguous logical regions of a tensor into contiguous
+//! smaller tensors; the cost is dominated by *how many* contiguous runs the
+//! copy decomposes into. An NHWC tensor tiled channel-wise produces many
+//! short runs (channels are innermost); tiled row-wise it produces few long
+//! runs — the paper measures 1.78x / 6.5x differences from exactly this.
+
+use crate::tensor::{Shape, Tensor};
+
+/// A rectangular region of a tensor (offsets + extents per dimension).
+///
+/// Stored as fixed 4-wide arrays plus a rank (regions are created per
+/// accelerator work item on the planning hot path; heap-free construction
+/// measurably speeds up whole-network simulation — EXPERIMENTS.md §Perf).
+/// Unused trailing dimensions hold offset 0 / extent 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    /// Start offset per dimension (first `rank` entries meaningful).
+    pub off: [usize; 4],
+    /// Extent per dimension (first `rank` entries meaningful).
+    pub shape: [usize; 4],
+    rank: u8,
+}
+
+impl Region {
+    /// Region covering an entire shape.
+    pub fn full(shape: &Shape) -> Self {
+        Self::new(&[0; 4][..shape.rank()], shape.dims())
+    }
+
+    /// Region with explicit offsets and extents.
+    pub fn new(off: &[usize], shape: &[usize]) -> Self {
+        assert_eq!(off.len(), shape.len());
+        assert!(!shape.is_empty() && shape.len() <= 4);
+        let mut o = [0usize; 4];
+        let mut s = [1usize; 4];
+        o[..off.len()].copy_from_slice(off);
+        s[..shape.len()].copy_from_slice(shape);
+        Self {
+            off: o,
+            shape: s,
+            rank: off.len() as u8,
+        }
+    }
+
+    /// Number of meaningful dimensions.
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    /// Total elements in the region.
+    pub fn elems(&self) -> usize {
+        self.shape[..self.rank()].iter().product()
+    }
+
+    /// True if the region stays within `bounds`.
+    pub fn fits_in(&self, bounds: &Shape) -> bool {
+        self.rank() == bounds.rank()
+            && self.off[..self.rank()]
+                .iter()
+                .zip(&self.shape[..self.rank()])
+                .zip(bounds.dims())
+                .all(|((&o, &s), &b)| o + s <= b)
+    }
+}
+
+/// Aggregate memcpy statistics for a data-movement phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CopyStats {
+    /// Number of contiguous memcpy calls.
+    pub memcpys: u64,
+    /// Total bytes moved.
+    pub bytes: u64,
+}
+
+impl CopyStats {
+    /// Accumulate another stats value.
+    pub fn add(&mut self, other: CopyStats) {
+        self.memcpys += other.memcpys;
+        self.bytes += other.bytes;
+    }
+
+    /// Average contiguous chunk size in bytes (0 if no copies).
+    pub fn avg_chunk_bytes(&self) -> f64 {
+        if self.memcpys == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.memcpys as f64
+        }
+    }
+}
+
+/// Memcpy statistics for copying `region` out of (or into) a row-major
+/// tensor of shape `src`: the number of contiguous runs and bytes moved.
+///
+/// The contiguous run length is the product of the innermost dimensions the
+/// region covers *fully*, times the region extent of the first partially
+/// covered dimension; every outer region dimension multiplies the run
+/// count.
+pub fn region_copy_stats(src: &Shape, region: &Region, elem_bytes: usize) -> CopyStats {
+    assert!(region.fits_in(src), "region {region:?} outside {src}");
+    let rank = src.rank();
+    // Find the first dimension (from innermost) that is not fully covered.
+    let mut chunk = 1usize; // elements per contiguous run
+    let mut split = rank; // dims [0, split) contribute to run count
+    for d in (0..rank).rev() {
+        if region.shape[d] == src.dim(d) {
+            chunk *= src.dim(d);
+        } else {
+            chunk *= region.shape[d];
+            split = d;
+            break;
+        }
+    }
+    if split == rank {
+        // Entire tensor: single memcpy.
+        return CopyStats {
+            memcpys: 1,
+            bytes: (region.elems() * elem_bytes) as u64,
+        };
+    }
+    let runs: usize = region.shape[..split].iter().product();
+    CopyStats {
+        memcpys: runs as u64,
+        bytes: (runs * chunk * elem_bytes) as u64,
+    }
+}
+
+/// Functionally extract `region` from `src` into a dense buffer, with
+/// `pad_lo`/`pad_hi` zero-padding per dimension (for conv halos that fall
+/// outside the tensor). Returns the padded, dense tile data.
+pub fn extract_region_padded(
+    src: &Tensor,
+    region: &Region,
+    pad_lo: &[usize],
+    pad_hi: &[usize],
+) -> Vec<f32> {
+    let rank = src.desc.shape.rank();
+    assert_eq!(region.rank(), rank);
+    let out_dims: Vec<usize> = (0..rank)
+        .map(|d| pad_lo[d] + region.shape[d] + pad_hi[d])
+        .collect();
+    let out_elems: usize = out_dims.iter().product();
+    let mut out = vec![0.0f32; out_elems];
+    let src_strides = src.desc.shape.strides();
+    let mut out_strides = vec![1usize; rank];
+    for i in (0..rank.saturating_sub(1)).rev() {
+        out_strides[i] = out_strides[i + 1] * out_dims[i + 1];
+    }
+    // Iterate all but the innermost dimension; copy innermost runs.
+    let inner = rank - 1;
+    let run = region.shape[inner];
+    let outer_count: usize = region.shape[..inner].iter().product();
+    let mut idx = vec![0usize; inner];
+    for _ in 0..outer_count {
+        let mut s_off = 0usize;
+        let mut d_off = pad_lo[inner];
+        for d in 0..inner {
+            s_off += (region.off[d] + idx[d]) * src_strides[d];
+            d_off += (pad_lo[d] + idx[d]) * out_strides[d];
+        }
+        s_off += region.off[inner];
+        out[d_off..d_off + run]
+            .copy_from_slice(&src.data[s_off..s_off + run]);
+        // Increment multi-index.
+        for d in (0..inner).rev() {
+            idx[d] += 1;
+            if idx[d] < region.shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    out
+}
+
+/// Functionally scatter dense `tile` data into `region` of `dst`
+/// (the "untiling"/data-finalization operation).
+pub fn insert_region(dst: &mut Tensor, region: &Region, tile: &[f32]) {
+    let rank = dst.desc.shape.rank();
+    assert_eq!(region.elems(), tile.len(), "tile size mismatch");
+    let dst_strides = dst.desc.shape.strides();
+    let inner = rank - 1;
+    let run = region.shape[inner];
+    let outer_count: usize = region.shape[..inner].iter().product();
+    let mut idx = vec![0usize; inner];
+    let mut t_off = 0usize;
+    for _ in 0..outer_count {
+        let mut d_off = 0usize;
+        for d in 0..inner {
+            d_off += (region.off[d] + idx[d]) * dst_strides[d];
+        }
+        d_off += region.off[inner];
+        dst.data[d_off..d_off + run].copy_from_slice(&tile[t_off..t_off + run]);
+        t_off += run;
+        for d in (0..inner).rev() {
+            idx[d] += 1;
+            if idx[d] < region.shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorDesc;
+
+    #[test]
+    fn paper_fig6_medium_tensor_counts() {
+        // 1x16x16x128 NHWC, max tile 16384 elems (paper Fig 6).
+        let s = Shape::nhwc(1, 16, 16, 128);
+        // Channel-wise tile 1x16x16x64: 16*16=256 runs of 64 elems per tile;
+        // two tiles cover the tensor -> 512 memcpys of 64 elements.
+        let ch = Region::new(&[0, 0, 0, 0], &[1, 16, 16, 64]);
+        let st = region_copy_stats(&s, &ch, 2);
+        assert_eq!(st.memcpys, 256);
+        assert_eq!(st.bytes, 256 * 64 * 2);
+        // Row-wise tile 1x8x16x128: one contiguous 8*16*128=16K-elem run.
+        let row = Region::new(&[0, 0, 0, 0], &[1, 8, 16, 128]);
+        let st = region_copy_stats(&s, &row, 2);
+        assert_eq!(st.memcpys, 1);
+        assert_eq!(st.bytes, 16384 * 2);
+    }
+
+    #[test]
+    fn paper_fig6_large_tensor_counts() {
+        // 1x64x64x512: DimHW tile 1x1x32x512 -> 1 run of 16K elems;
+        // DimCH tile 1x32x64x8 -> 32*64=2048 runs of 8 elems.
+        let s = Shape::nhwc(1, 64, 64, 512);
+        let hw = Region::new(&[0, 0, 0, 0], &[1, 1, 32, 512]);
+        assert_eq!(region_copy_stats(&s, &hw, 2).memcpys, 1);
+        let ch = Region::new(&[0, 0, 0, 0], &[1, 32, 64, 8]);
+        assert_eq!(region_copy_stats(&s, &ch, 2).memcpys, 2048);
+    }
+
+    #[test]
+    fn full_region_is_one_memcpy() {
+        let s = Shape::nhwc(2, 4, 4, 8);
+        let st = region_copy_stats(&s, &Region::full(&s), 2);
+        assert_eq!(st.memcpys, 1);
+        assert_eq!(st.bytes, 2 * 4 * 4 * 8 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn out_of_bounds_region_panics() {
+        let s = Shape::nhwc(1, 4, 4, 4);
+        region_copy_stats(&s, &Region::new(&[0, 2, 0, 0], &[1, 4, 4, 4]), 2);
+    }
+
+    #[test]
+    fn extract_insert_roundtrip() {
+        let d = TensorDesc::nhwc16(1, 4, 4, 3);
+        let data: Vec<f32> = (0..48).map(|i| i as f32).collect();
+        let t = Tensor::from_data(d.clone(), data);
+        let r = Region::new(&[0, 1, 1, 0], &[1, 2, 2, 3]);
+        let tile = extract_region_padded(&t, &r, &[0; 4], &[0; 4]);
+        assert_eq!(tile.len(), 12);
+        // First run = elements at (0,1,1,0..3) = indices 15,16,17.
+        assert_eq!(&tile[0..3], &[15.0, 16.0, 17.0]);
+        let mut dst = Tensor::zeros(d);
+        insert_region(&mut dst, &r, &tile);
+        assert_eq!(dst.at4(0, 1, 1, 0), 15.0);
+        assert_eq!(dst.at4(0, 2, 2, 2), 32.0);
+        assert_eq!(dst.at4(0, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn extract_with_padding_zero_fills_halo() {
+        let d = TensorDesc::nhwc16(1, 2, 2, 1);
+        let t = Tensor::from_data(d, vec![1.0, 2.0, 3.0, 4.0]);
+        let r = Region::full(&t.desc.shape);
+        let tile = extract_region_padded(&t, &r, &[0, 1, 1, 0], &[0, 1, 1, 0]);
+        // Padded to 1x4x4x1 with the 2x2 payload centered.
+        assert_eq!(tile.len(), 16);
+        assert_eq!(tile[5], 1.0);
+        assert_eq!(tile[6], 2.0);
+        assert_eq!(tile[9], 3.0);
+        assert_eq!(tile[10], 4.0);
+        assert_eq!(tile[0], 0.0);
+        assert_eq!(tile[15], 0.0);
+    }
+
+    #[test]
+    fn copy_stats_accumulate() {
+        let mut a = CopyStats::default();
+        a.add(CopyStats { memcpys: 3, bytes: 30 });
+        a.add(CopyStats { memcpys: 2, bytes: 20 });
+        assert_eq!(a.memcpys, 5);
+        assert_eq!(a.bytes, 50);
+        assert_eq!(a.avg_chunk_bytes(), 10.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! The tiling optimizer (paper §II-B).
+//!
+//! Accelerator scratchpads are small (32 KB each), so layer operands must
+//! be split into tiles. The optimizer is *specialized per dataflow*: for
+//! the NVDLA-style engine it prefers channel-complete tiles (the dataflow
+//! reduces partial products across 32-wide channel blocks), while the
+//! choice of which dimensions to tile also determines the *memcpy pattern*
+//! of the software tiling step — channels are innermost in NHWC, so
+//! channel-wise tiling shreds the copy into short runs (Fig 5/6).
+//!
+//! The optimizer enumerates a restricted strategy set, computes tile
+//! shapes (handling halos, strides, zero padding, and non-uniform edge
+//! tiles), estimates software + compute cost for each, and picks the best.
+
+mod conv;
+mod memcpy;
+mod simple;
+
+pub use conv::{plan_conv, ConvParams};
+pub use memcpy::{
+    extract_region_padded, insert_region, region_copy_stats, CopyStats, Region,
+};
+pub use simple::{plan_eltwise, plan_fc, plan_pool, FcParams, PoolParams};
+
+use std::fmt;
+
+/// Which tensor dimensions a strategy tiles (NHWC tensors; `k` refers to
+/// the weights' output-channel dimension, always independently tileable).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TilingStrategy {
+    /// Tile the batch dimension.
+    pub n: bool,
+    /// Tile the channel dimension (innermost in NHWC: expensive copies).
+    pub c: bool,
+    /// Tile rows.
+    pub h: bool,
+    /// Tile columns.
+    pub w: bool,
+}
+
+impl TilingStrategy {
+    /// The strategy that tiles nothing (whole tensor fits).
+    pub const NONE: TilingStrategy = TilingStrategy {
+        n: false,
+        c: false,
+        h: false,
+        w: false,
+    };
+
+    /// Construct from dimension flags (n, c, h, w).
+    pub const fn new(n: bool, c: bool, h: bool, w: bool) -> Self {
+        Self { n, c, h, w }
+    }
+
+    /// Paper-style name: `DimNC`, `DimHW`, ... (`None` when nothing tiled).
+    pub fn name(&self) -> String {
+        if *self == Self::NONE {
+            return "None".to_string();
+        }
+        let mut s = String::from("Dim");
+        if self.n {
+            s.push('N');
+        }
+        if self.c {
+            s.push('C');
+        }
+        if self.h {
+            s.push('H');
+        }
+        if self.w {
+            s.push('W');
+        }
+        s
+    }
+
+    /// Candidate strategies the optimizer explores for spatial (conv/pool)
+    /// operators, cheapest-copy-pattern first.
+    pub fn conv_candidates() -> Vec<TilingStrategy> {
+        vec![
+            Self::NONE,
+            Self::new(false, false, true, false),  // DimH
+            Self::new(false, false, true, true),   // DimHW
+            Self::new(false, true, false, false),  // DimC
+            Self::new(false, true, true, false),   // DimCH
+            Self::new(false, true, true, true),    // DimCHW
+        ]
+    }
+}
+
+impl fmt::Display for TilingStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// GEMM dimensions of one accelerator work item (after im2col).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmDims {
+    /// Rows = output pixels of the tile.
+    pub m: usize,
+    /// Contraction = r*s*c_tile.
+    pub k: usize,
+    /// Columns = output channels of the tile.
+    pub n: usize,
+}
+
+/// One unit of accelerator work: a (spatial tile, channel block, output
+/// channel block) triple, lowered to a GEMM.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    /// Input region (clamped to the tensor) including the conv halo.
+    pub in_region: Region,
+    /// Zero-padding below each input dim (halo outside the tensor).
+    pub pad_lo: [usize; 4],
+    /// Zero-padding above each input dim.
+    pub pad_hi: [usize; 4],
+    /// Output region this item (and its reduction group) produces.
+    pub out_region: Region,
+    /// Input-channel range `[start, end)` this item reduces over.
+    pub c_range: (usize, usize),
+    /// Output-channel range `[start, end)`.
+    pub k_range: (usize, usize),
+    /// Items with equal `reduce_group` accumulate into the same output
+    /// block and must execute on the same accelerator, in order.
+    pub reduce_group: u32,
+    /// True on the last channel block of the group: the output tile is
+    /// transferred back only then (outputs accumulate in the scratchpad).
+    pub last_in_group: bool,
+    /// GEMM dimensions (unpadded).
+    pub gemm: GemmDims,
+    /// Multiply-accumulates performed (unpadded).
+    pub macs: u64,
+    /// Input-tile bytes transferred to the accelerator.
+    pub in_bytes: u64,
+    /// Weight-tile bytes transferred.
+    pub wgt_bytes: u64,
+    /// Output-tile bytes transferred back (0 unless `last_in_group`).
+    pub out_bytes: u64,
+}
+
+/// A complete tiling plan for one operator.
+#[derive(Debug, Clone)]
+pub struct TilingPlan {
+    /// Chosen strategy.
+    pub strategy: TilingStrategy,
+    /// Accelerator work items in dependency order.
+    pub items: Vec<WorkItem>,
+    /// Software memcpy stats to build input tiles (data preparation).
+    pub prep: CopyStats,
+    /// Software memcpy stats to gather output tiles (data finalization).
+    pub finalize: CopyStats,
+    /// Per-tile preparation tasks (units of thread-pool work).
+    pub prep_tasks: Vec<CopyStats>,
+    /// Per-tile finalization tasks (units of thread-pool work).
+    pub finalize_tasks: Vec<CopyStats>,
+    /// Weight bytes staged (pre-tiled offline; still DRAM traffic).
+    pub weight_bytes: u64,
+    /// Number of independent reduction groups (= max tile parallelism).
+    pub num_reduce_groups: u32,
+    /// MACC-array utilization estimate in (0, 1]: fraction of datapath
+    /// lanes doing useful work given the tile shapes.
+    pub utilization: f64,
+}
+
+impl TilingPlan {
+    /// Total accelerator MACs across all items.
+    pub fn total_macs(&self) -> u64 {
+        self.items.iter().map(|i| i.macs).sum()
+    }
+
+    /// Total bytes moved over the accelerator interface.
+    pub fn transfer_bytes(&self) -> u64 {
+        self.items
+            .iter()
+            .map(|i| i.in_bytes + i.wgt_bytes + i.out_bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_names() {
+        assert_eq!(TilingStrategy::NONE.name(), "None");
+        assert_eq!(TilingStrategy::new(false, true, true, false).name(), "DimCH");
+        assert_eq!(TilingStrategy::new(false, false, true, true).name(), "DimHW");
+        assert_eq!(TilingStrategy::new(true, true, false, false).name(), "DimNC");
+    }
+
+    #[test]
+    fn candidates_start_with_none() {
+        let c = TilingStrategy::conv_candidates();
+        assert_eq!(c[0], TilingStrategy::NONE);
+        assert!(c.len() >= 5);
+    }
+}

@@ -1,0 +1,350 @@
+//! Tiling plans for the non-convolution operators: inner products (FC),
+//! pooling, and element-wise/batch-norm ops.
+
+use super::{
+    region_copy_stats, CopyStats, GemmDims, Region, TilingPlan, TilingStrategy,
+    WorkItem,
+};
+use crate::config::SocConfig;
+use crate::tensor::Shape;
+use crate::util::ceil_div;
+
+/// Inner-product (fully-connected) parameters, single batch.
+#[derive(Debug, Clone, Copy)]
+pub struct FcParams {
+    /// Input features.
+    pub c_in: usize,
+    /// Output features.
+    pub c_out: usize,
+}
+
+impl FcParams {
+    /// Total MACs.
+    pub fn total_macs(&self) -> u64 {
+        (self.c_in * self.c_out) as u64
+    }
+}
+
+/// Plan an inner product: GEMM with m=1; tile the contraction (input
+/// features) and the output features to fit the scratchpads.
+pub fn plan_fc(p: &FcParams, soc: &SocConfig) -> TilingPlan {
+    let spad = soc.spad_elems();
+    let eb = soc.elem_bytes;
+    // Input tile: k_t elements; weight tile: k_t * n_t; output tile: n_t.
+    // The contraction depth is additionally capped by the GEMM descriptor
+    // limit (canonical artifact grid).
+    let k_cap = crate::runtime::CANONICAL_K[crate::runtime::CANONICAL_K.len() - 1];
+    let n_cap = crate::runtime::CANONICAL_N[crate::runtime::CANONICAL_N.len() - 1];
+    let k_t = p.c_in.min(spad).min(k_cap);
+    // Choose n_t as the largest PE multiple with k_t * n_t <= spad.
+    let max_n = (spad / k_t).max(1).min(n_cap);
+    let n_t = if max_n >= soc.nvdla_pes {
+        (max_n / soc.nvdla_pes) * soc.nvdla_pes
+    } else {
+        max_n
+    }
+    .min(p.c_out);
+    let n_k = ceil_div(p.c_in, k_t);
+    let n_n = ceil_div(p.c_out, n_t);
+
+    let in_shape = Shape::nc(1, p.c_in);
+    let out_shape = Shape::nc(1, p.c_out);
+    let mut items = Vec::new();
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut prep_tasks: Vec<CopyStats> = Vec::new();
+    let mut finalize_tasks: Vec<CopyStats> = Vec::new();
+    let mut group = 0u32;
+    for nb in 0..n_n {
+        let n0 = nb * n_t;
+        let n1 = (n0 + n_t).min(p.c_out);
+        let out_region = Region::new(&[0, n0], &[1, n1 - n0]);
+        let fstat = region_copy_stats(&out_shape, &out_region, eb);
+        finalize.add(fstat);
+        finalize_tasks.push(fstat);
+        for kb in 0..n_k {
+            let k0 = kb * k_t;
+            let k1 = (k0 + k_t).min(p.c_in);
+            let in_region = Region::new(&[0, k0], &[1, k1 - k0]);
+            if nb == 0 {
+                let pstat = region_copy_stats(&in_shape, &in_region, eb);
+                prep.add(pstat);
+                prep_tasks.push(pstat);
+            }
+            let last = kb == n_k - 1;
+            let (m, k, n) = (1, k1 - k0, n1 - n0);
+            items.push(WorkItem {
+                in_region,
+                pad_lo: [0; 4],
+                pad_hi: [0; 4],
+                out_region: out_region.clone(),
+                c_range: (k0, k1),
+                k_range: (n0, n1),
+                reduce_group: group,
+                last_in_group: last,
+                gemm: GemmDims { m, k, n },
+                macs: (k * n) as u64,
+                in_bytes: (k * eb) as u64,
+                wgt_bytes: (k * n * eb) as u64,
+                out_bytes: if last { (n * eb) as u64 } else { 0 },
+            });
+        }
+        group += 1;
+    }
+    // Lane utilization: FC engages one output pixel; channel blocks round
+    // to MACC width, output features to PEs.
+    let occ_k = ceil_div(p.c_in, soc.nvdla_macc_width) * soc.nvdla_macc_width;
+    let occ_n = ceil_div(p.c_out, soc.nvdla_pes) * soc.nvdla_pes;
+    TilingPlan {
+        strategy: TilingStrategy::new(false, true, false, false),
+        items,
+        prep,
+        finalize,
+        prep_tasks,
+        finalize_tasks,
+        weight_bytes: (p.c_in * p.c_out * eb) as u64,
+        num_reduce_groups: group,
+        utilization: (p.c_in as f64 / occ_k as f64) * (p.c_out as f64 / occ_n as f64),
+    }
+}
+
+/// Pooling parameters (square window).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolParams {
+    /// Input rows.
+    pub h: usize,
+    /// Input cols.
+    pub w: usize,
+    /// Channels.
+    pub c: usize,
+    /// Window size.
+    pub size: usize,
+    /// Stride.
+    pub stride: usize,
+}
+
+impl PoolParams {
+    /// Output spatial dims (VALID semantics).
+    pub fn out_dims(&self) -> (usize, usize) {
+        (
+            (self.h - self.size) / self.stride + 1,
+            (self.w - self.size) / self.stride + 1,
+        )
+    }
+}
+
+/// Plan a pooling operator: row-wise spatial tiling, channels kept whole
+/// (element-wise in channels; tiling strategy barely matters — paper §II-B).
+pub fn plan_pool(p: &PoolParams, soc: &SocConfig) -> TilingPlan {
+    let spad = soc.spad_elems();
+    let eb = soc.elem_bytes;
+    let (oh, ow) = p.out_dims();
+    // Shrink output rows, then cols, then channels until the input tile
+    // (with window halo) fits the scratchpad.
+    let (mut oh_t, mut ow_t, mut c_t) = (oh, ow, p.c);
+    let in_elems = |oh_t: usize, ow_t: usize, c_t: usize| {
+        ((oh_t - 1) * p.stride + p.size) * ((ow_t - 1) * p.stride + p.size) * c_t
+    };
+    while in_elems(oh_t, ow_t, c_t) > spad {
+        if oh_t > 1 {
+            oh_t = ceil_div(oh_t, 2);
+        } else if ow_t > 1 {
+            ow_t = ceil_div(ow_t, 2);
+        } else if c_t > 1 {
+            c_t = ceil_div(c_t, 2);
+        } else {
+            break; // degenerate: single window; accept
+        }
+    }
+    let in_shape = Shape::nhwc(1, p.h, p.w, p.c);
+    let out_shape = Shape::nhwc(1, oh, ow, p.c);
+    let (n_h, n_w, n_c) = (ceil_div(oh, oh_t), ceil_div(ow, ow_t), ceil_div(p.c, c_t));
+    let mut items = Vec::new();
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut prep_tasks: Vec<CopyStats> = Vec::new();
+    let mut finalize_tasks: Vec<CopyStats> = Vec::new();
+    let mut group = 0u32;
+    for hb in 0..n_h {
+        let o0 = hb * oh_t;
+        let o1 = (o0 + oh_t).min(oh);
+        let i0 = o0 * p.stride;
+        let i1 = ((o1 - 1) * p.stride + p.size).min(p.h);
+        for wb in 0..n_w {
+            let q0 = wb * ow_t;
+            let q1 = (q0 + ow_t).min(ow);
+            let j0 = q0 * p.stride;
+            let j1 = ((q1 - 1) * p.stride + p.size).min(p.w);
+            for cb in 0..n_c {
+                let c0 = cb * c_t;
+                let c1 = (c0 + c_t).min(p.c);
+                let in_region =
+                    Region::new(&[0, i0, j0, c0], &[1, i1 - i0, j1 - j0, c1 - c0]);
+                let out_region =
+                    Region::new(&[0, o0, q0, c0], &[1, o1 - o0, q1 - q0, c1 - c0]);
+                let pstat = region_copy_stats(&in_shape, &in_region, eb);
+                let fstat = region_copy_stats(&out_shape, &out_region, eb);
+                prep.add(pstat);
+                prep_tasks.push(pstat);
+                finalize.add(fstat);
+                finalize_tasks.push(fstat);
+                let out_elems = out_region.elems();
+                items.push(WorkItem {
+                    in_region: in_region.clone(),
+                    pad_lo: [0; 4],
+                    pad_hi: [0; 4],
+                    out_region,
+                    c_range: (c0, c1),
+                    k_range: (c0, c1),
+                    reduce_group: group,
+                    last_in_group: true,
+                    gemm: GemmDims {
+                        m: out_elems,
+                        k: p.size * p.size,
+                        n: 1,
+                    },
+                    macs: (out_elems * p.size * p.size) as u64,
+                    in_bytes: (in_region.elems() * eb) as u64,
+                    wgt_bytes: 0,
+                    out_bytes: (out_elems * eb) as u64,
+                });
+                group += 1;
+            }
+        }
+    }
+    TilingPlan {
+        strategy: TilingStrategy::new(false, n_c > 1, true, n_w > 1),
+        items,
+        prep,
+        finalize,
+        prep_tasks,
+        finalize_tasks,
+        weight_bytes: 0,
+        num_reduce_groups: group,
+        utilization: 1.0,
+    }
+}
+
+/// Plan an element-wise operator (add / BN / activation) over `elems`
+/// elements with `n_inputs` operand tensors: flat chunking, one long
+/// contiguous memcpy per chunk (tiling strategy is irrelevant for
+/// element-wise ops — paper §II-B).
+pub fn plan_eltwise(elems: usize, n_inputs: usize, soc: &SocConfig) -> TilingPlan {
+    let spad = soc.spad_elems();
+    let eb = soc.elem_bytes;
+    let chunk = spad.min(elems);
+    let n_t = ceil_div(elems, chunk);
+    let shape = Shape::nc(1, elems);
+    let mut items = Vec::new();
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut prep_tasks: Vec<CopyStats> = Vec::new();
+    let mut finalize_tasks: Vec<CopyStats> = Vec::new();
+    for t in 0..n_t {
+        let e0 = t * chunk;
+        let e1 = (e0 + chunk).min(elems);
+        let region = Region::new(&[0, e0], &[1, e1 - e0]);
+        let pstat = region_copy_stats(&shape, &region, eb);
+        for _ in 0..n_inputs {
+            prep.add(pstat);
+        }
+        prep_tasks.push(CopyStats {
+            memcpys: pstat.memcpys * n_inputs as u64,
+            bytes: pstat.bytes * n_inputs as u64,
+        });
+        let fstat = region_copy_stats(&shape, &region, eb);
+        finalize.add(fstat);
+        finalize_tasks.push(fstat);
+        let n_el = e1 - e0;
+        items.push(WorkItem {
+            in_region: region.clone(),
+            pad_lo: [0; 4],
+            pad_hi: [0; 4],
+            out_region: region,
+            c_range: (e0, e1),
+            k_range: (e0, e1),
+            reduce_group: t as u32,
+            last_in_group: true,
+            gemm: GemmDims { m: n_el, k: 1, n: 1 },
+            macs: n_el as u64,
+            in_bytes: (n_el * n_inputs * eb) as u64,
+            wgt_bytes: 0,
+            out_bytes: (n_el * eb) as u64,
+        });
+    }
+    TilingPlan {
+        strategy: TilingStrategy::NONE,
+        items,
+        prep,
+        finalize,
+        prep_tasks,
+        finalize_tasks,
+        weight_bytes: 0,
+        num_reduce_groups: n_t as u32,
+        utilization: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn soc() -> SocConfig {
+        SocConfig::default()
+    }
+
+    #[test]
+    fn fc_plan_covers_all_macs() {
+        let p = FcParams { c_in: 784, c_out: 256 };
+        let plan = plan_fc(&p, &soc());
+        assert_eq!(plan.total_macs(), p.total_macs());
+        assert!(plan.utilization > 0.5);
+    }
+
+    #[test]
+    fn fc_large_layer_is_reduced() {
+        // ResNet50 FC: 2048 -> 1000; weight 2M elems >> 16K spad.
+        let p = FcParams { c_in: 2048, c_out: 1000 };
+        let plan = plan_fc(&p, &soc());
+        assert!(plan.items.len() > 100);
+        assert_eq!(plan.total_macs(), p.total_macs());
+        for i in &plan.items {
+            assert!(i.gemm.k * i.gemm.n <= soc().spad_elems());
+        }
+    }
+
+    #[test]
+    fn pool_plan_out_dims_and_coverage() {
+        let p = PoolParams { h: 32, w: 32, c: 64, size: 2, stride: 2 };
+        assert_eq!(p.out_dims(), (16, 16));
+        let plan = plan_pool(&p, &soc());
+        let out: usize = plan.items.iter().map(|i| i.out_region.elems()).sum();
+        assert_eq!(out, 16 * 16 * 64);
+    }
+
+    #[test]
+    fn pool_tiles_fit_spad() {
+        let p = PoolParams { h: 64, w: 64, c: 512, size: 2, stride: 2 };
+        let plan = plan_pool(&p, &soc());
+        for i in &plan.items {
+            assert!(i.in_region.elems() <= soc().spad_elems());
+        }
+        assert!(plan.items.len() > 1);
+    }
+
+    #[test]
+    fn eltwise_chunks_cover_everything() {
+        let plan = plan_eltwise(100_000, 2, &soc());
+        let total: usize = plan.items.iter().map(|i| i.out_region.elems()).sum();
+        assert_eq!(total, 100_000);
+        // Two operands double the prep copies.
+        assert_eq!(plan.prep.memcpys, 2 * plan.finalize.memcpys);
+    }
+
+    #[test]
+    fn eltwise_single_chunk_small() {
+        let plan = plan_eltwise(100, 1, &soc());
+        assert_eq!(plan.items.len(), 1);
+        assert_eq!(plan.prep.memcpys, 1);
+    }
+}

@@ -1,0 +1,257 @@
+//! Execution timeline tracing (paper Fig 14 / Fig 19).
+//!
+//! SMAUG "can generate an execution timeline of important events for users
+//! to visualize". Events carry start/end times, a lane (which accelerator
+//! / CPU / DMA), and the operator they belong to. Renderers produce an
+//! ASCII Gantt chart and a JSON export.
+
+use crate::util::JsonWriter;
+
+/// Which resource an event occupied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Accelerator `i` busy computing.
+    Accel(usize),
+    /// Data transfer to/from accelerator `i`.
+    Transfer(usize),
+    /// CPU software stack.
+    Cpu,
+    /// Camera pipeline stage (Fig 19).
+    Camera,
+}
+
+impl Lane {
+    fn label(&self) -> String {
+        match self {
+            Lane::Accel(i) => format!("accel{i}"),
+            Lane::Transfer(i) => format!("xfer{i}"),
+            Lane::Cpu => "cpu".to_string(),
+            Lane::Camera => "camera".to_string(),
+        }
+    }
+}
+
+/// What kind of work the event represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Accelerator tile compute.
+    Compute,
+    /// Data transfer (DMA/ACP payload).
+    Transfer,
+    /// CPU data preparation (layout transform + tiling).
+    Prep,
+    /// CPU data finalization (untiling / gathering).
+    Finalize,
+    /// Other CPU software activity.
+    Other,
+    /// Camera pipeline stage.
+    CameraStage,
+}
+
+impl EventKind {
+    fn name(&self) -> &'static str {
+        match self {
+            EventKind::Compute => "compute",
+            EventKind::Transfer => "transfer",
+            EventKind::Prep => "prep",
+            EventKind::Finalize => "finalize",
+            EventKind::Other => "other",
+            EventKind::CameraStage => "camera",
+        }
+    }
+
+    fn glyph(&self) -> char {
+        match self {
+            EventKind::Compute => '#',
+            EventKind::Transfer => '~',
+            EventKind::Prep => 'p',
+            EventKind::Finalize => 'f',
+            EventKind::Other => '.',
+            EventKind::CameraStage => 'c',
+        }
+    }
+}
+
+/// One timeline event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Start time, ns.
+    pub t0: f64,
+    /// End time, ns.
+    pub t1: f64,
+    /// Resource lane.
+    pub lane: Lane,
+    /// Work kind.
+    pub kind: EventKind,
+    /// Operator (or stage) name.
+    pub op: String,
+}
+
+/// An append-only event timeline.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    /// Captured events (empty when capture is disabled).
+    pub events: Vec<Event>,
+    enabled: bool,
+}
+
+impl Timeline {
+    /// Create a timeline; when `enabled` is false, pushes are dropped
+    /// (zero overhead for timing-only sweeps).
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            events: Vec::new(),
+            enabled,
+        }
+    }
+
+    /// Whether capture is on.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record an event (no-op when disabled or zero-length).
+    pub fn push(&mut self, t0: f64, t1: f64, lane: Lane, kind: EventKind, op: &str) {
+        if self.enabled && t1 > t0 {
+            self.events.push(Event {
+                t0,
+                t1,
+                lane,
+                kind,
+                op: op.to_string(),
+            });
+        }
+    }
+
+    /// Busy time on a lane within [t0, t1).
+    pub fn lane_busy(&self, lane: Lane, t0: f64, t1: f64) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.lane == lane)
+            .map(|e| (e.t1.min(t1) - e.t0.max(t0)).max(0.0))
+            .sum()
+    }
+
+    /// Mean utilization of `n` accelerator lanes over [t0, t1).
+    pub fn accel_utilization(&self, n: usize, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 || n == 0 {
+            return 0.0;
+        }
+        let busy: f64 = (0..n).map(|i| self.lane_busy(Lane::Accel(i), t0, t1)).sum();
+        busy / ((t1 - t0) * n as f64)
+    }
+
+    /// ASCII Gantt chart over [0, horizon) with `width` columns; one row
+    /// per lane seen in the trace (Fig 14-style visualization).
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        if self.events.is_empty() {
+            return "(empty timeline)".to_string();
+        }
+        let horizon = self.events.iter().map(|e| e.t1).fold(0.0, f64::max);
+        let mut lanes: Vec<Lane> = Vec::new();
+        for e in &self.events {
+            if !lanes.contains(&e.lane) {
+                lanes.push(e.lane);
+            }
+        }
+        lanes.sort_by_key(|l| match l {
+            Lane::Cpu => (0, 0),
+            Lane::Camera => (1, 0),
+            Lane::Transfer(i) => (2, *i),
+            Lane::Accel(i) => (3, *i),
+        });
+        let mut out = String::new();
+        out.push_str(&format!(
+            "timeline 0 .. {} ({} events)\n",
+            crate::util::fmt_ns(horizon),
+            self.events.len()
+        ));
+        for lane in lanes {
+            let mut row = vec![' '; width];
+            for e in self.events.iter().filter(|e| e.lane == lane) {
+                let a = ((e.t0 / horizon) * width as f64) as usize;
+                let b = (((e.t1 / horizon) * width as f64).ceil() as usize).min(width);
+                for cell in row.iter_mut().take(b).skip(a.min(width.saturating_sub(1))) {
+                    *cell = e.kind.glyph();
+                }
+            }
+            out.push_str(&format!(
+                "{:>8} |{}|\n",
+                lane.label(),
+                row.iter().collect::<String>()
+            ));
+        }
+        out.push_str("  legend: #=compute ~=transfer p=prep f=finalize .=other c=camera\n");
+        out
+    }
+
+    /// JSON export (list of events).
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_array();
+        for e in &self.events {
+            w.begin_object();
+            w.key("t0").number(e.t0);
+            w.key("t1").number(e.t1);
+            w.key("lane").string(&e.lane.label());
+            w.key("kind").string(e.kind.name());
+            w.key("op").string(&e.op);
+            w.end_object();
+        }
+        w.end_array();
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timeline_drops_events() {
+        let mut t = Timeline::new(false);
+        t.push(0.0, 10.0, Lane::Cpu, EventKind::Prep, "x");
+        assert!(t.events.is_empty());
+    }
+
+    #[test]
+    fn lane_busy_accumulates() {
+        let mut t = Timeline::new(true);
+        t.push(0.0, 10.0, Lane::Accel(0), EventKind::Compute, "a");
+        t.push(20.0, 30.0, Lane::Accel(0), EventKind::Compute, "b");
+        t.push(0.0, 5.0, Lane::Accel(1), EventKind::Compute, "c");
+        assert_eq!(t.lane_busy(Lane::Accel(0), 0.0, 100.0), 20.0);
+        // Clipped window.
+        assert_eq!(t.lane_busy(Lane::Accel(0), 5.0, 25.0), 10.0);
+    }
+
+    #[test]
+    fn accel_utilization_fraction() {
+        let mut t = Timeline::new(true);
+        t.push(0.0, 50.0, Lane::Accel(0), EventKind::Compute, "a");
+        t.push(0.0, 100.0, Lane::Accel(1), EventKind::Compute, "b");
+        assert!((t.accel_utilization(2, 0.0, 100.0) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let mut t = Timeline::new(true);
+        t.push(0.0, 50.0, Lane::Cpu, EventKind::Prep, "prep");
+        t.push(50.0, 100.0, Lane::Accel(0), EventKind::Compute, "c0");
+        let g = t.ascii_gantt(40);
+        assert!(g.contains("cpu"));
+        assert!(g.contains("accel0"));
+        assert!(g.contains('#'));
+        assert!(g.contains('p'));
+    }
+
+    #[test]
+    fn json_roundtrips_shape() {
+        let mut t = Timeline::new(true);
+        t.push(0.0, 1.0, Lane::Transfer(2), EventKind::Transfer, "t");
+        let j = t.to_json();
+        assert!(j.starts_with('['));
+        assert!(j.contains("\"xfer2\""));
+        assert!(j.contains("\"transfer\""));
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal JSON writer for trace/report export. We only ever *write* JSON
+//! (timelines, reports), never parse it, so a tiny push-style writer is all
+//! the system needs — no serde available offline.
+
+/// Push-style JSON writer producing compact, valid JSON.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    buf: String,
+    // Stack of "does the current container already have one element?".
+    needs_comma: Vec<bool>,
+}
+
+impl JsonWriter {
+    /// Create an empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn pre_value(&mut self) {
+        if let Some(last) = self.needs_comma.last_mut() {
+            if *last {
+                self.buf.push(',');
+            }
+            *last = true;
+        }
+    }
+
+    /// Begin a JSON object (as a value).
+    pub fn begin_object(&mut self) -> &mut Self {
+        self.pre_value();
+        self.buf.push('{');
+        self.needs_comma.push(false);
+        self
+    }
+
+    /// End the current object.
+    pub fn end_object(&mut self) -> &mut Self {
+        self.needs_comma.pop();
+        self.buf.push('}');
+        self
+    }
+
+    /// Begin a JSON array (as a value).
+    pub fn begin_array(&mut self) -> &mut Self {
+        self.pre_value();
+        self.buf.push('[');
+        self.needs_comma.push(false);
+        self
+    }
+
+    /// End the current array.
+    pub fn end_array(&mut self) -> &mut Self {
+        self.needs_comma.pop();
+        self.buf.push(']');
+        self
+    }
+
+    /// Emit an object key (must be inside an object).
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.pre_value();
+        self.push_escaped(k);
+        self.buf.push(':');
+        // The upcoming value must not add a comma.
+        if let Some(last) = self.needs_comma.last_mut() {
+            *last = false;
+        }
+        self
+    }
+
+    /// Emit a string value.
+    pub fn string(&mut self, s: &str) -> &mut Self {
+        self.pre_value();
+        self.push_escaped(s);
+        self
+    }
+
+    /// Emit a numeric value (finite f64; NaN/inf become null).
+    pub fn number(&mut self, v: f64) -> &mut Self {
+        self.pre_value();
+        if v.is_finite() {
+            if v == v.trunc() && v.abs() < 1e15 {
+                self.buf.push_str(&format!("{}", v as i64));
+            } else {
+                self.buf.push_str(&format!("{v}"));
+            }
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    /// Emit an unsigned integer value.
+    pub fn uint(&mut self, v: u64) -> &mut Self {
+        self.pre_value();
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Emit a boolean value.
+    pub fn boolean(&mut self, v: bool) -> &mut Self {
+        self.pre_value();
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    fn push_escaped(&mut self, s: &str) {
+        self.buf.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                '\t' => self.buf.push_str("\\t"),
+                '\r' => self.buf.push_str("\\r"),
+                c if (c as u32) < 0x20 => {
+                    self.buf.push_str(&format!("\\u{:04x}", c as u32))
+                }
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+    }
+
+    /// Finish and return the JSON string.
+    pub fn finish(self) -> String {
+        debug_assert!(self.needs_comma.is_empty(), "unbalanced containers");
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_with_fields() {
+        let mut w = JsonWriter::new();
+        w.begin_object();
+        w.key("a").number(1.0);
+        w.key("b").string("x\"y");
+        w.key("c").boolean(true);
+        w.end_object();
+        assert_eq!(w.finish(), r#"{"a":1,"b":"x\"y","c":true}"#);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let mut w = JsonWriter::new();
+        w.begin_array();
+        w.number(1.0).number(2.5);
+        w.begin_object();
+        w.key("k").string("v");
+        w.end_object();
+        w.end_array();
+        assert_eq!(w.finish(), r#"[1,2.5,{"k":"v"}]"#);
+    }
+
+    #[test]
+    fn escapes_control_chars() {
+        let mut w = JsonWriter::new();
+        w.string("a\nb\u{1}");
+        assert_eq!(w.finish(), "\"a\\nb\\u0001\"");
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        let mut w = JsonWriter::new();
+        w.number(f64::NAN);
+        assert_eq!(w.finish(), "null");
+    }
+}

@@ -1,0 +1,119 @@
+//! Small shared utilities: deterministic PRNG, rounding helpers, humanized
+//! formatting, and a minimal JSON writer (no external deps are available in
+//! this environment beyond the `xla` closure).
+
+mod json;
+mod rng;
+
+pub use json::JsonWriter;
+pub use rng::Rng;
+
+/// Round `v` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_up(v: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    v.div_ceil(m) * m
+}
+
+/// Ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Format a nanosecond duration with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{:.0} ns", ns)
+    }
+}
+
+/// Format a byte count with an adaptive binary unit.
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= (1u64 << 30) as f64 {
+        format!("{:.2} GiB", b / (1u64 << 30) as f64)
+    } else if b >= (1u64 << 20) as f64 {
+        format!("{:.2} MiB", b / (1u64 << 20) as f64)
+    } else if b >= 1024.0 {
+        format!("{:.2} KiB", b / 1024.0)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format an energy value given in picojoules with an adaptive unit.
+pub fn fmt_pj(pj: f64) -> String {
+    if pj >= 1e9 {
+        format!("{:.3} mJ", pj / 1e9)
+    } else if pj >= 1e6 {
+        format!("{:.3} uJ", pj / 1e6)
+    } else if pj >= 1e3 {
+        format!("{:.3} nJ", pj / 1e3)
+    } else {
+        format!("{pj:.1} pJ")
+    }
+}
+
+/// Relative error |got - want| / max(|want|, eps).
+#[inline]
+pub fn rel_err(got: f64, want: f64) -> f64 {
+    (got - want).abs() / want.abs().max(1e-12)
+}
+
+/// Maximum absolute elementwise difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 32), 0);
+        assert_eq!(round_up(1, 32), 32);
+        assert_eq!(round_up(32, 32), 32);
+        assert_eq!(round_up(33, 32), 64);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 8), 0);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(8, 8), 1);
+        assert_eq!(ceil_div(9, 8), 2);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1.5e6), "1.500 ms");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * 1024 * 1024), "2.00 MiB");
+        assert_eq!(fmt_pj(100.0), "100.0 pJ");
+    }
+
+    #[test]
+    fn rel_err_symmetric_zero() {
+        assert_eq!(rel_err(1.0, 1.0), 0.0);
+        assert!((rel_err(1.1, 1.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+    }
+}

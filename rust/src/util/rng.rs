@@ -1,0 +1,117 @@
+//! Deterministic xorshift64* PRNG — no external `rand` crate is available,
+//! and the simulator wants reproducible synthetic data anyway.
+
+/// A small, fast, deterministic PRNG (xorshift64*).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a PRNG from a seed (seed 0 is remapped to a fixed constant).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Approximately normal f32 (sum of uniforms, mean 0, stddev ~1).
+    pub fn normal_f32(&mut self) -> f32 {
+        // Irwin–Hall with 12 uniforms: mean 6, variance 1.
+        let s: f32 = (0..12).map(|_| self.next_f32()).sum();
+        s - 6.0
+    }
+
+    /// Fill a buffer with uniform values in [lo, hi).
+    pub fn fill_f32(&mut self, buf: &mut [f32], lo: f32, hi: f32) {
+        for v in buf.iter_mut() {
+            *v = self.range_f32(lo, hi);
+        }
+    }
+
+    /// A fresh Vec of `n` uniform values in [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.fill_f32(&mut v, lo, hi);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn normal_roughly_centered() {
+        let mut r = Rng::new(11);
+        let n = 10_000;
+        let mean: f32 = (0..n).map(|_| r.normal_f32()).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn seed_zero_ok() {
+        let mut r = Rng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+}

@@ -1,0 +1,63 @@
+//! End-to-end integration: complete networks executed tile-by-tile
+//! through the AOT PJRT artifacts must match the direct reference —
+//! the full three-layer composition proof.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use smaug::config::{FunctionalMode, SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sim::Simulator;
+
+fn run_net_pjrt(net: &str) -> Option<f32> {
+    let graph = nets::build_network(net).unwrap();
+    let opts = SimOptions {
+        functional: FunctionalMode::Pjrt,
+        ..SimOptions::default()
+    };
+    match Simulator::new(SocConfig::default(), opts).run_functional(&graph, None) {
+        Ok(run) => {
+            assert_eq!(run.backend, "pjrt");
+            Some(run.max_divergence)
+        }
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn lenet5_through_pjrt_artifacts() {
+    if let Some(div) = run_net_pjrt("lenet5") {
+        assert!(div < 1e-3, "divergence {div}");
+    }
+}
+
+#[test]
+fn minerva_through_pjrt_artifacts() {
+    if let Some(div) = run_net_pjrt("minerva") {
+        assert!(div < 1e-3, "divergence {div}");
+    }
+}
+
+#[test]
+fn cnn10_through_pjrt_artifacts() {
+    if let Some(div) = run_net_pjrt("cnn10") {
+        assert!(div < 1e-3, "divergence {div}");
+    }
+}
+
+#[test]
+fn functional_run_reports_timing_too() {
+    let graph = nets::build_network("minerva").unwrap();
+    let opts = SimOptions {
+        functional: FunctionalMode::Native,
+        ..SimOptions::default()
+    };
+    let run = Simulator::new(SocConfig::default(), opts)
+        .run_functional(&graph, None)
+        .unwrap();
+    assert!(run.report.total_ns > 0.0);
+    assert!(run.report.breakdown.accel_ns > 0.0);
+    assert_eq!(run.output.data.len(), 10);
+}

@@ -1,0 +1,90 @@
+//! Integration tests for the PJRT runtime: the AOT artifacts (L1 Pallas
+//! kernels lowered through the L2 JAX tile model) must agree with the
+//! native Rust GEMM across the canonical grid, including padding paths.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use smaug::runtime::{GemmExec, NativeGemm, PjrtRuntime};
+use smaug::util::{max_abs_diff, Rng};
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    match PjrtRuntime::new(None) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e:#}");
+            None
+        }
+    }
+}
+
+fn check_gemm(
+    rt: &mut PjrtRuntime,
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: bool,
+    relu: bool,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    let a = rng.vec_f32(m * k, -1.0, 1.0);
+    let w = rng.vec_f32(k * n, -1.0, 1.0);
+    let b = rng.vec_f32(n, -0.5, 0.5);
+    let bias_opt = bias.then_some(b.as_slice());
+    let got = rt.gemm(&a, &w, m, k, n, bias_opt, relu).unwrap();
+    let want = NativeGemm.gemm(&a, &w, m, k, n, bias_opt, relu).unwrap();
+    let diff = max_abs_diff(&got, &want);
+    assert!(
+        diff < 1e-3,
+        "gemm {m}x{k}x{n} bias={bias} relu={relu}: diff {diff}"
+    );
+}
+
+#[test]
+fn pjrt_matches_native_on_canonical_shapes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for &(m, k, n) in &[(16, 32, 16), (64, 128, 64), (256, 512, 256)] {
+        check_gemm(&mut rt, m, k, n, false, false, 1);
+    }
+    assert!(rt.tiles_executed >= 3);
+}
+
+#[test]
+fn pjrt_pads_odd_shapes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Shapes off the grid exercise the zero-padding path.
+    for &(m, k, n) in &[(1, 49, 10), (7, 100, 3), (33, 129, 17), (200, 2000, 100)] {
+        check_gemm(&mut rt, m, k, n, false, false, 2);
+    }
+}
+
+#[test]
+fn pjrt_fused_bias_relu() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    check_gemm(&mut rt, 16, 32, 16, true, true, 3);
+    check_gemm(&mut rt, 30, 60, 20, true, true, 4);
+}
+
+#[test]
+fn pjrt_bias_without_relu_uses_plain_plus_epilogue() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    check_gemm(&mut rt, 16, 32, 16, true, false, 5);
+}
+
+#[test]
+fn pjrt_executable_cache_reuses_compilations() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    check_gemm(&mut rt, 16, 32, 16, false, false, 6);
+    let compiles_after_first = rt.compiles;
+    check_gemm(&mut rt, 16, 32, 16, false, false, 7);
+    check_gemm(&mut rt, 10, 30, 12, false, false, 8); // same canonical shape
+    assert_eq!(rt.compiles, compiles_after_first, "cache miss on reuse");
+}
+
+#[test]
+fn pjrt_rejects_oversize_dims() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = vec![0.0f32; 2 * 4096];
+    let w = vec![0.0f32; 4096 * 2];
+    assert!(rt.gemm(&a, &w, 2, 4096, 2, None, false).is_err());
+}

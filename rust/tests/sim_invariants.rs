@@ -1,0 +1,221 @@
+//! Property-based integration tests: simulator invariants over randomized
+//! operator shapes and configurations (hand-rolled generators — no
+//! proptest crate is available offline; the deterministic PRNG gives
+//! reproducible cases and failure seeds are printed on panic).
+
+use smaug::config::{InterfaceKind, SimOptions, SocConfig};
+use smaug::graph::{Activation, GraphBuilder, Padding};
+use smaug::nets;
+use smaug::runtime::NativeGemm;
+use smaug::sim::{direct_forward, gen_input, gen_params, tiled_forward, Simulator};
+use smaug::tiling::{plan_conv, plan_fc, ConvParams, FcParams};
+use smaug::util::{max_abs_diff, Rng};
+
+fn rand_conv(rng: &mut Rng) -> ConvParams {
+    let h = 4 + rng.below(29); // 4..32
+    let c = [1, 3, 8, 16, 32, 64, 128][rng.below(7)];
+    let k = [4, 8, 16, 32, 64][rng.below(5)];
+    let r = [1, 3, 5][rng.below(3)];
+    let stride = 1 + rng.below(2);
+    ConvParams {
+        h,
+        w: 4 + rng.below(29),
+        c,
+        k,
+        r,
+        s: r,
+        stride,
+        pad_same: rng.below(2) == 0,
+    }
+}
+
+/// Every randomized conv plan must preserve MACs, cover the output
+/// exactly once, respect scratchpad limits, and keep reduction groups
+/// consistent.
+#[test]
+fn conv_plan_invariants_random_sweep() {
+    let soc = SocConfig::default();
+    let mut rng = Rng::new(0xFEED);
+    for case in 0..200 {
+        let mut p = rand_conv(&mut rng);
+        // VALID padding requires kernel <= input.
+        if !p.pad_same && (p.r > p.h || p.s > p.w) {
+            p.pad_same = true;
+        }
+        let plan = plan_conv(&p, &soc);
+        assert_eq!(plan.total_macs(), p.total_macs(), "case {case}: {p:?}");
+        let (oh, ow) = p.out_dims();
+        let covered: usize = plan
+            .items
+            .iter()
+            .filter(|i| i.last_in_group)
+            .map(|i| i.out_region.elems())
+            .sum();
+        assert_eq!(covered, oh * ow * p.k, "case {case}: coverage {p:?}");
+        for item in &plan.items {
+            assert!(
+                item.in_region.elems() <= soc.spad_elems(),
+                "case {case}: input tile too big {p:?}"
+            );
+            assert!(
+                item.gemm.k * item.gemm.n <= soc.spad_elems(),
+                "case {case}: weight tile too big {p:?}"
+            );
+            assert!(item.gemm.m <= 1024 && item.gemm.k <= 2048 && item.gemm.n <= 256);
+        }
+        let lasts = plan.items.iter().filter(|i| i.last_in_group).count() as u32;
+        assert_eq!(lasts, plan.num_reduce_groups, "case {case}");
+    }
+}
+
+/// FC plans over random dims preserve MACs and fit scratchpads.
+#[test]
+fn fc_plan_invariants_random_sweep() {
+    let soc = SocConfig::default();
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..100 {
+        let p = FcParams {
+            c_in: 1 + rng.below(8192),
+            c_out: 1 + rng.below(2048),
+        };
+        let plan = plan_fc(&p, &soc);
+        assert_eq!(plan.total_macs(), p.total_macs(), "{p:?}");
+        for i in &plan.items {
+            assert!(i.gemm.k * i.gemm.n <= soc.spad_elems());
+            assert!(i.gemm.k <= 2048 && i.gemm.n <= 256);
+        }
+    }
+}
+
+/// Randomized small conv nets: tiled functional execution == direct.
+#[test]
+fn random_convnets_tiled_equals_direct() {
+    let soc = SocConfig::default();
+    let mut rng = Rng::new(0xC0DE);
+    for case in 0..12 {
+        let mut b = GraphBuilder::new("rand");
+        let c0 = [1, 3, 8][rng.below(3)];
+        let side = 8 + 4 * rng.below(5);
+        let x = b.input("in", 1, side, side, c0);
+        let mut t = x;
+        let layers = 1 + rng.below(3);
+        for li in 0..layers {
+            let k = [4, 8, 16][rng.below(3)];
+            let r = [1, 3][rng.below(2)];
+            let stride = 1 + rng.below(2);
+            let act = if rng.below(2) == 0 {
+                Some(Activation::Relu)
+            } else {
+                None
+            };
+            t = b.conv(&format!("c{li}"), t, k, r, stride, Padding::Same, act);
+        }
+        let g = b.build();
+        let params = gen_params(&g, 100 + case);
+        let input = gen_input(&g, 200 + case);
+        let direct = direct_forward(&g, &input, &params);
+        let tiled = tiled_forward(&g, &input, &params, &soc, &mut NativeGemm).unwrap();
+        for op in &g.ops {
+            let diff = max_abs_diff(&direct[&op.id].data, &tiled[&op.id].data);
+            assert!(diff < 1e-3, "case {case} op {}: diff {diff}", op.name);
+        }
+    }
+}
+
+/// Timing monotonicity: ACP never slower than DMA; the optimized config
+/// never slower than baseline; sampling stays within 6%.
+#[test]
+fn timing_dominance_relations() {
+    for net in ["minerva", "lenet5", "cnn10", "vgg16", "elu16"] {
+        let g = nets::build_network(net).unwrap();
+        let run = |o: SimOptions| {
+            Simulator::new(SocConfig::default(), o)
+                .run(&g)
+                .unwrap()
+                .total_ns
+        };
+        let base = run(SimOptions::default());
+        let acp = run(SimOptions {
+            interface: InterfaceKind::Acp,
+            ..SimOptions::default()
+        });
+        let opt = run(SimOptions::optimized());
+        let sampled = run(SimOptions {
+            sampling_factor: 10_000,
+            ..SimOptions::default()
+        });
+        assert!(acp <= base * 1.001, "{net}: acp {acp} base {base}");
+        assert!(opt <= base * 1.001, "{net}: opt {opt} base {base}");
+        let err = (sampled - base).abs() / base;
+        assert!(err < 0.06, "{net}: sampling err {err:.3}");
+    }
+}
+
+/// Energy accounting is internally consistent: components sum to total,
+/// all non-negative, and scale with work.
+#[test]
+fn energy_consistency() {
+    let g_small = nets::build_network("minerva").unwrap();
+    let g_big = nets::build_network("vgg16").unwrap();
+    let sim = Simulator::new(SocConfig::default(), SimOptions::default());
+    let small = sim.run(&g_small).unwrap();
+    let big = sim.run(&g_big).unwrap();
+    for r in [&small, &big] {
+        let e = &r.energy;
+        let sum = e.macc_pj + e.spad_pj + e.llc_pj + e.dram_pj + e.cpu_pj + e.accel_static_pj;
+        assert!((sum - e.total_pj()).abs() < 1e-6);
+        assert!(e.macc_pj >= 0.0 && e.dram_pj > 0.0 && e.cpu_pj > 0.0);
+    }
+    assert!(big.energy.total_pj() > 5.0 * small.energy.total_pj());
+}
+
+/// The breakdown components always sum to the end-to-end latency.
+#[test]
+fn breakdown_sums_to_total_everywhere() {
+    for net in nets::FAST_NETWORKS {
+        for opts in [
+            SimOptions::default(),
+            SimOptions::optimized(),
+            SimOptions {
+                num_accels: 3,
+                sw_threads: 5,
+                ..SimOptions::default()
+            },
+        ] {
+            let g = nets::build_network(net).unwrap();
+            let r = Simulator::new(SocConfig::default(), opts).run(&g).unwrap();
+            let sum = r.breakdown.total_ns();
+            let rel = (sum - r.total_ns).abs() / r.total_ns;
+            assert!(rel < 0.05, "{net}: breakdown {sum} vs total {}", r.total_ns);
+        }
+    }
+}
+
+/// DRAM traffic is interface-invariant for DMA and bounded for ACP
+/// (hits reduce it), and never exceeds what the plans transfer plus
+/// CPU tiling traffic.
+#[test]
+fn traffic_sanity() {
+    for net in ["cnn10", "elu16"] {
+        let g = nets::build_network(net).unwrap();
+        let dma = Simulator::new(SocConfig::default(), SimOptions::default())
+            .run(&g)
+            .unwrap();
+        let acp = Simulator::new(
+            SocConfig::default(),
+            SimOptions {
+                interface: InterfaceKind::Acp,
+                ..SimOptions::default()
+            },
+        )
+        .run(&g)
+        .unwrap();
+        assert!(
+            acp.dram_bytes < dma.dram_bytes,
+            "{net}: ACP should cut DRAM traffic ({} vs {})",
+            acp.dram_bytes,
+            dma.dram_bytes
+        );
+        assert!(acp.llc_bytes > 0);
+    }
+}
