@@ -1,0 +1,40 @@
+//! Serving mode: N concurrent inference requests share one SoC on the
+//! event-driven scheduler — per-request latency percentiles + aggregate
+//! throughput, and the multi-accelerator scaling the serial per-op loop
+//! cannot express.
+//!
+//! Run: `cargo run --release --example serving`
+
+use smaug::config::{ServeOptions, SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::util::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    let graph = nets::build_network("vgg16")?;
+    let serve = ServeOptions {
+        requests: 8,
+        arrival_interval_ns: 100_000.0, // one request every 100 us
+    };
+
+    let mut baseline_rps = None;
+    for accels in [1usize, 8] {
+        let opts = SimOptions {
+            num_accels: accels,
+            sw_threads: 8,
+            pipeline: true,
+            ..SimOptions::default()
+        };
+        let report = Simulator::new(SocConfig::default(), opts).serve(&graph, &serve)?;
+        println!("=== {accels} accelerator(s) ===");
+        println!("{}", report.summary());
+        let rps = report.throughput_rps();
+        let base = *baseline_rps.get_or_insert(rps);
+        println!(
+            "p99 {}  |  {:.2}x throughput vs 1 accel\n",
+            fmt_ns(report.latency_percentile(99.0)),
+            rps / base
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+"""Deterministic stand-in for the tiny slice of `hypothesis` these tests
+use: `given`, `settings`, and `strategies.{integers, sampled_from}` with
+`.map`. Each `@given` test runs a fixed number of pseudo-random samples
+drawn with a seeded PRNG, so failures are reproducible and no network
+install is needed.
+"""
+
+import random
+import sys
+import types
+
+_SAMPLES = 12
+
+
+class _Strategy:
+    """A sampleable value source with hypothesis' `.map` combinator."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(values):
+    seq = list(values)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def settings(*_args, **kwargs):
+    """Decorator form only; records max_examples for the paired @given."""
+    max_examples = kwargs.get("max_examples")
+
+    def deco(fn):
+        if max_examples is not None:
+            fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        inner = fn
+
+        def wrapper(*args, **kwargs):
+            n = getattr(inner, "_fallback_max_examples", None) or _SAMPLES
+            rng = random.Random(0xC0FFEE ^ hash(inner.__name__) & 0xFFFF)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                inner(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = inner.__name__
+        wrapper.__doc__ = inner.__doc__
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register fallback modules as `hypothesis` / `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.sampled_from = sampled_from
+    hyp.strategies = strategies
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,73 @@
+//! Serving-throughput bench: requests/sec and latency percentiles vs the
+//! accelerator pool size (1, 2, 4, 8), on the event-driven scheduler with
+//! pipelining on. Emits `BENCH_serving.json` at the repository root so
+//! the serving-performance trajectory is tracked from this change on.
+
+use smaug::config::{ServeOptions, SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::util::{fmt_ns, JsonWriter};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let net = "cnn10";
+    let requests = 16usize;
+    println!("serving_throughput — {requests} concurrent requests of {net} (pipelined, DMA, 8 sw threads)");
+    println!(
+        "{:<7} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "accels", "req/s", "p50", "p90", "p99", "makespan"
+    );
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("serving_throughput");
+    w.key("network").string(net);
+    w.key("requests").uint(requests as u64);
+    w.key("rows").begin_array();
+    let graph = nets::build_network(net)?;
+    for &accels in &[1usize, 2, 4, 8] {
+        let opts = SimOptions {
+            num_accels: accels,
+            sw_threads: 8,
+            pipeline: true,
+            ..SimOptions::default()
+        };
+        let serve = ServeOptions {
+            requests,
+            arrival_interval_ns: 0.0,
+        };
+        let r = Simulator::new(SocConfig::default(), opts).serve(&graph, &serve)?;
+        let (p50, p90, p99) = (
+            r.latency_percentile(50.0),
+            r.latency_percentile(90.0),
+            r.latency_percentile(99.0),
+        );
+        println!(
+            "{:<7} {:>12.1} {:>12} {:>12} {:>12} {:>12}",
+            accels,
+            r.throughput_rps(),
+            fmt_ns(p50),
+            fmt_ns(p90),
+            fmt_ns(p99),
+            fmt_ns(r.makespan_ns)
+        );
+        w.begin_object();
+        w.key("accels").uint(accels as u64);
+        w.key("throughput_rps").number(r.throughput_rps());
+        w.key("p50_ns").number(p50);
+        w.key("p90_ns").number(p90);
+        w.key("p99_ns").number(p99);
+        w.key("mean_ns").number(r.mean_latency_ns());
+        w.key("makespan_ns").number(r.makespan_ns);
+        w.key("dram_bytes").uint(r.dram_bytes);
+        w.end_object();
+    }
+    w.end_array();
+    w.end_object();
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_serving.json");
+    std::fs::write(&out, w.finish())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

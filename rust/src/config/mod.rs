@@ -258,6 +258,11 @@ pub struct SimOptions {
     /// reduction group's channel blocks to spread across accelerators,
     /// with an explicit inter-accelerator partial-sum merge.
     pub inter_accel_reduction: bool,
+    /// Event-driven operator pipelining: independent operators overlap
+    /// across the accelerator pool, and one operator's CPU finalization
+    /// overlaps the next operator's accelerator phase. Off reproduces the
+    /// strict serial operator order the paper figures were measured with.
+    pub pipeline: bool,
 }
 
 impl Default for SimOptions {
@@ -273,6 +278,28 @@ impl Default for SimOptions {
             seed: 0xC0FFEE,
             double_buffer: false,
             inter_accel_reduction: false,
+            pipeline: false,
+        }
+    }
+}
+
+/// Serving-mode knobs: a batch of concurrent inference requests sharing
+/// one SoC (multi-batch/multi-network serving on the event-driven
+/// scheduler).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Number of concurrent inference requests to simulate.
+    pub requests: usize,
+    /// Inter-arrival gap between consecutive requests in ns (0 = all
+    /// requests arrive at t = 0).
+    pub arrival_interval_ns: f64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            requests: 4,
+            arrival_interval_ns: 0.0,
         }
     }
 }
@@ -369,6 +396,16 @@ mod tests {
         assert_eq!(c.systolic_rows, 16);
         // Untouched keys keep Table II defaults.
         assert_eq!(c.llc_bytes, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn serving_defaults_and_serial_default() {
+        let s = ServeOptions::default();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.arrival_interval_ns, 0.0);
+        // The paper-figure benches rely on the serial schedule by default.
+        assert!(!SimOptions::default().pipeline);
+        assert!(!SimOptions::optimized().pipeline);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 pub mod threadpool;
 
-pub use threadpool::{capped_makespan, round_robin_makespan};
+pub use threadpool::{capped_makespan, round_robin_makespan, PoolGate};
 
 use crate::config::SocConfig;
 use crate::tiling::CopyStats;

@@ -29,6 +29,40 @@ pub fn capped_makespan(tasks: &[f64], threads: usize, total_work: f64, agg_rate:
     rr.max(bw_bound)
 }
 
+/// Exclusive-occupancy gate over the whole thread pool.
+///
+/// The event-driven scheduler treats the software stack as one shared
+/// resource: a prep or finalize phase occupies the pool (all of its
+/// threads) for its span, and concurrent operators queue behind it. This
+/// little timeline tracks when the pool next becomes free.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolGate {
+    free_ns: f64,
+}
+
+impl PoolGate {
+    /// A gate that is free at t = 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// When the pool next becomes free.
+    pub fn free_ns(&self) -> f64 {
+        self.free_ns
+    }
+
+    /// Start time for a phase that becomes runnable at `ready_ns`.
+    pub fn acquire(&self, ready_ns: f64) -> f64 {
+        self.free_ns.max(ready_ns)
+    }
+
+    /// Mark the pool busy until `end_ns` (must not move time backwards).
+    pub fn release(&mut self, end_ns: f64) {
+        debug_assert!(end_ns >= self.free_ns, "pool release out of order");
+        self.free_ns = end_ns;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +113,18 @@ mod tests {
     #[test]
     fn empty_tasks() {
         assert_eq!(round_robin_makespan(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn pool_gate_serializes_phases() {
+        let mut gate = PoolGate::new();
+        assert_eq!(gate.acquire(0.0), 0.0);
+        gate.release(10.0);
+        // A phase ready earlier than the pool queues behind it...
+        assert_eq!(gate.acquire(4.0), 10.0);
+        // ...and one ready later starts at its own ready time.
+        assert_eq!(gate.acquire(25.0), 25.0);
+        gate.release(30.0);
+        assert_eq!(gate.free_ns(), 30.0);
     }
 }

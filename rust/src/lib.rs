@@ -20,6 +20,14 @@
 //! ([`runtime`]), while timing and energy come from the microarchitectural
 //! models. Python never runs at simulation time.
 //!
+//! The runtime scheduler is **event-driven** ([`sched`]): operators are
+//! released as their dependencies resolve and contend for explicit
+//! resources (the CPU thread pool, per-accelerator command queues, shared
+//! DRAM bandwidth). With [`config::SimOptions::pipeline`] off (the
+//! default) it reproduces the strict serial operator order of the paper
+//! figures; with it on, independent operators overlap across the
+//! accelerator pool and CPU phases overlap accelerator phases.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -32,6 +40,25 @@
 //! let opts = SimOptions::default();
 //! let report = Simulator::new(soc, opts).run(&graph).unwrap();
 //! println!("{}", report.breakdown_table());
+//! ```
+//!
+//! ## Serving mode
+//!
+//! Simulate N concurrent inference requests sharing one SoC (CLI:
+//! `smaug serve`) and get per-request latency percentiles plus aggregate
+//! throughput:
+//!
+//! ```no_run
+//! use smaug::config::{ServeOptions, SimOptions, SocConfig};
+//! use smaug::nets;
+//! use smaug::sim::Simulator;
+//!
+//! let graph = nets::build_network("resnet50").unwrap();
+//! let opts = SimOptions { num_accels: 4, sw_threads: 8, pipeline: true, ..SimOptions::default() };
+//! let serve = ServeOptions { requests: 8, arrival_interval_ns: 50_000.0 };
+//! let report = Simulator::new(SocConfig::default(), opts).serve(&graph, &serve).unwrap();
+//! println!("{}", report.summary());
+//! println!("p99 latency: {} ns", report.latency_percentile(99.0));
 //! ```
 
 pub mod accel;

@@ -4,8 +4,10 @@
 //! smaug run --net vgg16 [--accels 8] [--interface acp] [--threads 8]
 //!           [--accel nvdla|systolic] [--sampling N] [--soc file.cfg]
 //!           [--functional off|native|pjrt] [--train]
-//!           [--double-buffer] [--inter-accel-reduction]
+//!           [--double-buffer] [--inter-accel-reduction] [--pipeline]
 //!           [--report breakdown|ops|timeline|json|csv|trace-json]
+//! smaug serve --net resnet50 [--requests 8] [--interval-us 50]
+//!           [--accels 4] [--threads 8] [--no-pipeline] [--report summary|json]
 //! smaug sweep --net cnn10 --accels 1,2,4,8
 //! smaug camera [--pe 8x8] [--threads 1] [--fps 30]
 //! smaug config
@@ -14,7 +16,7 @@
 
 use anyhow::{bail, Context, Result};
 use smaug::camera;
-use smaug::config::{AccelKind, SimOptions, SocConfig};
+use smaug::config::{AccelKind, ServeOptions, SimOptions, SocConfig};
 use smaug::graph::training_step;
 use smaug::nets;
 use smaug::sim::Simulator;
@@ -31,6 +33,7 @@ fn main() {
 fn dispatch(args: &[String]) -> Result<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("camera") => cmd_camera(&args[1..]),
         Some("config") => {
@@ -54,7 +57,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                  usage:\n  smaug run --net <name> [--accels N] [--interface dma|acp]\n\
                  \x20          [--threads N] [--accel nvdla|systolic] [--sampling N]\n\
                  \x20          [--functional off|native|pjrt] [--report breakdown|ops|timeline|json|csv|trace-json]\n\
-                 \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction]\n\
+                 \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction] [--pipeline]\n\
+                 \x20 smaug serve --net <name> [--requests N] [--interval-us F]\n\
+                 \x20          [--accels N] [--threads N] [--no-pipeline] [--report summary|json]\n\
                  \x20 smaug sweep --net <name> [--accels 1,2,4,8]\n\
                  \x20 smaug camera [--pe RxC] [--threads N] [--fps N]\n\
                  \x20 smaug config   smaug nets",
@@ -102,7 +107,49 @@ fn parse_opts(args: &[String]) -> Result<SimOptions> {
     if args.iter().any(|a| a == "--inter-accel-reduction") {
         o.inter_accel_reduction = true;
     }
+    if args.iter().any(|a| a == "--pipeline") {
+        o.pipeline = true;
+    }
     Ok(o)
+}
+
+fn parse_soc(args: &[String]) -> Result<SocConfig> {
+    match flag(args, "--soc") {
+        Some(path) => {
+            SocConfig::from_file(std::path::Path::new(path)).map_err(anyhow::Error::msg)
+        }
+        None => Ok(SocConfig::default()),
+    }
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let net = flag(args, "--net").context("--net <name> is required (see `smaug nets`)")?;
+    let mut opts = parse_opts(args)?;
+    // Serving is the event-driven scheduler's home turf: pipelining is on
+    // unless explicitly disabled (for serial-baseline comparisons).
+    opts.pipeline = !args.iter().any(|a| a == "--no-pipeline");
+    let serve = ServeOptions {
+        requests: flag(args, "--requests")
+            .map(str::parse::<usize>)
+            .transpose()
+            .context("--requests")?
+            .unwrap_or(4),
+        arrival_interval_ns: flag(args, "--interval-us")
+            .map(str::parse::<f64>)
+            .transpose()
+            .context("--interval-us")?
+            .unwrap_or(0.0)
+            * 1000.0,
+    };
+    let graph = nets::build_network(net)?;
+    let soc = parse_soc(args)?;
+    let report = Simulator::new(soc, opts).serve(&graph, &serve)?;
+    match flag(args, "--report").unwrap_or("summary") {
+        "summary" => println!("{}", report.summary()),
+        "json" => println!("{}", report.to_json()),
+        other => bail!("unknown report '{other}' (summary|json)"),
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
@@ -113,11 +160,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if args.iter().any(|a| a == "--train") {
         graph = training_step(&graph);
     }
-    let soc = match flag(args, "--soc") {
-        Some(path) => SocConfig::from_file(std::path::Path::new(path))
-            .map_err(anyhow::Error::msg)?,
-        None => SocConfig::default(),
-    };
+    let soc = parse_soc(args)?;
     let sim = Simulator::new(soc, opts.clone());
 
     use smaug::config::FunctionalMode;

@@ -6,6 +6,13 @@
 //! request consumes `min(requested rate, remaining capacity)` in each
 //! segment it crosses, which yields both the transfer's finish time and —
 //! after the run — the utilization-over-time series of Fig 13b / Fig 17.
+//!
+//! The representation is fully interval-based, so it survives the
+//! event-driven scheduler's out-of-order request pattern: overlapping
+//! operators may book transfers at *earlier* timestamps than requests
+//! already recorded (a late-dispatched op whose prep finished first).
+//! Segment merging rebuilds only the affected window regardless of
+//! arrival order.
 
 /// One piecewise segment of bandwidth usage.
 #[derive(Debug, Clone, Copy)]
@@ -237,6 +244,37 @@ mod tests {
         let mut bw = BandwidthTimeline::new(20.0);
         let (s, e) = bw.request(5.0, 0, 20.0);
         assert_eq!((s, e), (5.0, 5.0));
+    }
+
+    #[test]
+    fn out_of_order_requests_conserve_bytes() {
+        // The event-driven scheduler books transfers in CPU-dispatch
+        // order, which is not simulated-time order: a request can land
+        // entirely *before* segments that already exist.
+        let mut bw = BandwidthTimeline::new(20.0);
+        bw.request(5_000.0, 40_000, 20.0); // 5000..7000 saturated
+        let (s, e) = bw.request(0.0, 20_000, 20.0); // earlier window, idle
+        assert_eq!(s, 0.0);
+        assert!((e - 1000.0).abs() < 1e-6, "{e}");
+        // A third request spanning both windows threads the gap and the
+        // saturated region.
+        let (_, e3) = bw.request(500.0, 100_000, 20.0);
+        assert!(e3 > 7000.0, "{e3}");
+        let total = 40_000.0 + 20_000.0 + 100_000.0;
+        assert!((bw.total_bytes() - total).abs() / total < 1e-9);
+    }
+
+    #[test]
+    fn interleaved_past_and_future_requests_share_capacity() {
+        let mut bw = BandwidthTimeline::new(10.0);
+        // Forward stream at half rate...
+        bw.request(0.0, 10_000, 5.0); // 0..2000 at 5 B/ns
+        // ...then an out-of-order request inside that window takes the
+        // other half and finishes exactly when capacity allows.
+        let (_, e) = bw.request(0.0, 10_000, 10.0);
+        assert!((e - 2000.0).abs() < 1e-6, "{e}");
+        // Full utilization over the shared window.
+        assert!((bw.utilization_between(0.0, 2000.0) - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -6,14 +6,19 @@
 //! Tiles are padded to the canonical (M, K, N) grid (exactly as the real
 //! NVDLA pads partial channel blocks), executed, and the result unpadded.
 //! Executables are compiled lazily and cached per canonical shape.
+//!
+//! The PJRT path needs the external `xla` crate, which is not available
+//! in offline builds, so it is gated behind the `pjrt` cargo feature.
+//! Without the feature, [`PjrtRuntime::new`] returns an error with the
+//! reason and every caller (tests, `--functional pjrt`) skips with a
+//! notice; the timing models and the native functional backend are
+//! unaffected.
 
 mod manifest;
 
 pub use manifest::{round_up_grid, Manifest, Variant, CANONICAL_K, CANONICAL_M, CANONICAL_N};
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use anyhow::Result;
 
 /// Abstraction over the GEMM execution backend so the tiled functional
 /// path can run either natively or through PJRT.
@@ -71,75 +76,8 @@ impl GemmExec for NativeGemm {
     }
 }
 
-/// The PJRT-backed runtime.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<(usize, usize, usize, Variant), xla::PjRtLoadedExecutable>,
-    /// Number of tile executions performed.
-    pub tiles_executed: u64,
-    /// Number of executables compiled (cache misses).
-    pub compiles: u64,
-}
-
-impl PjrtRuntime {
-    /// Create a runtime over the artifacts directory (default
-    /// `artifacts/` next to the workspace root, overridable with
-    /// `SMAUG_ARTIFACTS`).
-    pub fn new(artifacts_dir: Option<&Path>) -> Result<Self> {
-        let dir: PathBuf = match artifacts_dir {
-            Some(d) => d.to_path_buf(),
-            None => std::env::var("SMAUG_ARTIFACTS")
-                .map(PathBuf::from)
-                .unwrap_or_else(|_| PathBuf::from("artifacts")),
-        };
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            manifest,
-            cache: HashMap::new(),
-            tiles_executed: 0,
-            compiles: 0,
-        })
-    }
-
-    /// Number of artifacts in the manifest.
-    pub fn artifact_count(&self) -> usize {
-        self.manifest.entries.len()
-    }
-
-    fn executable(
-        &mut self,
-        m: usize,
-        k: usize,
-        n: usize,
-        variant: Variant,
-    ) -> Result<&xla::PjRtLoadedExecutable> {
-        let key = (m, k, n, variant);
-        if !self.cache.contains_key(&key) {
-            let entry = self
-                .manifest
-                .find(m, k, n, variant)
-                .with_context(|| format!("no artifact for gemm {m}x{k}x{n} {variant:?}"))?
-                .clone();
-            let proto = xla::HloModuleProto::from_text_file(
-                entry.path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing HLO {:?}", entry.path))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {:?}", entry.path))?;
-            self.compiles += 1;
-            self.cache.insert(key, exe);
-        }
-        Ok(&self.cache[&key])
-    }
-}
-
 /// Pad a row-major (m, k) buffer to (mp, kp) with zeros.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn pad2(a: &[f32], m: usize, k: usize, mp: usize, kp: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; mp * kp];
     for i in 0..m {
@@ -149,6 +87,7 @@ fn pad2(a: &[f32], m: usize, k: usize, mp: usize, kp: usize) -> Vec<f32> {
 }
 
 /// Extract the top-left (m, n) of a row-major (mp, np_) buffer.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn unpad2(a: &[f32], mp: usize, np_: usize, m: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), mp * np_);
     let mut out = vec![0.0f32; m * n];
@@ -158,69 +97,204 @@ fn unpad2(a: &[f32], mp: usize, np_: usize, m: usize, n: usize) -> Vec<f32> {
     out
 }
 
-impl GemmExec for PjrtRuntime {
-    fn gemm(
-        &mut self,
-        a: &[f32],
-        w: &[f32],
-        m: usize,
-        k: usize,
-        n: usize,
-        bias: Option<&[f32]>,
-        relu: bool,
-    ) -> Result<Vec<f32>> {
-        assert_eq!(a.len(), m * k);
-        assert_eq!(w.len(), k * n);
-        let mp = round_up_grid(m, CANONICAL_M)?;
-        let kp = round_up_grid(k, CANONICAL_K)?;
-        let np_ = round_up_grid(n, CANONICAL_N)?;
-        // The fused artifact applies bias+relu; the plain one neither. A
-        // relu-without-bias request fuses with a zero bias.
-        let variant = if bias.is_some() || relu {
-            Variant::BiasRelu
-        } else {
-            Variant::Plain
-        };
-        if variant == Variant::BiasRelu && !relu {
-            // bias-only epilogue isn't an artifact: run plain + native bias.
-            let mut out = self.gemm(a, w, m, k, n, None, false)?;
-            if let Some(b) = bias {
-                for i in 0..m {
-                    for j in 0..n {
-                        out[i * n + j] += b[j];
-                    }
-                }
-            }
-            return Ok(out);
-        }
-        let ap = pad2(a, m, k, mp, kp);
-        let wp = pad2(w, k, n, kp, np_);
-        let la = xla::Literal::vec1(&ap).reshape(&[mp as i64, kp as i64])?;
-        let lw = xla::Literal::vec1(&wp).reshape(&[kp as i64, np_ as i64])?;
-        let exe = self.executable(mp, kp, np_, variant)?;
-        let result = match variant {
-            Variant::Plain => exe.execute::<xla::Literal>(&[la, lw])?,
-            Variant::BiasRelu => {
-                let mut bp = vec![0.0f32; np_];
-                if let Some(b) = bias {
-                    bp[..n].copy_from_slice(b);
-                }
-                let lb = xla::Literal::vec1(&bp).reshape(&[1, np_ as i64])?;
-                exe.execute::<xla::Literal>(&[la, lw, lb])?
-            }
-        };
-        let lit = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = lit.to_tuple1()?;
-        let vals = out.to_vec::<f32>()?;
-        self.tiles_executed += 1;
-        Ok(unpad2(&vals, mp, np_, m, n))
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::{pad2, round_up_grid, unpad2, GemmExec, Manifest, Variant};
+    use super::{CANONICAL_K, CANONICAL_M, CANONICAL_N};
+    use anyhow::{Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// The PJRT-backed runtime.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<(usize, usize, usize, Variant), xla::PjRtLoadedExecutable>,
+        /// Number of tile executions performed.
+        pub tiles_executed: u64,
+        /// Number of executables compiled (cache misses).
+        pub compiles: u64,
     }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+    impl PjrtRuntime {
+        /// Create a runtime over the artifacts directory (default
+        /// `artifacts/` next to the workspace root, overridable with
+        /// `SMAUG_ARTIFACTS`).
+        pub fn new(artifacts_dir: Option<&Path>) -> Result<Self> {
+            let dir: PathBuf = match artifacts_dir {
+                Some(d) => d.to_path_buf(),
+                None => std::env::var("SMAUG_ARTIFACTS")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|_| PathBuf::from("artifacts")),
+            };
+            let manifest = Manifest::load(&dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self {
+                client,
+                manifest,
+                cache: HashMap::new(),
+                tiles_executed: 0,
+                compiles: 0,
+            })
+        }
+
+        /// Number of artifacts in the manifest.
+        pub fn artifact_count(&self) -> usize {
+            self.manifest.entries.len()
+        }
+
+        fn executable(
+            &mut self,
+            m: usize,
+            k: usize,
+            n: usize,
+            variant: Variant,
+        ) -> Result<&xla::PjRtLoadedExecutable> {
+            let key = (m, k, n, variant);
+            if !self.cache.contains_key(&key) {
+                let entry = self
+                    .manifest
+                    .find(m, k, n, variant)
+                    .with_context(|| format!("no artifact for gemm {m}x{k}x{n} {variant:?}"))?
+                    .clone();
+                let proto = xla::HloModuleProto::from_text_file(
+                    entry.path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parsing HLO {:?}", entry.path))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {:?}", entry.path))?;
+                self.compiles += 1;
+                self.cache.insert(key, exe);
+            }
+            Ok(&self.cache[&key])
+        }
+    }
+
+    impl GemmExec for PjrtRuntime {
+        fn gemm(
+            &mut self,
+            a: &[f32],
+            w: &[f32],
+            m: usize,
+            k: usize,
+            n: usize,
+            bias: Option<&[f32]>,
+            relu: bool,
+        ) -> Result<Vec<f32>> {
+            assert_eq!(a.len(), m * k);
+            assert_eq!(w.len(), k * n);
+            let mp = round_up_grid(m, CANONICAL_M)?;
+            let kp = round_up_grid(k, CANONICAL_K)?;
+            let np_ = round_up_grid(n, CANONICAL_N)?;
+            // The fused artifact applies bias+relu; the plain one neither.
+            // A relu-without-bias request fuses with a zero bias.
+            let variant = if bias.is_some() || relu {
+                Variant::BiasRelu
+            } else {
+                Variant::Plain
+            };
+            if variant == Variant::BiasRelu && !relu {
+                // bias-only epilogue isn't an artifact: plain + native bias.
+                let mut out = self.gemm(a, w, m, k, n, None, false)?;
+                if let Some(b) = bias {
+                    for i in 0..m {
+                        for j in 0..n {
+                            out[i * n + j] += b[j];
+                        }
+                    }
+                }
+                return Ok(out);
+            }
+            let ap = pad2(a, m, k, mp, kp);
+            let wp = pad2(w, k, n, kp, np_);
+            let la = xla::Literal::vec1(&ap).reshape(&[mp as i64, kp as i64])?;
+            let lw = xla::Literal::vec1(&wp).reshape(&[kp as i64, np_ as i64])?;
+            let exe = self.executable(mp, kp, np_, variant)?;
+            let result = match variant {
+                Variant::Plain => exe.execute::<xla::Literal>(&[la, lw])?,
+                Variant::BiasRelu => {
+                    let mut bp = vec![0.0f32; np_];
+                    if let Some(b) = bias {
+                        bp[..n].copy_from_slice(b);
+                    }
+                    let lb = xla::Literal::vec1(&bp).reshape(&[1, np_ as i64])?;
+                    exe.execute::<xla::Literal>(&[la, lw, lb])?
+                }
+            };
+            let lit = result[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = lit.to_tuple1()?;
+            let vals = out.to_vec::<f32>()?;
+            self.tiles_executed += 1;
+            Ok(unpad2(&vals, mp, np_, m, n))
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use super::GemmExec;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Stub runtime used when the `pjrt` cargo feature is disabled (the
+    /// external `xla` crate is unavailable offline). Construction always
+    /// fails with an explanatory error so callers skip gracefully.
+    pub struct PjrtRuntime {
+        /// Number of tile executions performed (always 0 for the stub).
+        pub tiles_executed: u64,
+        /// Number of executables compiled (always 0 for the stub).
+        pub compiles: u64,
+    }
+
+    impl PjrtRuntime {
+        /// Always fails: the binary was built without PJRT support.
+        pub fn new(_artifacts_dir: Option<&Path>) -> Result<Self> {
+            bail!(
+                "built without the `pjrt` cargo feature (the external `xla` crate is \
+                 unavailable offline); timing simulation and `--functional native` are \
+                 unaffected"
+            )
+        }
+
+        /// Number of artifacts in the manifest (stub: none).
+        pub fn artifact_count(&self) -> usize {
+            0
+        }
+    }
+
+    impl GemmExec for PjrtRuntime {
+        fn gemm(
+            &mut self,
+            _a: &[f32],
+            _w: &[f32],
+            _m: usize,
+            _k: usize,
+            _n: usize,
+            _bias: Option<&[f32]>,
+            _relu: bool,
+        ) -> Result<Vec<f32>> {
+            bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::PjrtRuntime;
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,285 @@
+//! Discrete-event execution engine for the scheduler.
+//!
+//! A workload is a list of jobs `(arrival_ns, graph)` — one for a plain
+//! forward pass, several for serving mode. Every operator of every job
+//! becomes a node; the engine releases nodes as their dependencies
+//! resolve and multiplexes their CPU phases over the exclusive thread
+//! pool ([`PoolGate`]) while accelerator phases queue on the persistent
+//! [`AccelPool`]. All shared-resource contention (DRAM bandwidth,
+//! command queues, CPU pool) is resolved with absolute timestamps, so
+//! out-of-order dispatch is safe and fully deterministic.
+//!
+//! Dependency model:
+//!
+//! * `pipeline = false` — schedulable nodes are chained in (job, topo)
+//!   order and each waits for the *complete* predecessor (prep → accel →
+//!   finalize → dispatch). This reproduces the serial reference schedule
+//!   [`Scheduler::run_serial`] exactly.
+//! * `pipeline = true` — a node waits only for its data producers'
+//!   accelerator phases to have written their output tiles back
+//!   (tile-granularity handoff approximated at phase granularity). The
+//!   producer's CPU finalization then overlaps the consumer's
+//!   accelerator phase, and independent DAG branches overlap across the
+//!   accelerator pool.
+//!
+//! CPU arbitration: among runnable phases, preparations win over
+//! finalizations (dispatching new accelerator work hides more latency),
+//! ties broken by (job, topo) position — fully deterministic.
+
+use std::collections::HashMap;
+
+use super::{plan_op, AccelPool, HwOutcome, PlannedOp, PrepOutcome, Scheduler};
+use crate::cpu::PoolGate;
+use crate::graph::{Graph, OpKind};
+use crate::stats::OpRecord;
+
+/// Result of one job (request) in a workload.
+pub(crate) struct JobOutcome {
+    /// Per-operator records in topological order.
+    pub records: Vec<OpRecord>,
+    /// When the job's last operator fully completed (>= arrival).
+    pub end_ns: f64,
+}
+
+enum Work {
+    /// Accelerated operator with its tiling plan.
+    Accel(PlannedOp),
+    /// CPU-only operator (Flatten: dispatch overhead).
+    CpuOnly,
+    /// Input placeholder: completes instantly at job arrival.
+    Source,
+}
+
+struct Node {
+    job: usize,
+    op_id: usize,
+    work: Work,
+    /// Unresolved dependency count.
+    deps: usize,
+    /// Node indices released when this node's handoff point is reached.
+    consumers: Vec<usize>,
+    /// Earliest time this node may start (arrival + released deps).
+    ready_ns: f64,
+    queued: bool,
+    start_ns: f64,
+    prep: Option<PrepOutcome>,
+    hw: Option<HwOutcome>,
+    done_ns: f64,
+    rec: Option<OpRecord>,
+}
+
+#[derive(Clone, Copy)]
+struct Task {
+    ready_ns: f64,
+    /// 0 = preparation (or CPU-only op), 1 = finalization.
+    class: u8,
+    node: usize,
+}
+
+/// Resolve one dependency of each consumer of `from` at time `t`,
+/// queueing consumers that become runnable.
+fn release(nodes: &mut [Node], pending: &mut Vec<Task>, from: usize, t: f64) {
+    let consumers = std::mem::take(&mut nodes[from].consumers);
+    for &c in &consumers {
+        let n = &mut nodes[c];
+        n.ready_ns = n.ready_ns.max(t);
+        n.deps -= 1;
+        if n.deps == 0 && !n.queued {
+            n.queued = true;
+            pending.push(Task {
+                ready_ns: n.ready_ns,
+                class: 0,
+                node: c,
+            });
+        }
+    }
+    nodes[from].consumers = consumers;
+}
+
+/// Execute a workload on the scheduler's SoC; returns one outcome per job.
+pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<JobOutcome> {
+    let pipeline = sched.opts.pipeline;
+    let mut pool = AccelPool::new(sched.opts.num_accels.max(1));
+    let mut cpu = PoolGate::new();
+
+    // ---- Build the node table in (job, topo) order.
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut job_range: Vec<(usize, usize)> = Vec::with_capacity(jobs.len());
+    for (j, &(arrival, graph)) in jobs.iter().enumerate() {
+        let base = nodes.len();
+        let order = graph.topo_order();
+        let mut node_of_op = vec![usize::MAX; graph.ops.len()];
+        for (pos, &oid) in order.iter().enumerate() {
+            node_of_op[oid] = base + pos;
+        }
+        for &oid in &order {
+            let op = &graph.ops[oid];
+            let work = match plan_op(op, graph, &sched.soc) {
+                Some(planned) => Work::Accel(planned),
+                None if matches!(op.kind, OpKind::Flatten) => Work::CpuOnly,
+                None => Work::Source,
+            };
+            nodes.push(Node {
+                job: j,
+                op_id: oid,
+                work,
+                deps: 0,
+                consumers: Vec::new(),
+                ready_ns: arrival,
+                queued: false,
+                start_ns: arrival,
+                prep: None,
+                hw: None,
+                done_ns: arrival,
+                rec: None,
+            });
+        }
+        if pipeline {
+            // Data dependencies: consumer waits for each producing op.
+            let producer: HashMap<usize, usize> =
+                graph.ops.iter().map(|o| (o.output, o.id)).collect();
+            for &oid in &order {
+                let me = node_of_op[oid];
+                for &t in &graph.ops[oid].inputs {
+                    if let Some(&p) = producer.get(&t) {
+                        nodes[node_of_op[p]].consumers.push(me);
+                        nodes[me].deps += 1;
+                    }
+                }
+            }
+        }
+        job_range.push((base, nodes.len()));
+    }
+    if !pipeline {
+        // Strict serial chain over every schedulable node of the whole
+        // workload, in submission order.
+        let chain: Vec<usize> = (0..nodes.len())
+            .filter(|&i| !matches!(nodes[i].work, Work::Source))
+            .collect();
+        for w in chain.windows(2) {
+            nodes[w[0]].consumers.push(w[1]);
+            nodes[w[1]].deps += 1;
+        }
+    }
+
+    // ---- Seed the task queue: sources complete at arrival, dep-free
+    // schedulable nodes become runnable.
+    let mut pending: Vec<Task> = Vec::new();
+    for i in 0..nodes.len() {
+        if matches!(nodes[i].work, Work::Source) {
+            let t = nodes[i].ready_ns;
+            nodes[i].done_ns = t;
+            release(&mut nodes, &mut pending, i, t);
+        }
+    }
+    for (i, n) in nodes.iter_mut().enumerate() {
+        if n.deps == 0 && !n.queued && !matches!(n.work, Work::Source) {
+            n.queued = true;
+            pending.push(Task {
+                ready_ns: n.ready_ns,
+                class: 0,
+                node: i,
+            });
+        }
+    }
+
+    // ---- Event loop: one CPU phase at a time.
+    while !pending.is_empty() {
+        // The next decision instant: the CPU is free and at least one
+        // task has become ready.
+        let min_ready = pending
+            .iter()
+            .map(|t| t.ready_ns)
+            .fold(f64::INFINITY, f64::min);
+        let horizon = cpu.free_ns().max(min_ready);
+        let mut best = usize::MAX;
+        let mut best_key = (u8::MAX, usize::MAX);
+        for (i, t) in pending.iter().enumerate() {
+            if t.ready_ns <= horizon {
+                let key = (t.class, t.node);
+                if key < best_key {
+                    best_key = key;
+                    best = i;
+                }
+            }
+        }
+        let task = pending.swap_remove(best);
+        let node_idx = task.node;
+        let start = cpu.acquire(task.ready_ns);
+        let (job, op_id) = (nodes[node_idx].job, nodes[node_idx].op_id);
+        let op = &jobs[job].1.ops[op_id];
+        let cpu_only = matches!(nodes[node_idx].work, Work::CpuOnly);
+        if task.class == 0 && cpu_only {
+            let rec = sched.flatten_op(op, start);
+            let end = rec.end_ns;
+            cpu.release(end);
+            nodes[node_idx].start_ns = start;
+            nodes[node_idx].done_ns = end;
+            nodes[node_idx].rec = Some(rec);
+            release(&mut nodes, &mut pending, node_idx, end);
+        } else if task.class == 0 {
+            let (prep, hw) = {
+                let Work::Accel(planned) = &nodes[node_idx].work else {
+                    unreachable!("sources never queue tasks")
+                };
+                let prep = sched.prep_phase(op, &planned.plan, start);
+                cpu.release(prep.end_ns);
+                let hw = sched.accel_phase(op, planned, prep.end_ns, &mut pool);
+                (prep, hw)
+            };
+            let hw_end = hw.hw_end;
+            nodes[node_idx].start_ns = start;
+            nodes[node_idx].prep = Some(prep);
+            nodes[node_idx].hw = Some(hw);
+            pending.push(Task {
+                ready_ns: hw_end,
+                class: 1,
+                node: node_idx,
+            });
+            if pipeline {
+                // Output tiles are written back: consumers may start
+                // their preparation while this op finalizes.
+                release(&mut nodes, &mut pending, node_idx, hw_end);
+            }
+        } else {
+            let (end, rec) = {
+                let Work::Accel(planned) = &nodes[node_idx].work else {
+                    unreachable!("only accel nodes finalize")
+                };
+                let fin = sched.finalize_phase(op, &planned.plan, start);
+                cpu.release(fin.end_ns);
+                let rec = Scheduler::record(
+                    op,
+                    planned,
+                    nodes[node_idx].start_ns,
+                    nodes[node_idx].prep.as_ref().expect("prep ran"),
+                    nodes[node_idx].hw.as_ref().expect("accel phase ran"),
+                    &fin,
+                );
+                (fin.end_ns, rec)
+            };
+            nodes[node_idx].done_ns = end;
+            nodes[node_idx].rec = Some(rec);
+            if !pipeline {
+                release(&mut nodes, &mut pending, node_idx, end);
+            }
+        }
+    }
+
+    // ---- Collect per-job outcomes (records in topo order).
+    job_range
+        .iter()
+        .enumerate()
+        .map(|(j, &(lo, hi))| {
+            let mut end_ns = jobs[j].0;
+            let mut records = Vec::new();
+            for n in &mut nodes[lo..hi] {
+                end_ns = end_ns.max(n.done_ns);
+                if let Some(rec) = n.rec.take() {
+                    records.push(rec);
+                }
+            }
+            JobOutcome { records, end_ns }
+        })
+        .collect()
+}

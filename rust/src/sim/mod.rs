@@ -5,11 +5,11 @@ pub mod functional;
 
 pub use functional::{direct_forward, gen_input, gen_params, tiled_forward};
 
-use crate::config::{FunctionalMode, SimOptions, SocConfig};
+use crate::config::{FunctionalMode, ServeOptions, SimOptions, SocConfig};
 use crate::graph::Graph;
 use crate::runtime::{GemmExec, NativeGemm, PjrtRuntime};
 use crate::sched::Scheduler;
-use crate::stats::SimReport;
+use crate::stats::{ServeReport, SimReport};
 use crate::tensor::Tensor;
 use crate::trace::Timeline;
 use crate::util::max_abs_diff;
@@ -39,10 +39,26 @@ impl Simulator {
         Self { soc, opts }
     }
 
-    /// Timing/energy simulation of one forward pass.
+    /// Timing/energy simulation of one forward pass (event-driven; the
+    /// serial schedule when [`SimOptions::pipeline`] is off).
     pub fn run(&self, graph: &Graph) -> Result<SimReport> {
         let mut sched = Scheduler::new(self.soc.clone(), self.opts.clone());
         Ok(sched.run(graph))
+    }
+
+    /// Timing/energy simulation through the strict serial reference
+    /// schedule (the seed scheduler), regardless of pipelining options.
+    pub fn run_serial(&self, graph: &Graph) -> Result<SimReport> {
+        let mut sched = Scheduler::new(self.soc.clone(), self.opts.clone());
+        Ok(sched.run_serial(graph))
+    }
+
+    /// Serving mode: simulate `serve.requests` concurrent inference
+    /// requests of `graph` sharing one SoC; reports per-request latency
+    /// percentiles and aggregate throughput.
+    pub fn serve(&self, graph: &Graph, serve: &ServeOptions) -> Result<ServeReport> {
+        let mut sched = Scheduler::new(self.soc.clone(), self.opts.clone());
+        Ok(sched.serve(graph, serve))
     }
 
     /// Timing simulation that also returns the captured timeline.
@@ -126,5 +142,20 @@ mod tests {
             .run_with_timeline(&g)
             .unwrap();
         assert!(!tl.events.is_empty());
+    }
+
+    #[test]
+    fn serve_facade_runs() {
+        let g = nets::build_network("minerva").unwrap();
+        let opts = SimOptions {
+            pipeline: true,
+            num_accels: 2,
+            ..SimOptions::default()
+        };
+        let r = Simulator::new(SocConfig::default(), opts)
+            .serve(&g, &crate::config::ServeOptions::default())
+            .unwrap();
+        assert_eq!(r.requests.len(), 4);
+        assert!(r.throughput_rps() > 0.0);
     }
 }

@@ -254,6 +254,142 @@ impl SimReport {
     }
 }
 
+/// One inference request served by the event-driven scheduler.
+#[derive(Debug, Clone, Default)]
+pub struct RequestRecord {
+    /// Request index within the workload.
+    pub id: usize,
+    /// Network this request ran.
+    pub network: String,
+    /// Arrival time, ns.
+    pub arrival_ns: f64,
+    /// Completion time (all operators fully finalized), ns.
+    pub end_ns: f64,
+}
+
+impl RequestRecord {
+    /// End-to-end latency of the request.
+    pub fn latency_ns(&self) -> f64 {
+        self.end_ns - self.arrival_ns
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`q` in [0, 100]).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = ((q / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Serving-mode report: per-request latencies with percentile summaries
+/// plus aggregate throughput, traffic, and energy.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    /// Network name (first job's network for mixed workloads).
+    pub network: String,
+    /// Configuration description.
+    pub config: String,
+    /// Per-request records in submission order.
+    pub requests: Vec<RequestRecord>,
+    /// Time from t = 0 until the last request completed, ns.
+    pub makespan_ns: f64,
+    /// Total DRAM traffic, bytes.
+    pub dram_bytes: u64,
+    /// Total LLC traffic, bytes.
+    pub llc_bytes: u64,
+    /// Energy account for the whole workload.
+    pub energy: EnergyAccount,
+    /// Host wall-clock spent simulating, ns.
+    pub sim_wallclock_ns: f64,
+}
+
+impl ServeReport {
+    /// Request latencies, ascending.
+    pub fn latencies_sorted(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.requests.iter().map(RequestRecord::latency_ns).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Nearest-rank latency percentile (`q` in [0, 100]).
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        percentile(&self.latencies_sorted(), q)
+    }
+
+    /// Mean request latency, ns.
+    pub fn mean_latency_ns(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests
+            .iter()
+            .map(RequestRecord::latency_ns)
+            .sum::<f64>()
+            / self.requests.len() as f64
+    }
+
+    /// Aggregate throughput in requests per second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_ns <= 0.0 {
+            return 0.0;
+        }
+        self.requests.len() as f64 / (self.makespan_ns * 1e-9)
+    }
+
+    /// Multi-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "network    : {}\nconfig     : {}\nrequests   : {}\nmakespan   : {}\nthroughput : {:.1} req/s\nlatency    : mean {}  p50 {}  p90 {}  p99 {}\ndram traffic : {}\nenergy       : {}",
+            self.network,
+            self.config,
+            self.requests.len(),
+            fmt_ns(self.makespan_ns),
+            self.throughput_rps(),
+            fmt_ns(self.mean_latency_ns()),
+            fmt_ns(self.latency_percentile(50.0)),
+            fmt_ns(self.latency_percentile(90.0)),
+            fmt_ns(self.latency_percentile(99.0)),
+            fmt_bytes(self.dram_bytes),
+            fmt_pj(self.energy.total_pj()),
+        )
+    }
+
+    /// Machine-readable JSON of the serving report.
+    pub fn to_json(&self) -> String {
+        let mut w = crate::util::JsonWriter::new();
+        w.begin_object();
+        w.key("network").string(&self.network);
+        w.key("config").string(&self.config);
+        w.key("makespan_ns").number(self.makespan_ns);
+        w.key("throughput_rps").number(self.throughput_rps());
+        w.key("latency_ns").begin_object();
+        w.key("mean").number(self.mean_latency_ns());
+        w.key("p50").number(self.latency_percentile(50.0));
+        w.key("p90").number(self.latency_percentile(90.0));
+        w.key("p99").number(self.latency_percentile(99.0));
+        w.end_object();
+        w.key("dram_bytes").uint(self.dram_bytes);
+        w.key("llc_bytes").uint(self.llc_bytes);
+        w.key("energy_total_pj").number(self.energy.total_pj());
+        w.key("requests").begin_array();
+        for r in &self.requests {
+            w.begin_object();
+            w.key("id").uint(r.id as u64);
+            w.key("network").string(&r.network);
+            w.key("arrival_ns").number(r.arrival_ns);
+            w.key("end_ns").number(r.end_ns);
+            w.key("latency_ns").number(r.latency_ns());
+            w.end_object();
+        }
+        w.end_array();
+        w.end_object();
+        w.finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,5 +467,58 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(r.span_ns(), 15.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    fn serve_report() -> ServeReport {
+        let mut r = ServeReport {
+            network: "cnn10".into(),
+            config: "2x nvdla / dma / 1 sw thread(s) / pipelined".into(),
+            makespan_ns: 4e6,
+            ..Default::default()
+        };
+        for i in 0..4 {
+            r.requests.push(RequestRecord {
+                id: i,
+                network: "cnn10".into(),
+                arrival_ns: i as f64 * 1e5,
+                end_ns: 1e6 + i as f64 * 1e6,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn serve_report_metrics() {
+        let r = serve_report();
+        // 4 requests over 4 ms.
+        assert!((r.throughput_rps() - 1000.0).abs() < 1e-9);
+        let lat = r.latencies_sorted();
+        assert_eq!(lat.len(), 4);
+        assert!(lat.windows(2).all(|w| w[0] <= w[1]));
+        assert!(r.latency_percentile(50.0) <= r.latency_percentile(99.0));
+        assert!(r.mean_latency_ns() > 0.0);
+    }
+
+    #[test]
+    fn serve_report_renders_and_exports() {
+        let r = serve_report();
+        let s = r.summary();
+        assert!(s.contains("throughput"));
+        assert!(s.contains("p99"));
+        let j = r.to_json();
+        assert!(j.contains("\"throughput_rps\""));
+        assert!(j.contains("\"p99\""));
+        assert!(j.contains("\"requests\""));
     }
 }

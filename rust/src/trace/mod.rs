@@ -29,6 +29,16 @@ impl Lane {
             Lane::Camera => "camera".to_string(),
         }
     }
+
+    /// Display/sort order: CPU, camera, transfer engines, accelerators.
+    fn sort_key(&self) -> (u8, usize) {
+        match self {
+            Lane::Cpu => (0, 0),
+            Lane::Camera => (1, 0),
+            Lane::Transfer(i) => (2, *i),
+            Lane::Accel(i) => (3, *i),
+        }
+    }
 }
 
 /// What kind of work the event represents.
@@ -132,6 +142,47 @@ impl Timeline {
             .sum()
     }
 
+    /// Distinct lanes seen in the trace, in display order.
+    pub fn lanes(&self) -> Vec<Lane> {
+        let mut lanes: Vec<Lane> = Vec::new();
+        for e in &self.events {
+            if !lanes.contains(&e.lane) {
+                lanes.push(e.lane);
+            }
+        }
+        lanes.sort_by_key(Lane::sort_key);
+        lanes
+    }
+
+    /// Total pairwise-overlap time between events on `lane`, optionally
+    /// restricted to one [`EventKind`]. An exclusively owned resource
+    /// (CPU pool, accelerator datapath) must report 0 — the scheduler
+    /// invariant tests rely on this.
+    pub fn lane_overlap_ns(&self, lane: Lane, kind: Option<EventKind>) -> f64 {
+        let mut iv: Vec<(f64, f64)> = self
+            .events
+            .iter()
+            .filter(|e| {
+                e.lane == lane
+                    && match kind {
+                        None => true,
+                        Some(k) => e.kind == k,
+                    }
+            })
+            .map(|e| (e.t0, e.t1))
+            .collect();
+        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut overlap = 0.0;
+        let mut cur_end = f64::NEG_INFINITY;
+        for (a, b) in iv {
+            if a < cur_end {
+                overlap += cur_end.min(b) - a;
+            }
+            cur_end = cur_end.max(b);
+        }
+        overlap
+    }
+
     /// Mean utilization of `n` accelerator lanes over [t0, t1).
     pub fn accel_utilization(&self, n: usize, t0: f64, t1: f64) -> f64 {
         if t1 <= t0 || n == 0 {
@@ -148,18 +199,7 @@ impl Timeline {
             return "(empty timeline)".to_string();
         }
         let horizon = self.events.iter().map(|e| e.t1).fold(0.0, f64::max);
-        let mut lanes: Vec<Lane> = Vec::new();
-        for e in &self.events {
-            if !lanes.contains(&e.lane) {
-                lanes.push(e.lane);
-            }
-        }
-        lanes.sort_by_key(|l| match l {
-            Lane::Cpu => (0, 0),
-            Lane::Camera => (1, 0),
-            Lane::Transfer(i) => (2, *i),
-            Lane::Accel(i) => (3, *i),
-        });
+        let lanes = self.lanes();
         let mut out = String::new();
         out.push_str(&format!(
             "timeline 0 .. {} ({} events)\n",
@@ -243,6 +283,34 @@ mod tests {
         assert!(g.contains("accel0"));
         assert!(g.contains('#'));
         assert!(g.contains('p'));
+    }
+
+    #[test]
+    fn lanes_enumerated_in_display_order() {
+        let mut t = Timeline::new(true);
+        t.push(0.0, 1.0, Lane::Accel(1), EventKind::Compute, "a");
+        t.push(0.0, 1.0, Lane::Cpu, EventKind::Prep, "b");
+        t.push(0.0, 1.0, Lane::Transfer(0), EventKind::Transfer, "c");
+        t.push(2.0, 3.0, Lane::Accel(0), EventKind::Compute, "d");
+        assert_eq!(
+            t.lanes(),
+            vec![Lane::Cpu, Lane::Transfer(0), Lane::Accel(0), Lane::Accel(1)]
+        );
+    }
+
+    #[test]
+    fn lane_overlap_detects_double_booking() {
+        let mut t = Timeline::new(true);
+        t.push(0.0, 10.0, Lane::Accel(0), EventKind::Compute, "a");
+        t.push(10.0, 20.0, Lane::Accel(0), EventKind::Compute, "b");
+        assert_eq!(t.lane_overlap_ns(Lane::Accel(0), Some(EventKind::Compute)), 0.0);
+        // Book a conflicting interval: 5 ns of overlap.
+        t.push(15.0, 25.0, Lane::Accel(0), EventKind::Compute, "c");
+        let ov = t.lane_overlap_ns(Lane::Accel(0), Some(EventKind::Compute));
+        assert!((ov - 5.0).abs() < 1e-9, "{ov}");
+        // Other lanes/kinds unaffected.
+        assert_eq!(t.lane_overlap_ns(Lane::Accel(1), None), 0.0);
+        assert_eq!(t.lane_overlap_ns(Lane::Accel(0), Some(EventKind::Transfer)), 0.0);
     }
 
     #[test]

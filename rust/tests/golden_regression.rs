@@ -1,0 +1,98 @@
+//! Golden regression locks for the paper's Fig-1 baseline breakdown.
+//!
+//! `cnn10` and `lenet5` under `SocConfig::default()` + default options
+//! are rendered to a fixed-format text file; future scheduler changes
+//! that drift the cycle/energy/traffic totals fail loudly instead of
+//! silently reshaping the paper's headline figure.
+//!
+//! Bootstrap: the golden file is written on the first run (or when
+//! `UPDATE_GOLDEN=1` is set) and compared exactly afterwards. Commit the
+//! generated `tests/golden/fig01_breakdown.txt` to lock the numbers.
+
+use smaug::config::{SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sim::Simulator;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/fig01_breakdown.txt")
+}
+
+/// Render the locked quantities at fixed precision (0.001 ns / exact
+/// bytes): fine enough to catch any real modeling drift, coarse enough to
+/// ignore last-ulp float noise from refactors.
+fn render() -> String {
+    let mut s = String::from("# golden Fig-1 baseline breakdown (SocConfig::default, SimOptions::default)\n");
+    for net in ["cnn10", "lenet5"] {
+        let g = nets::build_network(net).unwrap();
+        let r = Simulator::new(SocConfig::default(), SimOptions::default())
+            .run(&g)
+            .unwrap();
+        let b = &r.breakdown;
+        writeln!(
+            s,
+            "{net} total_ns={:.3} accel_ns={:.3} transfer_ns={:.3} prep_ns={:.3} finalize_ns={:.3} other_ns={:.3} dram_bytes={} llc_bytes={} energy_pj={:.3}",
+            r.total_ns,
+            b.accel_ns,
+            b.transfer_ns,
+            b.prep_ns,
+            b.finalize_ns,
+            b.other_ns,
+            r.dram_bytes,
+            r.llc_bytes,
+            r.energy.total_pj(),
+        )
+        .unwrap();
+        // Per-op end times lock the schedule shape, not just the totals.
+        for op in &r.ops {
+            writeln!(s, "  {net}/{} start_ns={:.3} end_ns={:.3}", op.name, op.start_ns, op.end_ns)
+                .unwrap();
+        }
+    }
+    s
+}
+
+#[test]
+fn fig01_breakdown_locked() {
+    let path = golden_path();
+    let got = render();
+    if std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &got).unwrap();
+        eprintln!(
+            "golden: wrote {} (first run or UPDATE_GOLDEN set) — commit it to lock the numbers",
+            path.display()
+        );
+        // On CI a missing golden must be a hard failure, otherwise a
+        // drifted scheduler would silently re-seed its own baseline on
+        // every fresh checkout.
+        assert!(
+            std::env::var("CI").is_err() || std::env::var("UPDATE_GOLDEN").is_ok(),
+            "golden file {} was missing on CI — generate it locally (cargo test) and commit it",
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        got, want,
+        "Fig-1 breakdown drifted from {} — if intentional, refresh with UPDATE_GOLDEN=1",
+        path.display()
+    );
+}
+
+/// The serial reference and the (degenerate) event engine must agree on
+/// the golden quantities too — run through both entry points.
+#[test]
+fn golden_quantities_identical_across_entry_points() {
+    for net in ["cnn10", "lenet5"] {
+        let g = nets::build_network(net).unwrap();
+        let sim = Simulator::new(SocConfig::default(), SimOptions::default());
+        let a = sim.run(&g).unwrap();
+        let b = sim.run_serial(&g).unwrap();
+        assert_eq!(a.total_ns, b.total_ns, "{net}");
+        assert_eq!(a.dram_bytes, b.dram_bytes, "{net}");
+        assert_eq!(a.energy.total_pj(), b.energy.total_pj(), "{net}");
+    }
+}

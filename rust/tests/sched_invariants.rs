@@ -1,0 +1,415 @@
+//! Scheduler invariants over randomized graphs and configurations
+//! (hand-rolled generators in the style of `sim_invariants.rs` — no
+//! proptest crate is available offline; the deterministic PRNG makes
+//! every case reproducible).
+//!
+//! The event-driven scheduler must, for any workload/configuration:
+//!
+//! 1. never be slower than the strict serial reference schedule, and be
+//!    *identical* to it when pipelining is off;
+//! 2. never double-book an exclusively owned resource (CPU pool,
+//!    accelerator datapath);
+//! 3. move exactly the same traffic and consume exactly the same energy
+//!    as the serial schedule (overlap changes *when*, never *how much*);
+//! 4. be bit-for-bit deterministic for a fixed seed/configuration.
+
+use smaug::config::{InterfaceKind, ServeOptions, SimOptions, SocConfig};
+use smaug::graph::{Activation, Graph, GraphBuilder, Padding};
+use smaug::nets;
+use smaug::sim::Simulator;
+use smaug::stats::{RequestRecord, ServeReport, SimReport};
+use smaug::trace::{EventKind, Lane};
+use smaug::util::Rng;
+
+/// Random DAG of stride-1 SAME convolutions, batch norms, activations and
+/// residual adds (H/W stay constant, so every branch join is shape-legal).
+fn rand_graph(rng: &mut Rng, case: usize) -> Graph {
+    let mut b = GraphBuilder::new(&format!("rand{case}"));
+    let c0 = [3usize, 8, 16][rng.below(3)];
+    let side = 8 + 4 * rng.below(4);
+    let x = b.input("in", 1, side, side, c0);
+    let mut cur = (x, c0);
+    // Tensors with the current spatial shape, available as branch inputs.
+    let mut avail = vec![cur];
+    let layers = 2 + rng.below(5);
+    for li in 0..layers {
+        cur = match rng.below(5) {
+            0 | 1 => {
+                let k = [8usize, 16, 32][rng.below(3)];
+                let r = [1usize, 3][rng.below(2)];
+                let act = if rng.below(2) == 0 {
+                    Some(Activation::Relu)
+                } else {
+                    None
+                };
+                (b.conv(&format!("c{li}"), cur.0, k, r, 1, Padding::Same, act), k)
+            }
+            2 => (b.batch_norm(&format!("bn{li}"), cur.0), cur.1),
+            3 => {
+                // Residual add with an earlier same-shape tensor, if any.
+                let partner = avail
+                    .iter()
+                    .rev()
+                    .find(|&&(tid, c)| c == cur.1 && tid != cur.0)
+                    .copied();
+                match partner {
+                    Some((tid, _)) => {
+                        (b.add(&format!("add{li}"), cur.0, tid, Some(Activation::Relu)), cur.1)
+                    }
+                    None => (b.relu(&format!("r{li}"), cur.0), cur.1),
+                }
+            }
+            _ => (b.relu(&format!("r{li}"), cur.0), cur.1),
+        };
+        avail.push(cur);
+    }
+    let mut g = b.build();
+    g.fuse();
+    g
+}
+
+fn rand_opts(rng: &mut Rng) -> SimOptions {
+    SimOptions {
+        num_accels: [1usize, 2, 3, 8][rng.below(4)],
+        sw_threads: [1usize, 2, 8][rng.below(3)],
+        interface: if rng.below(2) == 0 {
+            InterfaceKind::Dma
+        } else {
+            InterfaceKind::Acp
+        },
+        double_buffer: rng.below(2) == 0,
+        inter_accel_reduction: rng.below(4) == 0,
+        ..SimOptions::default()
+    }
+}
+
+fn run(g: &Graph, opts: &SimOptions) -> SimReport {
+    Simulator::new(SocConfig::default(), opts.clone()).run(g).unwrap()
+}
+
+fn run_serial(g: &Graph, opts: &SimOptions) -> SimReport {
+    Simulator::new(SocConfig::default(), opts.clone())
+        .run_serial(g)
+        .unwrap()
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// Invariant 1a (exactness): with pipelining off, the event engine's
+/// degenerate chain schedule reproduces the serial reference bit-for-bit
+/// — timings, per-op records, traffic, and energy.
+#[test]
+fn event_engine_equals_serial_when_pipelining_off() {
+    let mut rng = Rng::new(0x5EED_1);
+    for case in 0..14 {
+        let g = rand_graph(&mut rng, case);
+        let opts = rand_opts(&mut rng); // pipeline: false
+        let serial = run_serial(&g, &opts);
+        let event = run(&g, &opts);
+        assert_eq!(
+            serial.total_ns, event.total_ns,
+            "case {case}: totals diverge ({opts:?})"
+        );
+        assert_eq!(serial.dram_bytes, event.dram_bytes, "case {case}");
+        assert_eq!(serial.llc_bytes, event.llc_bytes, "case {case}");
+        assert_eq!(serial.ops.len(), event.ops.len(), "case {case}");
+        for (s, e) in serial.ops.iter().zip(&event.ops) {
+            assert_eq!(s.name, e.name, "case {case}: record order");
+            assert_eq!(s.start_ns, e.start_ns, "case {case} op {}", s.name);
+            assert_eq!(s.end_ns, e.end_ns, "case {case} op {}", s.name);
+            assert_eq!(s.accel_ns, e.accel_ns, "case {case} op {}", s.name);
+            assert_eq!(s.prep_ns, e.prep_ns, "case {case} op {}", s.name);
+            assert_eq!(s.finalize_ns, e.finalize_ns, "case {case} op {}", s.name);
+        }
+        assert_eq!(
+            serial.energy.total_pj(),
+            event.energy.total_pj(),
+            "case {case}: energy diverges"
+        );
+    }
+}
+
+/// Invariant 1a on the paper's headline networks with the baseline SoC
+/// (the acceptance criterion's wording: pipelining off, 1 accelerator).
+#[test]
+fn baseline_networks_exact_serial_reproduction() {
+    for net in ["cnn10", "lenet5"] {
+        let g = nets::build_network(net).unwrap();
+        let opts = SimOptions::default();
+        let serial = run_serial(&g, &opts);
+        let event = run(&g, &opts);
+        assert_eq!(serial.total_ns, event.total_ns, "{net}");
+        assert_eq!(serial.dram_bytes, event.dram_bytes, "{net}");
+        assert_eq!(serial.energy.total_pj(), event.energy.total_pj(), "{net}");
+        assert_eq!(
+            serial.breakdown.total_ns(),
+            event.breakdown.total_ns(),
+            "{net}"
+        );
+    }
+}
+
+/// Invariants 1b and 3: pipelining never loses to the serial schedule
+/// (beyond phase-granularity contention noise), and work totals — DRAM
+/// traffic, LLC traffic, CPU spans, energy — are schedule-invariant.
+#[test]
+fn pipelining_dominates_serial_and_conserves_work() {
+    let mut rng = Rng::new(0x5EED_2);
+    for case in 0..14 {
+        let g = rand_graph(&mut rng, case);
+        let base = rand_opts(&mut rng);
+        let serial = run_serial(&g, &base);
+        let piped = run(
+            &g,
+            &SimOptions {
+                pipeline: true,
+                ..base.clone()
+            },
+        );
+        // Contention is resolved at phase granularity, so allow a hair of
+        // scheduling noise — real regressions are orders of magnitude
+        // bigger than 1%.
+        assert!(
+            piped.total_ns <= serial.total_ns * 1.01 + 1.0,
+            "case {case}: pipelined {} > serial {} ({base:?})",
+            piped.total_ns,
+            serial.total_ns
+        );
+        // Conservation: same bytes, same CPU work, same energy.
+        assert_eq!(piped.dram_bytes, serial.dram_bytes, "case {case}");
+        assert_eq!(piped.llc_bytes, serial.llc_bytes, "case {case}");
+        assert!(
+            rel(piped.breakdown.prep_ns, serial.breakdown.prep_ns) < 1e-9,
+            "case {case}: prep work drifted"
+        );
+        assert!(
+            rel(piped.breakdown.finalize_ns, serial.breakdown.finalize_ns) < 1e-9,
+            "case {case}: finalize work drifted"
+        );
+        assert!(
+            rel(piped.breakdown.other_ns, serial.breakdown.other_ns) < 1e-9,
+            "case {case}: dispatch work drifted"
+        );
+        assert!(
+            rel(piped.energy.total_pj(), serial.energy.total_pj()) < 1e-9,
+            "case {case}: energy drifted ({} vs {})",
+            piped.energy.total_pj(),
+            serial.energy.total_pj()
+        );
+    }
+}
+
+/// Invariant 2: exclusively owned resources are never double-booked —
+/// accelerator datapaths and the CPU pool have non-overlapping busy
+/// intervals even under concurrent dispatch.
+#[test]
+fn resource_busy_intervals_never_overlap() {
+    let mut rng = Rng::new(0x5EED_3);
+    let mut checked_events = 0usize;
+    for case in 0..8 {
+        let g = rand_graph(&mut rng, case);
+        let opts = SimOptions {
+            pipeline: true,
+            capture_timeline: true,
+            ..rand_opts(&mut rng)
+        };
+        let soc = SocConfig::default();
+        let mut sched = smaug::sched::Scheduler::new(soc, opts.clone());
+        sched.run(&g);
+        let tl = &sched.timeline;
+        checked_events += tl.events.len();
+        for a in 0..opts.num_accels {
+            let ov = tl.lane_overlap_ns(Lane::Accel(a), Some(EventKind::Compute));
+            assert!(
+                ov <= 1e-6,
+                "case {case}: accel {a} datapath double-booked by {ov} ns ({opts:?})"
+            );
+        }
+        let cpu_ov = tl.lane_overlap_ns(Lane::Cpu, None);
+        assert!(
+            cpu_ov <= 1e-6,
+            "case {case}: CPU pool double-booked by {cpu_ov} ns ({opts:?})"
+        );
+    }
+    assert!(checked_events > 100, "timelines suspiciously empty");
+}
+
+/// Invariant 2 also holds for a multi-request serving workload.
+#[test]
+fn serving_respects_resource_exclusivity() {
+    let g = nets::build_network("lenet5").unwrap();
+    let opts = SimOptions {
+        pipeline: true,
+        num_accels: 4,
+        sw_threads: 4,
+        capture_timeline: true,
+        ..SimOptions::default()
+    };
+    let mut sched = smaug::sched::Scheduler::new(SocConfig::default(), opts);
+    let report = sched.serve(
+        &g,
+        &ServeOptions {
+            requests: 6,
+            arrival_interval_ns: 10_000.0,
+        },
+    );
+    assert_eq!(report.requests.len(), 6);
+    for a in 0..4 {
+        let ov = sched
+            .timeline
+            .lane_overlap_ns(Lane::Accel(a), Some(EventKind::Compute));
+        assert!(ov <= 1e-6, "accel {a} double-booked by {ov} ns");
+    }
+    assert!(sched.timeline.lane_overlap_ns(Lane::Cpu, None) <= 1e-6);
+}
+
+/// Invariant 4: identical seeds/configurations give bit-identical
+/// reports, under both single-run concurrency and serving.
+#[test]
+fn identical_configs_are_bit_deterministic() {
+    let g = nets::build_network("cnn10").unwrap();
+    let opts = SimOptions {
+        pipeline: true,
+        num_accels: 8,
+        sw_threads: 4,
+        double_buffer: true,
+        inter_accel_reduction: true,
+        ..SimOptions::default()
+    };
+    let a = run(&g, &opts);
+    let b = run(&g, &opts);
+    assert_eq!(a.total_ns.to_bits(), b.total_ns.to_bits());
+    assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+    assert_eq!(a.dram_bytes, b.dram_bytes);
+    for (x, y) in a.ops.iter().zip(&b.ops) {
+        assert_eq!(x.end_ns.to_bits(), y.end_ns.to_bits(), "op {}", x.name);
+    }
+
+    let serve = ServeOptions {
+        requests: 5,
+        arrival_interval_ns: 2_500.0,
+    };
+    let run_serve = || -> ServeReport {
+        Simulator::new(SocConfig::default(), opts.clone())
+            .serve(&g, &serve)
+            .unwrap()
+    };
+    let (s1, s2) = (run_serve(), run_serve());
+    for (x, y) in s1.requests.iter().zip(&s2.requests) {
+        assert_eq!(x.end_ns.to_bits(), y.end_ns.to_bits(), "request {}", x.id);
+    }
+    assert_eq!(s1.makespan_ns.to_bits(), s2.makespan_ns.to_bits());
+}
+
+/// Acceptance criterion: on ResNet-50 with 8 accelerators, the
+/// event-driven pipeline beats the serial schedule by at least 1.3x —
+/// the Fig-12-class multi-accelerator win the serial loop cannot show.
+#[test]
+fn resnet50_eight_accel_pipeline_speedup() {
+    let g = nets::build_network("resnet50").unwrap();
+    let opts = SimOptions {
+        num_accels: 8,
+        ..SimOptions::default()
+    };
+    let serial = run_serial(&g, &opts);
+    let piped = run(
+        &g,
+        &SimOptions {
+            pipeline: true,
+            ..opts
+        },
+    );
+    let speedup = serial.total_ns / piped.total_ns;
+    assert!(
+        speedup >= 1.3,
+        "pipeline speedup {speedup:.2}x < 1.3x (serial {} piped {})",
+        serial.total_ns,
+        piped.total_ns
+    );
+}
+
+/// Serving sanity: percentiles are ordered, throughput is positive, and
+/// with generous inter-arrival gaps every request sees an uncontended
+/// SoC (latency equals the single-request latency).
+#[test]
+fn serving_latency_percentiles_behave() {
+    let g = nets::build_network("cnn10").unwrap();
+    let opts = SimOptions {
+        pipeline: true,
+        num_accels: 4,
+        sw_threads: 4,
+        ..SimOptions::default()
+    };
+    let sim = Simulator::new(SocConfig::default(), opts.clone());
+
+    // Burst arrival: 8 requests at t=0 contend.
+    let burst = sim
+        .serve(
+            &g,
+            &ServeOptions {
+                requests: 8,
+                arrival_interval_ns: 0.0,
+            },
+        )
+        .unwrap();
+    assert_eq!(burst.requests.len(), 8);
+    let (p50, p90, p99) = (
+        burst.latency_percentile(50.0),
+        burst.latency_percentile(90.0),
+        burst.latency_percentile(99.0),
+    );
+    assert!(p50 > 0.0 && p50 <= p90 && p90 <= p99);
+    assert!(burst.throughput_rps() > 0.0);
+
+    // Widely spaced arrivals: no queueing, so every latency matches one
+    // uncontended run.
+    let single = sim.run(&g).unwrap().total_ns;
+    let spaced = sim
+        .serve(
+            &g,
+            &ServeOptions {
+                requests: 4,
+                arrival_interval_ns: single * 10.0,
+            },
+        )
+        .unwrap();
+    for r in &spaced.requests {
+        assert!(
+            rel(r.latency_ns(), single) < 1e-9,
+            "request {}: {} vs single {}",
+            r.id,
+            r.latency_ns(),
+            single
+        );
+    }
+    // Contention makes the burst's worst case at least as bad as the
+    // uncontended latency.
+    let burst_max = burst
+        .requests
+        .iter()
+        .map(RequestRecord::latency_ns)
+        .fold(0.0, f64::max);
+    assert!(burst_max >= single * 0.999);
+}
+
+/// Mixed-network serving shares one SoC between different graphs.
+#[test]
+fn mixed_network_serving_runs() {
+    let a = nets::build_network("lenet5").unwrap();
+    let b = nets::build_network("minerva").unwrap();
+    let opts = SimOptions {
+        pipeline: true,
+        num_accels: 2,
+        ..SimOptions::default()
+    };
+    let mut sched = smaug::sched::Scheduler::new(SocConfig::default(), opts);
+    let jobs: Vec<(f64, &smaug::graph::Graph)> =
+        vec![(0.0, &a), (0.0, &b), (5_000.0, &a), (5_000.0, &b)];
+    let report = sched.serve_workload(&jobs);
+    assert_eq!(report.requests.len(), 4);
+    assert_eq!(report.requests[1].network, "minerva");
+    assert!(report.requests.iter().all(|r| r.latency_ns() > 0.0));
+    assert!(report.makespan_ns >= report.requests[3].end_ns - 1e-9);
+}
