@@ -7,74 +7,62 @@
 //!
 //! Run: `cargo run --release --example camera_pipeline`
 
+use smaug::api::{Scenario, Session, Soc};
 use smaug::camera::{self, RawFrame};
-use smaug::config::{AccelKind, SimOptions, SocConfig};
-use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::config::SocConfig;
 use smaug::trace::Timeline;
 use smaug::util::fmt_ns;
 
-fn dnn_latency_ns(rows: usize, cols: usize) -> anyhow::Result<f64> {
-    let mut soc = SocConfig::default();
-    soc.systolic_rows = rows;
-    soc.systolic_cols = cols;
-    let opts = SimOptions {
-        accel_kind: AccelKind::Systolic,
-        ..SimOptions::default()
-    };
-    let g = nets::build_network("cnn10")?;
-    Ok(Simulator::new(soc, opts).run(&g)?.total_ns)
+fn frame_report(pe: (usize, usize), fps: f64) -> anyhow::Result<smaug::api::Report> {
+    Session::on(Soc::default())
+        .scenario(Scenario::Camera { fps, pe })
+        .run()
 }
 
 fn main() -> anyhow::Result<()> {
-    let budget_ms = 1000.0 / 30.0;
-    let soc = SocConfig::default();
-
     // --- Fig 19: one frame through the full pipeline, with trace.
     println!("=== camera vision pipeline, one 720p frame (Fig 19) ===");
     let raw = RawFrame::synthetic(1280, 720, 42);
     let mut tl = Timeline::new(true);
-    let (rgb, stages) = camera::run_pipeline(&raw, &soc, 1, Some(&mut tl));
-    let cam_ns = camera::pipeline_ns(&stages);
-    for s in &stages {
-        println!("  {:<14} {:>12}", s.name, fmt_ns(s.ns));
-    }
+    let (rgb, _stages) = camera::run_pipeline(&raw, &SocConfig::default(), 1, Some(&mut tl));
     // Downsample to the DNN input (functional).
     let small = camera::downsample(&rgb, 32, 32);
     assert_eq!(small.data.len(), 32 * 32 * 3);
-    let dnn_ns = dnn_latency_ns(8, 8)?;
+
+    let report = frame_report((8, 8), 30.0)?;
+    let cam = report.camera.as_ref().expect("camera scenario");
+    for (name, ns) in &cam.stages {
+        println!("  {:<14} {:>12}", name, fmt_ns(*ns));
+    }
     println!(
         "  camera {} + DNN {} = frame {} (budget {:.1} ms, slack {:.1} ms)",
-        fmt_ns(cam_ns),
-        fmt_ns(dnn_ns),
-        fmt_ns(cam_ns + dnn_ns),
-        budget_ms,
-        budget_ms - (cam_ns + dnn_ns) / 1e6
+        fmt_ns(cam.camera_ns),
+        fmt_ns(cam.dnn_ns),
+        fmt_ns(cam.frame_ns),
+        cam.budget_ms,
+        cam.budget_ms - cam.frame_ns / 1e6
     );
     println!("\n{}", tl.ascii_gantt(90));
 
-    // --- Fig 20: PE-array sweep.
+    // --- Fig 20: PE-array sweep, one simulation per config; the frame
+    // time is deterministic, so both FPS verdicts derive from it.
     println!("=== systolic PE sweep (Fig 20) ===");
-    println!(
-        "{:<8} {:>12} {:>12} {:>10}",
-        "PEs", "DNN", "frame", "30 FPS?"
-    );
-    let budget60_ms = 1000.0 / 60.0;
     println!(
         "{:<8} {:>12} {:>12} {:>10} {:>10}",
         "PEs", "DNN", "frame", "30 FPS?", "60 FPS?"
     );
-    for (r, c) in [(8usize, 8usize), (4, 8), (4, 4), (2, 4), (2, 2), (1, 2), (1, 1)] {
-        let dnn = dnn_latency_ns(r, c)?;
-        let frame = cam_ns + dnn;
-        let verdict = |b: f64| if frame / 1e6 <= b { "meets" } else { "VIOLATES" };
+    for pe in [(8usize, 8usize), (4, 8), (4, 4), (2, 4), (2, 2), (1, 2), (1, 1)] {
+        let r = frame_report(pe, 30.0)?;
+        let c = r.camera.as_ref().unwrap();
+        let frame_ms = c.frame_ns / 1e6;
+        let verdict = |budget_ms: f64| if frame_ms <= budget_ms { "meets" } else { "VIOLATES" };
         println!(
             "{:<8} {:>12} {:>12} {:>10} {:>10}",
-            format!("{r}x{c}"),
-            fmt_ns(dnn),
-            fmt_ns(frame),
-            verdict(budget_ms),
-            verdict(budget60_ms)
+            format!("{}x{}", pe.0, pe.1),
+            fmt_ns(c.dnn_ns),
+            fmt_ns(c.frame_ns),
+            verdict(1000.0 / 30.0),
+            verdict(1000.0 / 60.0)
         );
     }
     println!(

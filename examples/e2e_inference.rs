@@ -10,49 +10,47 @@
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_inference`
 
-use smaug::config::{FunctionalMode, SimOptions, SocConfig};
+use smaug::api::{Scenario, Session, Soc};
+use smaug::config::FunctionalMode;
 use smaug::nets;
-use smaug::sim::Simulator;
 use smaug::util::fmt_ns;
 
 fn main() -> anyhow::Result<()> {
     for (net, expect_classes) in [("lenet5", 10), ("cnn10", 10)] {
         println!("=== {net} — execution-driven inference through AOT artifacts ===");
-        let graph = nets::build_network(net)?;
-        println!("{}", graph.summary());
+        println!("{}", nets::build_network(net)?.summary());
 
-        let opts = SimOptions {
-            functional: FunctionalMode::Pjrt,
-            ..SimOptions::default()
-        };
-        let sim = Simulator::new(SocConfig::default(), opts);
         let t0 = std::time::Instant::now();
-        let run = sim.run_functional(&graph, None)?;
+        let report = Session::on(Soc::default())
+            .network(net)
+            .scenario(Scenario::Inference)
+            .functional(FunctionalMode::Pjrt)
+            .run()?;
         let wall = t0.elapsed();
 
-        println!("{}", run.report.breakdown_table());
+        println!("{}", report.summary());
+        let f = report.functional.as_ref().expect("functional run requested");
         println!(
             "functional backend : {} (AOT Pallas artifacts via PJRT)",
-            run.backend
+            f.backend
         );
         println!(
             "composition check  : max |tiled - direct| = {:.3e}  {}",
-            run.max_divergence,
-            if run.max_divergence < 1e-3 { "OK" } else { "FAIL" }
+            f.max_divergence,
+            if f.max_divergence < 1e-3 { "OK" } else { "FAIL" }
         );
-        assert!(run.max_divergence < 1e-3, "tiled execution diverged");
-        assert_eq!(run.output.data.len(), expect_classes);
+        assert!(f.max_divergence < 1e-3, "tiled execution diverged");
+        assert_eq!(f.output.len(), expect_classes, "classifier head shape");
         // A classification head output: report the argmax like a real app.
-        let (argmax, max) = run
+        let (argmax, max) = f
             .output
-            .data
             .iter()
             .enumerate()
             .fold((0, f32::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
         println!("predicted class    : {argmax} (logit {max:.4})");
         println!(
             "simulated latency  : {}   host wall-clock: {:.2?}\n",
-            fmt_ns(run.report.total_ns),
+            fmt_ns(report.total_ns),
             wall
         );
     }

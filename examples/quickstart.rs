@@ -1,12 +1,12 @@
 //! Quickstart: build a small network with the declarative graph builder
 //! (the Rust mirror of SMAUG's Python frontend, paper Fig 2), simulate a
-//! forward pass on the baseline SoC, and print the latency breakdown.
+//! forward pass through the scenario API, and print the unified report.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use smaug::config::{SimOptions, SocConfig};
+use smaug::api::{Scenario, Session, Soc};
+use smaug::config::{AccelKind, InterfaceKind};
 use smaug::graph::{Activation, GraphBuilder, Padding};
-use smaug::sim::Simulator;
 
 fn main() -> anyhow::Result<()> {
     // The paper's Fig-2 example: a residual unit.
@@ -20,14 +20,19 @@ fn main() -> anyhow::Result<()> {
     println!("{}\n", graph.summary());
 
     // Baseline SoC (paper Table II): 1 NVDLA-style engine, DMA, 1 thread.
-    let sim = Simulator::new(SocConfig::default(), SimOptions::default());
-    let report = sim.run(&graph)?;
-    println!("{}\n", report.breakdown_table());
+    let report = Session::on(Soc::default())
+        .graph(graph.clone())
+        .scenario(Scenario::Inference)
+        .run()?;
+    println!("{}\n", report.summary());
     println!("{}", report.per_op_table());
 
     // The paper's optimized configuration: ACP + 8 accels + 8 threads.
-    let fast = Simulator::new(SocConfig::default(), SimOptions::optimized());
-    let opt = fast.run(&graph)?;
+    let opt = Session::on(Soc::builder().accels(AccelKind::Nvdla, 8).build())
+        .graph(graph)
+        .interface(InterfaceKind::Acp)
+        .threads(8)
+        .run()?;
     println!(
         "optimized (ACP + 8 accels + 8 threads): {} ({:.2}x speedup)",
         smaug::util::fmt_ns(opt.total_ns),

@@ -1,40 +1,52 @@
 //! Serving mode: N concurrent inference requests share one SoC on the
 //! event-driven scheduler — per-request latency percentiles + aggregate
 //! throughput, and the multi-accelerator scaling the serial per-op loop
-//! cannot express.
+//! cannot express. Includes a heterogeneous pool (NVDLA + systolic
+//! side by side) composed with the `SocBuilder`.
 //!
 //! Run: `cargo run --release --example serving`
 
-use smaug::config::{ServeOptions, SimOptions, SocConfig};
-use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::api::{Scenario, Session, Soc};
+use smaug::config::AccelKind;
 use smaug::util::fmt_ns;
 
 fn main() -> anyhow::Result<()> {
-    let graph = nets::build_network("vgg16")?;
-    let serve = ServeOptions {
+    let scenario = Scenario::Serving {
         requests: 8,
         arrival_interval_ns: 100_000.0, // one request every 100 us
     };
 
     let mut baseline_rps = None;
     for accels in [1usize, 8] {
-        let opts = SimOptions {
-            num_accels: accels,
-            sw_threads: 8,
-            pipeline: true,
-            ..SimOptions::default()
-        };
-        let report = Simulator::new(SocConfig::default(), opts).serve(&graph, &serve)?;
+        let soc = Soc::builder().accels(AccelKind::Nvdla, accels).build();
+        let report = Session::on(soc)
+            .network("vgg16")
+            .threads(8)
+            .scenario(scenario.clone())
+            .run()?;
         println!("=== {accels} accelerator(s) ===");
         println!("{}", report.summary());
-        let rps = report.throughput_rps();
+        let rps = report.throughput_rps.unwrap_or(0.0);
         let base = *baseline_rps.get_or_insert(rps);
         println!(
             "p99 {}  |  {:.2}x throughput vs 1 accel\n",
-            fmt_ns(report.latency_percentile(99.0)),
+            fmt_ns(report.latency.map(|l| l.p99_ns).unwrap_or(0.0)),
             rps / base
         );
     }
+
+    // Heterogeneous pool: two NVDLA engines plus two systolic arrays in
+    // one SoC, all serving the same request stream.
+    let soc = Soc::builder()
+        .accels(AccelKind::Nvdla, 2)
+        .accels(AccelKind::Systolic, 2)
+        .build();
+    let report = Session::on(soc)
+        .network("vgg16")
+        .threads(8)
+        .scenario(scenario)
+        .run()?;
+    println!("=== heterogeneous pool (2x nvdla + 2x systolic) ===");
+    println!("{}", report.summary());
     Ok(())
 }

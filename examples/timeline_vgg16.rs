@@ -9,19 +9,17 @@
 //!
 //! Run: `cargo run --release --example timeline_vgg16`
 
-use smaug::config::{SimOptions, SocConfig};
-use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::api::{Scenario, Session, Soc};
+use smaug::config::AccelKind;
 use smaug::util::fmt_ns;
 
 fn main() -> anyhow::Result<()> {
-    let graph = nets::build_network("vgg16")?;
-    let opts = SimOptions {
-        num_accels: 8,
-        ..SimOptions::default()
-    };
-    let sim = Simulator::new(SocConfig::default(), opts);
-    let (report, timeline) = sim.run_with_timeline(&graph)?;
+    let report = Session::on(Soc::builder().accels(AccelKind::Nvdla, 8).build())
+        .network("vgg16")
+        .scenario(Scenario::Inference)
+        .capture_timeline(true)
+        .run()?;
+    let timeline = report.timeline.as_ref().expect("timeline was captured");
 
     println!("VGG16, 8 accelerators, DMA, 1 sw thread\n");
     println!("{}", timeline.ascii_gantt(110));

@@ -1,16 +1,19 @@
 //! Ablation bench: the two scheduler extensions DESIGN.md calls out —
 //! double buffering (the NVDLA convolution buffer the paper explicitly
 //! does not model) and inter-accelerator reduction (the paper's §IV-B
-//! future work) — individually and combined, across configurations.
+//! future work) — individually and combined, across configurations,
+//! driven through the scenario API.
 
-use smaug::config::{SimOptions, SocConfig};
-use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::api::{Session, Soc};
+use smaug::config::AccelKind;
 use smaug::util::fmt_ns;
 
-fn run(net: &str, opts: SimOptions) -> anyhow::Result<(f64, u64)> {
-    let g = nets::build_network(net)?;
-    let r = Simulator::new(SocConfig::default(), opts).run(&g)?;
+fn run(net: &str, accels: usize, dbuf: bool, inter: bool) -> anyhow::Result<(f64, u64)> {
+    let r = Session::on(Soc::builder().accels(AccelKind::Nvdla, accels).build())
+        .network(net)
+        .double_buffer(dbuf)
+        .inter_accel_reduction(inter)
+        .run()?;
     Ok((r.total_ns, r.dram_bytes))
 }
 
@@ -22,33 +25,10 @@ fn main() -> anyhow::Result<()> {
     );
     for net in ["cnn10", "vgg16", "elu24"] {
         for accels in [1usize, 8] {
-            let base = SimOptions {
-                num_accels: accels,
-                ..SimOptions::default()
-            };
-            let (t0, _) = run(net, base.clone())?;
-            let (t1, _) = run(
-                net,
-                SimOptions {
-                    double_buffer: true,
-                    ..base.clone()
-                },
-            )?;
-            let (t2, b2) = run(
-                net,
-                SimOptions {
-                    inter_accel_reduction: true,
-                    ..base.clone()
-                },
-            )?;
-            let (t3, _) = run(
-                net,
-                SimOptions {
-                    double_buffer: true,
-                    inter_accel_reduction: true,
-                    ..base.clone()
-                },
-            )?;
+            let (t0, _) = run(net, accels, false, false)?;
+            let (t1, _) = run(net, accels, true, false)?;
+            let (t2, b2) = run(net, accels, false, true)?;
+            let (t3, _) = run(net, accels, true, true)?;
             println!(
                 "{:<10} {:>3} {:>14} {:>13}{} {:>13}{} {:>13}{}",
                 net,

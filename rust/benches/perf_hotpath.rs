@@ -1,11 +1,13 @@
 //! Performance microbenchmarks of the simulator's own hot paths (the
 //! EXPERIMENTS.md SS-Perf targets): tiling-plan construction, bandwidth-
-//! timeline requests, end-to-end simulation throughput.
+//! timeline requests, end-to-end simulation throughput. Drives the
+//! scheduler directly (not the Session front door) so graph construction
+//! and report assembly stay out of the measured loop.
 
-use smaug::config::{SimOptions, SocConfig};
+use smaug::config::{AccelKind, SimOptions, SocConfig};
 use smaug::mem::BandwidthTimeline;
 use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::sched::Scheduler;
 use smaug::tiling::{plan_conv, ConvParams};
 use std::time::Instant;
 
@@ -47,13 +49,28 @@ fn main() {
         let g = nets::build_network(net).unwrap();
         let iters = if net == "resnet50" { 3 } else { 20 };
         bench(&format!("simulate {net} (baseline)"), iters, || {
-            let sim = Simulator::new(SocConfig::default(), SimOptions::default());
-            std::hint::black_box(sim.run(&g).unwrap());
+            let mut sched = Scheduler::new(SocConfig::default(), SimOptions::default());
+            std::hint::black_box(sched.run(&g));
         });
     }
     let g = nets::build_network("vgg16").unwrap();
     bench("simulate vgg16 (8 accel, acp, 8thr)", 10, || {
-        let sim = Simulator::new(SocConfig::default(), SimOptions::optimized());
-        std::hint::black_box(sim.run(&g).unwrap());
+        let mut sched = Scheduler::new(SocConfig::default(), SimOptions::optimized());
+        std::hint::black_box(sched.run(&g));
+    });
+    // A heterogeneous pool exercises the per-instance model dispatch.
+    let hetero = SimOptions {
+        accel_pool: vec![
+            AccelKind::Nvdla,
+            AccelKind::Systolic,
+            AccelKind::Nvdla,
+            AccelKind::Systolic,
+        ],
+        pipeline: true,
+        ..SimOptions::default()
+    };
+    bench("simulate vgg16 (hetero 4-pool, piped)", 10, || {
+        let mut sched = Scheduler::new(SocConfig::default(), hetero.clone());
+        std::hint::black_box(sched.run(&g));
     });
 }

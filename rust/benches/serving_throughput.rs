@@ -1,11 +1,11 @@
 //! Serving-throughput bench: requests/sec and latency percentiles vs the
 //! accelerator pool size (1, 2, 4, 8), on the event-driven scheduler with
-//! pipelining on. Emits `BENCH_serving.json` at the repository root so
-//! the serving-performance trajectory is tracked from this change on.
+//! pipelining on, driven through the scenario API. Emits
+//! `BENCH_serving.json` at the repository root so the serving-performance
+//! trajectory is tracked from this change on.
 
-use smaug::config::{ServeOptions, SimOptions, SocConfig};
-use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::api::{Scenario, Session, Soc};
+use smaug::config::AccelKind;
 use smaug::util::{fmt_ns, JsonWriter};
 use std::path::Path;
 
@@ -23,41 +23,34 @@ fn main() -> anyhow::Result<()> {
     w.key("network").string(net);
     w.key("requests").uint(requests as u64);
     w.key("rows").begin_array();
-    let graph = nets::build_network(net)?;
     for &accels in &[1usize, 2, 4, 8] {
-        let opts = SimOptions {
-            num_accels: accels,
-            sw_threads: 8,
-            pipeline: true,
-            ..SimOptions::default()
-        };
-        let serve = ServeOptions {
-            requests,
-            arrival_interval_ns: 0.0,
-        };
-        let r = Simulator::new(SocConfig::default(), opts).serve(&graph, &serve)?;
-        let (p50, p90, p99) = (
-            r.latency_percentile(50.0),
-            r.latency_percentile(90.0),
-            r.latency_percentile(99.0),
-        );
+        let r = Session::on(Soc::builder().accels(AccelKind::Nvdla, accels).build())
+            .network(net)
+            .threads(8)
+            .scenario(Scenario::Serving {
+                requests,
+                arrival_interval_ns: 0.0,
+            })
+            .run()?;
+        let l = r.latency.expect("serving reports latency stats");
+        let rps = r.throughput_rps.unwrap_or(0.0);
         println!(
             "{:<7} {:>12.1} {:>12} {:>12} {:>12} {:>12}",
             accels,
-            r.throughput_rps(),
-            fmt_ns(p50),
-            fmt_ns(p90),
-            fmt_ns(p99),
-            fmt_ns(r.makespan_ns)
+            rps,
+            fmt_ns(l.p50_ns),
+            fmt_ns(l.p90_ns),
+            fmt_ns(l.p99_ns),
+            fmt_ns(r.total_ns)
         );
         w.begin_object();
         w.key("accels").uint(accels as u64);
-        w.key("throughput_rps").number(r.throughput_rps());
-        w.key("p50_ns").number(p50);
-        w.key("p90_ns").number(p90);
-        w.key("p99_ns").number(p99);
-        w.key("mean_ns").number(r.mean_latency_ns());
-        w.key("makespan_ns").number(r.makespan_ns);
+        w.key("throughput_rps").number(rps);
+        w.key("p50_ns").number(l.p50_ns);
+        w.key("p90_ns").number(l.p90_ns);
+        w.key("p99_ns").number(l.p99_ns);
+        w.key("mean_ns").number(l.mean_ns);
+        w.key("makespan_ns").number(r.total_ns);
         w.key("dram_bytes").uint(r.dram_bytes);
         w.end_object();
     }

@@ -1,11 +1,10 @@
 //! Training-step bench (extension — the paper plans training support):
 //! simulates one SGD training step (forward + dX/dW backward GEMMs +
-//! parameter updates) vs a forward-only pass, baseline and optimized.
+//! parameter updates) vs a forward-only pass, baseline and optimized,
+//! through the `Scenario::Training` variant.
 
-use smaug::config::{SimOptions, SocConfig};
-use smaug::graph::training_step;
-use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::api::{Scenario, Session, Soc};
+use smaug::config::{AccelKind, InterfaceKind};
 use smaug::util::fmt_ns;
 
 fn main() -> anyhow::Result<()> {
@@ -15,14 +14,23 @@ fn main() -> anyhow::Result<()> {
         "net", "inference", "train step", "ratio", "train(optimized)"
     );
     for net in ["minerva", "lenet5", "cnn10", "vgg16", "elu16"] {
-        let fwd = nets::build_network(net)?;
-        let train = training_step(&fwd);
-        let run = |g, o| -> anyhow::Result<f64> {
-            Ok(Simulator::new(SocConfig::default(), o).run(g)?.total_ns)
-        };
-        let infer = run(&fwd, SimOptions::default())?;
-        let step = run(&train, SimOptions::default())?;
-        let opt = run(&train, SimOptions::optimized())?;
+        let infer = Session::on(Soc::default())
+            .network(net)
+            .scenario(Scenario::Inference)
+            .run()?
+            .total_ns;
+        let step = Session::on(Soc::default())
+            .network(net)
+            .scenario(Scenario::Training)
+            .run()?
+            .total_ns;
+        let opt = Session::on(Soc::builder().accels(AccelKind::Nvdla, 8).build())
+            .network(net)
+            .interface(InterfaceKind::Acp)
+            .threads(8)
+            .scenario(Scenario::Training)
+            .run()?
+            .total_ns;
         println!(
             "{:<10} {:>14} {:>14} {:>6.2}x {:>16}",
             net,

@@ -65,6 +65,12 @@ pub fn build_model(kind: AccelKind, soc: &SocConfig) -> Box<dyn AccelModel> {
     }
 }
 
+/// Instantiate one timing model per pool slot — the heterogeneous
+/// accelerator pool the scheduler multiplexes command queues over.
+pub fn build_pool(kinds: &[AccelKind], soc: &SocConfig) -> Vec<Box<dyn AccelModel>> {
+    kinds.iter().map(|&k| build_model(k, soc)).collect()
+}
+
 #[cfg(test)]
 pub(crate) mod test_util {
     use crate::tiling::{GemmDims, Region, WorkItem};

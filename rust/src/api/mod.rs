@@ -1,0 +1,50 @@
+//! The scenario-centric public API — the crate's single entry point.
+//!
+//! Three ideas, one front door:
+//!
+//! * [`Soc`] / [`SocBuilder`] — compose the hardware once: Table-II
+//!   microarchitectural parameters plus a (possibly heterogeneous)
+//!   accelerator pool, one [`crate::config::AccelKind`] per instance.
+//! * [`Scenario`] — pick the workload: single-batch [`Scenario::Inference`],
+//!   multi-request [`Scenario::Serving`], an axis [`Scenario::Sweep`], the
+//!   paper-§V [`Scenario::Camera`] pipeline, or a [`Scenario::Training`]
+//!   step. New studies are new variants, not new entry points.
+//! * [`Report`] — every scenario returns the same unified report: timing
+//!   breakdown, per-op stats, traffic, energy, optional latency
+//!   percentiles / sweep rows / camera stages / timeline, serialized by
+//!   one versioned JSON schema ([`REPORT_SCHEMA`]).
+//!
+//! ```no_run
+//! use smaug::api::{Scenario, Session, Soc};
+//! use smaug::config::AccelKind;
+//!
+//! // A heterogeneous SoC: two NVDLA-style engines + one systolic array.
+//! let soc = Soc::builder()
+//!     .accel(AccelKind::Nvdla)
+//!     .accel(AccelKind::Nvdla)
+//!     .accel(AccelKind::Systolic)
+//!     .build();
+//!
+//! // Serve 8 concurrent ResNet50 requests on it.
+//! let report = Session::on(soc)
+//!     .network("resnet50")
+//!     .threads(8)
+//!     .scenario(Scenario::Serving { requests: 8, arrival_interval_ns: 50_000.0 })
+//!     .run()
+//!     .unwrap();
+//! println!("{}", report.summary());
+//! println!("p99 = {} ns", report.latency.unwrap().p99_ns);
+//! println!("{}", report.to_json());
+//! ```
+
+mod report;
+mod scenario;
+mod session;
+mod soc;
+
+pub use report::{
+    CameraSummary, FunctionalSummary, LatencyStats, Report, SweepRow, REPORT_SCHEMA,
+};
+pub use scenario::{Scenario, SweepAxis};
+pub use session::{quick_run, Session};
+pub use soc::{Soc, SocBuilder};

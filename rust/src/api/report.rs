@@ -1,0 +1,542 @@
+//! The unified report: every [`crate::api::Scenario`] produces this one
+//! structure, and one serializer emits it as versioned JSON
+//! ([`REPORT_SCHEMA`]). Sections that a scenario does not populate are
+//! present-but-null (objects) or present-but-empty (arrays), so the JSON
+//! key set is identical across scenarios — tooling can rely on it.
+
+use crate::energy::EnergyAccount;
+use crate::stats::{Breakdown, OpRecord, RequestRecord, ServeReport, SimReport};
+use crate::trace::Timeline;
+use crate::util::{fmt_bytes, fmt_ns, fmt_pj, JsonWriter};
+
+/// JSON schema identifier emitted in every report. Bump the `/vN` suffix
+/// on any breaking change to field names or units.
+pub const REPORT_SCHEMA: &str = "smaug.report/v1";
+
+/// Request-latency distribution (nearest-rank percentiles), ns.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyStats {
+    /// Mean request latency.
+    pub mean_ns: f64,
+    /// 50th percentile.
+    pub p50_ns: f64,
+    /// 90th percentile.
+    pub p90_ns: f64,
+    /// 99th percentile.
+    pub p99_ns: f64,
+    /// Worst request.
+    pub max_ns: f64,
+}
+
+impl LatencyStats {
+    fn from_serve(r: &ServeReport) -> Self {
+        let sorted = r.latencies_sorted();
+        Self {
+            mean_ns: r.mean_latency_ns(),
+            p50_ns: crate::stats::percentile(&sorted, 50.0),
+            p90_ns: crate::stats::percentile(&sorted, 90.0),
+            p99_ns: crate::stats::percentile(&sorted, 99.0),
+            max_ns: sorted.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+/// One point of a [`crate::api::Scenario::Sweep`].
+#[derive(Debug, Clone, Default)]
+pub struct SweepRow {
+    /// The axis value simulated (accelerator count, thread count, ...).
+    pub value: usize,
+    /// End-to-end latency at this value, ns.
+    pub total_ns: f64,
+    /// Accelerator-compute component, ns.
+    pub accel_ns: f64,
+    /// Data-transfer component, ns.
+    pub transfer_ns: f64,
+    /// CPU software-stack component, ns.
+    pub cpu_ns: f64,
+    /// DRAM traffic, bytes.
+    pub dram_bytes: u64,
+    /// Speedup vs the sweep's first value.
+    pub speedup: f64,
+}
+
+/// Camera-pipeline section (paper §V).
+#[derive(Debug, Clone, Default)]
+pub struct CameraSummary {
+    /// Per-stage CPU time: (stage name, ns).
+    pub stages: Vec<(String, f64)>,
+    /// Total camera-pipeline time, ns.
+    pub camera_ns: f64,
+    /// DNN latency on the systolic array, ns.
+    pub dnn_ns: f64,
+    /// Frame time = camera + DNN, ns.
+    pub frame_ns: f64,
+    /// Frame-time budget, ms (1000/fps).
+    pub budget_ms: f64,
+    /// Whether the frame fits the budget.
+    pub meets_budget: bool,
+}
+
+/// Functional-execution section (execution-driven runs).
+#[derive(Debug, Clone, Default)]
+pub struct FunctionalSummary {
+    /// GEMM backend that executed the tiles (`native` or `pjrt`).
+    pub backend: String,
+    /// Max |tiled - direct| across all op outputs.
+    pub max_divergence: f32,
+    /// Final network output (flat), e.g. the classification logits.
+    pub output: Vec<f32>,
+}
+
+/// The one report every scenario returns: timing breakdown, per-op
+/// stats, traffic, energy, optional latency percentiles / sweep rows /
+/// camera stages / timeline.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Scenario tag (`inference`, `serving`, `sweep`, `camera`,
+    /// `training`).
+    pub scenario: String,
+    /// Network simulated (first network for mixed serving workloads).
+    pub network: String,
+    /// Human-readable configuration string.
+    pub config: String,
+    /// Accelerator-pool composition, one display name per instance.
+    pub accel_pool: Vec<String>,
+    /// Headline latency, ns: end-to-end forward-pass latency (inference /
+    /// training / camera frame), serving makespan, or the sweep baseline.
+    pub total_ns: f64,
+    /// Component breakdown (summed over all requests in serving mode).
+    pub breakdown: Breakdown,
+    /// Per-operator records (empty in serving/sweep modes).
+    pub ops: Vec<OpRecord>,
+    /// Total DRAM traffic, bytes.
+    pub dram_bytes: u64,
+    /// Total LLC traffic, bytes.
+    pub llc_bytes: u64,
+    /// Mean DRAM bandwidth utilization over the run.
+    pub dram_utilization: f64,
+    /// Mean DRAM bandwidth utilization during prep/finalize phases.
+    pub sw_phase_dram_utilization: f64,
+    /// Energy account, pJ.
+    pub energy: EnergyAccount,
+    /// Aggregate throughput, requests/s (serving only).
+    pub throughput_rps: Option<f64>,
+    /// Request-latency percentiles (serving only).
+    pub latency: Option<LatencyStats>,
+    /// Per-request records (serving only).
+    pub requests: Vec<RequestRecord>,
+    /// Sweep axis name (sweep only).
+    pub sweep_axis: Option<String>,
+    /// Per-value sweep rows (sweep only).
+    pub sweep: Vec<SweepRow>,
+    /// Camera-pipeline section (camera only).
+    pub camera: Option<CameraSummary>,
+    /// Functional-execution section (execution-driven runs).
+    pub functional: Option<FunctionalSummary>,
+    /// Captured event timeline (when capture was requested).
+    pub timeline: Option<Timeline>,
+    /// Host wall-clock spent simulating, ns.
+    pub sim_wallclock_ns: f64,
+}
+
+impl Report {
+    /// Build the unified report from a single-pass timing report.
+    pub(crate) fn from_sim(
+        scenario: &str,
+        r: SimReport,
+        accel_pool: Vec<String>,
+    ) -> Self {
+        Self {
+            scenario: scenario.to_string(),
+            network: r.network,
+            config: r.config,
+            accel_pool,
+            total_ns: r.total_ns,
+            breakdown: r.breakdown,
+            ops: r.ops,
+            dram_bytes: r.dram_bytes,
+            llc_bytes: r.llc_bytes,
+            dram_utilization: r.dram_utilization,
+            sw_phase_dram_utilization: r.sw_phase_dram_utilization,
+            energy: r.energy,
+            sim_wallclock_ns: r.sim_wallclock_ns,
+            ..Self::default()
+        }
+    }
+
+    /// Build the unified report from a serving-mode report.
+    pub(crate) fn from_serve(r: ServeReport, accel_pool: Vec<String>) -> Self {
+        let latency = LatencyStats::from_serve(&r);
+        Self {
+            scenario: "serving".to_string(),
+            network: r.network,
+            config: r.config,
+            accel_pool,
+            total_ns: r.makespan_ns,
+            breakdown: r.breakdown,
+            dram_bytes: r.dram_bytes,
+            llc_bytes: r.llc_bytes,
+            dram_utilization: r.dram_utilization,
+            sw_phase_dram_utilization: r.sw_phase_dram_utilization,
+            energy: r.energy,
+            throughput_rps: Some(if r.makespan_ns > 0.0 {
+                r.requests.len() as f64 / (r.makespan_ns * 1e-9)
+            } else {
+                0.0
+            }),
+            latency: Some(latency),
+            requests: r.requests,
+            sim_wallclock_ns: r.sim_wallclock_ns,
+            ..Self::default()
+        }
+    }
+
+    /// Machine-readable JSON under the [`REPORT_SCHEMA`] contract: the
+    /// top-level key set is identical for every scenario (unpopulated
+    /// object sections are `null`, unpopulated arrays empty). All times
+    /// are ns, energy pJ, traffic bytes.
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_object();
+        w.key("schema").string(REPORT_SCHEMA);
+        w.key("scenario").string(&self.scenario);
+        w.key("network").string(&self.network);
+        w.key("config").string(&self.config);
+        w.key("accel_pool").begin_array();
+        for a in &self.accel_pool {
+            w.string(a);
+        }
+        w.end_array();
+        w.key("total_ns").number(self.total_ns);
+        w.key("breakdown").begin_object();
+        w.key("accel_ns").number(self.breakdown.accel_ns);
+        w.key("transfer_ns").number(self.breakdown.transfer_ns);
+        w.key("prep_ns").number(self.breakdown.prep_ns);
+        w.key("finalize_ns").number(self.breakdown.finalize_ns);
+        w.key("other_ns").number(self.breakdown.other_ns);
+        w.end_object();
+        w.key("traffic").begin_object();
+        w.key("dram_bytes").uint(self.dram_bytes);
+        w.key("llc_bytes").uint(self.llc_bytes);
+        w.key("dram_utilization").number(self.dram_utilization);
+        w.key("sw_phase_dram_utilization")
+            .number(self.sw_phase_dram_utilization);
+        w.end_object();
+        w.key("energy_pj").begin_object();
+        w.key("total").number(self.energy.total_pj());
+        w.key("soc").number(self.energy.soc_pj());
+        w.key("dram").number(self.energy.dram_pj);
+        w.key("llc").number(self.energy.llc_pj);
+        w.key("macc").number(self.energy.macc_pj);
+        w.key("spad").number(self.energy.spad_pj);
+        w.key("cpu").number(self.energy.cpu_pj);
+        w.end_object();
+        w.key("ops").begin_array();
+        for op in &self.ops {
+            w.begin_object();
+            w.key("name").string(&op.name);
+            w.key("tag").string(&op.tag);
+            w.key("strategy").string(&op.strategy);
+            w.key("start_ns").number(op.start_ns);
+            w.key("end_ns").number(op.end_ns);
+            w.key("accel_ns").number(op.accel_ns);
+            w.key("transfer_ns").number(op.transfer_ns);
+            w.key("prep_ns").number(op.prep_ns);
+            w.key("finalize_ns").number(op.finalize_ns);
+            w.key("other_ns").number(op.other_ns);
+            w.key("tiles").uint(op.tiles as u64);
+            w.key("reduce_groups").uint(op.reduce_groups as u64);
+            w.key("macs").uint(op.macs);
+            w.key("dram_bytes").uint(op.dram_bytes);
+            w.end_object();
+        }
+        w.end_array();
+        match self.throughput_rps {
+            Some(v) => w.key("throughput_rps").number(v),
+            None => w.key("throughput_rps").null(),
+        };
+        match &self.latency {
+            Some(l) => {
+                w.key("latency_ns").begin_object();
+                w.key("mean").number(l.mean_ns);
+                w.key("p50").number(l.p50_ns);
+                w.key("p90").number(l.p90_ns);
+                w.key("p99").number(l.p99_ns);
+                w.key("max").number(l.max_ns);
+                w.end_object()
+            }
+            None => w.key("latency_ns").null(),
+        };
+        w.key("requests").begin_array();
+        for r in &self.requests {
+            w.begin_object();
+            w.key("id").uint(r.id as u64);
+            w.key("network").string(&r.network);
+            w.key("arrival_ns").number(r.arrival_ns);
+            w.key("end_ns").number(r.end_ns);
+            w.key("latency_ns").number(r.latency_ns());
+            w.end_object();
+        }
+        w.end_array();
+        match &self.sweep_axis {
+            Some(axis) => w.key("sweep_axis").string(axis),
+            None => w.key("sweep_axis").null(),
+        };
+        w.key("sweep").begin_array();
+        for row in &self.sweep {
+            w.begin_object();
+            w.key("value").uint(row.value as u64);
+            w.key("total_ns").number(row.total_ns);
+            w.key("accel_ns").number(row.accel_ns);
+            w.key("transfer_ns").number(row.transfer_ns);
+            w.key("cpu_ns").number(row.cpu_ns);
+            w.key("dram_bytes").uint(row.dram_bytes);
+            w.key("speedup").number(row.speedup);
+            w.end_object();
+        }
+        w.end_array();
+        match &self.camera {
+            Some(c) => {
+                w.key("camera").begin_object();
+                w.key("stages").begin_array();
+                for (name, ns) in &c.stages {
+                    w.begin_object();
+                    w.key("name").string(name);
+                    w.key("ns").number(*ns);
+                    w.end_object();
+                }
+                w.end_array();
+                w.key("camera_ns").number(c.camera_ns);
+                w.key("dnn_ns").number(c.dnn_ns);
+                w.key("frame_ns").number(c.frame_ns);
+                w.key("budget_ms").number(c.budget_ms);
+                w.key("meets_budget").boolean(c.meets_budget);
+                w.end_object()
+            }
+            None => w.key("camera").null(),
+        };
+        match &self.functional {
+            Some(f) => {
+                w.key("functional").begin_object();
+                w.key("backend").string(&f.backend);
+                w.key("max_divergence").number(f.max_divergence as f64);
+                w.key("output_elems").uint(f.output.len() as u64);
+                w.end_object()
+            }
+            None => w.key("functional").null(),
+        };
+        match &self.timeline {
+            Some(tl) => w.key("timeline").raw(&tl.to_json()),
+            None => w.key("timeline").null(),
+        };
+        w.key("sim_wallclock_ns").number(self.sim_wallclock_ns);
+        w.end_object();
+        w.finish()
+    }
+
+    /// Multi-line human-readable summary, scenario-appropriate.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "scenario  : {}\nnetwork   : {}\nconfig    : {}\n",
+            self.scenario, self.network, self.config
+        );
+        match self.scenario.as_str() {
+            "serving" => {
+                let l = self.latency.unwrap_or_default();
+                s.push_str(&format!(
+                    "requests   : {}\nmakespan   : {}\nthroughput : {:.1} req/s\nlatency    : mean {}  p50 {}  p90 {}  p99 {}\n",
+                    self.requests.len(),
+                    fmt_ns(self.total_ns),
+                    self.throughput_rps.unwrap_or(0.0),
+                    fmt_ns(l.mean_ns),
+                    fmt_ns(l.p50_ns),
+                    fmt_ns(l.p90_ns),
+                    fmt_ns(l.p99_ns),
+                ));
+            }
+            "sweep" => {
+                s.push_str(&format!(
+                    "axis      : {}\n{:<8} {:>12} {:>12} {:>12} {:>12} {:>8}\n",
+                    self.sweep_axis.as_deref().unwrap_or("?"),
+                    "value",
+                    "total",
+                    "accel",
+                    "transfer",
+                    "cpu",
+                    "speedup"
+                ));
+                for row in &self.sweep {
+                    s.push_str(&format!(
+                        "{:<8} {:>12} {:>12} {:>12} {:>12} {:>7.2}x\n",
+                        row.value,
+                        fmt_ns(row.total_ns),
+                        fmt_ns(row.accel_ns),
+                        fmt_ns(row.transfer_ns),
+                        fmt_ns(row.cpu_ns),
+                        row.speedup
+                    ));
+                }
+            }
+            "camera" => {
+                if let Some(c) = &self.camera {
+                    for (name, ns) in &c.stages {
+                        s.push_str(&format!("  {:<14} {}\n", name, fmt_ns(*ns)));
+                    }
+                    s.push_str(&format!(
+                        "camera {} + DNN {} = frame {} / budget {:.1} ms -> {}\n",
+                        fmt_ns(c.camera_ns),
+                        fmt_ns(c.dnn_ns),
+                        fmt_ns(c.frame_ns),
+                        c.budget_ms,
+                        if c.meets_budget {
+                            "MEETS budget"
+                        } else {
+                            "VIOLATES budget"
+                        }
+                    ));
+                }
+            }
+            _ => {
+                let b = &self.breakdown;
+                let t = self.total_ns.max(1e-12);
+                s.push_str(&format!(
+                    "latency   : {}\n  accel compute  : {} ({:.1}%)\n  data transfer  : {} ({:.1}%)\n  data prep      : {} ({:.1}%)\n  data finalize  : {} ({:.1}%)\n  other software : {} ({:.1}%)\n",
+                    fmt_ns(self.total_ns),
+                    fmt_ns(b.accel_ns),
+                    100.0 * b.accel_ns / t,
+                    fmt_ns(b.transfer_ns),
+                    100.0 * b.transfer_ns / t,
+                    fmt_ns(b.prep_ns),
+                    100.0 * b.prep_ns / t,
+                    fmt_ns(b.finalize_ns),
+                    100.0 * b.finalize_ns / t,
+                    fmt_ns(b.other_ns),
+                    100.0 * b.other_ns / t,
+                ));
+            }
+        }
+        s.push_str(&format!(
+            "dram traffic : {}\nllc traffic  : {}\nenergy       : {} (dram {}, llc {}, macc {}, cpu {})",
+            fmt_bytes(self.dram_bytes),
+            fmt_bytes(self.llc_bytes),
+            fmt_pj(self.energy.total_pj()),
+            fmt_pj(self.energy.dram_pj),
+            fmt_pj(self.energy.llc_pj),
+            fmt_pj(self.energy.macc_pj),
+            fmt_pj(self.energy.cpu_pj),
+        ));
+        if let Some(f) = &self.functional {
+            s.push_str(&format!(
+                "\nfunctional   : backend={} max |tiled-direct| = {:.2e}",
+                f.backend, f.max_divergence
+            ));
+        }
+        s
+    }
+
+    /// Per-op table (name, tag, strategy, span, components) — header only
+    /// when the scenario carries no per-op records.
+    pub fn per_op_table(&self) -> String {
+        crate::stats::per_op_table(&self.ops)
+    }
+
+    /// Per-op CSV (header + one row per op) for spreadsheet import.
+    pub fn per_op_csv(&self) -> String {
+        crate::stats::per_op_csv(&self.ops)
+    }
+
+    /// Nearest-rank latency percentile over the serving requests (`q` in
+    /// [0, 100]); 0 when the scenario had no requests.
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        let mut v: Vec<f64> = self
+            .requests
+            .iter()
+            .map(RequestRecord::latency_ns)
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::stats::percentile(&v, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serving_report() -> Report {
+        let mut serve = ServeReport {
+            network: "cnn10".into(),
+            config: "2x nvdla / dma / 1 sw thread(s) / pipelined".into(),
+            makespan_ns: 4e6,
+            ..ServeReport::default()
+        };
+        for i in 0..4 {
+            serve.requests.push(RequestRecord {
+                id: i,
+                network: "cnn10".into(),
+                arrival_ns: i as f64 * 1e5,
+                end_ns: 1e6 + i as f64 * 1e6,
+            });
+        }
+        Report::from_serve(serve, vec!["nvdla".into(), "nvdla".into()])
+    }
+
+    #[test]
+    fn serving_report_unifies() {
+        let r = serving_report();
+        assert_eq!(r.scenario, "serving");
+        assert_eq!(r.requests.len(), 4);
+        let l = r.latency.unwrap();
+        assert!(l.p50_ns <= l.p90_ns && l.p90_ns <= l.p99_ns && l.p99_ns <= l.max_ns);
+        assert!((r.throughput_rps.unwrap() - 1000.0).abs() < 1e-9);
+        assert!(r.summary().contains("p99"));
+    }
+
+    #[test]
+    fn json_key_set_is_scenario_invariant() {
+        let serving = serving_report().to_json();
+        let inference = Report {
+            scenario: "inference".into(),
+            network: "x".into(),
+            total_ns: 10.0,
+            ..Report::default()
+        }
+        .to_json();
+        for key in [
+            "\"schema\"",
+            "\"scenario\"",
+            "\"network\"",
+            "\"config\"",
+            "\"accel_pool\"",
+            "\"total_ns\"",
+            "\"breakdown\"",
+            "\"traffic\"",
+            "\"energy_pj\"",
+            "\"ops\"",
+            "\"throughput_rps\"",
+            "\"latency_ns\"",
+            "\"requests\"",
+            "\"sweep_axis\"",
+            "\"sweep\"",
+            "\"camera\"",
+            "\"functional\"",
+            "\"timeline\"",
+            "\"sim_wallclock_ns\"",
+        ] {
+            assert!(serving.contains(key), "serving missing {key}");
+            assert!(inference.contains(key), "inference missing {key}");
+        }
+        assert!(inference.contains("\"latency_ns\":null"));
+        assert!(inference.contains(&format!("\"schema\":\"{REPORT_SCHEMA}\"")));
+    }
+
+    #[test]
+    fn null_sections_render_as_null() {
+        let j = Report::default().to_json();
+        assert!(j.contains("\"camera\":null"));
+        assert!(j.contains("\"functional\":null"));
+        assert!(j.contains("\"timeline\":null"));
+        assert!(j.contains("\"throughput_rps\":null"));
+        assert!(j.contains("\"sweep\":[]"));
+        assert!(j.contains("\"requests\":[]"));
+    }
+}

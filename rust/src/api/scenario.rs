@@ -1,0 +1,112 @@
+//! What a [`crate::api::Session`] simulates: one enum, one variant per
+//! workload shape. Adding a new study to the simulator means adding a
+//! variant here (and its dispatch arm), not a new entry point.
+
+/// Which knob a [`Scenario::Sweep`] varies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepAxis {
+    /// Accelerator-pool size: value `n` runs a pool of `n` instances,
+    /// cycling through the composed SoC's kinds (a homogeneous SoC sweeps
+    /// homogeneously; a heterogeneous one repeats its pattern).
+    Accels,
+    /// Software-stack thread count.
+    Threads,
+}
+
+impl SweepAxis {
+    /// Axis name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SweepAxis::Accels => "accels",
+            SweepAxis::Threads => "threads",
+        }
+    }
+}
+
+/// The workload a session runs. Every variant produces the same unified
+/// [`crate::api::Report`].
+#[derive(Debug, Clone)]
+pub enum Scenario {
+    /// One single-batch forward pass (paper Fig 1's experiment).
+    Inference,
+    /// N concurrent inference requests sharing the SoC (per-request
+    /// latency percentiles + aggregate throughput).
+    Serving {
+        /// Number of requests to simulate.
+        requests: usize,
+        /// Inter-arrival gap between consecutive requests, ns (0 = all
+        /// arrive at t = 0).
+        arrival_interval_ns: f64,
+    },
+    /// Repeat the forward pass across values of one axis (Fig 12/16-style
+    /// scaling studies); per-value rows land in `Report::sweep`.
+    Sweep {
+        /// The knob being varied.
+        axis: SweepAxis,
+        /// The values to simulate, in order. The first value is the
+        /// baseline the top-level report fields describe.
+        values: Vec<usize>,
+    },
+    /// Camera vision pipeline (paper §V): Halide-style camera stages on
+    /// the CPU feeding the DNN on a `pe.0 x pe.1` systolic array, against
+    /// a `1000/fps` ms frame-time budget.
+    Camera {
+        /// Target frame rate (budget = 1000/fps ms).
+        fps: f64,
+        /// Systolic-array PE grid (rows, cols).
+        pe: (usize, usize),
+    },
+    /// One SGD training step: forward pass + dX/dW backward GEMMs +
+    /// parameter updates (extension; the paper plans training support).
+    Training,
+}
+
+impl Scenario {
+    /// Scenario tag used in reports and the JSON schema.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Inference => "inference",
+            Scenario::Serving { .. } => "serving",
+            Scenario::Sweep { .. } => "sweep",
+            Scenario::Camera { .. } => "camera",
+            Scenario::Training => "training",
+        }
+    }
+
+    /// Whether the event scheduler pipelines operators by default in this
+    /// scenario. Serving is the event engine's home turf; everything else
+    /// defaults to the strict serial order the paper figures use.
+    pub(crate) fn default_pipeline(&self) -> bool {
+        matches!(self, Scenario::Serving { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Scenario::Inference.name(), "inference");
+        assert_eq!(
+            Scenario::Serving { requests: 4, arrival_interval_ns: 0.0 }.name(),
+            "serving"
+        );
+        assert_eq!(
+            Scenario::Sweep { axis: SweepAxis::Accels, values: vec![1, 2] }.name(),
+            "sweep"
+        );
+        assert_eq!(Scenario::Camera { fps: 30.0, pe: (8, 8) }.name(), "camera");
+        assert_eq!(Scenario::Training.name(), "training");
+        assert_eq!(SweepAxis::Accels.name(), "accels");
+        assert_eq!(SweepAxis::Threads.name(), "threads");
+    }
+
+    #[test]
+    fn only_serving_pipelines_by_default() {
+        assert!(Scenario::Serving { requests: 1, arrival_interval_ns: 0.0 }
+            .default_pipeline());
+        assert!(!Scenario::Inference.default_pipeline());
+        assert!(!Scenario::Training.default_pipeline());
+    }
+}

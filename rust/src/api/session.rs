@@ -1,0 +1,579 @@
+//! The one front door: `Session::on(soc).scenario(...).run()`.
+//!
+//! A session binds a composed [`Soc`] to a workload [`Scenario`] plus the
+//! run knobs (interface, threads, sampling, pipelining, functional
+//! execution, timeline capture) and produces the unified [`Report`].
+
+use anyhow::{bail, Result};
+use crate::camera::{self, RawFrame};
+use crate::config::{AccelKind, FunctionalMode, InterfaceKind, ServeOptions, SimOptions};
+use crate::graph::{training_step, Graph};
+use crate::nets;
+use crate::sched::Scheduler;
+use crate::sim;
+
+use super::report::{CameraSummary, FunctionalSummary, Report, SweepRow};
+use super::scenario::{Scenario, SweepAxis};
+use super::soc::Soc;
+
+/// A configured simulation session. Build with [`Session::on`], choose a
+/// workload with [`Session::scenario`], then [`Session::run`].
+///
+/// ```no_run
+/// use smaug::api::{Scenario, Session, Soc};
+///
+/// let report = Session::on(Soc::default())
+///     .network("cnn10")
+///     .scenario(Scenario::Inference)
+///     .run()
+///     .unwrap();
+/// println!("{}", report.summary());
+/// ```
+#[derive(Debug, Clone)]
+pub struct Session {
+    soc: Soc,
+    scenario: Scenario,
+    network: Option<String>,
+    graph: Option<Graph>,
+    interface: InterfaceKind,
+    sw_threads: usize,
+    sampling_factor: usize,
+    functional: FunctionalMode,
+    pipeline: Option<bool>,
+    capture_timeline: bool,
+    seed: u64,
+    double_buffer: bool,
+    inter_accel_reduction: bool,
+}
+
+impl Session {
+    /// Start a session on a composed SoC. The scenario defaults to
+    /// [`Scenario::Inference`].
+    pub fn on(soc: Soc) -> Self {
+        let defaults = SimOptions::default();
+        Self {
+            soc,
+            scenario: Scenario::Inference,
+            network: None,
+            graph: None,
+            interface: defaults.interface,
+            sw_threads: defaults.sw_threads,
+            sampling_factor: defaults.sampling_factor,
+            functional: defaults.functional,
+            pipeline: None,
+            capture_timeline: false,
+            seed: defaults.seed,
+            double_buffer: defaults.double_buffer,
+            inter_accel_reduction: defaults.inter_accel_reduction,
+        }
+    }
+
+    /// Select a network from the zoo by name (see `smaug nets`).
+    pub fn network(mut self, name: &str) -> Self {
+        self.network = Some(name.to_string());
+        self
+    }
+
+    /// Simulate an explicit graph instead of a zoo network.
+    pub fn graph(mut self, graph: Graph) -> Self {
+        self.graph = Some(graph);
+        self
+    }
+
+    /// Choose the workload (default: [`Scenario::Inference`]).
+    pub fn scenario(mut self, scenario: Scenario) -> Self {
+        self.scenario = scenario;
+        self
+    }
+
+    /// SoC-accelerator interface (default: DMA).
+    pub fn interface(mut self, interface: InterfaceKind) -> Self {
+        self.interface = interface;
+        self
+    }
+
+    /// Software-stack thread count (default: 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.sw_threads = n.max(1);
+        self
+    }
+
+    /// Aladdin-style loop-sampling factor (default: 1 = exact).
+    pub fn sampling(mut self, factor: usize) -> Self {
+        self.sampling_factor = factor.max(1);
+        self
+    }
+
+    /// Functional tile execution mode (default: off).
+    pub fn functional(mut self, mode: FunctionalMode) -> Self {
+        self.functional = mode;
+        self
+    }
+
+    /// Force event-driven operator pipelining on or off. When not set,
+    /// serving pipelines and every other scenario runs the strict serial
+    /// order the paper figures use.
+    pub fn pipeline(mut self, on: bool) -> Self {
+        self.pipeline = Some(on);
+        self
+    }
+
+    /// Capture the event timeline into `Report::timeline`.
+    pub fn capture_timeline(mut self, on: bool) -> Self {
+        self.capture_timeline = on;
+        self
+    }
+
+    /// RNG seed for synthetic weights/inputs.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Double-buffer the scratchpads (transfer/compute overlap).
+    pub fn double_buffer(mut self, on: bool) -> Self {
+        self.double_buffer = on;
+        self
+    }
+
+    /// Spread reduction groups across the pool with an explicit
+    /// partial-sum merge.
+    pub fn inter_accel_reduction(mut self, on: bool) -> Self {
+        self.inter_accel_reduction = on;
+        self
+    }
+
+    /// The [`SimOptions`] this session resolves to for a given pool.
+    fn options(&self, pool: Vec<AccelKind>) -> SimOptions {
+        SimOptions {
+            accel_kind: pool[0],
+            num_accels: pool.len(),
+            accel_pool: pool,
+            interface: self.interface,
+            sw_threads: self.sw_threads,
+            sampling_factor: self.sampling_factor,
+            functional: self.functional,
+            capture_timeline: self.capture_timeline,
+            seed: self.seed,
+            double_buffer: self.double_buffer,
+            inter_accel_reduction: self.inter_accel_reduction,
+            pipeline: self.pipeline.unwrap_or_else(|| self.scenario.default_pipeline()),
+        }
+    }
+
+    /// Resolve the graph to simulate.
+    fn resolve_graph(graph: Option<Graph>, network: Option<String>, scenario: &Scenario) -> Result<Graph> {
+        match (graph, network) {
+            (Some(g), _) => Ok(g),
+            (None, Some(name)) => nets::build_network(&name),
+            // The paper's camera study classifies with CNN10.
+            (None, None) if matches!(scenario, Scenario::Camera { .. }) => {
+                nets::build_network("cnn10")
+            }
+            (None, None) => bail!(
+                "session has no workload: call .network(\"<name>\") (see `smaug nets`) or .graph(...)"
+            ),
+        }
+    }
+
+    /// Run the scenario and return the unified report.
+    pub fn run(mut self) -> Result<Report> {
+        // Pull out the moved parts; the scalar knobs stay on `self` for
+        // `options()`. Scenario and Soc are cheap clones (scalars + small
+        // vecs); the Graph is moved, never copied.
+        let scenario = self.scenario.clone();
+        let graph = Self::resolve_graph(self.graph.take(), self.network.take(), &scenario)?;
+        let (soc_cfg, pool) = self.soc.clone().into_parts();
+        let capture_timeline = self.capture_timeline;
+        let functional = self.functional;
+        let pool_names: Vec<String> = pool.iter().map(|k| k.to_string()).collect();
+
+        match scenario {
+            Scenario::Inference | Scenario::Training => {
+                let graph = if matches!(scenario, Scenario::Training) {
+                    training_step(&graph)
+                } else {
+                    graph
+                };
+                let opts = self.options(pool);
+                if functional != FunctionalMode::Off {
+                    let fr = sim::run_functional_impl(&soc_cfg, &opts, &graph, None)?;
+                    let mut rep = Report::from_sim(scenario.name(), fr.report, pool_names);
+                    rep.functional = Some(FunctionalSummary {
+                        backend: fr.backend.to_string(),
+                        max_divergence: fr.max_divergence,
+                        output: fr.output.data,
+                    });
+                    if capture_timeline {
+                        rep.timeline = Some(fr.timeline);
+                    }
+                    return Ok(rep);
+                }
+                let mut sched = Scheduler::new(soc_cfg, opts);
+                let sim_report = sched.run(&graph);
+                let mut rep = Report::from_sim(scenario.name(), sim_report, pool_names);
+                if capture_timeline {
+                    rep.timeline = Some(std::mem::take(&mut sched.timeline));
+                }
+                Ok(rep)
+            }
+            Scenario::Serving {
+                requests,
+                arrival_interval_ns,
+            } => {
+                Self::reject_functional(functional, "serving")?;
+                let opts = self.options(pool);
+                let mut sched = Scheduler::new(soc_cfg, opts);
+                let serve = sched.serve(
+                    &graph,
+                    &ServeOptions {
+                        requests,
+                        arrival_interval_ns,
+                    },
+                );
+                let mut rep = Report::from_serve(serve, pool_names);
+                if capture_timeline {
+                    rep.timeline = Some(std::mem::take(&mut sched.timeline));
+                }
+                Ok(rep)
+            }
+            Scenario::Sweep { axis, ref values } => {
+                Self::reject_functional(functional, "sweep")?;
+                if capture_timeline {
+                    bail!(
+                        "timeline capture is not supported in sweep scenarios \
+                         (one timeline per point; run the point of interest as \
+                         Scenario::Inference instead)"
+                    );
+                }
+                if values.is_empty() {
+                    bail!("sweep scenario needs at least one value");
+                }
+                let mut rows: Vec<SweepRow> = Vec::with_capacity(values.len());
+                let mut baseline: Option<Report> = None;
+                for &v in values {
+                    if v == 0 {
+                        bail!("sweep values must be >= 1 (got 0)");
+                    }
+                    let point_pool: Vec<AccelKind> = match axis {
+                        SweepAxis::Accels => {
+                            (0..v).map(|i| pool[i % pool.len()]).collect()
+                        }
+                        SweepAxis::Threads => pool.clone(),
+                    };
+                    let point_names: Vec<String> =
+                        point_pool.iter().map(|k| k.to_string()).collect();
+                    let mut opts = self.options(point_pool);
+                    if axis == SweepAxis::Threads {
+                        opts.sw_threads = v;
+                    }
+                    let sim_report = Scheduler::new(soc_cfg.clone(), opts).run(&graph);
+                    let base_ns = baseline
+                        .as_ref()
+                        .map(|b| b.total_ns)
+                        .unwrap_or(sim_report.total_ns);
+                    rows.push(SweepRow {
+                        value: v,
+                        total_ns: sim_report.total_ns,
+                        accel_ns: sim_report.breakdown.accel_ns,
+                        transfer_ns: sim_report.breakdown.transfer_ns,
+                        cpu_ns: sim_report.breakdown.cpu_ns(),
+                        dram_bytes: sim_report.dram_bytes,
+                        speedup: base_ns / sim_report.total_ns.max(1e-12),
+                    });
+                    if baseline.is_none() {
+                        // Metadata describes the baseline point actually
+                        // simulated (its pool may differ from the composed
+                        // SoC on an accel-axis sweep).
+                        baseline = Some(Report::from_sim("sweep", sim_report, point_names));
+                    }
+                }
+                let mut rep = baseline.expect("at least one sweep value ran");
+                rep.sweep_axis = Some(axis.name().to_string());
+                rep.sweep = rows;
+                // Per-op records describe only the baseline point; drop
+                // them so the sweep report is not mistaken for one run.
+                rep.ops.clear();
+                Ok(rep)
+            }
+            Scenario::Camera { fps, pe } => {
+                Self::reject_functional(functional, "camera")?;
+                if fps <= 0.0 {
+                    bail!("camera scenario needs fps > 0");
+                }
+                // Paper §V runs the DNN on exactly one systolic array
+                // whose dimensions come from `pe`. The builder-default
+                // single-NVDLA pool is treated as "unspecified"; any
+                // other composition is rejected rather than silently
+                // replaced.
+                if !matches!(
+                    pool.as_slice(),
+                    [AccelKind::Systolic] | [AccelKind::Nvdla]
+                ) {
+                    bail!(
+                        "camera scenario runs the DNN on a single {}x{} systolic \
+                         array; compose the Soc with one systolic accelerator (or \
+                         leave the pool at its default) instead of {pool:?}",
+                        pe.0,
+                        pe.1
+                    );
+                }
+                let mut cam_cfg = soc_cfg;
+                cam_cfg.systolic_rows = pe.0;
+                cam_cfg.systolic_cols = pe.1;
+                // Camera stages run on the CPU over a synthetic 720p
+                // Bayer frame (paper §V).
+                let raw = RawFrame::synthetic(1280, 720, self.seed);
+                let (_rgb, stages) =
+                    camera::run_pipeline(&raw, &cam_cfg, self.sw_threads, None);
+                let cam_ns = camera::pipeline_ns(&stages);
+                // The DNN runs on the systolic array (the paper's §V
+                // configuration), whatever the composed pool was.
+                let opts = self.options(vec![AccelKind::Systolic]);
+                let mut sched = Scheduler::new(cam_cfg, opts);
+                let sim_report = sched.run(&graph);
+                let dnn_ns = sim_report.total_ns;
+                let frame_ns = cam_ns + dnn_ns;
+                let budget_ms = 1000.0 / fps;
+                let mut rep =
+                    Report::from_sim("camera", sim_report, vec!["systolic".to_string()]);
+                rep.total_ns = frame_ns;
+                rep.camera = Some(CameraSummary {
+                    stages: stages.iter().map(|s| (s.name.to_string(), s.ns)).collect(),
+                    camera_ns: cam_ns,
+                    dnn_ns,
+                    frame_ns,
+                    budget_ms,
+                    meets_budget: frame_ns / 1e6 <= budget_ms,
+                });
+                if capture_timeline {
+                    rep.timeline = Some(std::mem::take(&mut sched.timeline));
+                }
+                Ok(rep)
+            }
+        }
+    }
+
+    /// Functional tile execution only makes sense where a single forward
+    /// pass is validated; reject it elsewhere instead of silently
+    /// dropping the knob.
+    fn reject_functional(mode: FunctionalMode, scenario: &str) -> Result<()> {
+        if mode != FunctionalMode::Off {
+            bail!(
+                "functional execution is only supported for the Inference and \
+                 Training scenarios (requested in a {scenario} scenario)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: run one scenario on the baseline SoC with defaults.
+pub fn quick_run(network: &str, scenario: Scenario) -> Result<Report> {
+    Session::on(Soc::default())
+        .network(network)
+        .scenario(scenario)
+        .run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inference_runs_and_reports() {
+        let rep = Session::on(Soc::default())
+            .network("lenet5")
+            .scenario(Scenario::Inference)
+            .run()
+            .unwrap();
+        assert_eq!(rep.scenario, "inference");
+        assert!(rep.total_ns > 0.0);
+        assert!(!rep.ops.is_empty());
+        assert_eq!(rep.accel_pool, vec!["nvdla".to_string()]);
+        assert!(rep.latency.is_none());
+    }
+
+    #[test]
+    fn serving_defaults_to_pipelined_and_reports_percentiles() {
+        let rep = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+            .network("lenet5")
+            .scenario(Scenario::Serving {
+                requests: 4,
+                arrival_interval_ns: 0.0,
+            })
+            .run()
+            .unwrap();
+        assert_eq!(rep.requests.len(), 4);
+        assert!(rep.config.contains("pipelined"));
+        let l = rep.latency.unwrap();
+        assert!(l.p50_ns > 0.0 && l.p50_ns <= l.p90_ns && l.p90_ns <= l.p99_ns);
+        assert!(rep.throughput_rps.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sweep_rows_cover_values() {
+        let rep = Session::on(Soc::default())
+            .network("lenet5")
+            .scenario(Scenario::Sweep {
+                axis: SweepAxis::Accels,
+                values: vec![1, 2, 4],
+            })
+            .run()
+            .unwrap();
+        assert_eq!(rep.sweep.len(), 3);
+        assert_eq!(rep.sweep_axis.as_deref(), Some("accels"));
+        assert_eq!(rep.sweep[0].speedup, 1.0);
+        assert!(rep.sweep[2].total_ns <= rep.sweep[0].total_ns);
+        assert!(rep.ops.is_empty());
+    }
+
+    #[test]
+    fn training_scenario_is_heavier_than_inference() {
+        let infer = quick_run("minerva", Scenario::Inference).unwrap();
+        let train = quick_run("minerva", Scenario::Training).unwrap();
+        assert_eq!(train.scenario, "training");
+        assert!(train.total_ns > infer.total_ns);
+    }
+
+    #[test]
+    fn camera_scenario_defaults_to_cnn10() {
+        let rep = Session::on(Soc::default())
+            .scenario(Scenario::Camera {
+                fps: 30.0,
+                pe: (8, 8),
+            })
+            .run()
+            .unwrap();
+        let cam = rep.camera.unwrap();
+        assert!(cam.camera_ns > 0.0 && cam.dnn_ns > 0.0);
+        assert!((cam.frame_ns - cam.camera_ns - cam.dnn_ns).abs() < 1e-6);
+        assert_eq!(rep.network, "cnn10");
+        assert_eq!(rep.accel_pool, vec!["systolic".to_string()]);
+    }
+
+    #[test]
+    fn timeline_capture_lands_in_report() {
+        let rep = Session::on(Soc::default())
+            .network("minerva")
+            .capture_timeline(true)
+            .run()
+            .unwrap();
+        assert!(!rep.timeline.as_ref().unwrap().events.is_empty());
+    }
+
+    #[test]
+    fn missing_network_is_a_clear_error() {
+        let err = Session::on(Soc::default()).run().unwrap_err();
+        assert!(format!("{err}").contains("network"));
+    }
+
+    #[test]
+    fn sweep_metadata_describes_the_baseline_point() {
+        // An accel-axis sweep whose first point is larger than the
+        // composed SoC: the report's pool metadata must describe what
+        // actually ran, not the 1-instance SoC it was composed from.
+        let rep = Session::on(Soc::default())
+            .network("minerva")
+            .scenario(Scenario::Sweep {
+                axis: SweepAxis::Accels,
+                values: vec![2, 4],
+            })
+            .run()
+            .unwrap();
+        assert_eq!(rep.accel_pool.len(), 2);
+        assert!(rep.config.starts_with("2x "), "{}", rep.config);
+    }
+
+    #[test]
+    fn incompatible_knobs_error_instead_of_silently_dropping() {
+        use crate::config::FunctionalMode;
+        let err = Session::on(Soc::default())
+            .network("lenet5")
+            .functional(FunctionalMode::Native)
+            .scenario(Scenario::Serving {
+                requests: 2,
+                arrival_interval_ns: 0.0,
+            })
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("functional"), "{err}");
+        let err = Session::on(Soc::default())
+            .network("lenet5")
+            .capture_timeline(true)
+            .scenario(Scenario::Sweep {
+                axis: SweepAxis::Accels,
+                values: vec![1, 2],
+            })
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("timeline"), "{err}");
+    }
+
+    #[test]
+    fn functional_run_keeps_a_requested_timeline() {
+        use crate::config::FunctionalMode;
+        let rep = Session::on(Soc::default())
+            .network("lenet5")
+            .functional(FunctionalMode::Native)
+            .capture_timeline(true)
+            .run()
+            .unwrap();
+        assert!(rep.functional.is_some());
+        assert!(!rep.timeline.as_ref().unwrap().events.is_empty());
+    }
+
+    #[test]
+    fn camera_rejects_incompatible_pools() {
+        let err = Session::on(Soc::builder().accels(AccelKind::Nvdla, 8).build())
+            .scenario(Scenario::Camera {
+                fps: 30.0,
+                pe: (8, 8),
+            })
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("systolic"), "{err}");
+        // An explicit single systolic array is honored.
+        let rep = Session::on(Soc::builder().accel(AccelKind::Systolic).build())
+            .scenario(Scenario::Camera {
+                fps: 30.0,
+                pe: (4, 4),
+            })
+            .run()
+            .unwrap();
+        assert_eq!(rep.accel_pool, vec!["systolic".to_string()]);
+    }
+
+    #[test]
+    fn camera_timeline_capture_works() {
+        let rep = Session::on(Soc::default())
+            .scenario(Scenario::Camera {
+                fps: 30.0,
+                pe: (8, 8),
+            })
+            .capture_timeline(true)
+            .run()
+            .unwrap();
+        assert!(!rep.timeline.as_ref().unwrap().events.is_empty());
+    }
+
+    #[test]
+    fn heterogeneous_pool_runs_end_to_end() {
+        let rep = Session::on(
+            Soc::builder()
+                .accel(AccelKind::Nvdla)
+                .accel(AccelKind::Systolic)
+                .build(),
+        )
+        .network("cnn10")
+        .pipeline(true)
+        .run()
+        .unwrap();
+        assert!(rep.total_ns > 0.0);
+        assert_eq!(
+            rep.accel_pool,
+            vec!["nvdla".to_string(), "systolic".to_string()]
+        );
+        assert!(rep.config.contains("nvdla+systolic"), "{}", rep.config);
+    }
+}

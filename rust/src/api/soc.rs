@@ -1,0 +1,185 @@
+//! SoC composition: microarchitectural parameters plus a heterogeneous
+//! accelerator pool, built fluently with [`SocBuilder`].
+
+use crate::config::{AccelKind, SimOptions, SocConfig};
+
+/// A composed SoC: Table-II microarchitectural parameters plus the
+/// accelerator pool (one [`AccelKind`] per hardware instance, in
+/// command-queue order). The pool may mix kinds — e.g. an NVDLA-style
+/// conv engine next to a systolic array — and the event scheduler
+/// multiplexes work across all instances.
+#[derive(Debug, Clone)]
+pub struct Soc {
+    config: SocConfig,
+    accels: Vec<AccelKind>,
+}
+
+impl Default for Soc {
+    /// The paper's baseline SoC: Table-II parameters, one NVDLA engine.
+    fn default() -> Self {
+        Self {
+            config: SocConfig::default(),
+            accels: vec![AccelKind::Nvdla],
+        }
+    }
+}
+
+impl Soc {
+    /// Start composing a SoC.
+    pub fn builder() -> SocBuilder {
+        SocBuilder::new()
+    }
+
+    /// Microarchitectural parameters.
+    pub fn config(&self) -> &SocConfig {
+        &self.config
+    }
+
+    /// The accelerator pool, one entry per instance.
+    pub fn accels(&self) -> &[AccelKind] {
+        &self.accels
+    }
+
+    /// Pool composition as display strings (for reports).
+    pub fn accel_names(&self) -> Vec<String> {
+        self.accels.iter().map(|k| k.to_string()).collect()
+    }
+
+    pub(crate) fn into_parts(self) -> (SocConfig, Vec<AccelKind>) {
+        (self.config, self.accels)
+    }
+}
+
+/// Fluent builder for [`Soc`]: start from the Table-II baseline, override
+/// parameters, and append accelerator instances one at a time —
+/// heterogeneous pools are just repeated [`SocBuilder::accel`] calls with
+/// different kinds.
+///
+/// ```no_run
+/// use smaug::api::Soc;
+/// use smaug::config::AccelKind;
+///
+/// let soc = Soc::builder()
+///     .accel(AccelKind::Nvdla)
+///     .accel(AccelKind::Systolic)
+///     .accel(AccelKind::Nvdla)
+///     .build();
+/// assert_eq!(soc.accels().len(), 3);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SocBuilder {
+    config: SocConfig,
+    accels: Vec<AccelKind>,
+}
+
+impl Default for SocBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SocBuilder {
+    /// A builder seeded with the Table-II baseline parameters and an
+    /// empty pool (built as one NVDLA engine if nothing is appended).
+    pub fn new() -> Self {
+        Self {
+            config: SocConfig::default(),
+            accels: Vec::new(),
+        }
+    }
+
+    /// Replace the microarchitectural parameters wholesale (e.g. loaded
+    /// from a `--soc file.cfg`).
+    pub fn config(mut self, config: SocConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Tweak the microarchitectural parameters in place.
+    pub fn tune(mut self, f: impl FnOnce(&mut SocConfig)) -> Self {
+        f(&mut self.config);
+        self
+    }
+
+    /// Append one accelerator instance to the pool.
+    pub fn accel(mut self, kind: AccelKind) -> Self {
+        self.accels.push(kind);
+        self
+    }
+
+    /// Append `n` instances of `kind` to the pool.
+    pub fn accels(mut self, kind: AccelKind, n: usize) -> Self {
+        self.accels.resize(self.accels.len() + n, kind);
+        self
+    }
+
+    /// Append instances from a CLI spec: a count (`8`, NVDLA instances)
+    /// or a comma-separated kind list (`nvdla,systolic,nvdla`).
+    pub fn accel_spec(mut self, spec: &str) -> Result<Self, String> {
+        self.accels
+            .extend(SimOptions::parse_accel_pool(spec, AccelKind::Nvdla)?);
+        Ok(self)
+    }
+
+    /// Finish composition. An empty pool defaults to one NVDLA engine.
+    pub fn build(mut self) -> Soc {
+        if self.accels.is_empty() {
+            self.accels.push(AccelKind::Nvdla);
+        }
+        Soc {
+            config: self.config,
+            accels: self.accels,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_soc_is_paper_baseline() {
+        let soc = Soc::default();
+        assert_eq!(soc.accels(), &[AccelKind::Nvdla]);
+        assert_eq!(soc.config().cpu_cores, 8);
+    }
+
+    #[test]
+    fn builder_composes_heterogeneous_pool() {
+        let soc = Soc::builder()
+            .accel(AccelKind::Nvdla)
+            .accel(AccelKind::Systolic)
+            .accels(AccelKind::Nvdla, 2)
+            .build();
+        assert_eq!(
+            soc.accels(),
+            &[
+                AccelKind::Nvdla,
+                AccelKind::Systolic,
+                AccelKind::Nvdla,
+                AccelKind::Nvdla
+            ]
+        );
+        assert_eq!(soc.accel_names()[1], "systolic");
+    }
+
+    #[test]
+    fn empty_pool_defaults_to_one_nvdla() {
+        assert_eq!(Soc::builder().build().accels(), &[AccelKind::Nvdla]);
+    }
+
+    #[test]
+    fn accel_spec_accepts_count_and_list() {
+        let soc = Soc::builder().accel_spec("2").unwrap().build();
+        assert_eq!(soc.accels(), &[AccelKind::Nvdla; 2]);
+        let soc = Soc::builder().accel_spec("systolic,nvdla").unwrap().build();
+        assert_eq!(soc.accels(), &[AccelKind::Systolic, AccelKind::Nvdla]);
+        assert!(Soc::builder().accel_spec("gpu").is_err());
+    }
+
+    #[test]
+    fn tune_overrides_parameters() {
+        let soc = Soc::builder().tune(|c| c.dram_gbps = 12.8).build();
+        assert_eq!(soc.config().dram_gbps, 12.8);
+    }
+}

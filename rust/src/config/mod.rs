@@ -229,15 +229,62 @@ impl SocConfig {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         Self::from_str_cfg(&text)
     }
+
+    /// Emit the configuration in the `key = value` format
+    /// [`SocConfig::from_str_cfg`] parses — `from_str_cfg(&c.to_cfg())`
+    /// round-trips every field.
+    pub fn to_cfg(&self) -> String {
+        format!(
+            "cpu_cores = {}\n\
+             cpu_ghz = {}\n\
+             accel_ghz = {}\n\
+             cacheline_bytes = {}\n\
+             llc_bytes = {}\n\
+             llc_ways = {}\n\
+             llc_latency_cycles = {}\n\
+             dram_gbps = {}\n\
+             dram_channels = {}\n\
+             dram_efficiency = {}\n\
+             spad_bytes = {}\n\
+             elem_bytes = {}\n\
+             nvdla_pes = {}\n\
+             nvdla_macc_width = {}\n\
+             systolic_rows = {}\n\
+             systolic_cols = {}\n",
+            self.cpu_cores,
+            self.cpu_ghz,
+            self.accel_ghz,
+            self.cacheline_bytes,
+            self.llc_bytes,
+            self.llc_ways,
+            self.llc_latency_cycles,
+            self.dram_gbps,
+            self.dram_channels,
+            self.dram_efficiency,
+            self.spad_bytes,
+            self.elem_bytes,
+            self.nvdla_pes,
+            self.nvdla_macc_width,
+            self.systolic_rows,
+            self.systolic_cols,
+        )
+    }
 }
 
 /// Per-run simulation options (the paper's experiment knobs).
 #[derive(Debug, Clone)]
 pub struct SimOptions {
-    /// Which accelerator backend runs conv/FC kernels.
+    /// Which accelerator backend runs conv/FC kernels (homogeneous pools;
+    /// superseded by [`SimOptions::accel_pool`] when that is non-empty).
     pub accel_kind: AccelKind,
-    /// Number of accelerator instances in the worker pool (1..).
+    /// Number of accelerator instances in the worker pool (1..;
+    /// superseded by [`SimOptions::accel_pool`] when that is non-empty).
     pub num_accels: usize,
+    /// Explicit, possibly heterogeneous accelerator pool: one entry per
+    /// hardware instance, in command-queue order. Empty means "a
+    /// homogeneous pool of `num_accels` x `accel_kind`". Built by
+    /// [`crate::api::SocBuilder`].
+    pub accel_pool: Vec<AccelKind>,
     /// SoC-accelerator interface.
     pub interface: InterfaceKind,
     /// Software-stack threads for data preparation/finalization (1..).
@@ -270,6 +317,7 @@ impl Default for SimOptions {
         Self {
             accel_kind: AccelKind::Nvdla,
             num_accels: 1,
+            accel_pool: Vec::new(),
             interface: InterfaceKind::Dma,
             sw_threads: 1,
             sampling_factor: 1,
@@ -316,6 +364,17 @@ impl SimOptions {
         }
     }
 
+    /// The accelerator pool this run actually simulates: the explicit
+    /// heterogeneous pool when set, otherwise `num_accels` copies of
+    /// `accel_kind`. Never empty.
+    pub fn resolved_pool(&self) -> Vec<AccelKind> {
+        if self.accel_pool.is_empty() {
+            vec![self.accel_kind; self.num_accels.max(1)]
+        } else {
+            self.accel_pool.clone()
+        }
+    }
+
     /// Parse an `AccelKind` CLI value.
     pub fn parse_accel(s: &str) -> Result<AccelKind, String> {
         match s {
@@ -323,6 +382,25 @@ impl SimOptions {
             "systolic" => Ok(AccelKind::Systolic),
             other => Err(format!("unknown accelerator '{other}' (nvdla|systolic)")),
         }
+    }
+
+    /// Parse an accelerator-pool CLI value: either a count (`8` — a
+    /// homogeneous pool of `default_kind`) or a comma-separated kind list
+    /// (`nvdla,systolic,nvdla` — a heterogeneous pool, one instance per
+    /// entry).
+    pub fn parse_accel_pool(
+        spec: &str,
+        default_kind: AccelKind,
+    ) -> Result<Vec<AccelKind>, String> {
+        if let Ok(n) = spec.trim().parse::<usize>() {
+            if n == 0 {
+                return Err("accelerator pool needs at least one instance".into());
+            }
+            return Ok(vec![default_kind; n]);
+        }
+        spec.split(',')
+            .map(|s| Self::parse_accel(s.trim()))
+            .collect()
     }
 
     /// Parse an `InterfaceKind` CLI value.
@@ -413,5 +491,95 @@ mod tests {
         assert!(SocConfig::from_str_cfg("cpu_coresss = 4\n").is_err());
         assert!(SocConfig::from_str_cfg("cpu_cores four\n").is_err());
         assert!(SocConfig::from_str_cfg("cpu_cores = four\n").is_err());
+    }
+
+    fn assert_same_config(a: &SocConfig, b: &SocConfig) {
+        assert_eq!(a.cpu_cores, b.cpu_cores);
+        assert_eq!(a.cpu_ghz, b.cpu_ghz);
+        assert_eq!(a.accel_ghz, b.accel_ghz);
+        assert_eq!(a.cacheline_bytes, b.cacheline_bytes);
+        assert_eq!(a.llc_bytes, b.llc_bytes);
+        assert_eq!(a.llc_ways, b.llc_ways);
+        assert_eq!(a.llc_latency_cycles, b.llc_latency_cycles);
+        assert_eq!(a.dram_gbps, b.dram_gbps);
+        assert_eq!(a.dram_channels, b.dram_channels);
+        assert_eq!(a.dram_efficiency, b.dram_efficiency);
+        assert_eq!(a.spad_bytes, b.spad_bytes);
+        assert_eq!(a.elem_bytes, b.elem_bytes);
+        assert_eq!(a.nvdla_pes, b.nvdla_pes);
+        assert_eq!(a.nvdla_macc_width, b.nvdla_macc_width);
+        assert_eq!(a.systolic_rows, b.systolic_rows);
+        assert_eq!(a.systolic_cols, b.systolic_cols);
+    }
+
+    #[test]
+    fn cfg_round_trips_defaults() {
+        let c = SocConfig::default();
+        let emitted = c.to_cfg();
+        let parsed = SocConfig::from_str_cfg(&emitted).unwrap();
+        assert_same_config(&c, &parsed);
+        // And the re-emission is stable (parse -> emit is a fixed point).
+        assert_eq!(parsed.to_cfg(), emitted);
+    }
+
+    #[test]
+    fn cfg_round_trips_non_default_values() {
+        let text = "cpu_cores = 4\ncpu_ghz = 3.2\ndram_gbps = 12.8\n\
+                    dram_efficiency = 0.65\nsystolic_rows = 16\nspad_bytes = 65536\n";
+        let c = SocConfig::from_str_cfg(text).unwrap();
+        let again = SocConfig::from_str_cfg(&c.to_cfg()).unwrap();
+        assert_same_config(&c, &again);
+        assert_eq!(again.cpu_cores, 4);
+        assert_eq!(again.dram_gbps, 12.8);
+        assert_eq!(again.dram_efficiency, 0.65);
+        assert_eq!(again.systolic_rows, 16);
+        assert_eq!(again.spad_bytes, 65536);
+    }
+
+    #[test]
+    fn cfg_errors_name_line_and_key() {
+        // Unknown key: message carries the 1-based line number and the key.
+        let e = SocConfig::from_str_cfg("cpu_cores = 8\nbogus_key = 1\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("bogus_key"), "{e}");
+        // Missing '=' on line 1.
+        let e = SocConfig::from_str_cfg("cpu_cores 8\n").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+        assert!(e.contains("expected key = value"), "{e}");
+        // Unparseable value: message names the line and the offending key.
+        let e = SocConfig::from_str_cfg("# lead\ndram_gbps = fast\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("dram_gbps"), "{e}");
+    }
+
+    #[test]
+    fn accel_pool_resolution_and_parsing() {
+        // Legacy fields resolve to a homogeneous pool.
+        let o = SimOptions {
+            num_accels: 3,
+            ..SimOptions::default()
+        };
+        assert_eq!(o.resolved_pool(), vec![AccelKind::Nvdla; 3]);
+        // An explicit pool wins over the legacy fields.
+        let o = SimOptions {
+            num_accels: 7,
+            accel_pool: vec![AccelKind::Nvdla, AccelKind::Systolic],
+            ..SimOptions::default()
+        };
+        assert_eq!(
+            o.resolved_pool(),
+            vec![AccelKind::Nvdla, AccelKind::Systolic]
+        );
+        // CLI forms: a count and a kind list.
+        assert_eq!(
+            SimOptions::parse_accel_pool("4", AccelKind::Systolic).unwrap(),
+            vec![AccelKind::Systolic; 4]
+        );
+        assert_eq!(
+            SimOptions::parse_accel_pool("nvdla,systolic,nvdla", AccelKind::Nvdla).unwrap(),
+            vec![AccelKind::Nvdla, AccelKind::Systolic, AccelKind::Nvdla]
+        );
+        assert!(SimOptions::parse_accel_pool("0", AccelKind::Nvdla).is_err());
+        assert!(SimOptions::parse_accel_pool("nvdla,tpu", AccelKind::Nvdla).is_err());
     }
 }

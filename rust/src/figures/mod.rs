@@ -12,7 +12,7 @@ use crate::camera::{self, RawFrame};
 use crate::config::{AccelKind, InterfaceKind, SimOptions, SocConfig};
 use crate::cpu::CpuModel;
 use crate::nets;
-use crate::sim::Simulator;
+use crate::sched::Scheduler;
 use crate::stats::SimReport;
 use crate::tensor::Shape;
 use crate::tiling::{region_copy_stats, CopyStats, Region};
@@ -22,7 +22,7 @@ use anyhow::Result;
 /// Run one network under the given options.
 pub fn run_net(net: &str, opts: SimOptions) -> Result<SimReport> {
     let g = nets::build_network(net)?;
-    Simulator::new(SocConfig::default(), opts).run(&g)
+    Ok(Scheduler::new(SocConfig::default(), opts).run(&g))
 }
 
 // ---------------------------------------------------------------- Fig 1
@@ -515,14 +515,14 @@ pub fn fig20(configs: &[(usize, usize)]) -> Result<(f64, Vec<Fig20Row>)> {
         s.systolic_rows = r;
         s.systolic_cols = c;
         let g = nets::build_network("cnn10")?;
-        let rep = Simulator::new(
+        let rep = Scheduler::new(
             s,
             SimOptions {
                 accel_kind: AccelKind::Systolic,
                 ..SimOptions::default()
             },
         )
-        .run(&g)?;
+        .run(&g);
         rows.push(Fig20Row {
             pes: (r, c),
             dnn_ns: rep.total_ns,

@@ -30,37 +30,52 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
-//! use smaug::config::{SimOptions, SocConfig};
-//! use smaug::nets;
-//! use smaug::sim::Simulator;
-//!
-//! let graph = nets::build_network("cnn10").unwrap();
-//! let soc = SocConfig::default();
-//! let opts = SimOptions::default();
-//! let report = Simulator::new(soc, opts).run(&graph).unwrap();
-//! println!("{}", report.breakdown_table());
-//! ```
-//!
-//! ## Serving mode
-//!
-//! Simulate N concurrent inference requests sharing one SoC (CLI:
-//! `smaug serve`) and get per-request latency percentiles plus aggregate
-//! throughput:
+//! Everything goes through one front door: compose a SoC, pick a
+//! [`api::Scenario`], run, and read the unified [`api::Report`].
 //!
 //! ```no_run
-//! use smaug::config::{ServeOptions, SimOptions, SocConfig};
-//! use smaug::nets;
-//! use smaug::sim::Simulator;
+//! use smaug::api::{Scenario, Session, Soc};
 //!
-//! let graph = nets::build_network("resnet50").unwrap();
-//! let opts = SimOptions { num_accels: 4, sw_threads: 8, pipeline: true, ..SimOptions::default() };
-//! let serve = ServeOptions { requests: 8, arrival_interval_ns: 50_000.0 };
-//! let report = Simulator::new(SocConfig::default(), opts).serve(&graph, &serve).unwrap();
+//! let report = Session::on(Soc::default())
+//!     .network("cnn10")
+//!     .scenario(Scenario::Inference)
+//!     .run()
+//!     .unwrap();
 //! println!("{}", report.summary());
-//! println!("p99 latency: {} ns", report.latency_percentile(99.0));
+//! println!("{}", report.to_json()); // versioned smaug.report/v1 schema
 //! ```
+//!
+//! ## Heterogeneous SoCs and serving
+//!
+//! The accelerator pool is composed one instance at a time and may mix
+//! kinds; serving reports per-request latency percentiles plus aggregate
+//! throughput from the same unified report:
+//!
+//! ```no_run
+//! use smaug::api::{Scenario, Session, Soc};
+//! use smaug::config::AccelKind;
+//!
+//! let soc = Soc::builder()
+//!     .accel(AccelKind::Nvdla)
+//!     .accel(AccelKind::Systolic)
+//!     .accels(AccelKind::Nvdla, 2)
+//!     .build();
+//! let report = Session::on(soc)
+//!     .network("resnet50")
+//!     .threads(8)
+//!     .scenario(Scenario::Serving { requests: 8, arrival_interval_ns: 50_000.0 })
+//!     .run()
+//!     .unwrap();
+//! println!("{}", report.summary());
+//! println!("p99 latency: {} ns", report.latency.unwrap().p99_ns);
+//! ```
+//!
+//! Sweeps ([`api::SweepAxis`]), the paper-§V camera pipeline, and a
+//! training step are the remaining [`api::Scenario`] variants — one enum,
+//! not five entry points. The old [`sim::Simulator`] methods remain as
+//! `#[deprecated]` delegating shims.
 
+pub mod api;
 pub mod accel;
 pub mod camera;
 pub mod config;

@@ -1,26 +1,32 @@
 //! `smaug` — CLI launcher for the SMAUG full-stack DNN SoC simulator.
 //!
+//! Every subcommand builds one [`smaug::api::Session`] on a composed
+//! [`smaug::api::Soc`] and prints the unified report.
+//!
 //! ```text
-//! smaug run --net vgg16 [--accels 8] [--interface acp] [--threads 8]
-//!           [--accel nvdla|systolic] [--sampling N] [--soc file.cfg]
-//!           [--functional off|native|pjrt] [--train]
-//!           [--double-buffer] [--inter-accel-reduction] [--pipeline]
-//!           [--report breakdown|ops|timeline|json|csv|trace-json]
+//! smaug run --net vgg16 [--accels 8 | --accels nvdla,systolic,nvdla]
+//!           [--interface acp] [--threads 8] [--accel nvdla|systolic]
+//!           [--sampling N] [--soc file.cfg] [--functional off|native|pjrt]
+//!           [--train] [--double-buffer] [--inter-accel-reduction] [--pipeline]
+//!           [--report summary|ops|timeline|json|csv|trace-json]
 //! smaug serve --net resnet50 [--requests 8] [--interval-us 50]
 //!           [--accels 4] [--threads 8] [--no-pipeline] [--report summary|json]
-//! smaug sweep --net cnn10 --accels 1,2,4,8
-//! smaug camera [--pe 8x8] [--threads 1] [--fps 30]
+//! smaug sweep --net cnn10 [--axis accels|threads] [--values 1,2,4,8]
+//!           [--report summary|json]
+//! smaug camera [--pe 8x8] [--threads 1] [--fps 30] [--report summary|json]
 //! smaug config
-//! smaug nets
+//! smaug nets [--json]
 //! ```
+//!
+//! `--accels` accepts either a count (`8`: a homogeneous pool of the
+//! `--accel` kind) or a comma-separated kind list
+//! (`nvdla,systolic,nvdla`: a heterogeneous pool, one instance each).
 
 use anyhow::{bail, Context, Result};
-use smaug::camera;
-use smaug::config::{AccelKind, ServeOptions, SimOptions, SocConfig};
-use smaug::graph::training_step;
+use smaug::api::{Report, Scenario, Session, Soc, SweepAxis};
+use smaug::config::{AccelKind, SimOptions, SocConfig};
 use smaug::nets;
-use smaug::sim::Simulator;
-use smaug::util::fmt_ns;
+use smaug::util::{fmt_ns, JsonWriter};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -40,13 +46,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             println!("{}", SocConfig::default().table());
             Ok(())
         }
-        Some("nets") => {
-            for n in nets::ALL_NETWORKS {
-                let g = nets::build_network(n)?;
-                println!("{}", g.summary());
-            }
-            Ok(())
-        }
+        Some("nets") => cmd_nets(&args[1..]),
         Some("--version") => {
             println!("smaug {}", smaug::VERSION);
             Ok(())
@@ -54,15 +54,15 @@ fn dispatch(args: &[String]) -> Result<()> {
         _ => {
             eprintln!(
                 "smaug {} — full-stack DNN SoC simulator (SMAUG reproduction)\n\n\
-                 usage:\n  smaug run --net <name> [--accels N] [--interface dma|acp]\n\
+                 usage:\n  smaug run --net <name> [--accels N|kind,kind,...] [--interface dma|acp]\n\
                  \x20          [--threads N] [--accel nvdla|systolic] [--sampling N]\n\
-                 \x20          [--functional off|native|pjrt] [--report breakdown|ops|timeline|json|csv|trace-json]\n\
+                 \x20          [--functional off|native|pjrt] [--report summary|ops|timeline|json|csv|trace-json]\n\
                  \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction] [--pipeline]\n\
                  \x20 smaug serve --net <name> [--requests N] [--interval-us F]\n\
-                 \x20          [--accels N] [--threads N] [--no-pipeline] [--report summary|json]\n\
-                 \x20 smaug sweep --net <name> [--accels 1,2,4,8]\n\
-                 \x20 smaug camera [--pe RxC] [--threads N] [--fps N]\n\
-                 \x20 smaug config   smaug nets",
+                 \x20          [--accels N|kinds] [--threads N] [--no-pipeline] [--report summary|json]\n\
+                 \x20 smaug sweep --net <name> [--axis accels|threads] [--values 1,2,4,8] [--report summary|json]\n\
+                 \x20 smaug camera [--pe RxC] [--threads N] [--fps N] [--report summary|json]\n\
+                 \x20 smaug config   smaug nets [--json]",
                 smaug::VERSION
             );
             Ok(())
@@ -78,73 +78,121 @@ fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(String::as_str)
 }
 
-fn parse_opts(args: &[String]) -> Result<SimOptions> {
-    let mut o = SimOptions::default();
-    if let Some(v) = flag(args, "--accels") {
-        o.num_accels = v.parse().context("--accels")?;
+fn has(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// Compose the SoC from `--soc` (microarchitecture), `--accel` (default
+/// kind), and `--accels` (count or heterogeneous kind list).
+fn parse_soc(args: &[String]) -> Result<Soc> {
+    let mut b = Soc::builder();
+    if let Some(path) = flag(args, "--soc") {
+        let cfg = SocConfig::from_file(std::path::Path::new(path))
+            .map_err(anyhow::Error::msg)?;
+        b = b.config(cfg);
+    }
+    let default_kind = match flag(args, "--accel") {
+        Some(v) => SimOptions::parse_accel(v).map_err(anyhow::Error::msg)?,
+        None => AccelKind::Nvdla,
+    };
+    match flag(args, "--accels") {
+        Some(spec) => {
+            let pool = SimOptions::parse_accel_pool(spec, default_kind)
+                .map_err(anyhow::Error::msg)
+                .context("--accels")?;
+            for k in pool {
+                b = b.accel(k);
+            }
+        }
+        None => b = b.accel(default_kind),
+    }
+    Ok(b.build())
+}
+
+/// Build a session with all the shared run knobs applied.
+fn build_session(args: &[String]) -> Result<Session> {
+    let mut s = Session::on(parse_soc(args)?);
+    if let Some(net) = flag(args, "--net") {
+        s = s.network(net);
     }
     if let Some(v) = flag(args, "--threads") {
-        o.sw_threads = v.parse().context("--threads")?;
+        s = s.threads(v.parse().context("--threads")?);
     }
     if let Some(v) = flag(args, "--interface") {
-        o.interface = SimOptions::parse_interface(v).map_err(anyhow::Error::msg)?;
-    }
-    if let Some(v) = flag(args, "--accel") {
-        o.accel_kind = SimOptions::parse_accel(v).map_err(anyhow::Error::msg)?;
+        s = s.interface(SimOptions::parse_interface(v).map_err(anyhow::Error::msg)?);
     }
     if let Some(v) = flag(args, "--sampling") {
-        o.sampling_factor = v.parse().context("--sampling")?;
+        s = s.sampling(v.parse().context("--sampling")?);
     }
     if let Some(v) = flag(args, "--functional") {
-        o.functional = SimOptions::parse_functional(v).map_err(anyhow::Error::msg)?;
+        s = s.functional(SimOptions::parse_functional(v).map_err(anyhow::Error::msg)?);
     }
     if let Some(v) = flag(args, "--seed") {
-        o.seed = v.parse().context("--seed")?;
+        s = s.seed(v.parse().context("--seed")?);
     }
-    if args.iter().any(|a| a == "--double-buffer") {
-        o.double_buffer = true;
+    if has(args, "--double-buffer") {
+        s = s.double_buffer(true);
     }
-    if args.iter().any(|a| a == "--inter-accel-reduction") {
-        o.inter_accel_reduction = true;
+    if has(args, "--inter-accel-reduction") {
+        s = s.inter_accel_reduction(true);
     }
-    if args.iter().any(|a| a == "--pipeline") {
-        o.pipeline = true;
+    if has(args, "--pipeline") {
+        s = s.pipeline(true);
     }
-    Ok(o)
+    if has(args, "--no-pipeline") {
+        s = s.pipeline(false);
+    }
+    Ok(s)
 }
 
-fn parse_soc(args: &[String]) -> Result<SocConfig> {
-    match flag(args, "--soc") {
-        Some(path) => {
-            SocConfig::from_file(std::path::Path::new(path)).map_err(anyhow::Error::msg)
+/// Print a report in one of the shared output formats.
+fn print_report(report: &Report, kind: &str) -> Result<()> {
+    match kind {
+        "summary" | "breakdown" => println!("{}", report.summary()),
+        "ops" => println!("{}", report.per_op_table()),
+        "csv" => print!("{}", report.per_op_csv()),
+        "json" => println!("{}", report.to_json()),
+        "timeline" => {
+            let tl = report
+                .timeline
+                .as_ref()
+                .context("timeline was not captured")?;
+            println!("{}", tl.ascii_gantt(100));
+            println!("total: {}", fmt_ns(report.total_ns));
         }
-        None => Ok(SocConfig::default()),
+        "trace-json" => {
+            let tl = report
+                .timeline
+                .as_ref()
+                .context("timeline was not captured")?;
+            println!("{}", tl.to_json());
+        }
+        other => bail!("unknown report '{other}' (summary|ops|timeline|json|csv|trace-json)"),
     }
+    Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> Result<()> {
-    let net = flag(args, "--net").context("--net <name> is required (see `smaug nets`)")?;
-    let mut opts = parse_opts(args)?;
-    // Serving is the event-driven scheduler's home turf: pipelining is on
-    // unless explicitly disabled (for serial-baseline comparisons).
-    opts.pipeline = !args.iter().any(|a| a == "--no-pipeline");
-    let serve = ServeOptions {
-        requests: flag(args, "--requests")
-            .map(str::parse::<usize>)
-            .transpose()
-            .context("--requests")?
-            .unwrap_or(4),
-        arrival_interval_ns: flag(args, "--interval-us")
-            .map(str::parse::<f64>)
-            .transpose()
-            .context("--interval-us")?
-            .unwrap_or(0.0)
-            * 1000.0,
-    };
-    let graph = nets::build_network(net)?;
-    let soc = parse_soc(args)?;
-    let report = Simulator::new(soc, opts).serve(&graph, &serve)?;
-    match flag(args, "--report").unwrap_or("summary") {
+fn cmd_run(args: &[String]) -> Result<()> {
+    if flag(args, "--net").is_none() {
+        bail!("--net <name> is required (see `smaug nets`)");
+    }
+    let report_kind = flag(args, "--report").unwrap_or("summary");
+    let mut session = build_session(args)?;
+    session = session.scenario(if has(args, "--train") {
+        Scenario::Training
+    } else {
+        Scenario::Inference
+    });
+    if matches!(report_kind, "timeline" | "trace-json") {
+        session = session.capture_timeline(true);
+    }
+    let report = session.run()?;
+    print_report(&report, report_kind)
+}
+
+/// The restricted output formats shared by serve/sweep/camera.
+fn print_summary_or_json(report: &Report, kind: &str) -> Result<()> {
+    match kind {
         "summary" => println!("{}", report.summary()),
         "json" => println!("{}", report.to_json()),
         other => bail!("unknown report '{other}' (summary|json)"),
@@ -152,137 +200,122 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(args: &[String]) -> Result<()> {
-    let net = flag(args, "--net").context("--net <name> is required (see `smaug nets`)")?;
-    let report_kind = flag(args, "--report").unwrap_or("breakdown");
-    let opts = parse_opts(args)?;
-    let mut graph = nets::build_network(net)?;
-    if args.iter().any(|a| a == "--train") {
-        graph = training_step(&graph);
+fn cmd_serve(args: &[String]) -> Result<()> {
+    if flag(args, "--net").is_none() {
+        bail!("--net <name> is required (see `smaug nets`)");
     }
-    let soc = parse_soc(args)?;
-    let sim = Simulator::new(soc, opts.clone());
-
-    use smaug::config::FunctionalMode;
-    if opts.functional != FunctionalMode::Off {
-        let run = sim.run_functional(&graph, None)?;
-        println!("{}", run.report.breakdown_table());
-        println!(
-            "functional: backend={} max |tiled-direct| divergence = {:.2e}",
-            run.backend, run.max_divergence
-        );
-        return Ok(());
-    }
-    match report_kind {
-        "breakdown" => {
-            let r = sim.run(&graph)?;
-            println!("{}", r.breakdown_table());
-        }
-        "ops" => {
-            let r = sim.run(&graph)?;
-            println!("{}", r.per_op_table());
-        }
-        "timeline" => {
-            let (r, tl) = sim.run_with_timeline(&graph)?;
-            println!("{}", tl.ascii_gantt(100));
-            println!("total: {}", fmt_ns(r.total_ns));
-        }
-        "json" => {
-            let r = sim.run(&graph)?;
-            println!("{}", r.to_json());
-        }
-        "csv" => {
-            let r = sim.run(&graph)?;
-            print!("{}", r.per_op_csv());
-        }
-        "trace-json" => {
-            let (_r, tl) = sim.run_with_timeline(&graph)?;
-            println!("{}", tl.to_json());
-        }
-        other => bail!("unknown report '{other}'"),
-    }
-    Ok(())
+    let requests = flag(args, "--requests")
+        .map(str::parse::<usize>)
+        .transpose()
+        .context("--requests")?
+        .unwrap_or(4);
+    let arrival_interval_ns = flag(args, "--interval-us")
+        .map(str::parse::<f64>)
+        .transpose()
+        .context("--interval-us")?
+        .unwrap_or(0.0)
+        * 1000.0;
+    let report = build_session(args)?
+        .scenario(Scenario::Serving {
+            requests,
+            arrival_interval_ns,
+        })
+        .run()?;
+    print_summary_or_json(&report, flag(args, "--report").unwrap_or("summary"))
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {
-    let net = flag(args, "--net").context("--net required")?;
-    let accels: Vec<usize> = flag(args, "--accels")
-        .unwrap_or("1,2,4,8")
-        .split(',')
-        .map(|s| s.parse().context("--accels list"))
-        .collect::<Result<_>>()?;
-    let graph = nets::build_network(net)?;
-    println!(
-        "{:<8} {:>12} {:>12} {:>12} {:>12} {:>8}",
-        "accels", "total", "accel", "transfer", "cpu", "speedup"
-    );
-    let mut base = None;
-    for n in accels {
-        let opts = SimOptions {
-            num_accels: n,
-            ..parse_opts(args)?
-        };
-        let r = Simulator::new(SocConfig::default(), opts).run(&graph)?;
-        let b = &r.breakdown;
-        let baseline = *base.get_or_insert(r.total_ns);
-        println!(
-            "{:<8} {:>12} {:>12} {:>12} {:>12} {:>7.2}x",
-            n,
-            fmt_ns(r.total_ns),
-            fmt_ns(b.accel_ns),
-            fmt_ns(b.transfer_ns),
-            fmt_ns(b.cpu_ns()),
-            baseline / r.total_ns
-        );
+    if flag(args, "--net").is_none() {
+        bail!("--net <name> is required (see `smaug nets`)");
     }
-    Ok(())
+    let axis_flag = flag(args, "--axis");
+    let axis = match axis_flag.unwrap_or("accels") {
+        "accels" => SweepAxis::Accels,
+        "threads" => SweepAxis::Threads,
+        other => bail!("unknown axis '{other}' (accels|threads)"),
+    };
+    // `--values` is the canonical spelling. Only in the original
+    // `smaug sweep --net X --accels 1,2,4,8` shorthand — no --axis, no
+    // --values — is `--accels` the value list; with an explicit --axis it
+    // keeps its usual meaning (the SoC pool) and must reach the parser.
+    let (values_spec, session_args): (String, Vec<String>) = match flag(args, "--values") {
+        Some(v) => (v.to_string(), args.to_vec()),
+        None if axis_flag.is_none() => match args.iter().position(|a| a == "--accels") {
+            Some(i) => {
+                let v = args.get(i + 1).context("--accels needs a value")?.clone();
+                let mut rest = args.to_vec();
+                rest.drain(i..=i + 1);
+                (v, rest)
+            }
+            None => ("1,2,4,8".to_string(), args.to_vec()),
+        },
+        None => ("1,2,4,8".to_string(), args.to_vec()),
+    };
+    let values: Vec<usize> = values_spec
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .context("sweep values must be integers (--values 1,2,4,8)")
+        })
+        .collect::<Result<_>>()?;
+    let report = build_session(&session_args)?
+        .scenario(Scenario::Sweep { axis, values })
+        .run()?;
+    print_summary_or_json(&report, flag(args, "--report").unwrap_or("summary"))
 }
 
 fn cmd_camera(args: &[String]) -> Result<()> {
-    let pe = flag(args, "--pe").unwrap_or("8x8");
-    let threads: usize = flag(args, "--threads").unwrap_or("1").parse()?;
-    let fps: f64 = flag(args, "--fps").unwrap_or("30").parse()?;
+    let pe_spec = flag(args, "--pe").unwrap_or("8x8");
     let (rows, cols) = {
-        let mut it = pe.split('x');
-        let r: usize = it.next().context("--pe RxC")?.parse()?;
-        let c: usize = it.next().context("--pe RxC")?.parse()?;
+        let mut it = pe_spec.split('x');
+        let r: usize = it.next().context("--pe RxC")?.parse().context("--pe RxC")?;
+        let c: usize = it.next().context("--pe RxC")?.parse().context("--pe RxC")?;
         (r, c)
     };
-    let budget_ms = 1000.0 / fps;
+    let fps: f64 = flag(args, "--fps").unwrap_or("30").parse().context("--fps")?;
+    let report = build_session(args)?
+        .scenario(Scenario::Camera {
+            fps,
+            pe: (rows, cols),
+        })
+        .run()?;
+    print_summary_or_json(&report, flag(args, "--report").unwrap_or("summary"))
+}
 
-    // Camera pipeline on the CPU.
-    let raw = camera::RawFrame::synthetic(1280, 720, 42);
-    let soc = SocConfig::default();
-    let (_rgb, stages) = camera::run_pipeline(&raw, &soc, threads, None);
-    let cam_ns = camera::pipeline_ns(&stages);
-
-    // CNN10 on the systolic array (paper §V).
-    let mut cam_soc = soc.clone();
-    cam_soc.systolic_rows = rows;
-    cam_soc.systolic_cols = cols;
-    let opts = SimOptions {
-        accel_kind: AccelKind::Systolic,
-        ..SimOptions::default()
-    };
-    let g = nets::build_network("cnn10")?;
-    let r = Simulator::new(cam_soc, opts).run(&g)?;
-
-    println!("camera pipeline (720p, {threads} thread(s)):");
-    for s in &stages {
-        println!("  {:<14} {}", s.name, fmt_ns(s.ns));
-    }
-    println!("  {:<14} {}", "total", fmt_ns(cam_ns));
-    println!("DNN (cnn10 on {rows}x{cols} systolic): {}", fmt_ns(r.total_ns));
-    let total = cam_ns + r.total_ns;
-    println!(
-        "frame time: {} / budget {:.1} ms -> {}",
-        fmt_ns(total),
-        budget_ms,
-        if total / 1e6 <= budget_ms {
-            format!("MEETS {fps:.0} FPS (slack {:.1} ms)", budget_ms - total / 1e6)
-        } else {
-            format!("VIOLATES {fps:.0} FPS by {:.1} ms", total / 1e6 - budget_ms)
+/// `smaug nets [--json]`: the network zoo, human table or machine JSON
+/// (name, op count, MACs/FLOPs, parameter footprint).
+fn cmd_nets(args: &[String]) -> Result<()> {
+    if !has(args, "--json") {
+        for n in nets::ALL_NETWORKS {
+            let g = nets::build_network(n)?;
+            println!("{}", g.summary());
         }
-    );
+        return Ok(());
+    }
+    let soc = SocConfig::default();
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("schema").string("smaug.nets/v1");
+    w.key("networks").begin_array();
+    for n in nets::ALL_NETWORKS {
+        let g = nets::build_network(n)?;
+        let macs: u64 = g
+            .ops
+            .iter()
+            .filter_map(|op| smaug::sched::plan_op(op, &g, &soc))
+            .map(|p| p.plan.total_macs())
+            .sum();
+        w.begin_object();
+        w.key("name").string(n);
+        w.key("ops").uint(g.ops.len() as u64);
+        w.key("macs").uint(macs);
+        w.key("flops").uint(2 * macs);
+        w.key("param_bytes").uint(g.param_bytes());
+        w.end_object();
+    }
+    w.end_array();
+    w.end_object();
+    println!("{}", w.finish());
     Ok(())
 }

@@ -99,7 +99,7 @@ fn release(nodes: &mut [Node], pending: &mut Vec<Task>, from: usize, t: f64) {
 /// Execute a workload on the scheduler's SoC; returns one outcome per job.
 pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<JobOutcome> {
     let pipeline = sched.opts.pipeline;
-    let mut pool = AccelPool::new(sched.opts.num_accels.max(1));
+    let mut pool = AccelPool::new(sched.n_accels());
     let mut cpu = PoolGate::new();
 
     // ---- Build the node table in (job, topo) order.

@@ -43,7 +43,7 @@ mod event;
 
 use std::collections::BTreeMap;
 
-use crate::accel::{build_model, AccelModel, KernelClass};
+use crate::accel::{build_pool, AccelModel, KernelClass};
 use crate::config::{InterfaceKind, ServeOptions, SimOptions, SocConfig};
 use crate::cpu::CpuModel;
 use crate::energy::EnergyAccount;
@@ -57,7 +57,10 @@ use crate::trace::{EventKind, Lane, Timeline};
 pub struct Scheduler {
     soc: SocConfig,
     opts: SimOptions,
-    model: Box<dyn AccelModel>,
+    /// One timing model per accelerator instance, in command-queue order.
+    /// Heterogeneous pools (e.g. NVDLA + systolic) are first-class: work
+    /// item `i` dispatched to queue `a` is costed by `models[a]`.
+    models: Vec<Box<dyn AccelModel>>,
     /// Memory system (public for inspection by harnesses).
     pub mem: MemorySystem,
     cpu: CpuModel,
@@ -164,14 +167,14 @@ pub(crate) struct FinOutcome {
 impl Scheduler {
     /// Build a scheduler for one simulation run.
     pub fn new(soc: SocConfig, opts: SimOptions) -> Self {
-        let model: Box<dyn AccelModel> = build_model(opts.accel_kind, &soc);
+        let models = build_pool(&opts.resolved_pool(), &soc);
         let mem = MemorySystem::new(&soc, opts.interface);
         let cpu = CpuModel::new(&soc);
         let timeline = Timeline::new(opts.capture_timeline);
         Self {
             soc,
             opts,
-            model,
+            models,
             mem,
             cpu,
             timeline,
@@ -180,12 +183,30 @@ impl Scheduler {
         }
     }
 
+    /// Number of accelerator instances in the pool.
+    pub fn n_accels(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Pool composition, e.g. `3x nvdla` or `nvdla+systolic`.
+    fn pool_desc(&self) -> String {
+        let first = self.models[0].name();
+        if self.models.iter().all(|m| m.name() == first) {
+            format!("{}x {}", self.models.len(), first)
+        } else {
+            self.models
+                .iter()
+                .map(|m| m.name())
+                .collect::<Vec<_>>()
+                .join("+")
+        }
+    }
+
     /// Human-readable configuration string.
     pub fn config_string(&self) -> String {
         format!(
-            "{}x {} / {} / {} sw thread(s){}{}",
-            self.opts.num_accels,
-            self.model.name(),
+            "{} / {} / {} sw thread(s){}{}",
+            self.pool_desc(),
             self.opts.interface,
             self.opts.sw_threads,
             if self.opts.sampling_factor > 1 {
@@ -231,7 +252,7 @@ impl Scheduler {
         let wall_start = std::time::Instant::now();
         let mut now = 0.0f64;
         let mut records: Vec<OpRecord> = Vec::new();
-        let mut pool = AccelPool::new(self.opts.num_accels.max(1));
+        let mut pool = AccelPool::new(self.models.len());
         let order = graph.topo_order();
         for &oid in &order {
             let op = &graph.ops[oid];
@@ -274,8 +295,12 @@ impl Scheduler {
         let outcomes = event::run_jobs(self, jobs);
         let mut requests = Vec::with_capacity(jobs.len());
         let mut makespan = 0.0f64;
+        let mut breakdown = Breakdown::default();
         for (i, ((arrival, graph), outcome)) in jobs.iter().zip(&outcomes).enumerate() {
             makespan = makespan.max(outcome.end_ns);
+            for r in &outcome.records {
+                breakdown.add_record(r);
+            }
             requests.push(RequestRecord {
                 id: i,
                 network: graph.name.clone(),
@@ -295,6 +320,9 @@ impl Scheduler {
             config: self.config_string(),
             requests,
             makespan_ns: makespan,
+            breakdown,
+            dram_utilization: self.mem.dram.utilization_between(0.0, makespan),
+            sw_phase_dram_utilization: self.sw_phase_utilization(),
             dram_bytes: self.mem.stats.dram_bytes,
             llc_bytes: self.mem.stats.llc_bytes,
             energy: self.energy,
@@ -349,7 +377,7 @@ impl Scheduler {
         pool: &mut AccelPool,
     ) -> HwOutcome {
         let plan = &planned.plan;
-        let n_accels = self.opts.num_accels.max(1);
+        let n_accels = self.models.len();
         debug_assert_eq!(pool.busy.len(), n_accels);
         let accel_cycle = self.soc.accel_cycle_ns();
 
@@ -417,10 +445,9 @@ impl Scheduler {
                 llc_resident_frac: 0.0,
             });
             let xfer_in_end = rin.end_ns.max(rwgt.end_ns);
-            // Compute.
-            let cost = self
-                .model
-                .tile_cost(planned.class, item, self.opts.sampling_factor);
+            // Compute, costed by the model of the accelerator instance the
+            // item landed on (pools may be heterogeneous).
+            let cost = self.models[a].tile_cost(planned.class, item, self.opts.sampling_factor);
             let c0 = if self.opts.double_buffer {
                 xfer_in_end.max(pool.compute_free[a])
             } else {
@@ -571,6 +598,21 @@ impl Scheduler {
         }
     }
 
+    /// Mean DRAM utilization over the recorded prep/finalize windows
+    /// (Fig 17's metric).
+    fn sw_phase_utilization(&self) -> f64 {
+        let (mut busy, mut span) = (0.0, 0.0);
+        for &(t0, t1) in &self.sw_windows {
+            busy += self.mem.dram.utilization_between(t0, t1) * (t1 - t0);
+            span += t1 - t0;
+        }
+        if span > 0.0 {
+            busy / span
+        } else {
+            0.0
+        }
+    }
+
     fn finish_report(
         &mut self,
         graph: &Graph,
@@ -580,27 +622,12 @@ impl Scheduler {
     ) -> SimReport {
         let mut b = Breakdown::default();
         for r in &ops {
-            b.accel_ns += r.accel_ns;
-            b.transfer_ns += r.transfer_ns;
-            b.prep_ns += r.prep_ns;
-            b.finalize_ns += r.finalize_ns;
-            b.other_ns += r.other_ns;
+            b.add_record(r);
         }
         // Memory-system energy from aggregate traffic.
         self.energy
             .charge_traffic(self.mem.stats.dram_bytes, self.mem.stats.llc_bytes);
-        let sw_util = {
-            let (mut busy, mut span) = (0.0, 0.0);
-            for &(t0, t1) in &self.sw_windows {
-                busy += self.mem.dram.utilization_between(t0, t1) * (t1 - t0);
-                span += t1 - t0;
-            }
-            if span > 0.0 {
-                busy / span
-            } else {
-                0.0
-            }
-        };
+        let sw_util = self.sw_phase_utilization();
         SimReport {
             network: graph.name.clone(),
             config: self.config_string(),

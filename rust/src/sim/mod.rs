@@ -1,5 +1,10 @@
-//! Top-level simulator facade: ties the scheduler (timing/energy), the
-//! functional execution paths, and reporting together.
+//! Legacy simulator facade (superseded by [`crate::api::Session`]).
+//!
+//! The [`Simulator`] type and its five entry points remain as thin,
+//! `#[deprecated]` delegating shims so pre-existing code and doc examples
+//! keep compiling; new code should drive everything through
+//! `Session::on(Soc)::scenario(...)::run()`, which returns the unified
+//! [`crate::api::Report`] for every scenario.
 
 pub mod functional;
 
@@ -16,6 +21,8 @@ use crate::util::max_abs_diff;
 use anyhow::{Context, Result};
 
 /// The SMAUG simulator: one SoC configuration + run options.
+///
+/// Superseded by [`crate::api::Session`]; kept as a delegating shim.
 pub struct Simulator {
     soc: SocConfig,
     opts: SimOptions,
@@ -31,6 +38,53 @@ pub struct FunctionalRun {
     pub max_divergence: f32,
     /// Which GEMM backend executed the tiles.
     pub backend: &'static str,
+    /// Event timeline of the timing run (empty unless
+    /// [`SimOptions::capture_timeline`] was set).
+    pub timeline: Timeline,
+}
+
+/// Execution-driven run: timing simulation plus a functional forward pass
+/// through the tiling plans, validated against the direct reference. The
+/// backend follows [`SimOptions::functional`] (`Pjrt` = AOT artifacts on
+/// the PJRT CPU client). Shared implementation behind both
+/// [`crate::api::Session`] and the deprecated [`Simulator`] facade.
+pub(crate) fn run_functional_impl(
+    soc: &SocConfig,
+    opts: &SimOptions,
+    graph: &Graph,
+    input: Option<Tensor>,
+) -> Result<FunctionalRun> {
+    let mut sched = Scheduler::new(soc.clone(), opts.clone());
+    let report = sched.run(graph);
+    let timeline = std::mem::take(&mut sched.timeline);
+    let params = functional::gen_params(graph, opts.seed);
+    let input = input.unwrap_or_else(|| functional::gen_input(graph, opts.seed ^ 0xABCD));
+    let mut native = NativeGemm;
+    let mut pjrt_holder: Option<PjrtRuntime> = None;
+    let exec: &mut dyn GemmExec = match opts.functional {
+        FunctionalMode::Pjrt => {
+            pjrt_holder = Some(PjrtRuntime::new(None).context("loading AOT artifacts")?);
+            pjrt_holder.as_mut().unwrap()
+        }
+        FunctionalMode::Native | FunctionalMode::Off => &mut native,
+    };
+    let backend = exec.name();
+    let tiled = functional::tiled_forward(graph, &input, &params, soc, exec)?;
+    let direct = functional::direct_forward(graph, &input, &params);
+    let mut max_div = 0.0f32;
+    for op in &graph.ops {
+        max_div = max_div.max(max_abs_diff(&tiled[&op.id].data, &direct[&op.id].data));
+    }
+    let last = *graph.topo_order().last().unwrap();
+    let output = tiled[&last].clone();
+    drop(pjrt_holder);
+    Ok(FunctionalRun {
+        report,
+        output,
+        max_divergence: max_div,
+        backend,
+        timeline,
+    })
 }
 
 impl Simulator {
@@ -41,27 +95,41 @@ impl Simulator {
 
     /// Timing/energy simulation of one forward pass (event-driven; the
     /// serial schedule when [`SimOptions::pipeline`] is off).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use smaug::api::Session with Scenario::Inference"
+    )]
     pub fn run(&self, graph: &Graph) -> Result<SimReport> {
-        let mut sched = Scheduler::new(self.soc.clone(), self.opts.clone());
-        Ok(sched.run(graph))
+        Ok(Scheduler::new(self.soc.clone(), self.opts.clone()).run(graph))
     }
 
     /// Timing/energy simulation through the strict serial reference
     /// schedule (the seed scheduler), regardless of pipelining options.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use smaug::sched::Scheduler::run_serial (the reference schedule) \
+                or smaug::api::Session for studies"
+    )]
     pub fn run_serial(&self, graph: &Graph) -> Result<SimReport> {
-        let mut sched = Scheduler::new(self.soc.clone(), self.opts.clone());
-        Ok(sched.run_serial(graph))
+        Ok(Scheduler::new(self.soc.clone(), self.opts.clone()).run_serial(graph))
     }
 
     /// Serving mode: simulate `serve.requests` concurrent inference
-    /// requests of `graph` sharing one SoC; reports per-request latency
-    /// percentiles and aggregate throughput.
+    /// requests of `graph` sharing one SoC.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use smaug::api::Session with Scenario::Serving"
+    )]
     pub fn serve(&self, graph: &Graph, serve: &ServeOptions) -> Result<ServeReport> {
-        let mut sched = Scheduler::new(self.soc.clone(), self.opts.clone());
-        Ok(sched.serve(graph, serve))
+        Ok(Scheduler::new(self.soc.clone(), self.opts.clone()).serve(graph, serve))
     }
 
     /// Timing simulation that also returns the captured timeline.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use smaug::api::Session::capture_timeline(true); the timeline \
+                lands in Report::timeline"
+    )]
     pub fn run_with_timeline(&self, graph: &Graph) -> Result<(SimReport, Timeline)> {
         let mut opts = self.opts.clone();
         opts.capture_timeline = true;
@@ -72,53 +140,23 @@ impl Simulator {
 
     /// Execution-driven run: timing simulation plus a functional forward
     /// pass through the tiling plans, validated against the direct
-    /// reference. The backend follows [`SimOptions::functional`]
-    /// (`Pjrt` = AOT artifacts on the PJRT CPU client).
+    /// reference.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use smaug::api::Session::functional(mode); the validation \
+                lands in Report::functional"
+    )]
     pub fn run_functional(&self, graph: &Graph, input: Option<Tensor>) -> Result<FunctionalRun> {
-        let report = self.run(graph)?;
-        let params = functional::gen_params(graph, self.opts.seed);
-        let input = input.unwrap_or_else(|| functional::gen_input(graph, self.opts.seed ^ 0xABCD));
-        let mut native = NativeGemm;
-        let mut pjrt_holder: Option<PjrtRuntime> = None;
-        let exec: &mut dyn GemmExec = match self.opts.functional {
-            FunctionalMode::Pjrt => {
-                pjrt_holder = Some(PjrtRuntime::new(None).context("loading AOT artifacts")?);
-                pjrt_holder.as_mut().unwrap()
-            }
-            FunctionalMode::Native | FunctionalMode::Off => &mut native,
-        };
-        let backend = exec.name();
-        let tiled = functional::tiled_forward(graph, &input, &params, &self.soc, exec)?;
-        let direct = functional::direct_forward(graph, &input, &params);
-        let mut max_div = 0.0f32;
-        for op in &graph.ops {
-            max_div = max_div.max(max_abs_diff(&tiled[&op.id].data, &direct[&op.id].data));
-        }
-        let last = *graph.topo_order().last().unwrap();
-        let output = tiled[&last].clone();
-        drop(pjrt_holder);
-        Ok(FunctionalRun {
-            report,
-            output,
-            max_divergence: max_div,
-            backend,
-        })
+        run_functional_impl(&self.soc, &self.opts, graph, input)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{Scenario, Session, Soc};
+    use crate::config::AccelKind;
     use crate::nets;
-
-    #[test]
-    fn simulator_runs_timing() {
-        let g = nets::build_network("lenet5").unwrap();
-        let r = Simulator::new(SocConfig::default(), SimOptions::default())
-            .run(&g)
-            .unwrap();
-        assert!(r.total_ns > 0.0);
-    }
 
     #[test]
     fn functional_native_validates() {
@@ -127,35 +165,69 @@ mod tests {
             functional: FunctionalMode::Native,
             ..SimOptions::default()
         };
-        let run = Simulator::new(SocConfig::default(), opts)
-            .run_functional(&g, None)
-            .unwrap();
+        let run = run_functional_impl(&SocConfig::default(), &opts, &g, None).unwrap();
         assert_eq!(run.backend, "native");
         assert!(run.max_divergence < 1e-3, "div {}", run.max_divergence);
         assert_eq!(run.output.data.len(), 10); // 10-class head
     }
 
     #[test]
-    fn timeline_returned() {
-        let g = nets::build_network("minerva").unwrap();
-        let (_r, tl) = Simulator::new(SocConfig::default(), SimOptions::default())
-            .run_with_timeline(&g)
-            .unwrap();
+    #[allow(deprecated)]
+    fn deprecated_shims_still_deliver() {
+        let g = nets::build_network("lenet5").unwrap();
+        let sim = Simulator::new(SocConfig::default(), SimOptions::default());
+        let r = sim.run(&g).unwrap();
+        assert!(r.total_ns > 0.0);
+        let (r2, tl) = sim.run_with_timeline(&g).unwrap();
+        assert_eq!(r2.total_ns, r.total_ns);
         assert!(!tl.events.is_empty());
+        let serial = sim.run_serial(&g).unwrap();
+        assert_eq!(serial.total_ns, r.total_ns); // pipeline off => identical
+        let serve = sim.serve(&g, &ServeOptions::default()).unwrap();
+        assert_eq!(serve.requests.len(), 4);
     }
 
     #[test]
-    fn serve_facade_runs() {
+    #[allow(deprecated)]
+    fn shims_agree_with_session() {
+        let g = nets::build_network("minerva").unwrap();
+        let old = Simulator::new(SocConfig::default(), SimOptions::default())
+            .run(&g)
+            .unwrap();
+        let new = Session::on(Soc::default())
+            .network("minerva")
+            .scenario(Scenario::Inference)
+            .run()
+            .unwrap();
+        assert_eq!(old.total_ns, new.total_ns);
+        assert_eq!(old.dram_bytes, new.dram_bytes);
+        assert_eq!(old.energy.total_pj(), new.energy.total_pj());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn serve_shim_matches_serving_scenario() {
         let g = nets::build_network("minerva").unwrap();
         let opts = SimOptions {
             pipeline: true,
             num_accels: 2,
             ..SimOptions::default()
         };
-        let r = Simulator::new(SocConfig::default(), opts)
-            .serve(&g, &crate::config::ServeOptions::default())
+        let old = Simulator::new(SocConfig::default(), opts)
+            .serve(&g, &ServeOptions::default())
             .unwrap();
-        assert_eq!(r.requests.len(), 4);
-        assert!(r.throughput_rps() > 0.0);
+        let new = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+            .network("minerva")
+            .scenario(Scenario::Serving {
+                requests: 4,
+                arrival_interval_ns: 0.0,
+            })
+            .run()
+            .unwrap();
+        assert_eq!(old.requests.len(), new.requests.len());
+        assert_eq!(old.makespan_ns, new.total_ns);
+        for (a, b) in old.requests.iter().zip(&new.requests) {
+            assert_eq!(a.end_ns, b.end_ns);
+        }
     }
 }

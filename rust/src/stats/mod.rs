@@ -60,6 +60,15 @@ pub struct Breakdown {
 }
 
 impl Breakdown {
+    /// Accumulate one operator record's components.
+    pub fn add_record(&mut self, r: &OpRecord) {
+        self.accel_ns += r.accel_ns;
+        self.transfer_ns += r.transfer_ns;
+        self.prep_ns += r.prep_ns;
+        self.finalize_ns += r.finalize_ns;
+        self.other_ns += r.other_ns;
+    }
+
     /// Total of all components.
     pub fn total_ns(&self) -> f64 {
         self.accel_ns + self.transfer_ns + self.cpu_ns()
@@ -206,52 +215,64 @@ impl SimReport {
 
     /// Per-op CSV (header + one row per op) for spreadsheet/plot import.
     pub fn per_op_csv(&self) -> String {
-        let mut s = String::from(
-            "name,tag,strategy,start_ns,end_ns,accel_ns,transfer_ns,prep_ns,finalize_ns,other_ns,tiles,reduce_groups,macs,dram_bytes\n",
-        );
-        for op in &self.ops {
-            s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
-                op.name,
-                op.tag,
-                op.strategy,
-                op.start_ns,
-                op.end_ns,
-                op.accel_ns,
-                op.transfer_ns,
-                op.prep_ns,
-                op.finalize_ns,
-                op.other_ns,
-                op.tiles,
-                op.reduce_groups,
-                op.macs,
-                op.dram_bytes
-            ));
-        }
-        s
+        per_op_csv(&self.ops)
     }
 
     /// Per-op table (name, tag, strategy, span, components).
     pub fn per_op_table(&self) -> String {
-        let mut s = format!(
-            "{:<16} {:>3} {:>7} {:>12} {:>12} {:>12} {:>12} {:>6}\n",
-            "op", "tag", "strat", "span", "accel", "xfer", "cpu", "tiles"
-        );
-        for op in &self.ops {
-            s.push_str(&format!(
-                "{:<16} {:>3} {:>7} {:>12} {:>12} {:>12} {:>12} {:>6}\n",
-                op.name,
-                op.tag,
-                op.strategy,
-                fmt_ns(op.span_ns()),
-                fmt_ns(op.accel_ns),
-                fmt_ns(op.transfer_ns),
-                fmt_ns(op.prep_ns + op.finalize_ns + op.other_ns),
-                op.tiles
-            ));
-        }
-        s
+        per_op_table(&self.ops)
     }
+}
+
+/// Per-op CSV (header + one row per op) over any record slice — shared by
+/// [`SimReport`] and the unified `api::Report`.
+pub fn per_op_csv(ops: &[OpRecord]) -> String {
+    let mut s = String::from(
+        "name,tag,strategy,start_ns,end_ns,accel_ns,transfer_ns,prep_ns,finalize_ns,other_ns,tiles,reduce_groups,macs,dram_bytes\n",
+    );
+    for op in ops {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            op.name,
+            op.tag,
+            op.strategy,
+            op.start_ns,
+            op.end_ns,
+            op.accel_ns,
+            op.transfer_ns,
+            op.prep_ns,
+            op.finalize_ns,
+            op.other_ns,
+            op.tiles,
+            op.reduce_groups,
+            op.macs,
+            op.dram_bytes
+        ));
+    }
+    s
+}
+
+/// Per-op table (name, tag, strategy, span, components) over any record
+/// slice — shared by [`SimReport`] and the unified `api::Report`.
+pub fn per_op_table(ops: &[OpRecord]) -> String {
+    let mut s = format!(
+        "{:<16} {:>3} {:>7} {:>12} {:>12} {:>12} {:>12} {:>6}\n",
+        "op", "tag", "strat", "span", "accel", "xfer", "cpu", "tiles"
+    );
+    for op in ops {
+        s.push_str(&format!(
+            "{:<16} {:>3} {:>7} {:>12} {:>12} {:>12} {:>12} {:>6}\n",
+            op.name,
+            op.tag,
+            op.strategy,
+            fmt_ns(op.span_ns()),
+            fmt_ns(op.accel_ns),
+            fmt_ns(op.transfer_ns),
+            fmt_ns(op.prep_ns + op.finalize_ns + op.other_ns),
+            op.tiles
+        ));
+    }
+    s
 }
 
 /// One inference request served by the event-driven scheduler.
@@ -296,6 +317,12 @@ pub struct ServeReport {
     pub requests: Vec<RequestRecord>,
     /// Time from t = 0 until the last request completed, ns.
     pub makespan_ns: f64,
+    /// Aggregate work breakdown summed over every request's operators.
+    pub breakdown: Breakdown,
+    /// Mean DRAM bandwidth utilization over the makespan.
+    pub dram_utilization: f64,
+    /// Mean DRAM bandwidth utilization during prep/finalize phases only.
+    pub sw_phase_dram_utilization: f64,
     /// Total DRAM traffic, bytes.
     pub dram_bytes: u64,
     /// Total LLC traffic, bytes.

@@ -103,6 +103,21 @@ impl JsonWriter {
         self
     }
 
+    /// Emit a JSON `null`.
+    pub fn null(&mut self) -> &mut Self {
+        self.pre_value();
+        self.buf.push_str("null");
+        self
+    }
+
+    /// Embed a pre-serialized JSON value verbatim (the caller guarantees
+    /// `json` is itself valid JSON — used to nest sub-serializers).
+    pub fn raw(&mut self, json: &str) -> &mut Self {
+        self.pre_value();
+        self.buf.push_str(json);
+        self
+    }
+
     fn push_escaped(&mut self, s: &str) {
         self.buf.push('"');
         for c in s.chars() {

@@ -1,0 +1,201 @@
+//! Unified-report contract tests: the `smaug.report/v1` JSON schema is
+//! pinned field-by-field (a drifted serializer fails loudly here, not in
+//! downstream tooling), and serving percentiles behave.
+
+use smaug::api::{Scenario, Session, Soc, SweepAxis, REPORT_SCHEMA};
+use smaug::config::AccelKind;
+
+/// Keys of the outermost JSON object, in emission order (no serde
+/// offline, so a tiny depth tracker does the walking).
+fn top_level_keys(json: &str) -> Vec<String> {
+    let mut keys = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut esc = false;
+    let mut cur = String::new();
+    let mut chars = json.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_str {
+            if esc {
+                esc = false;
+                cur.push(c);
+                continue;
+            }
+            match c {
+                '\\' => esc = true,
+                '"' => {
+                    in_str = false;
+                    if depth == 1 && chars.peek() == Some(&':') {
+                        keys.push(std::mem::take(&mut cur));
+                    }
+                    cur.clear();
+                }
+                _ => cur.push(c),
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => depth -= 1,
+            _ => {}
+        }
+    }
+    keys
+}
+
+/// The pinned v1 schema: every scenario emits exactly these top-level
+/// keys, in this order. Changing the serializer means bumping
+/// `REPORT_SCHEMA` and this list together.
+const V1_KEYS: &[&str] = &[
+    "schema",
+    "scenario",
+    "network",
+    "config",
+    "accel_pool",
+    "total_ns",
+    "breakdown",
+    "traffic",
+    "energy_pj",
+    "ops",
+    "throughput_rps",
+    "latency_ns",
+    "requests",
+    "sweep_axis",
+    "sweep",
+    "camera",
+    "functional",
+    "timeline",
+    "sim_wallclock_ns",
+];
+
+#[test]
+fn schema_id_is_versioned() {
+    assert_eq!(REPORT_SCHEMA, "smaug.report/v1");
+}
+
+#[test]
+fn inference_json_matches_v1_snapshot() {
+    let json = Session::on(Soc::default())
+        .network("lenet5")
+        .scenario(Scenario::Inference)
+        .run()
+        .unwrap()
+        .to_json();
+    assert_eq!(top_level_keys(&json), V1_KEYS, "top-level keys drifted");
+    assert!(json.contains("\"schema\":\"smaug.report/v1\""));
+    // Units are encoded in the field names — pin the nested sections too.
+    for key in ["accel_ns", "transfer_ns", "prep_ns", "finalize_ns", "other_ns"] {
+        assert!(json.contains(&format!("\"{key}\":")), "breakdown.{key}");
+    }
+    for key in [
+        "dram_bytes",
+        "llc_bytes",
+        "dram_utilization",
+        "sw_phase_dram_utilization",
+    ] {
+        assert!(json.contains(&format!("\"{key}\":")), "traffic.{key}");
+    }
+    for key in ["total", "soc", "dram", "llc", "macc", "spad", "cpu"] {
+        assert!(json.contains(&format!("\"{key}\":")), "energy_pj.{key}");
+    }
+    // Non-serving scenarios carry the sections as nulls, not omissions.
+    assert!(json.contains("\"throughput_rps\":null"));
+    assert!(json.contains("\"latency_ns\":null"));
+    assert!(json.contains("\"camera\":null"));
+}
+
+#[test]
+fn serving_json_matches_v1_snapshot_with_latency() {
+    let json = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+        .network("lenet5")
+        .scenario(Scenario::Serving {
+            requests: 4,
+            arrival_interval_ns: 1_000.0,
+        })
+        .run()
+        .unwrap()
+        .to_json();
+    assert_eq!(top_level_keys(&json), V1_KEYS, "top-level keys drifted");
+    for key in ["mean", "p50", "p90", "p99", "max"] {
+        assert!(json.contains(&format!("\"{key}\":")), "latency_ns.{key}");
+    }
+    assert!(!json.contains("\"latency_ns\":null"));
+    assert!(json.contains("\"arrival_ns\":"));
+}
+
+#[test]
+fn sweep_and_camera_share_the_same_key_set() {
+    let sweep = Session::on(Soc::default())
+        .network("minerva")
+        .scenario(Scenario::Sweep {
+            axis: SweepAxis::Threads,
+            values: vec![1, 8],
+        })
+        .run()
+        .unwrap()
+        .to_json();
+    let camera = Session::on(Soc::default())
+        .scenario(Scenario::Camera {
+            fps: 30.0,
+            pe: (4, 4),
+        })
+        .run()
+        .unwrap()
+        .to_json();
+    assert_eq!(top_level_keys(&sweep), V1_KEYS);
+    assert_eq!(top_level_keys(&camera), V1_KEYS);
+    assert!(sweep.contains("\"sweep_axis\":\"threads\""));
+    assert!(sweep.contains("\"speedup\":"));
+    assert!(camera.contains("\"meets_budget\":"));
+    assert!(camera.contains("\"budget_ms\":"));
+}
+
+#[test]
+fn serving_percentiles_are_monotone() {
+    // Staggered arrivals onto a small pool force distinct latencies.
+    let report = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+        .network("cnn10")
+        .threads(2)
+        .scenario(Scenario::Serving {
+            requests: 8,
+            arrival_interval_ns: 5_000.0,
+        })
+        .run()
+        .unwrap();
+    let l = report.latency.expect("serving populates latency");
+    assert!(l.p50_ns > 0.0);
+    assert!(
+        l.p50_ns <= l.p90_ns && l.p90_ns <= l.p99_ns && l.p99_ns <= l.max_ns,
+        "p50 {} p90 {} p99 {} max {}",
+        l.p50_ns,
+        l.p90_ns,
+        l.p99_ns,
+        l.max_ns
+    );
+    assert!(l.mean_ns <= l.max_ns && l.mean_ns > 0.0);
+    // The percentile accessor agrees with the stored stats.
+    assert_eq!(report.latency_percentile(50.0), l.p50_ns);
+    assert_eq!(report.latency_percentile(99.0), l.p99_ns);
+    // And the general q-sweep is monotone.
+    let mut last = 0.0;
+    for q in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+        let v = report.latency_percentile(q);
+        assert!(v >= last, "q {q}: {v} < {last}");
+        last = v;
+    }
+}
+
+#[test]
+fn timeline_section_embeds_events() {
+    let json = Session::on(Soc::default())
+        .network("minerva")
+        .capture_timeline(true)
+        .run()
+        .unwrap()
+        .to_json();
+    assert!(!json.contains("\"timeline\":null"));
+    assert!(json.contains("\"timeline\":[{"));
+    assert!(json.contains("\"lane\":"));
+    assert_eq!(top_level_keys(&json), V1_KEYS);
+}

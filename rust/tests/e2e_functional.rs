@@ -1,23 +1,23 @@
 //! End-to-end integration: complete networks executed tile-by-tile
 //! through the AOT PJRT artifacts must match the direct reference —
-//! the full three-layer composition proof.
+//! the full three-layer composition proof, driven through the scenario
+//! API (`Session::functional`).
 //!
 //! Requires `make artifacts` (skipped with a notice otherwise).
 
-use smaug::config::{FunctionalMode, SimOptions, SocConfig};
-use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::api::{Scenario, Session, Soc};
+use smaug::config::FunctionalMode;
 
 fn run_net_pjrt(net: &str) -> Option<f32> {
-    let graph = nets::build_network(net).unwrap();
-    let opts = SimOptions {
-        functional: FunctionalMode::Pjrt,
-        ..SimOptions::default()
-    };
-    match Simulator::new(SocConfig::default(), opts).run_functional(&graph, None) {
-        Ok(run) => {
-            assert_eq!(run.backend, "pjrt");
-            Some(run.max_divergence)
+    let session = Session::on(Soc::default())
+        .network(net)
+        .scenario(Scenario::Inference)
+        .functional(FunctionalMode::Pjrt);
+    match session.run() {
+        Ok(report) => {
+            let f = report.functional.expect("functional run requested");
+            assert_eq!(f.backend, "pjrt");
+            Some(f.max_divergence)
         }
         Err(e) => {
             eprintln!("SKIP (run `make artifacts` first): {e:#}");
@@ -49,15 +49,15 @@ fn cnn10_through_pjrt_artifacts() {
 
 #[test]
 fn functional_run_reports_timing_too() {
-    let graph = nets::build_network("minerva").unwrap();
-    let opts = SimOptions {
-        functional: FunctionalMode::Native,
-        ..SimOptions::default()
-    };
-    let run = Simulator::new(SocConfig::default(), opts)
-        .run_functional(&graph, None)
+    let report = Session::on(Soc::default())
+        .network("minerva")
+        .functional(FunctionalMode::Native)
+        .run()
         .unwrap();
-    assert!(run.report.total_ns > 0.0);
-    assert!(run.report.breakdown.accel_ns > 0.0);
-    assert_eq!(run.output.data.len(), 10);
+    assert!(report.total_ns > 0.0);
+    assert!(report.breakdown.accel_ns > 0.0);
+    let f = report.functional.unwrap();
+    assert_eq!(f.backend, "native");
+    assert!(f.max_divergence < 1e-3);
+    assert_eq!(f.output.len(), 10); // 10-class head survives the pipeline
 }

@@ -11,7 +11,7 @@
 
 use smaug::config::{SimOptions, SocConfig};
 use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::sched::Scheduler;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
@@ -26,9 +26,7 @@ fn render() -> String {
     let mut s = String::from("# golden Fig-1 baseline breakdown (SocConfig::default, SimOptions::default)\n");
     for net in ["cnn10", "lenet5"] {
         let g = nets::build_network(net).unwrap();
-        let r = Simulator::new(SocConfig::default(), SimOptions::default())
-            .run(&g)
-            .unwrap();
+        let r = Scheduler::new(SocConfig::default(), SimOptions::default()).run(&g);
         let b = &r.breakdown;
         writeln!(
             s,
@@ -88,9 +86,8 @@ fn fig01_breakdown_locked() {
 fn golden_quantities_identical_across_entry_points() {
     for net in ["cnn10", "lenet5"] {
         let g = nets::build_network(net).unwrap();
-        let sim = Simulator::new(SocConfig::default(), SimOptions::default());
-        let a = sim.run(&g).unwrap();
-        let b = sim.run_serial(&g).unwrap();
+        let a = Scheduler::new(SocConfig::default(), SimOptions::default()).run(&g);
+        let b = Scheduler::new(SocConfig::default(), SimOptions::default()).run_serial(&g);
         assert_eq!(a.total_ns, b.total_ns, "{net}");
         assert_eq!(a.dram_bytes, b.dram_bytes, "{net}");
         assert_eq!(a.energy.total_pj(), b.energy.total_pj(), "{net}");

@@ -1,0 +1,215 @@
+//! Heterogeneous-pool acceptance invariants: a mixed NVDLA + systolic
+//! accelerator pool runs end-to-end under the event scheduler with
+//! per-unit exclusivity intact, and a homogeneous pool composed through
+//! `SocBuilder` reproduces the strict serial reference schedule
+//! bit-for-bit (the PR-1 contract, now through the scenario API).
+
+use smaug::api::{Scenario, Session, Soc};
+use smaug::config::{AccelKind, ServeOptions, SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sched::Scheduler;
+use smaug::trace::{EventKind, Lane};
+
+fn hetero_opts(pipeline: bool) -> SimOptions {
+    SimOptions {
+        accel_pool: vec![AccelKind::Nvdla, AccelKind::Systolic],
+        pipeline,
+        ..SimOptions::default()
+    }
+}
+
+/// A two-kind pool runs every network end-to-end and keeps each unit's
+/// busy intervals disjoint — the datapaths of *both* kinds are exclusive
+/// resources even under concurrent dispatch.
+#[test]
+fn hetero_pool_busy_intervals_disjoint_per_unit() {
+    for net in ["cnn10", "vgg16"] {
+        let g = nets::build_network(net).unwrap();
+        let mut sched = Scheduler::new(
+            SocConfig::default(),
+            SimOptions {
+                capture_timeline: true,
+                sw_threads: 4,
+                ..hetero_opts(true)
+            },
+        );
+        let r = sched.run(&g);
+        assert!(r.total_ns > 0.0, "{net}");
+        assert!(r.config.contains("nvdla+systolic"), "{net}: {}", r.config);
+        let mut saw_events = 0usize;
+        for a in 0..2 {
+            let ov = sched
+                .timeline
+                .lane_overlap_ns(Lane::Accel(a), Some(EventKind::Compute));
+            assert!(
+                ov <= 1e-6,
+                "{net}: accel {a} datapath double-booked by {ov} ns"
+            );
+            saw_events += sched
+                .timeline
+                .events
+                .iter()
+                .filter(|e| e.lane == Lane::Accel(a) && e.kind == EventKind::Compute)
+                .count();
+        }
+        assert!(saw_events > 0, "{net}: no accelerator compute events");
+        assert!(sched.timeline.lane_overlap_ns(Lane::Cpu, None) <= 1e-6, "{net}");
+    }
+}
+
+/// Both kinds in the pool actually execute work: with pipelining on and a
+/// multi-group network, neither unit's compute lane stays empty.
+#[test]
+fn hetero_pool_uses_both_kinds() {
+    let g = nets::build_network("vgg16").unwrap();
+    let mut sched = Scheduler::new(
+        SocConfig::default(),
+        SimOptions {
+            capture_timeline: true,
+            ..hetero_opts(true)
+        },
+    );
+    let r = sched.run(&g);
+    for a in 0..2 {
+        let busy = sched.timeline.lane_busy(Lane::Accel(a), 0.0, r.total_ns);
+        assert!(busy > 0.0, "accel {a} never computed");
+    }
+}
+
+/// The homogeneous case composed through `SocBuilder` reproduces the
+/// serial reference schedule bit-for-bit when pipelining is off — the
+/// PR-1 equality contract survives the API redesign.
+#[test]
+fn homogeneous_socbuilder_matches_serial_bit_for_bit() {
+    for (net, accels) in [("cnn10", 1usize), ("lenet5", 1), ("cnn10", 4)] {
+        let event = Session::on(Soc::builder().accels(AccelKind::Nvdla, accels).build())
+            .network(net)
+            .scenario(Scenario::Inference)
+            .run()
+            .unwrap();
+        let g = nets::build_network(net).unwrap();
+        let serial = Scheduler::new(
+            SocConfig::default(),
+            SimOptions {
+                num_accels: accels,
+                ..SimOptions::default()
+            },
+        )
+        .run_serial(&g);
+        assert_eq!(
+            event.total_ns.to_bits(),
+            serial.total_ns.to_bits(),
+            "{net}/{accels}"
+        );
+        assert_eq!(event.dram_bytes, serial.dram_bytes, "{net}/{accels}");
+        assert_eq!(event.llc_bytes, serial.llc_bytes, "{net}/{accels}");
+        assert_eq!(
+            event.energy.total_pj().to_bits(),
+            serial.energy.total_pj().to_bits(),
+            "{net}/{accels}"
+        );
+        assert_eq!(event.ops.len(), serial.ops.len(), "{net}/{accels}");
+        for (e, s) in event.ops.iter().zip(&serial.ops) {
+            assert_eq!(e.name, s.name, "{net}/{accels}: record order");
+            assert_eq!(e.start_ns.to_bits(), s.start_ns.to_bits(), "op {}", e.name);
+            assert_eq!(e.end_ns.to_bits(), s.end_ns.to_bits(), "op {}", e.name);
+            assert_eq!(e.accel_ns.to_bits(), s.accel_ns.to_bits(), "op {}", e.name);
+        }
+        // The legacy config string survives for homogeneous pools.
+        assert_eq!(event.config, serial.config, "{net}/{accels}");
+    }
+}
+
+/// Work conservation holds on heterogeneous pools too: pipelining changes
+/// when work happens, never how much (traffic, CPU spans, energy).
+#[test]
+fn hetero_pipeline_conserves_work() {
+    let g = nets::build_network("cnn10").unwrap();
+    let serial = Scheduler::new(SocConfig::default(), hetero_opts(false)).run_serial(&g);
+    let piped = Scheduler::new(SocConfig::default(), hetero_opts(true)).run(&g);
+    assert_eq!(piped.dram_bytes, serial.dram_bytes);
+    assert_eq!(piped.llc_bytes, serial.llc_bytes);
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+    assert!(rel(piped.breakdown.cpu_ns(), serial.breakdown.cpu_ns()) < 1e-9);
+    assert!(rel(piped.energy.total_pj(), serial.energy.total_pj()) < 1e-9);
+    // And the event engine with pipelining off equals serial exactly.
+    let event_off = Scheduler::new(SocConfig::default(), hetero_opts(false)).run(&g);
+    assert_eq!(event_off.total_ns.to_bits(), serial.total_ns.to_bits());
+}
+
+/// Heterogeneous serving is deterministic and respects exclusivity.
+#[test]
+fn hetero_serving_is_deterministic_and_exclusive() {
+    let g = nets::build_network("lenet5").unwrap();
+    let serve = ServeOptions {
+        requests: 5,
+        arrival_interval_ns: 2_000.0,
+    };
+    let run = || {
+        let mut sched = Scheduler::new(
+            SocConfig::default(),
+            SimOptions {
+                capture_timeline: true,
+                sw_threads: 2,
+                ..hetero_opts(true)
+            },
+        );
+        let r = sched.serve(&g, &serve);
+        for a in 0..2 {
+            let ov = sched
+                .timeline
+                .lane_overlap_ns(Lane::Accel(a), Some(EventKind::Compute));
+            assert!(ov <= 1e-6, "accel {a} double-booked by {ov} ns");
+        }
+        r
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.makespan_ns.to_bits(), b.makespan_ns.to_bits());
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(x.end_ns.to_bits(), y.end_ns.to_bits(), "request {}", x.id);
+    }
+    assert!(a.breakdown.total_ns() > 0.0);
+}
+
+/// The same heterogeneous serving workload through the Session front door
+/// matches the direct scheduler result.
+#[test]
+fn session_hetero_serving_matches_scheduler() {
+    let g = nets::build_network("lenet5").unwrap();
+    let direct = Scheduler::new(
+        SocConfig::default(),
+        SimOptions {
+            sw_threads: 2,
+            ..hetero_opts(true)
+        },
+    )
+    .serve(
+        &g,
+        &ServeOptions {
+            requests: 4,
+            arrival_interval_ns: 1_000.0,
+        },
+    );
+    let via_session = Session::on(
+        Soc::builder()
+            .accel(AccelKind::Nvdla)
+            .accel(AccelKind::Systolic)
+            .build(),
+    )
+    .network("lenet5")
+    .threads(2)
+    .scenario(Scenario::Serving {
+        requests: 4,
+        arrival_interval_ns: 1_000.0,
+    })
+    .run()
+    .unwrap();
+    assert_eq!(direct.makespan_ns.to_bits(), via_session.total_ns.to_bits());
+    for (x, y) in direct.requests.iter().zip(&via_session.requests) {
+        assert_eq!(x.end_ns.to_bits(), y.end_ns.to_bits());
+    }
+    assert_eq!(
+        via_session.accel_pool,
+        vec!["nvdla".to_string(), "systolic".to_string()]
+    );
+}

@@ -16,7 +16,7 @@
 use smaug::config::{InterfaceKind, ServeOptions, SimOptions, SocConfig};
 use smaug::graph::{Activation, Graph, GraphBuilder, Padding};
 use smaug::nets;
-use smaug::sim::Simulator;
+use smaug::sched::Scheduler;
 use smaug::stats::{RequestRecord, ServeReport, SimReport};
 use smaug::trace::{EventKind, Lane};
 use smaug::util::Rng;
@@ -84,13 +84,11 @@ fn rand_opts(rng: &mut Rng) -> SimOptions {
 }
 
 fn run(g: &Graph, opts: &SimOptions) -> SimReport {
-    Simulator::new(SocConfig::default(), opts.clone()).run(g).unwrap()
+    Scheduler::new(SocConfig::default(), opts.clone()).run(g)
 }
 
 fn run_serial(g: &Graph, opts: &SimOptions) -> SimReport {
-    Simulator::new(SocConfig::default(), opts.clone())
-        .run_serial(g)
-        .unwrap()
+    Scheduler::new(SocConfig::default(), opts.clone()).run_serial(g)
 }
 
 fn rel(a: f64, b: f64) -> f64 {
@@ -292,9 +290,7 @@ fn identical_configs_are_bit_deterministic() {
         arrival_interval_ns: 2_500.0,
     };
     let run_serve = || -> ServeReport {
-        Simulator::new(SocConfig::default(), opts.clone())
-            .serve(&g, &serve)
-            .unwrap()
+        Scheduler::new(SocConfig::default(), opts.clone()).serve(&g, &serve)
     };
     let (s1, s2) = (run_serve(), run_serve());
     for (x, y) in s1.requests.iter().zip(&s2.requests) {
@@ -342,18 +338,14 @@ fn serving_latency_percentiles_behave() {
         sw_threads: 4,
         ..SimOptions::default()
     };
-    let sim = Simulator::new(SocConfig::default(), opts.clone());
-
     // Burst arrival: 8 requests at t=0 contend.
-    let burst = sim
-        .serve(
-            &g,
-            &ServeOptions {
-                requests: 8,
-                arrival_interval_ns: 0.0,
-            },
-        )
-        .unwrap();
+    let burst = Scheduler::new(SocConfig::default(), opts.clone()).serve(
+        &g,
+        &ServeOptions {
+            requests: 8,
+            arrival_interval_ns: 0.0,
+        },
+    );
     assert_eq!(burst.requests.len(), 8);
     let (p50, p90, p99) = (
         burst.latency_percentile(50.0),
@@ -365,16 +357,14 @@ fn serving_latency_percentiles_behave() {
 
     // Widely spaced arrivals: no queueing, so every latency matches one
     // uncontended run.
-    let single = sim.run(&g).unwrap().total_ns;
-    let spaced = sim
-        .serve(
-            &g,
-            &ServeOptions {
-                requests: 4,
-                arrival_interval_ns: single * 10.0,
-            },
-        )
-        .unwrap();
+    let single = run(&g, &opts).total_ns;
+    let spaced = Scheduler::new(SocConfig::default(), opts.clone()).serve(
+        &g,
+        &ServeOptions {
+            requests: 4,
+            arrival_interval_ns: single * 10.0,
+        },
+    );
     for r in &spaced.requests {
         assert!(
             rel(r.latency_ns(), single) < 1e-9,

@@ -7,7 +7,8 @@ use smaug::config::{InterfaceKind, SimOptions, SocConfig};
 use smaug::graph::{Activation, GraphBuilder, Padding};
 use smaug::nets;
 use smaug::runtime::NativeGemm;
-use smaug::sim::{direct_forward, gen_input, gen_params, tiled_forward, Simulator};
+use smaug::sched::Scheduler;
+use smaug::sim::{direct_forward, gen_input, gen_params, tiled_forward};
 use smaug::tiling::{plan_conv, plan_fc, ConvParams, FcParams};
 use smaug::util::{max_abs_diff, Rng};
 
@@ -128,12 +129,7 @@ fn random_convnets_tiled_equals_direct() {
 fn timing_dominance_relations() {
     for net in ["minerva", "lenet5", "cnn10", "vgg16", "elu16"] {
         let g = nets::build_network(net).unwrap();
-        let run = |o: SimOptions| {
-            Simulator::new(SocConfig::default(), o)
-                .run(&g)
-                .unwrap()
-                .total_ns
-        };
+        let run = |o: SimOptions| Scheduler::new(SocConfig::default(), o).run(&g).total_ns;
         let base = run(SimOptions::default());
         let acp = run(SimOptions {
             interface: InterfaceKind::Acp,
@@ -157,9 +153,8 @@ fn timing_dominance_relations() {
 fn energy_consistency() {
     let g_small = nets::build_network("minerva").unwrap();
     let g_big = nets::build_network("vgg16").unwrap();
-    let sim = Simulator::new(SocConfig::default(), SimOptions::default());
-    let small = sim.run(&g_small).unwrap();
-    let big = sim.run(&g_big).unwrap();
+    let small = Scheduler::new(SocConfig::default(), SimOptions::default()).run(&g_small);
+    let big = Scheduler::new(SocConfig::default(), SimOptions::default()).run(&g_big);
     for r in [&small, &big] {
         let e = &r.energy;
         let sum = e.macc_pj + e.spad_pj + e.llc_pj + e.dram_pj + e.cpu_pj + e.accel_static_pj;
@@ -183,7 +178,7 @@ fn breakdown_sums_to_total_everywhere() {
             },
         ] {
             let g = nets::build_network(net).unwrap();
-            let r = Simulator::new(SocConfig::default(), opts).run(&g).unwrap();
+            let r = Scheduler::new(SocConfig::default(), opts).run(&g);
             let sum = r.breakdown.total_ns();
             let rel = (sum - r.total_ns).abs() / r.total_ns;
             assert!(rel < 0.05, "{net}: breakdown {sum} vs total {}", r.total_ns);
@@ -198,18 +193,15 @@ fn breakdown_sums_to_total_everywhere() {
 fn traffic_sanity() {
     for net in ["cnn10", "elu16"] {
         let g = nets::build_network(net).unwrap();
-        let dma = Simulator::new(SocConfig::default(), SimOptions::default())
-            .run(&g)
-            .unwrap();
-        let acp = Simulator::new(
+        let dma = Scheduler::new(SocConfig::default(), SimOptions::default()).run(&g);
+        let acp = Scheduler::new(
             SocConfig::default(),
             SimOptions {
                 interface: InterfaceKind::Acp,
                 ..SimOptions::default()
             },
         )
-        .run(&g)
-        .unwrap();
+        .run(&g);
         assert!(
             acp.dram_bytes < dma.dram_bytes,
             "{net}: ACP should cut DRAM traffic ({} vs {})",

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Sanity-check a `smaug.report/v1` JSON document on stdin.
+
+Used by CI after `smaug run/serve ... --report json` to make sure the
+unified report serializer keeps its schema contract: versioned schema id,
+the full scenario-invariant key set, and populated scenario sections.
+"""
+import json
+import sys
+
+TOP_KEYS = [
+    "schema",
+    "scenario",
+    "network",
+    "config",
+    "accel_pool",
+    "total_ns",
+    "breakdown",
+    "traffic",
+    "energy_pj",
+    "ops",
+    "throughput_rps",
+    "latency_ns",
+    "requests",
+    "sweep_axis",
+    "sweep",
+    "camera",
+    "functional",
+    "timeline",
+    "sim_wallclock_ns",
+]
+BREAKDOWN_KEYS = ["accel_ns", "transfer_ns", "prep_ns", "finalize_ns", "other_ns"]
+TRAFFIC_KEYS = [
+    "dram_bytes",
+    "llc_bytes",
+    "dram_utilization",
+    "sw_phase_dram_utilization",
+]
+ENERGY_KEYS = ["total", "soc", "dram", "llc", "macc", "spad", "cpu"]
+LATENCY_KEYS = ["mean", "p50", "p90", "p99", "max"]
+
+
+def fail(msg: str) -> None:
+    print(f"report schema FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    r = json.load(sys.stdin)
+    if r.get("schema") != "smaug.report/v1":
+        fail(f"unexpected schema id {r.get('schema')!r}")
+    if list(r.keys()) != TOP_KEYS:
+        fail(f"top-level keys drifted: {list(r.keys())}")
+    for key in BREAKDOWN_KEYS:
+        if key not in r["breakdown"]:
+            fail(f"breakdown missing {key}")
+    for key in TRAFFIC_KEYS:
+        if key not in r["traffic"]:
+            fail(f"traffic missing {key}")
+    for key in ENERGY_KEYS:
+        if key not in r["energy_pj"]:
+            fail(f"energy_pj missing {key}")
+    if not r["total_ns"] > 0:
+        fail("total_ns must be positive")
+    if r["scenario"] == "serving":
+        lat = r["latency_ns"]
+        if lat is None:
+            fail("serving report must populate latency_ns")
+        for key in LATENCY_KEYS:
+            if key not in lat:
+                fail(f"latency_ns missing {key}")
+        if not (lat["p50"] <= lat["p90"] <= lat["p99"] <= lat["max"]):
+            fail(f"percentiles not monotone: {lat}")
+        if not r["requests"]:
+            fail("serving report has no requests")
+    elif r["scenario"] in ("inference", "training"):
+        if not r["ops"]:
+            fail(f"{r['scenario']} report has no per-op records")
+        if r["latency_ns"] is not None:
+            fail(f"{r['scenario']} report should have latency_ns null")
+    print(f"report schema OK: {r['scenario']} {r['network']} ({len(r['ops'])} ops)")
+
+
+if __name__ == "__main__":
+    main()
