@@ -1,0 +1,150 @@
+//! Parallel-sweep bench: wall-clock of the VGG16 accelerator-count sweep
+//! (values 1,2,4,8) through the serial path vs the sharded engine, with
+//! the layer-timing cache ablated. Emits `BENCH_sweep.json` at the
+//! repository root so the sweep-throughput trajectory is tracked.
+//!
+//! The acceptance bar this guards: >= 2x wall-clock speedup at 4 workers
+//! (cache on) over the serial uncached path, with byte-identical rows.
+
+use smaug::api::{Report, Scenario, Session, Soc, SweepAxis};
+use smaug::cache::TimingCache;
+use smaug::config::{SimOptions, SocConfig};
+use smaug::sched::Scheduler;
+use smaug::util::{fmt_bytes, fmt_ns, JsonWriter};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+const NET: &str = "vgg16";
+const VALUES: &[usize] = &[1, 2, 4, 8];
+
+fn run_sweep(workers: usize, cache: bool) -> anyhow::Result<(Report, f64)> {
+    let t0 = Instant::now();
+    let report = Session::on(Soc::default())
+        .network(NET)
+        .scenario(Scenario::Sweep {
+            axis: SweepAxis::Accels,
+            values: VALUES.to_vec(),
+        })
+        .workers(workers)
+        .cache(cache)
+        .run()?;
+    Ok((report, t0.elapsed().as_secs_f64() * 1e3))
+}
+
+fn rows_fingerprint(r: &Report) -> String {
+    r.sweep
+        .iter()
+        .map(|row| format!("{row:?}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "sweep_parallel — {NET} accels sweep {VALUES:?}: serial vs sharded workers, cache ablation"
+    );
+    println!(
+        "{:<22} {:>8} {:>6} {:>12} {:>9}",
+        "config", "workers", "cache", "wall_ms", "speedup"
+    );
+    let configs: &[(&str, usize, bool)] = &[
+        ("serial", 1, false),
+        ("serial+cache", 1, true),
+        ("workers4", 4, false),
+        ("workers4+cache", 4, true),
+    ];
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("sweep_parallel");
+    w.key("network").string(NET);
+    w.key("axis").string("accels");
+    w.key("values").begin_array();
+    for &v in VALUES {
+        w.uint(v as u64);
+    }
+    w.end_array();
+    w.key("rows").begin_array();
+    let mut serial_ms = 0.0f64;
+    let mut parallel_cached_ms = f64::INFINITY;
+    let mut fingerprint = String::new();
+    for &(name, workers, cache) in configs {
+        let (report, wall_ms) = run_sweep(workers, cache)?;
+        // Every configuration must produce byte-identical sweep rows —
+        // the determinism contract the test suite pins, re-checked here
+        // on the bench workload.
+        let fp = rows_fingerprint(&report);
+        if fingerprint.is_empty() {
+            fingerprint = fp;
+        } else {
+            assert_eq!(
+                fp, fingerprint,
+                "{name}: sweep rows drifted from the serial reference"
+            );
+        }
+        if name == "serial" {
+            serial_ms = wall_ms;
+        }
+        if name == "workers4+cache" {
+            parallel_cached_ms = wall_ms;
+        }
+        let speedup = if wall_ms > 0.0 { serial_ms / wall_ms } else { 0.0 };
+        let eng = report.sweep_engine.expect("sweep reports engine section");
+        println!(
+            "{:<22} {:>8} {:>6} {:>12.1} {:>8.2}x",
+            name,
+            workers,
+            if cache { "on" } else { "off" },
+            wall_ms,
+            speedup
+        );
+        w.begin_object();
+        w.key("config").string(name);
+        w.key("workers").uint(workers as u64);
+        w.key("cache").boolean(cache);
+        w.key("wall_ms").number(wall_ms);
+        w.key("speedup_vs_serial").number(speedup);
+        w.key("plan_hits").uint(eng.plan_hits);
+        w.key("plan_misses").uint(eng.plan_misses);
+        w.key("cost_hits").uint(eng.cost_hits);
+        w.key("cost_misses").uint(eng.cost_misses);
+        w.end_object();
+    }
+    w.end_array();
+    let headline = serial_ms / parallel_cached_ms;
+    w.key("speedup_4workers_cache").number(headline);
+    w.end_object();
+    // The memoized per-layer triples double as the DSE "where does the
+    // time go" view: cost one pass through a cache-attached scheduler
+    // and print the heaviest layers.
+    let soc = SocConfig::default();
+    let cache = Arc::new(TimingCache::for_soc(&soc));
+    let graph = smaug::nets::build_network(NET)?;
+    Scheduler::new(soc.clone(), SimOptions::default())
+        .with_cache(cache.clone())
+        .run(&graph);
+    println!("heaviest cached layers (contention-free, per {NET} pass):");
+    for (sig, kind, _sampling, t) in cache.layer_timings().into_iter().take(3) {
+        println!(
+            "  {sig:<28} {kind} compute {}  traffic {}",
+            fmt_ns(t.compute_ns),
+            fmt_bytes(t.traffic_bytes)
+        );
+    }
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_sweep.json");
+    std::fs::write(&out, w.finish())?;
+    println!(
+        "headline: {headline:.2}x at 4 workers + cache (target >= 2x)\nwrote {}",
+        out.display()
+    );
+    if headline < 2.0 {
+        eprintln!(
+            "WARNING: below the 2x acceptance bar — check host core count \
+             (needs >= 4 idle cores)"
+        );
+    }
+    Ok(())
+}

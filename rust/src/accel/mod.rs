@@ -54,6 +54,13 @@ pub trait AccelModel: Send + Sync {
     ///
     /// `sampling_factor` applies Aladdin-style loop sampling to the
     /// model's compute loops (1 = exact).
+    ///
+    /// **Purity contract:** this must be a side-effect-free function of
+    /// `(self's construction-time config, class, item, sampling_factor)`
+    /// — no interior mutability, no global state. The layer-timing cache
+    /// ([`crate::cache::TimingCache`]) memoizes these results and shares
+    /// them across sweep worker threads; an impure implementation would
+    /// break the bit-identical cache-on/cache-off guarantee.
     fn tile_cost(&self, class: KernelClass, item: &WorkItem, sampling_factor: usize) -> TileCost;
 }
 

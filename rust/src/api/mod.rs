@@ -41,9 +41,11 @@ mod report;
 mod scenario;
 mod session;
 mod soc;
+mod sweep;
 
 pub use report::{
-    CameraSummary, FunctionalSummary, LatencyStats, Report, SweepRow, REPORT_SCHEMA,
+    CameraSummary, FunctionalSummary, LatencyStats, Report, SweepEngineSummary, SweepRow,
+    REPORT_SCHEMA,
 };
 pub use scenario::{Scenario, SweepAxis};
 pub use session::{quick_run, Session};

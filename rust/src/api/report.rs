@@ -60,6 +60,28 @@ pub struct SweepRow {
     pub speedup: f64,
 }
 
+/// How a [`crate::api::Scenario::Sweep`] actually ran: worker-thread
+/// count, layer-timing-cache hit/miss counters, and the whole-grid host
+/// wall-clock. Additive `smaug.report/v1` extension — `null` for every
+/// other scenario.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepEngineSummary {
+    /// Worker threads the grid was sharded over.
+    pub workers: usize,
+    /// Whether the shared layer-timing cache was enabled.
+    pub cache_enabled: bool,
+    /// Tiling-plan cache hits.
+    pub plan_hits: u64,
+    /// Tiling-plan cache misses (plans built).
+    pub plan_misses: u64,
+    /// Tile-cost cache hits.
+    pub cost_hits: u64,
+    /// Tile-cost cache misses (layers costed).
+    pub cost_misses: u64,
+    /// Host wall-clock for the whole sweep grid, ns.
+    pub wall_ns: f64,
+}
+
 /// Camera-pipeline section (paper §V).
 #[derive(Debug, Clone, Default)]
 pub struct CameraSummary {
@@ -129,6 +151,8 @@ pub struct Report {
     pub sweep_axis: Option<String>,
     /// Per-value sweep rows (sweep only).
     pub sweep: Vec<SweepRow>,
+    /// Parallel-sweep engine section (sweep only).
+    pub sweep_engine: Option<SweepEngineSummary>,
     /// Camera-pipeline section (camera only).
     pub camera: Option<CameraSummary>,
     /// Functional-execution section (execution-driven runs).
@@ -295,6 +319,20 @@ impl Report {
             w.end_object();
         }
         w.end_array();
+        match &self.sweep_engine {
+            Some(e) => {
+                w.key("sweep_engine").begin_object();
+                w.key("workers").uint(e.workers as u64);
+                w.key("cache_enabled").boolean(e.cache_enabled);
+                w.key("plan_hits").uint(e.plan_hits);
+                w.key("plan_misses").uint(e.plan_misses);
+                w.key("cost_hits").uint(e.cost_hits);
+                w.key("cost_misses").uint(e.cost_misses);
+                w.key("wall_ns").number(e.wall_ns);
+                w.end_object()
+            }
+            None => w.key("sweep_engine").null(),
+        };
         match &self.camera {
             Some(c) => {
                 w.key("camera").begin_object();
@@ -374,6 +412,18 @@ impl Report {
                         fmt_ns(row.transfer_ns),
                         fmt_ns(row.cpu_ns),
                         row.speedup
+                    ));
+                }
+                if let Some(e) = &self.sweep_engine {
+                    s.push_str(&format!(
+                        "engine    : {} worker(s), cache {} (plans {}/{} hit, costs {}/{} hit), wall {}\n",
+                        e.workers,
+                        if e.cache_enabled { "on" } else { "off" },
+                        e.plan_hits,
+                        e.plan_hits + e.plan_misses,
+                        e.cost_hits,
+                        e.cost_hits + e.cost_misses,
+                        fmt_ns(e.wall_ns),
                     ));
                 }
             }
@@ -517,6 +567,7 @@ mod tests {
             "\"requests\"",
             "\"sweep_axis\"",
             "\"sweep\"",
+            "\"sweep_engine\"",
             "\"camera\"",
             "\"functional\"",
             "\"timeline\"",
@@ -537,6 +588,31 @@ mod tests {
         assert!(j.contains("\"timeline\":null"));
         assert!(j.contains("\"throughput_rps\":null"));
         assert!(j.contains("\"sweep\":[]"));
+        assert!(j.contains("\"sweep_engine\":null"));
         assert!(j.contains("\"requests\":[]"));
+    }
+
+    #[test]
+    fn sweep_engine_section_serializes() {
+        let rep = Report {
+            scenario: "sweep".into(),
+            sweep_engine: Some(SweepEngineSummary {
+                workers: 4,
+                cache_enabled: true,
+                plan_hits: 30,
+                plan_misses: 10,
+                cost_hits: 28,
+                cost_misses: 12,
+                wall_ns: 1.5e6,
+            }),
+            ..Report::default()
+        };
+        let j = rep.to_json();
+        assert!(j.contains("\"sweep_engine\":{\"workers\":4,\"cache_enabled\":true"));
+        assert!(j.contains("\"plan_hits\":30"));
+        assert!(j.contains("\"cost_misses\":12"));
+        assert!(j.contains("\"wall_ns\":"));
+        assert!(rep.summary().contains("4 worker(s)"));
+        assert!(rep.summary().contains("cache on"));
     }
 }

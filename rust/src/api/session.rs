@@ -12,9 +12,10 @@ use crate::nets;
 use crate::sched::Scheduler;
 use crate::sim;
 
-use super::report::{CameraSummary, FunctionalSummary, Report, SweepRow};
+use super::report::{CameraSummary, FunctionalSummary, Report, SweepEngineSummary, SweepRow};
 use super::scenario::{Scenario, SweepAxis};
 use super::soc::Soc;
+use super::sweep;
 
 /// A configured simulation session. Build with [`Session::on`], choose a
 /// workload with [`Session::scenario`], then [`Session::run`].
@@ -44,6 +45,8 @@ pub struct Session {
     seed: u64,
     double_buffer: bool,
     inter_accel_reduction: bool,
+    workers: usize,
+    use_cache: bool,
 }
 
 impl Session {
@@ -65,6 +68,8 @@ impl Session {
             seed: defaults.seed,
             double_buffer: defaults.double_buffer,
             inter_accel_reduction: defaults.inter_accel_reduction,
+            workers: 1,
+            use_cache: true,
         }
     }
 
@@ -140,6 +145,25 @@ impl Session {
     /// partial-sum merge.
     pub fn inter_accel_reduction(mut self, on: bool) -> Self {
         self.inter_accel_reduction = on;
+        self
+    }
+
+    /// Host worker threads for [`Scenario::Sweep`] (default: 1). Sweep
+    /// points are sharded across workers with deterministic, index-based
+    /// result assembly: the report rows are bit-identical for any worker
+    /// count. Other scenarios ignore this knob.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Enable or disable the shared layer-timing cache for
+    /// [`Scenario::Sweep`] (default: on). The cache memoizes only pure
+    /// per-layer quantities (see [`crate::cache`]), so results are
+    /// bit-identical either way; turn it off to measure the uncached
+    /// simulation cost.
+    pub fn cache(mut self, on: bool) -> Self {
+        self.use_cache = on;
         self
     }
 
@@ -249,8 +273,8 @@ impl Session {
                 if values.is_empty() {
                     bail!("sweep scenario needs at least one value");
                 }
-                let mut rows: Vec<SweepRow> = Vec::with_capacity(values.len());
-                let mut baseline: Option<Report> = None;
+                let wall_start = std::time::Instant::now();
+                let mut points: Vec<sweep::SweepPoint> = Vec::with_capacity(values.len());
                 for &v in values {
                     if v == 0 {
                         bail!("sweep values must be >= 1 (got 0)");
@@ -261,19 +285,32 @@ impl Session {
                         }
                         SweepAxis::Threads => pool.clone(),
                     };
-                    let point_names: Vec<String> =
+                    let pool_names: Vec<String> =
                         point_pool.iter().map(|k| k.to_string()).collect();
                     let mut opts = self.options(point_pool);
                     if axis == SweepAxis::Threads {
                         opts.sw_threads = v;
                     }
-                    let sim_report = Scheduler::new(soc_cfg.clone(), opts).run(&graph);
+                    points.push(sweep::SweepPoint {
+                        value: v,
+                        opts,
+                        pool_names,
+                    });
+                }
+                // Shard the grid across workers; rows are assembled by
+                // point index, so the result is bit-identical for any
+                // worker count (and with the cache on or off).
+                let outcome =
+                    sweep::run_sweep(&soc_cfg, &graph, &points, self.workers, self.use_cache);
+                let mut rows: Vec<SweepRow> = Vec::with_capacity(points.len());
+                let mut baseline: Option<Report> = None;
+                for (point, sim_report) in points.iter().zip(outcome.reports) {
                     let base_ns = baseline
                         .as_ref()
                         .map(|b| b.total_ns)
                         .unwrap_or(sim_report.total_ns);
                     rows.push(SweepRow {
-                        value: v,
+                        value: point.value,
                         total_ns: sim_report.total_ns,
                         accel_ns: sim_report.breakdown.accel_ns,
                         transfer_ns: sim_report.breakdown.transfer_ns,
@@ -285,7 +322,11 @@ impl Session {
                         // Metadata describes the baseline point actually
                         // simulated (its pool may differ from the composed
                         // SoC on an accel-axis sweep).
-                        baseline = Some(Report::from_sim("sweep", sim_report, point_names));
+                        baseline = Some(Report::from_sim(
+                            "sweep",
+                            sim_report,
+                            point.pool_names.clone(),
+                        ));
                     }
                 }
                 let mut rep = baseline.expect("at least one sweep value ran");
@@ -294,6 +335,21 @@ impl Session {
                 // Per-op records describe only the baseline point; drop
                 // them so the sweep report is not mistaken for one run.
                 rep.ops.clear();
+                // How the sweep ran: worker count, cache counters, and
+                // the whole-grid host wall-clock (the baseline's
+                // sim_wallclock_ns would undercount a parallel sweep).
+                let wall_ns = wall_start.elapsed().as_nanos() as f64;
+                rep.sim_wallclock_ns = wall_ns;
+                let cache_stats = outcome.cache.as_ref().map(|c| c.stats());
+                rep.sweep_engine = Some(SweepEngineSummary {
+                    workers: outcome.workers,
+                    cache_enabled: cache_stats.is_some(),
+                    plan_hits: cache_stats.map_or(0, |s| s.plan_hits),
+                    plan_misses: cache_stats.map_or(0, |s| s.plan_misses),
+                    cost_hits: cache_stats.map_or(0, |s| s.cost_hits),
+                    cost_misses: cache_stats.map_or(0, |s| s.cost_misses),
+                    wall_ns,
+                });
                 Ok(rep)
             }
             Scenario::Camera { fps, pe } => {
@@ -426,6 +482,40 @@ mod tests {
         assert_eq!(rep.sweep[0].speedup, 1.0);
         assert!(rep.sweep[2].total_ns <= rep.sweep[0].total_ns);
         assert!(rep.ops.is_empty());
+    }
+
+    #[test]
+    fn sweep_workers_and_cache_do_not_change_rows() {
+        let run = |workers: usize, cache: bool| {
+            Session::on(Soc::default())
+                .network("lenet5")
+                .scenario(Scenario::Sweep {
+                    axis: SweepAxis::Accels,
+                    values: vec![1, 2, 4],
+                })
+                .workers(workers)
+                .cache(cache)
+                .run()
+                .unwrap()
+        };
+        let base = run(1, false);
+        for (w, c) in [(1, true), (4, true), (4, false)] {
+            let r = run(w, c);
+            assert_eq!(r.sweep.len(), base.sweep.len());
+            for (a, b) in base.sweep.iter().zip(&r.sweep) {
+                assert_eq!(format!("{a:?}"), format!("{b:?}"), "workers {w} cache {c}");
+            }
+        }
+        let eng = base.sweep_engine.unwrap();
+        assert_eq!(eng.workers, 1);
+        assert!(!eng.cache_enabled);
+        assert_eq!(eng.plan_hits + eng.plan_misses, 0);
+        // A cached run actually exercises the cache.
+        let cached = run(2, true).sweep_engine.unwrap();
+        assert_eq!(cached.workers, 2);
+        assert!(cached.cache_enabled);
+        assert!(cached.plan_misses > 0);
+        assert!(cached.cost_hits > 0, "{cached:?}");
     }
 
     #[test]

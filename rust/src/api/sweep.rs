@@ -1,0 +1,168 @@
+//! Parallel sharded sweep engine.
+//!
+//! A sweep is an embarrassingly parallel workload: every design point is
+//! one self-contained simulation (its own [`Scheduler`], memory system,
+//! and energy account). The engine shards the point grid across OS
+//! worker threads (`std::thread::scope` — the build is hermetic, no
+//! thread-pool crate) and assembles results **by point index**, so the
+//! report rows are bit-identical regardless of worker count or which
+//! worker simulated which point.
+//!
+//! Workers share one read-mostly [`TimingCache`]: repeated layers across
+//! sweep points (every VGG16 conv at every accelerator count) are
+//! planned and costed once. The cache only memoizes pure quantities
+//! (see [`crate::cache`]), so cache on/off is also bit-identical — both
+//! properties are enforced by `tests/sweep_parallel.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cache::TimingCache;
+use crate::config::{SimOptions, SocConfig};
+use crate::graph::Graph;
+use crate::sched::Scheduler;
+use crate::stats::SimReport;
+
+/// One design point of a sweep: the axis value it represents, the fully
+/// resolved run options, and the pool description for report metadata.
+pub(crate) struct SweepPoint {
+    /// Axis value (accelerator count / thread count).
+    pub value: usize,
+    /// Resolved simulation options for this point.
+    pub opts: SimOptions,
+    /// Display names of the pool this point simulates.
+    pub pool_names: Vec<String>,
+}
+
+/// What the engine hands back: per-point reports in point order, plus
+/// how the sweep actually ran.
+pub(crate) struct SweepOutcome {
+    /// One report per point, index-aligned with the input points.
+    pub reports: Vec<SimReport>,
+    /// Worker threads actually used (after clamping to the point count).
+    pub workers: usize,
+    /// The shared timing cache, if one was enabled (for its counters).
+    pub cache: Option<Arc<TimingCache>>,
+}
+
+/// Simulate every point of a sweep, sharded over `workers` threads.
+///
+/// Points are pulled from a shared atomic counter (dynamic sharding —
+/// cheap points don't leave a worker idle behind an expensive one) and
+/// written back into index-addressed slots, so assembly order never
+/// depends on thread scheduling.
+pub(crate) fn run_sweep(
+    soc: &SocConfig,
+    graph: &Graph,
+    points: &[SweepPoint],
+    workers: usize,
+    use_cache: bool,
+) -> SweepOutcome {
+    let cache = use_cache.then(|| Arc::new(TimingCache::for_soc(soc)));
+    let workers = workers.clamp(1, points.len().max(1));
+    let run_point = |p: &SweepPoint| -> SimReport {
+        let mut sched = Scheduler::new(soc.clone(), p.opts.clone());
+        if let Some(c) = &cache {
+            sched = sched.with_cache(c.clone());
+        }
+        sched.run(graph)
+    };
+    let reports: Vec<SimReport> = if workers <= 1 {
+        points.iter().map(run_point).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SimReport>>> =
+            points.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let report = run_point(&points[i]);
+                    *slots[i].lock().unwrap() = Some(report);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("every sweep point was simulated")
+            })
+            .collect()
+    };
+    SweepOutcome {
+        reports,
+        workers,
+        cache,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AccelKind;
+    use crate::nets;
+
+    fn points(values: &[usize]) -> Vec<SweepPoint> {
+        values
+            .iter()
+            .map(|&v| SweepPoint {
+                value: v,
+                opts: SimOptions {
+                    num_accels: v,
+                    ..SimOptions::default()
+                },
+                pool_names: vec![AccelKind::Nvdla.to_string(); v],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_reports_come_back_in_point_order() {
+        let g = nets::build_network("lenet5").unwrap();
+        let soc = SocConfig::default();
+        let pts = points(&[1, 2, 4]);
+        let serial = run_sweep(&soc, &g, &pts, 1, false);
+        let sharded = run_sweep(&soc, &g, &pts, 3, true);
+        assert_eq!(serial.workers, 1);
+        assert_eq!(sharded.workers, 3);
+        assert_eq!(serial.reports.len(), 3);
+        for (a, b) in serial.reports.iter().zip(&sharded.reports) {
+            assert_eq!(a.total_ns, b.total_ns);
+            assert_eq!(a.dram_bytes, b.dram_bytes);
+            assert_eq!(a.energy.total_pj(), b.energy.total_pj());
+        }
+        // More accelerators, lower latency: rows are value-ordered, not
+        // completion-ordered.
+        assert!(serial.reports[2].total_ns < serial.reports[0].total_ns);
+        // The shared cache saw every point's lookups: exactly one plan
+        // lookup per plannable op per point, worker-count-independent.
+        // (Hit/miss split is racy under concurrent builders; the strong
+        // reuse bounds are asserted race-free in tests/sweep_parallel.rs.)
+        let one_point = run_sweep(&soc, &g, &pts[..1], 1, true);
+        let per_point = one_point.cache.unwrap().stats();
+        let stats = sharded.cache.unwrap().stats();
+        assert_eq!(
+            stats.plan_hits + stats.plan_misses,
+            3 * (per_point.plan_hits + per_point.plan_misses),
+            "{stats:?}"
+        );
+        assert!(stats.plan_misses > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn worker_count_is_clamped() {
+        let g = nets::build_network("minerva").unwrap();
+        let soc = SocConfig::default();
+        let pts = points(&[1, 2]);
+        let o = run_sweep(&soc, &g, &pts, 64, false);
+        assert_eq!(o.workers, 2);
+        assert!(o.cache.is_none());
+        let o = run_sweep(&soc, &g, &pts, 0, true);
+        assert_eq!(o.workers, 1);
+    }
+}

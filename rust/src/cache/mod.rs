@@ -1,0 +1,383 @@
+//! Memoized layer-timing cache for design-space sweeps.
+//!
+//! A sweep re-simulates the same network at many design points, and most
+//! of the per-point work repeats: every VGG16 conv is re-planned and its
+//! tiles re-costed at every accelerator count, even though neither the
+//! tiling plan nor the per-tile cycle counts depend on the pool size.
+//! This cache memoizes exactly the two pure, contention-free stages of
+//! the pipeline:
+//!
+//! * **Tiling plans** — `plan_op` output, keyed by the layer signature
+//!   (operator geometry). Plans depend only on the op parameters and the
+//!   [`SocConfig`]; the cache is bound to one SoC at construction.
+//! * **Tile costs** — [`AccelModel::tile_cost`] over a plan's work items,
+//!   keyed by (layer signature, accelerator kind, sampling factor),
+//!   summarized into a per-layer latency/energy/traffic triple
+//!   ([`LayerTiming`]).
+//!
+//! What is *not* cached: anything schedule-dependent — DRAM-bandwidth
+//! contention, command-queue waits, CPU-pool arbitration. Those are
+//! resolved per run by the scheduler from the cached ingredients, so a
+//! cached run is **bit-identical** to an uncached one (enforced by
+//! `tests/sweep_parallel.rs`). This relies on [`AccelModel::tile_cost`]
+//! being a pure `&self` query — see the trait's documentation.
+//!
+//! The cache is shared read-mostly across sweep worker threads behind
+//! `RwLock`s; racing builders may compute an entry twice, but the values
+//! are identical and the first insertion wins, so sharing is benign.
+//!
+//! [`AccelModel::tile_cost`]: crate::accel::AccelModel::tile_cost
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::accel::{AccelModel, TileCost};
+use crate::config::{AccelKind, SocConfig};
+use crate::energy::EnergyAccount;
+use crate::graph::{Graph, Op, OpKind};
+use crate::sched::PlannedOp;
+
+/// The memoized per-layer summary the issue of repeated simulation
+/// reduces to: contention-free compute latency, compute energy, and
+/// interface traffic for one layer on one accelerator kind.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerTiming {
+    /// Sum of tile compute times (cycles x accelerator cycle), ns —
+    /// the layer's latency on one uncontended accelerator.
+    pub compute_ns: f64,
+    /// MACC + scratchpad + accelerator-static energy, pJ.
+    pub energy_pj: f64,
+    /// Bytes moved over the accelerator interface for the layer.
+    pub traffic_bytes: u64,
+}
+
+/// Memoized tile costs for one (layer, accelerator kind, sampling
+/// factor): the per-item [`TileCost`]s the scheduler consumes, plus the
+/// [`LayerTiming`] summary.
+#[derive(Debug, Clone)]
+pub struct CostEntry {
+    /// One cost per plan work item, in item order.
+    pub costs: Vec<TileCost>,
+    /// Per-layer summary triple.
+    pub timing: LayerTiming,
+}
+
+impl CostEntry {
+    /// Cost every work item of `planned` on `model` and summarize.
+    pub fn build(
+        model: &dyn AccelModel,
+        planned: &PlannedOp,
+        sampling_factor: usize,
+        soc: &SocConfig,
+    ) -> Self {
+        let costs: Vec<TileCost> = planned
+            .plan
+            .items
+            .iter()
+            .map(|item| model.tile_cost(planned.class, item, sampling_factor))
+            .collect();
+        let accel_cycle = soc.accel_cycle_ns();
+        let mut energy = EnergyAccount::default();
+        let mut compute_ns = 0.0;
+        for c in &costs {
+            energy.charge_compute(
+                c.macc_ops,
+                (c.spad_reads + c.spad_writes) * soc.elem_bytes as u64,
+                c.cycles,
+            );
+            compute_ns += c.cycles * accel_cycle;
+        }
+        Self {
+            costs,
+            timing: LayerTiming {
+                compute_ns,
+                energy_pj: energy.total_pj(),
+                traffic_bytes: planned.plan.transfer_bytes(),
+            },
+        }
+    }
+}
+
+/// Hit/miss counters, one pair per cache level. A "miss" is a lookup
+/// that had to build the entry (under racing builders the same key can
+/// miss more than once; only the first build is kept).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Tiling-plan lookups served from the cache.
+    pub plan_hits: u64,
+    /// Tiling-plan lookups that planned from scratch.
+    pub plan_misses: u64,
+    /// Tile-cost lookups served from the cache.
+    pub cost_hits: u64,
+    /// Tile-cost lookups that costed from scratch.
+    pub cost_misses: u64,
+}
+
+/// Thread-safe memoization of tiling plans and tile costs for one
+/// [`SocConfig`]. Construct with [`TimingCache::for_soc`], share via
+/// `Arc`, and attach to schedulers with
+/// [`crate::sched::Scheduler::with_cache`].
+pub struct TimingCache {
+    /// `SocConfig::to_cfg` of the SoC this cache is valid for — plans
+    /// and costs both depend on the microarchitectural parameters.
+    soc_sig: String,
+    plans: RwLock<HashMap<String, Arc<PlannedOp>>>,
+    /// Per-signature cost entries, one per (kind, sampling factor) the
+    /// layer was costed under. Nested (map-of-small-vecs) rather than a
+    /// flat tuple-keyed map so a hit needs no `String` key allocation.
+    costs: RwLock<HashMap<String, Vec<((AccelKind, usize), Arc<CostEntry>)>>>,
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    cost_hits: AtomicU64,
+    cost_misses: AtomicU64,
+}
+
+impl fmt::Debug for TimingCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TimingCache")
+            .field("plans", &self.plans.read().unwrap().len())
+            .field("costs", &self.costs.read().unwrap().len())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl TimingCache {
+    /// An empty cache bound to `soc` (a mismatched SoC at attach time is
+    /// rejected — see [`TimingCache::matches`]).
+    pub fn for_soc(soc: &SocConfig) -> Self {
+        Self {
+            soc_sig: soc.to_cfg(),
+            plans: RwLock::new(HashMap::new()),
+            costs: RwLock::new(HashMap::new()),
+            plan_hits: AtomicU64::new(0),
+            plan_misses: AtomicU64::new(0),
+            cost_hits: AtomicU64::new(0),
+            cost_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether this cache was built for `soc` (field-exact, via the
+    /// `to_cfg` round-trip format).
+    pub fn matches(&self, soc: &SocConfig) -> bool {
+        self.soc_sig == soc.to_cfg()
+    }
+
+    /// Get-or-build the tiling plan for a layer signature.
+    pub fn plan(&self, sig: &str, build: impl FnOnce() -> PlannedOp) -> Arc<PlannedOp> {
+        if let Some(p) = self.plans.read().unwrap().get(sig) {
+            self.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return p.clone();
+        }
+        self.plan_misses.fetch_add(1, Ordering::Relaxed);
+        // Build outside the write lock; racing builders produce
+        // identical values and the first insertion wins.
+        let built = Arc::new(build());
+        self.plans
+            .write()
+            .unwrap()
+            .entry(sig.to_string())
+            .or_insert(built)
+            .clone()
+    }
+
+    /// Get-or-build the tile costs for (layer signature, kind, sampling).
+    pub fn costs(
+        &self,
+        sig: &str,
+        kind: AccelKind,
+        sampling_factor: usize,
+        build: impl FnOnce() -> CostEntry,
+    ) -> Arc<CostEntry> {
+        let key = (kind, sampling_factor);
+        if let Some(entries) = self.costs.read().unwrap().get(sig) {
+            if let Some((_, c)) = entries.iter().find(|(k, _)| *k == key) {
+                self.cost_hits.fetch_add(1, Ordering::Relaxed);
+                return c.clone();
+            }
+        }
+        self.cost_misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build());
+        let mut map = self.costs.write().unwrap();
+        let entries = map.entry(sig.to_string()).or_default();
+        // A racing builder may have inserted meanwhile; first one wins.
+        if let Some((_, c)) = entries.iter().find(|(k, _)| *k == key) {
+            return c.clone();
+        }
+        entries.push((key, built.clone()));
+        built
+    }
+
+    /// Current hit/miss counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            cost_hits: self.cost_hits.load(Ordering::Relaxed),
+            cost_misses: self.cost_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshot of every memoized per-layer summary:
+    /// (layer signature, kind, sampling factor, timing triple). Sorted by
+    /// descending contention-free compute time — the DSE "where does the
+    /// time go" view (consumed by `benches/sweep_parallel.rs`).
+    pub fn layer_timings(&self) -> Vec<(String, AccelKind, usize, LayerTiming)> {
+        let mut v: Vec<(String, AccelKind, usize, LayerTiming)> = self
+            .costs
+            .read()
+            .unwrap()
+            .iter()
+            .flat_map(|(sig, entries)| {
+                entries
+                    .iter()
+                    .map(|((kind, sampling), e)| (sig.clone(), *kind, *sampling, e.timing))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        v.sort_by(|a, b| b.3.compute_ns.partial_cmp(&a.3.compute_ns).unwrap());
+        v
+    }
+}
+
+/// The cache key for one operator: everything `plan_op` and `tile_cost`
+/// depend on *about the op* (geometry, kernel class discriminator),
+/// independent of the op's name and graph position. `None` for operators
+/// that never reach the accelerator (mirrors `plan_op` returning `None`).
+///
+/// The SoC parameters are deliberately absent: they are pinned per cache
+/// by [`TimingCache::for_soc`].
+pub fn layer_signature(op: &Op, graph: &Graph) -> Option<String> {
+    match &op.kind {
+        OpKind::Conv { params: p, .. } => Some(format!(
+            "C:h{}w{}c{}k{}r{}s{}st{}p{}",
+            p.h, p.w, p.c, p.k, p.r, p.s, p.stride, p.pad_same as u8
+        )),
+        OpKind::InnerProduct { params: p, .. } => {
+            Some(format!("F:ci{}co{}", p.c_in, p.c_out))
+        }
+        // Max and average pooling share a plan and a kernel class, so
+        // they may share cache entries.
+        OpKind::MaxPool(p) | OpKind::AvgPool(p) => Some(format!(
+            "P:h{}w{}c{}k{}st{}",
+            p.h, p.w, p.c, p.size, p.stride
+        )),
+        // BatchNorm and Act plan identically but run different kernel
+        // classes (2 vs 1 arithmetic ops/element): distinct prefixes.
+        OpKind::BatchNorm => Some(format!(
+            "B:e{}",
+            graph.tensors[op.inputs[0]].shape.elems()
+        )),
+        OpKind::EltwiseAdd { .. } => Some(format!(
+            "E:e{}",
+            graph.tensors[op.inputs[0]].shape.elems()
+        )),
+        OpKind::Act(_) => Some(format!(
+            "A:e{}",
+            graph.tensors[op.inputs[0]].shape.elems()
+        )),
+        OpKind::Input | OpKind::Flatten => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+    use crate::sched::plan_op;
+
+    fn first_conv(graph: &Graph) -> &Op {
+        graph
+            .ops
+            .iter()
+            .find(|o| matches!(o.kind, OpKind::Conv { .. }))
+            .unwrap()
+    }
+
+    #[test]
+    fn signatures_cover_plannable_ops_exactly() {
+        let soc = SocConfig::default();
+        for net in ["lenet5", "cnn10", "minerva"] {
+            let g = nets::build_network(net).unwrap();
+            for op in &g.ops {
+                assert_eq!(
+                    layer_signature(op, &g).is_some(),
+                    plan_op(op, &g, &soc).is_some(),
+                    "{net}/{}: signature/plan coverage must agree",
+                    op.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_layers_share_one_plan() {
+        // VGG16 repeats conv geometries; its distinct signatures are far
+        // fewer than its plannable ops.
+        let g = nets::build_network("vgg16").unwrap();
+        let soc = SocConfig::default();
+        let cache = TimingCache::for_soc(&soc);
+        let mut plannable = 0;
+        for op in &g.ops {
+            if let Some(sig) = layer_signature(op, &g) {
+                plannable += 1;
+                cache.plan(&sig, || plan_op(op, &g, &soc).unwrap());
+            }
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.plan_hits + stats.plan_misses, plannable);
+        assert!(
+            stats.plan_hits > 0,
+            "vgg16 repeats layer geometries: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn cost_entries_are_keyed_by_kind_and_sampling() {
+        let g = nets::build_network("lenet5").unwrap();
+        let soc = SocConfig::default();
+        let cache = TimingCache::for_soc(&soc);
+        let op = first_conv(&g);
+        let sig = layer_signature(op, &g).unwrap();
+        let planned = Arc::new(plan_op(op, &g, &soc).unwrap());
+        let nvdla = crate::accel::build_model(AccelKind::Nvdla, &soc);
+        let syst = crate::accel::build_model(AccelKind::Systolic, &soc);
+        let a = cache.costs(&sig, AccelKind::Nvdla, 1, || {
+            CostEntry::build(nvdla.as_ref(), &planned, 1, &soc)
+        });
+        let b = cache.costs(&sig, AccelKind::Systolic, 1, || {
+            CostEntry::build(syst.as_ref(), &planned, 1, &soc)
+        });
+        let a2 = cache.costs(&sig, AccelKind::Nvdla, 1, || {
+            unreachable!("second lookup must hit")
+        });
+        assert_eq!(a.costs, a2.costs);
+        assert_ne!(
+            a.timing.compute_ns, b.timing.compute_ns,
+            "different kinds cost differently"
+        );
+        assert_eq!(cache.stats().cost_hits, 1);
+        assert_eq!(cache.stats().cost_misses, 2);
+        assert!(a.timing.compute_ns > 0.0);
+        assert!(a.timing.energy_pj > 0.0);
+        assert!(a.timing.traffic_bytes > 0);
+        // The snapshot view carries both entries, heaviest first.
+        let timings = cache.layer_timings();
+        assert_eq!(timings.len(), 2);
+        assert!(timings[0].3.compute_ns >= timings[1].3.compute_ns);
+        assert_eq!(timings[0].0, sig);
+    }
+
+    #[test]
+    fn cache_is_bound_to_one_soc() {
+        let cache = TimingCache::for_soc(&SocConfig::default());
+        assert!(cache.matches(&SocConfig::default()));
+        let other = SocConfig {
+            spad_bytes: 2 * SocConfig::default().spad_bytes,
+            ..SocConfig::default()
+        };
+        assert!(!cache.matches(&other));
+    }
+}

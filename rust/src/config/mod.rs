@@ -13,7 +13,7 @@
 use std::fmt;
 
 /// Which accelerator backend executes the accelerated kernels.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AccelKind {
     /// NVDLA-inspired convolution engine: 8 PEs x 32-way MACC (paper Fig 4).
     Nvdla,

@@ -74,9 +74,45 @@
 //! training step are the remaining [`api::Scenario`] variants — one enum,
 //! not five entry points. The old [`sim::Simulator`] methods remain as
 //! `#[deprecated]` delegating shims.
+//!
+//! ## Parallel sweeps and the layer-timing cache
+//!
+//! Design-space sweeps are the simulator's hottest path, so
+//! [`api::Scenario::Sweep`] runs on a **parallel sharded engine**: the
+//! point grid is sharded across OS worker threads
+//! ([`api::Session::workers`]) and results are assembled by point index,
+//! so the rows are bit-identical for any worker count. Workers share a
+//! read-mostly **layer-timing cache** ([`cache::TimingCache`], on by
+//! default, [`api::Session::cache`] to disable): tiling plans and
+//! per-tile costs are memoized by (layer signature, accelerator kind,
+//! sampling factor), so repeated layers across sweep points — every
+//! VGG16 conv at every accelerator count — are planned and costed once.
+//!
+//! Cache hits are always **exact**: only pure, contention-free
+//! quantities are memoized (plans and [`accel::AccelModel::tile_cost`]
+//! results), while schedule-dependent effects (DRAM contention, queue
+//! waits) are re-resolved per point, so cache on/off and any worker
+//! count produce byte-identical reports (enforced by
+//! `tests/sweep_parallel.rs`). `--no-cache` exists for measuring the
+//! uncached simulation cost, not for correctness.
+//!
+//! ```no_run
+//! use smaug::api::{Scenario, Session, Soc, SweepAxis};
+//!
+//! let report = Session::on(Soc::default())
+//!     .network("vgg16")
+//!     .scenario(Scenario::Sweep { axis: SweepAxis::Accels, values: vec![1, 2, 4, 8] })
+//!     .workers(4) // CLI: smaug sweep --net vgg16 --values 1,2,4,8 --workers 4
+//!     .run()
+//!     .unwrap();
+//! println!("{}", report.summary());
+//! let engine = report.sweep_engine.unwrap();
+//! println!("{} workers, {} plan hits", engine.workers, engine.plan_hits);
+//! ```
 
 pub mod api;
 pub mod accel;
+pub mod cache;
 pub mod camera;
 pub mod config;
 pub mod cpu;

@@ -12,7 +12,7 @@
 //! smaug serve --net resnet50 [--requests 8] [--interval-us 50]
 //!           [--accels 4] [--threads 8] [--no-pipeline] [--report summary|json]
 //! smaug sweep --net cnn10 [--axis accels|threads] [--values 1,2,4,8]
-//!           [--report summary|json]
+//!           [--workers N] [--no-cache] [--report summary|json]
 //! smaug camera [--pe 8x8] [--threads 1] [--fps 30] [--report summary|json]
 //! smaug config
 //! smaug nets [--json]
@@ -60,7 +60,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction] [--pipeline]\n\
                  \x20 smaug serve --net <name> [--requests N] [--interval-us F]\n\
                  \x20          [--accels N|kinds] [--threads N] [--no-pipeline] [--report summary|json]\n\
-                 \x20 smaug sweep --net <name> [--axis accels|threads] [--values 1,2,4,8] [--report summary|json]\n\
+                 \x20 smaug sweep --net <name> [--axis accels|threads] [--values 1,2,4,8]\n\
+                 \x20          [--workers N] [--no-cache] [--report summary|json]\n\
                  \x20 smaug camera [--pe RxC] [--threads N] [--fps N] [--report summary|json]\n\
                  \x20 smaug config   smaug nets [--json]",
                 smaug::VERSION
@@ -259,9 +260,17 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
                 .context("sweep values must be integers (--values 1,2,4,8)")
         })
         .collect::<Result<_>>()?;
-    let report = build_session(&session_args)?
-        .scenario(Scenario::Sweep { axis, values })
-        .run()?;
+    let mut session = build_session(&session_args)?.scenario(Scenario::Sweep { axis, values });
+    // Parallel sweep engine: shard points over worker threads (results
+    // are bit-identical for any count); the shared layer-timing cache is
+    // on by default and `--no-cache` only exists to measure its win.
+    if let Some(v) = flag(args, "--workers") {
+        session = session.workers(v.parse().context("--workers")?);
+    }
+    if has(args, "--no-cache") {
+        session = session.cache(false);
+    }
+    let report = session.run()?;
     print_summary_or_json(&report, flag(args, "--report").unwrap_or("summary"))
 }
 

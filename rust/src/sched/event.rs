@@ -28,7 +28,7 @@
 
 use std::collections::HashMap;
 
-use super::{plan_op, AccelPool, HwOutcome, PlannedOp, PrepOutcome, Scheduler};
+use super::{AccelPool, CachedPlan, HwOutcome, PrepOutcome, Scheduler};
 use crate::cpu::PoolGate;
 use crate::graph::{Graph, OpKind};
 use crate::stats::OpRecord;
@@ -42,8 +42,8 @@ pub(crate) struct JobOutcome {
 }
 
 enum Work {
-    /// Accelerated operator with its tiling plan.
-    Accel(PlannedOp),
+    /// Accelerated operator with its (possibly cache-shared) tiling plan.
+    Accel(CachedPlan),
     /// CPU-only operator (Flatten: dispatch overhead).
     CpuOnly,
     /// Input placeholder: completes instantly at job arrival.
@@ -114,7 +114,7 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
         }
         for &oid in &order {
             let op = &graph.ops[oid];
-            let work = match plan_op(op, graph, &sched.soc) {
+            let work = match sched.plan_cached(op, graph) {
                 Some(planned) => Work::Accel(planned),
                 None if matches!(op.kind, OpKind::Flatten) => Work::CpuOnly,
                 None => Work::Source,
@@ -219,12 +219,18 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
             release(&mut nodes, &mut pending, node_idx, end);
         } else if task.class == 0 {
             let (prep, hw) = {
-                let Work::Accel(planned) = &nodes[node_idx].work else {
+                let Work::Accel(cp) = &nodes[node_idx].work else {
                     unreachable!("sources never queue tasks")
                 };
-                let prep = sched.prep_phase(op, &planned.plan, start);
+                let prep = sched.prep_phase(op, &cp.planned.plan, start);
                 cpu.release(prep.end_ns);
-                let hw = sched.accel_phase(op, planned, prep.end_ns, &mut pool);
+                let hw = sched.accel_phase(
+                    op,
+                    &cp.planned,
+                    cp.costs.as_deref(),
+                    prep.end_ns,
+                    &mut pool,
+                );
                 (prep, hw)
             };
             let hw_end = hw.hw_end;
@@ -243,14 +249,14 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
             }
         } else {
             let (end, rec) = {
-                let Work::Accel(planned) = &nodes[node_idx].work else {
+                let Work::Accel(cp) = &nodes[node_idx].work else {
                     unreachable!("only accel nodes finalize")
                 };
-                let fin = sched.finalize_phase(op, &planned.plan, start);
+                let fin = sched.finalize_phase(op, &cp.planned.plan, start);
                 cpu.release(fin.end_ns);
                 let rec = Scheduler::record(
                     op,
-                    planned,
+                    &cp.planned,
                     nodes[node_idx].start_ns,
                     nodes[node_idx].prep.as_ref().expect("prep ran"),
                     nodes[node_idx].hw.as_ref().expect("accel phase ran"),

@@ -42,9 +42,11 @@
 mod event;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::accel::{build_pool, AccelModel, KernelClass};
-use crate::config::{InterfaceKind, ServeOptions, SimOptions, SocConfig};
+use crate::cache::{CostEntry, TimingCache};
+use crate::config::{AccelKind, InterfaceKind, ServeOptions, SimOptions, SocConfig};
 use crate::cpu::CpuModel;
 use crate::energy::EnergyAccount;
 use crate::graph::{Graph, Op, OpKind};
@@ -61,6 +63,13 @@ pub struct Scheduler {
     /// Heterogeneous pools (e.g. NVDLA + systolic) are first-class: work
     /// item `i` dispatched to queue `a` is costed by `models[a]`.
     models: Vec<Box<dyn AccelModel>>,
+    /// The kind of each pool slot (parallel to `models`), for keying the
+    /// shared timing cache.
+    pool_kinds: Vec<AccelKind>,
+    /// Optional shared layer-timing cache (see [`crate::cache`]): when
+    /// attached, tiling plans and tile costs are memoized across runs
+    /// and worker threads with bit-identical results.
+    cache: Option<Arc<TimingCache>>,
     /// Memory system (public for inspection by harnesses).
     pub mem: MemorySystem,
     cpu: CpuModel,
@@ -74,11 +83,21 @@ pub struct Scheduler {
 }
 
 /// A tiling plan plus the kernel class it runs as.
+#[derive(Debug)]
 pub struct PlannedOp {
     /// The tiling plan.
     pub plan: TilingPlan,
     /// Kernel family.
     pub class: KernelClass,
+}
+
+/// A planned operator as the scheduler consumes it: the (possibly
+/// cache-shared) plan plus one memoized tile-cost table per pool slot
+/// (`None` when no timing cache is attached). Costs are resolved once
+/// here, at plan time, so the per-item hot loop never touches the cache.
+pub(crate) struct CachedPlan {
+    pub planned: Arc<PlannedOp>,
+    pub costs: Option<Vec<Arc<CostEntry>>>,
 }
 
 /// Plan any accelerated operator (public: harnesses reuse it).
@@ -167,7 +186,8 @@ pub(crate) struct FinOutcome {
 impl Scheduler {
     /// Build a scheduler for one simulation run.
     pub fn new(soc: SocConfig, opts: SimOptions) -> Self {
-        let models = build_pool(&opts.resolved_pool(), &soc);
+        let pool_kinds = opts.resolved_pool();
+        let models = build_pool(&pool_kinds, &soc);
         let mem = MemorySystem::new(&soc, opts.interface);
         let cpu = CpuModel::new(&soc);
         let timeline = Timeline::new(opts.capture_timeline);
@@ -175,11 +195,82 @@ impl Scheduler {
             soc,
             opts,
             models,
+            pool_kinds,
+            cache: None,
             mem,
             cpu,
             timeline,
             energy: EnergyAccount::default(),
             sw_windows: Vec::new(),
+        }
+    }
+
+    /// Attach a shared layer-timing cache (see [`crate::cache`]).
+    ///
+    /// # Panics
+    ///
+    /// Panics if the cache was built for a different [`SocConfig`] —
+    /// serving another SoC's timings would be silently wrong, and
+    /// silently running uncached would be a perf regression with no
+    /// signal, so a mismatch is a hard error in every build.
+    pub fn with_cache(mut self, cache: Arc<TimingCache>) -> Self {
+        assert!(
+            cache.matches(&self.soc),
+            "timing cache was built for a different SocConfig"
+        );
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Plan an operator, through the timing cache when one is attached —
+    /// including the per-slot tile-cost tables, resolved once here so
+    /// the per-item loop in `accel_phase` stays lookup-free. Returns
+    /// `None` for operators that never reach the accelerator.
+    pub(crate) fn plan_cached(&self, op: &Op, graph: &Graph) -> Option<CachedPlan> {
+        match &self.cache {
+            Some(cache) => {
+                let sig = crate::cache::layer_signature(op, graph)?;
+                let planned = cache.plan(&sig, || {
+                    plan_op(op, graph, &self.soc)
+                        .expect("a layer signature implies a plannable op")
+                });
+                // One shared cost entry per distinct kind in the pool,
+                // expanded to a per-slot table.
+                let mut per_kind: Vec<(AccelKind, Arc<CostEntry>)> = Vec::new();
+                for (i, &kind) in self.pool_kinds.iter().enumerate() {
+                    if per_kind.iter().all(|(k, _)| *k != kind) {
+                        let entry = cache.costs(&sig, kind, self.opts.sampling_factor, || {
+                            CostEntry::build(
+                                self.models[i].as_ref(),
+                                &planned,
+                                self.opts.sampling_factor,
+                                &self.soc,
+                            )
+                        });
+                        per_kind.push((kind, entry));
+                    }
+                }
+                let costs = self
+                    .pool_kinds
+                    .iter()
+                    .map(|k| {
+                        per_kind
+                            .iter()
+                            .find(|(pk, _)| pk == k)
+                            .expect("every slot kind was resolved")
+                            .1
+                            .clone()
+                    })
+                    .collect();
+                Some(CachedPlan {
+                    planned,
+                    costs: Some(costs),
+                })
+            }
+            None => plan_op(op, graph, &self.soc).map(|p| CachedPlan {
+                planned: Arc::new(p),
+                costs: None,
+            }),
         }
     }
 
@@ -256,7 +347,7 @@ impl Scheduler {
         let order = graph.topo_order();
         for &oid in &order {
             let op = &graph.ops[oid];
-            match plan_op(op, graph, &self.soc) {
+            match self.plan_cached(op, graph) {
                 None => {
                     if matches!(op.kind, OpKind::Flatten) {
                         let rec = self.flatten_op(op, now);
@@ -264,11 +355,17 @@ impl Scheduler {
                         records.push(rec);
                     }
                 }
-                Some(planned) => {
-                    let prep = self.prep_phase(op, &planned.plan, now);
-                    let hw = self.accel_phase(op, &planned, prep.end_ns, &mut pool);
-                    let fin = self.finalize_phase(op, &planned.plan, hw.hw_end);
-                    records.push(Self::record(op, &planned, now, &prep, &hw, &fin));
+                Some(cp) => {
+                    let prep = self.prep_phase(op, &cp.planned.plan, now);
+                    let hw = self.accel_phase(
+                        op,
+                        &cp.planned,
+                        cp.costs.as_deref(),
+                        prep.end_ns,
+                        &mut pool,
+                    );
+                    let fin = self.finalize_phase(op, &cp.planned.plan, hw.hw_end);
+                    records.push(Self::record(op, &cp.planned, now, &prep, &hw, &fin));
                     now = fin.end_ns;
                 }
             }
@@ -369,10 +466,17 @@ impl Scheduler {
 
     /// Phase 2: the accelerator pool executes the plan's work items,
     /// queueing on the persistent per-accelerator state in `pool`.
+    ///
+    /// `slot_costs` is the per-slot memoized tile-cost table resolved at
+    /// plan time (present iff a cache is attached); the per-item loop
+    /// reads it instead of re-querying the models — same values,
+    /// computed once per (layer, kind, sampling) across every run
+    /// sharing the cache.
     fn accel_phase(
         &mut self,
         op: &Op,
         planned: &PlannedOp,
+        slot_costs: Option<&[Arc<CostEntry>]>,
         prep_end: f64,
         pool: &mut AccelPool,
     ) -> HwOutcome {
@@ -446,8 +550,12 @@ impl Scheduler {
             });
             let xfer_in_end = rin.end_ns.max(rwgt.end_ns);
             // Compute, costed by the model of the accelerator instance the
-            // item landed on (pools may be heterogeneous).
-            let cost = self.models[a].tile_cost(planned.class, item, self.opts.sampling_factor);
+            // item landed on (pools may be heterogeneous) — served from
+            // the shared cache when one is attached.
+            let cost = match slot_costs {
+                Some(v) => v[a].costs[idx],
+                None => self.models[a].tile_cost(planned.class, item, self.opts.sampling_factor),
+            };
             let c0 = if self.opts.double_buffer {
                 xfer_in_end.max(pool.compute_free[a])
             } else {

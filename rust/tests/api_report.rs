@@ -63,6 +63,7 @@ const V1_KEYS: &[&str] = &[
     "requests",
     "sweep_axis",
     "sweep",
+    "sweep_engine",
     "camera",
     "functional",
     "timeline",
@@ -147,6 +148,20 @@ fn sweep_and_camera_share_the_same_key_set() {
     assert_eq!(top_level_keys(&camera), V1_KEYS);
     assert!(sweep.contains("\"sweep_axis\":\"threads\""));
     assert!(sweep.contains("\"speedup\":"));
+    // The parallel-engine section is a sweep-only addition; every other
+    // scenario carries it as null.
+    assert!(sweep.contains("\"sweep_engine\":{\"workers\":"));
+    for key in [
+        "cache_enabled",
+        "plan_hits",
+        "plan_misses",
+        "cost_hits",
+        "cost_misses",
+        "wall_ns",
+    ] {
+        assert!(sweep.contains(&format!("\"{key}\":")), "sweep_engine.{key}");
+    }
+    assert!(camera.contains("\"sweep_engine\":null"));
     assert!(camera.contains("\"meets_budget\":"));
     assert!(camera.contains("\"budget_ms\":"));
 }

@@ -1,0 +1,105 @@
+//! Property test: `SocConfig::to_cfg` round-trips through
+//! `SocConfig::from_str_cfg` field-exactly over a seeded-random grid of
+//! configurations (no external fuzzer — `smaug::util::Rng`).
+//!
+//! Exactness is not a tolerance claim: Rust's `Display` for floats
+//! prints the shortest decimal that parses back to the same bits, so
+//! `parse(emit(cfg)) == cfg` must hold bit-for-bit for *any* value —
+//! including awkward fractions like 0.65 — and the re-emission must be a
+//! fixed point.
+
+use smaug::config::SocConfig;
+use smaug::util::Rng;
+
+fn assert_same(a: &SocConfig, b: &SocConfig, what: &str) {
+    assert_eq!(a.cpu_cores, b.cpu_cores, "{what}: cpu_cores");
+    assert_eq!(a.cpu_ghz, b.cpu_ghz, "{what}: cpu_ghz");
+    assert_eq!(a.accel_ghz, b.accel_ghz, "{what}: accel_ghz");
+    assert_eq!(a.cacheline_bytes, b.cacheline_bytes, "{what}: cacheline_bytes");
+    assert_eq!(a.llc_bytes, b.llc_bytes, "{what}: llc_bytes");
+    assert_eq!(a.llc_ways, b.llc_ways, "{what}: llc_ways");
+    assert_eq!(
+        a.llc_latency_cycles, b.llc_latency_cycles,
+        "{what}: llc_latency_cycles"
+    );
+    assert_eq!(a.dram_gbps, b.dram_gbps, "{what}: dram_gbps");
+    assert_eq!(a.dram_channels, b.dram_channels, "{what}: dram_channels");
+    assert_eq!(a.dram_efficiency, b.dram_efficiency, "{what}: dram_efficiency");
+    assert_eq!(a.spad_bytes, b.spad_bytes, "{what}: spad_bytes");
+    assert_eq!(a.elem_bytes, b.elem_bytes, "{what}: elem_bytes");
+    assert_eq!(a.nvdla_pes, b.nvdla_pes, "{what}: nvdla_pes");
+    assert_eq!(a.nvdla_macc_width, b.nvdla_macc_width, "{what}: nvdla_macc_width");
+    assert_eq!(a.systolic_rows, b.systolic_rows, "{what}: systolic_rows");
+    assert_eq!(a.systolic_cols, b.systolic_cols, "{what}: systolic_cols");
+}
+
+/// A random-but-plausible config: usizes from realistic ranges, floats
+/// with full fractional noise (f32-derived, so exact as f64).
+fn random_config(rng: &mut Rng) -> SocConfig {
+    SocConfig {
+        cpu_cores: 1 + rng.below(64),
+        cpu_ghz: rng.range_f32(0.2, 5.0) as f64,
+        accel_ghz: rng.range_f32(0.1, 3.0) as f64,
+        cacheline_bytes: 16 << rng.below(4), // 16..128
+        llc_bytes: (1 + rng.below(64)) * 256 * 1024,
+        llc_ways: 1 + rng.below(32),
+        llc_latency_cycles: 1 + rng.below(100) as u64,
+        dram_gbps: rng.range_f32(1.0, 200.0) as f64,
+        dram_channels: 1 + rng.below(8),
+        dram_efficiency: rng.range_f32(0.05, 1.0) as f64,
+        spad_bytes: (1 + rng.below(128)) * 1024,
+        elem_bytes: 1 << rng.below(3), // 1, 2, 4
+        nvdla_pes: 1 + rng.below(64),
+        nvdla_macc_width: 1 + rng.below(64),
+        systolic_rows: 1 + rng.below(64),
+        systolic_cols: 1 + rng.below(64),
+    }
+}
+
+#[test]
+fn to_cfg_round_trips_over_a_seeded_random_grid() {
+    let mut rng = Rng::new(0x5EED_CF61);
+    for i in 0..250 {
+        let c = random_config(&mut rng);
+        let emitted = c.to_cfg();
+        let parsed = SocConfig::from_str_cfg(&emitted)
+            .unwrap_or_else(|e| panic!("case {i}: emitted cfg failed to parse: {e}\n{emitted}"));
+        assert_same(&c, &parsed, &format!("case {i}"));
+        // parse -> emit is a fixed point.
+        assert_eq!(parsed.to_cfg(), emitted, "case {i}: re-emission drifted");
+    }
+}
+
+#[test]
+fn to_cfg_round_trips_awkward_literals() {
+    // Decimal fractions that are not exactly representable in binary
+    // still round-trip, because emission prints the shortest decimal
+    // that parses back to the same f64.
+    let c = SocConfig {
+        cpu_ghz: 0.1 + 0.2, // 0.30000000000000004
+        dram_efficiency: 0.65,
+        dram_gbps: 1e-3,
+        accel_ghz: 12345.678901234567,
+        ..SocConfig::default()
+    };
+    let parsed = SocConfig::from_str_cfg(&c.to_cfg()).unwrap();
+    assert_same(&c, &parsed, "awkward literals");
+}
+
+#[test]
+fn parsed_grid_configs_drive_the_simulator() {
+    // A round-tripped config is not just equal — it is usable: spot-run
+    // one random config end to end so units stay coherent.
+    let mut rng = Rng::new(7);
+    let base = random_config(&mut rng);
+    // Keep the spot-run fast and well-formed.
+    let c = SocConfig {
+        spad_bytes: base.spad_bytes.max(8 * 1024),
+        elem_bytes: 2,
+        ..base
+    };
+    let c = SocConfig::from_str_cfg(&c.to_cfg()).unwrap();
+    let g = smaug::nets::build_network("minerva").unwrap();
+    let r = smaug::sched::Scheduler::new(c, smaug::config::SimOptions::default()).run(&g);
+    assert!(r.total_ns > 0.0 && r.total_ns.is_finite());
+}

@@ -1,0 +1,199 @@
+//! Determinism property suite for the parallel sharded sweep engine and
+//! the layer-timing cache.
+//!
+//! The contract under test: a sweep's serialized `SweepRow`s are
+//! **byte-identical** for any worker count (1, 2, 8) and with the timing
+//! cache on or off — over LeNet5, VGG16, and a heterogeneous
+//! `nvdla,systolic` pool, on both sweep axes. Debug-formatting an `f64`
+//! prints its shortest round-trip representation, so byte-equal strings
+//! mean bit-equal floats: this is bit-level determinism, not tolerance.
+
+use smaug::api::{Scenario, Session, Soc, SweepAxis};
+use smaug::cache::TimingCache;
+use smaug::config::{SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sched::Scheduler;
+use std::sync::Arc;
+
+/// Serialize a sweep's rows byte-exactly (Debug f64 = shortest round
+/// trip, so equal strings <=> equal bits).
+fn sweep_rows(
+    net: &str,
+    accel_spec: &str,
+    axis: SweepAxis,
+    values: &[usize],
+    workers: usize,
+    cache: bool,
+) -> String {
+    let soc = Soc::builder().accel_spec(accel_spec).unwrap().build();
+    let rep = Session::on(soc)
+        .network(net)
+        .scenario(Scenario::Sweep {
+            axis,
+            values: values.to_vec(),
+        })
+        .workers(workers)
+        .cache(cache)
+        .run()
+        .unwrap();
+    assert_eq!(rep.sweep.len(), values.len());
+    rep.sweep
+        .iter()
+        .map(|r| format!("{r:?}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// The property: every (workers, cache) combination reproduces the
+/// (workers=1, cache=off) serial reference byte-for-byte.
+fn assert_deterministic(net: &str, accel_spec: &str, axis: SweepAxis, values: &[usize]) {
+    let reference = sweep_rows(net, accel_spec, axis, values, 1, false);
+    for workers in [1usize, 2, 8] {
+        for cache in [false, true] {
+            let got = sweep_rows(net, accel_spec, axis, values, workers, cache);
+            assert_eq!(
+                got, reference,
+                "{net}/{accel_spec}/{}: rows drifted at workers={workers} cache={cache}",
+                axis.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn lenet5_accel_sweep_is_deterministic() {
+    assert_deterministic("lenet5", "1", SweepAxis::Accels, &[1, 2, 4, 8]);
+}
+
+#[test]
+fn lenet5_thread_sweep_is_deterministic() {
+    assert_deterministic("lenet5", "2", SweepAxis::Threads, &[1, 2, 4, 8]);
+}
+
+#[test]
+fn vgg16_accel_sweep_is_deterministic() {
+    assert_deterministic("vgg16", "1", SweepAxis::Accels, &[1, 2, 4]);
+}
+
+#[test]
+fn hetero_pool_sweep_is_deterministic() {
+    // Accel-axis points cycle through the composed nvdla,systolic
+    // pattern, so every point mixes kinds (and so does the cost cache).
+    assert_deterministic("lenet5", "nvdla,systolic", SweepAxis::Accels, &[1, 2, 4]);
+    assert_deterministic("cnn10", "nvdla,systolic", SweepAxis::Threads, &[1, 4]);
+}
+
+#[test]
+fn cache_reuse_is_observable_but_invisible_in_results() {
+    // Same rows either way (asserted above); here: the cached run really
+    // did share work across points.
+    let soc = Soc::builder().accel_spec("1").unwrap().build();
+    let rep = Session::on(soc)
+        .network("vgg16")
+        .scenario(Scenario::Sweep {
+            axis: SweepAxis::Accels,
+            values: vec![1, 2, 4],
+        })
+        .workers(2)
+        .cache(true)
+        .run()
+        .unwrap();
+    let eng = rep.sweep_engine.expect("sweep reports its engine section");
+    assert!(eng.cache_enabled);
+    assert_eq!(eng.workers, 2);
+    // Racing workers may both miss a key before the first insertion
+    // lands, so only hits are asserted here; the strong reuse bound is
+    // checked race-free below.
+    assert!(eng.plan_hits > 0, "{eng:?}");
+    assert!(eng.cost_hits > 0, "{eng:?}");
+    assert!(eng.wall_ns > 0.0);
+
+    // Race-free reuse bound: with one worker, misses = distinct layers,
+    // so three same-net points make at least two-thirds of lookups hit.
+    let soc = Soc::builder().accel_spec("1").unwrap().build();
+    let eng = Session::on(soc)
+        .network("vgg16")
+        .scenario(Scenario::Sweep {
+            axis: SweepAxis::Accels,
+            values: vec![1, 2, 4],
+        })
+        .workers(1)
+        .cache(true)
+        .run()
+        .unwrap()
+        .sweep_engine
+        .unwrap();
+    assert!(
+        eng.plan_hits >= 2 * eng.plan_misses,
+        "expected heavy plan reuse: {eng:?}"
+    );
+    assert!(
+        eng.cost_hits >= 2 * eng.cost_misses,
+        "expected heavy cost reuse: {eng:?}"
+    );
+}
+
+#[test]
+fn attached_cache_does_not_change_a_single_run() {
+    // Scheduler-level check, independent of the sweep assembly: one
+    // inference pass with a shared cache attached is bit-identical to an
+    // uncached pass — including a second pass over a warm cache.
+    for net in ["lenet5", "cnn10"] {
+        let g = nets::build_network(net).unwrap();
+        let soc = SocConfig::default();
+        let opts = SimOptions {
+            num_accels: 2,
+            ..SimOptions::default()
+        };
+        let cold = Scheduler::new(soc.clone(), opts.clone()).run(&g);
+        let cache = Arc::new(TimingCache::for_soc(&soc));
+        let first = Scheduler::new(soc.clone(), opts.clone())
+            .with_cache(cache.clone())
+            .run(&g);
+        let warm = Scheduler::new(soc.clone(), opts.clone())
+            .with_cache(cache.clone())
+            .run(&g);
+        for r in [&first, &warm] {
+            assert_eq!(r.total_ns, cold.total_ns, "{net}");
+            assert_eq!(r.dram_bytes, cold.dram_bytes, "{net}");
+            assert_eq!(r.llc_bytes, cold.llc_bytes, "{net}");
+            assert_eq!(r.energy.total_pj(), cold.energy.total_pj(), "{net}");
+            assert_eq!(r.ops.len(), cold.ops.len(), "{net}");
+            for (a, b) in r.ops.iter().zip(&cold.ops) {
+                assert_eq!(a.start_ns, b.start_ns, "{net}/{}", a.name);
+                assert_eq!(a.end_ns, b.end_ns, "{net}/{}", a.name);
+                assert_eq!(a.accel_ns, b.accel_ns, "{net}/{}", a.name);
+            }
+        }
+        let stats = cache.stats();
+        assert!(stats.cost_misses > 0);
+        assert!(
+            stats.cost_hits >= stats.cost_misses,
+            "second pass must hit: {stats:?}"
+        );
+    }
+}
+
+#[test]
+fn sweep_engine_section_reaches_the_json_report() {
+    let rep = Session::on(Soc::default())
+        .network("minerva")
+        .scenario(Scenario::Sweep {
+            axis: SweepAxis::Accels,
+            values: vec![1, 2],
+        })
+        .workers(2)
+        .run()
+        .unwrap();
+    let json = rep.to_json();
+    assert!(json.contains("\"sweep_engine\":{\"workers\":2,\"cache_enabled\":true"));
+    assert!(json.contains("\"plan_hits\":"));
+    assert!(json.contains("\"wall_ns\":"));
+    // Non-sweep scenarios keep the key as null (schema-invariant key set).
+    let inf = Session::on(Soc::default())
+        .network("minerva")
+        .run()
+        .unwrap()
+        .to_json();
+    assert!(inf.contains("\"sweep_engine\":null"));
+}

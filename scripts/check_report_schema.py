@@ -24,6 +24,7 @@ TOP_KEYS = [
     "requests",
     "sweep_axis",
     "sweep",
+    "sweep_engine",
     "camera",
     "functional",
     "timeline",
@@ -38,6 +39,15 @@ TRAFFIC_KEYS = [
 ]
 ENERGY_KEYS = ["total", "soc", "dram", "llc", "macc", "spad", "cpu"]
 LATENCY_KEYS = ["mean", "p50", "p90", "p99", "max"]
+SWEEP_ENGINE_KEYS = [
+    "workers",
+    "cache_enabled",
+    "plan_hits",
+    "plan_misses",
+    "cost_hits",
+    "cost_misses",
+    "wall_ns",
+]
 
 
 def fail(msg: str) -> None:
@@ -73,11 +83,30 @@ def main() -> None:
             fail(f"percentiles not monotone: {lat}")
         if not r["requests"]:
             fail("serving report has no requests")
+    elif r["scenario"] == "sweep":
+        if not r["sweep"]:
+            fail("sweep report has no rows")
+        if r["sweep_axis"] is None:
+            fail("sweep report must name its axis")
+        if r["sweep"][0]["speedup"] != 1.0:
+            fail(f"first sweep row is the baseline (speedup {r['sweep'][0]['speedup']})")
+        eng = r["sweep_engine"]
+        if eng is None:
+            fail("sweep report must populate sweep_engine")
+        for key in SWEEP_ENGINE_KEYS:
+            if key not in eng:
+                fail(f"sweep_engine missing {key}")
+        if not eng["workers"] >= 1:
+            fail(f"sweep_engine.workers must be >= 1 (got {eng['workers']})")
+        if eng["cache_enabled"] and eng["plan_misses"] + eng["plan_hits"] == 0:
+            fail("cache enabled but no plan lookups recorded")
     elif r["scenario"] in ("inference", "training"):
         if not r["ops"]:
             fail(f"{r['scenario']} report has no per-op records")
         if r["latency_ns"] is not None:
             fail(f"{r['scenario']} report should have latency_ns null")
+    if r["scenario"] != "sweep" and r["sweep_engine"] is not None:
+        fail(f"{r['scenario']} report should have sweep_engine null")
     print(f"report schema OK: {r['scenario']} {r['network']} ({len(r['ops'])} ops)")
 
 
