@@ -1,0 +1,113 @@
+//! Cross-op pipelining bench: VGG16 single-batch latency at the three
+//! event-engine granularities — pipelining off (the serial reference),
+//! operator-level pipelining, and tile-level pipelining — on a
+//! 2x-NVDLA pool and on a heterogeneous nvdla+systolic pool. Emits
+//! `BENCH_pipeline.json` at the repository root so the overlap
+//! trajectory is tracked.
+//!
+//! The acceptance bar this guards: tile-level pipelining >= 1.3x over
+//! pipelining-off on the 2-accelerator VGG16 run, with work totals
+//! (DRAM traffic) unchanged.
+
+use smaug::api::{Report, Session, Soc};
+use smaug::config::AccelKind;
+use smaug::util::{fmt_ns, JsonWriter};
+use std::path::Path;
+
+const NET: &str = "vgg16";
+
+fn run(pool: &[AccelKind], mode: &str) -> anyhow::Result<Report> {
+    let mut soc = Soc::builder();
+    for &k in pool {
+        soc = soc.accel(k);
+    }
+    let mut s = Session::on(soc.build()).network(NET);
+    s = match mode {
+        "off" => s.pipeline(false),
+        "op" => s.pipeline(true),
+        "tile" => s.tile_pipeline(true),
+        other => unreachable!("unknown mode {other}"),
+    };
+    s.run()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("pipeline_overlap — {NET}: off vs op-level vs tile-level pipelining");
+    println!(
+        "{:<18} {:<6} {:>12} {:>9} {:>9} {:>9}",
+        "pool", "mode", "latency", "speedup", "overlap", "cpu busy"
+    );
+    let pools: &[(&str, Vec<AccelKind>)] = &[
+        ("2x nvdla", vec![AccelKind::Nvdla, AccelKind::Nvdla]),
+        ("nvdla+systolic", vec![AccelKind::Nvdla, AccelKind::Systolic]),
+    ];
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("pipeline_overlap");
+    w.key("network").string(NET);
+    w.key("rows").begin_array();
+    let mut headline = 0.0f64;
+    for (pool_name, pool) in pools {
+        let mut off_ns = 0.0f64;
+        let mut off_bytes = 0u64;
+        for mode in ["off", "op", "tile"] {
+            let rep = run(pool, mode)?;
+            if mode == "off" {
+                off_ns = rep.total_ns;
+                off_bytes = rep.dram_bytes;
+            } else {
+                assert_eq!(
+                    rep.dram_bytes, off_bytes,
+                    "{pool_name}/{mode}: overlap must not change traffic"
+                );
+            }
+            let speedup = off_ns / rep.total_ns.max(1e-12);
+            if *pool_name == "2x nvdla" && mode == "tile" {
+                headline = speedup;
+            }
+            let p = rep.pipeline.as_ref().expect("single runs report pipeline");
+            println!(
+                "{:<18} {:<6} {:>12} {:>8.2}x {:>8.1}% {:>8.1}%",
+                pool_name,
+                mode,
+                fmt_ns(rep.total_ns),
+                speedup,
+                100.0 * p.overlap_frac,
+                100.0 * p.cpu_occupancy
+            );
+            w.begin_object();
+            w.key("pool").string(pool_name);
+            w.key("mode").string(mode);
+            w.key("total_ns").number(rep.total_ns);
+            w.key("speedup_vs_off").number(speedup);
+            w.key("overlap_frac").number(p.overlap_frac);
+            w.key("cpu_occupancy").number(p.cpu_occupancy);
+            w.key("accel_occupancy").begin_array();
+            for &o in &p.accel_occupancy {
+                w.number(o);
+            }
+            w.end_array();
+            w.key("dram_bytes").uint(rep.dram_bytes);
+            w.end_object();
+        }
+    }
+    w.end_array();
+    w.key("speedup_tile_vs_off").number(headline);
+    w.end_object();
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_pipeline.json");
+    std::fs::write(&out, w.finish())?;
+    println!(
+        "headline: {headline:.2}x tile vs off on 2x nvdla (target >= 1.3x)\nwrote {}",
+        out.display()
+    );
+    // Unlike host-wall-clock benches, this speedup is simulated time —
+    // deterministic — so missing the bar is a hard failure CI can see.
+    if headline < 1.3 {
+        eprintln!("FAIL: {headline:.2}x is below the 1.3x acceptance bar");
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -5,7 +5,7 @@
 //! key set is identical across scenarios — tooling can rely on it.
 
 use crate::energy::EnergyAccount;
-use crate::stats::{Breakdown, OpRecord, RequestRecord, ServeReport, SimReport};
+use crate::stats::{Breakdown, OpRecord, PipelineStats, RequestRecord, ServeReport, SimReport};
 use crate::trace::Timeline;
 use crate::util::{fmt_bytes, fmt_ns, fmt_pj, JsonWriter};
 
@@ -147,6 +147,10 @@ pub struct Report {
     pub latency: Option<LatencyStats>,
     /// Per-request records (serving only).
     pub requests: Vec<RequestRecord>,
+    /// Schedule-overlap fraction + per-resource occupancy (single-run
+    /// and serving scenarios; `None` for sweep/camera, whose headline
+    /// numbers aggregate more than one schedule).
+    pub pipeline: Option<PipelineStats>,
     /// Sweep axis name (sweep only).
     pub sweep_axis: Option<String>,
     /// Per-value sweep rows (sweep only).
@@ -183,6 +187,7 @@ impl Report {
             dram_utilization: r.dram_utilization,
             sw_phase_dram_utilization: r.sw_phase_dram_utilization,
             energy: r.energy,
+            pipeline: Some(r.pipeline),
             sim_wallclock_ns: r.sim_wallclock_ns,
             ..Self::default()
         }
@@ -210,6 +215,7 @@ impl Report {
             }),
             latency: Some(latency),
             requests: r.requests,
+            pipeline: Some(r.pipeline),
             sim_wallclock_ns: r.sim_wallclock_ns,
             ..Self::default()
         }
@@ -332,6 +338,22 @@ impl Report {
                 w.end_object()
             }
             None => w.key("sweep_engine").null(),
+        };
+        match &self.pipeline {
+            Some(p) => {
+                w.key("pipeline").begin_object();
+                w.key("mode").string(&p.mode);
+                w.key("overlap_frac").number(p.overlap_frac);
+                w.key("cpu_occupancy").number(p.cpu_occupancy);
+                w.key("accel_occupancy").begin_array();
+                for &o in &p.accel_occupancy {
+                    w.number(o);
+                }
+                w.end_array();
+                w.key("dram_utilization").number(p.dram_utilization);
+                w.end_object()
+            }
+            None => w.key("pipeline").null(),
         };
         match &self.camera {
             Some(c) => {
@@ -465,6 +487,19 @@ impl Report {
                 ));
             }
         }
+        if let Some(p) = &self.pipeline {
+            s.push_str(&format!(
+                "pipeline  : {} (overlap {:.1}%, cpu busy {:.1}%, accel busy {})\n",
+                p.mode,
+                100.0 * p.overlap_frac,
+                100.0 * p.cpu_occupancy,
+                p.accel_occupancy
+                    .iter()
+                    .map(|o| format!("{:.0}%", 100.0 * o))
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            ));
+        }
         s.push_str(&format!(
             "dram traffic : {}\nllc traffic  : {}\nenergy       : {} (dram {}, llc {}, macc {}, cpu {})",
             fmt_bytes(self.dram_bytes),
@@ -568,6 +603,7 @@ mod tests {
             "\"sweep_axis\"",
             "\"sweep\"",
             "\"sweep_engine\"",
+            "\"pipeline\"",
             "\"camera\"",
             "\"functional\"",
             "\"timeline\"",
@@ -589,7 +625,29 @@ mod tests {
         assert!(j.contains("\"throughput_rps\":null"));
         assert!(j.contains("\"sweep\":[]"));
         assert!(j.contains("\"sweep_engine\":null"));
+        assert!(j.contains("\"pipeline\":null"));
         assert!(j.contains("\"requests\":[]"));
+    }
+
+    #[test]
+    fn pipeline_section_serializes() {
+        let rep = Report {
+            scenario: "inference".into(),
+            pipeline: Some(PipelineStats {
+                mode: "tile".into(),
+                overlap_frac: 0.42,
+                cpu_occupancy: 0.6,
+                accel_occupancy: vec![0.5, 0.25],
+                dram_utilization: 0.3,
+            }),
+            ..Report::default()
+        };
+        let j = rep.to_json();
+        assert!(j.contains("\"pipeline\":{\"mode\":\"tile\""));
+        assert!(j.contains("\"overlap_frac\":0.42"));
+        assert!(j.contains("\"accel_occupancy\":[0.5,0.25]"));
+        assert!(rep.summary().contains("overlap 42.0%"));
+        assert!(rep.summary().contains("tile"));
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub struct Session {
     sampling_factor: usize,
     functional: FunctionalMode,
     pipeline: Option<bool>,
+    tile_pipeline: bool,
     capture_timeline: bool,
     seed: u64,
     double_buffer: bool,
@@ -64,6 +65,7 @@ impl Session {
             sampling_factor: defaults.sampling_factor,
             functional: defaults.functional,
             pipeline: None,
+            tile_pipeline: false,
             capture_timeline: false,
             seed: defaults.seed,
             double_buffer: defaults.double_buffer,
@@ -120,6 +122,17 @@ impl Session {
     /// order the paper figures use.
     pub fn pipeline(mut self, on: bool) -> Self {
         self.pipeline = Some(on);
+        self
+    }
+
+    /// Cross-operator **tile-level** pipelining (implies operator
+    /// pipelining): the event executor runs the task-graph IR at tile
+    /// granularity, so tile *k* of layer *n+1* starts once its input
+    /// tiles from layer *n* are written back and per-tile data
+    /// preparation hides under upstream accelerator phases. See
+    /// [`crate::config::SimOptions::tile_pipeline`].
+    pub fn tile_pipeline(mut self, on: bool) -> Self {
+        self.tile_pipeline = on;
         self
     }
 
@@ -182,6 +195,7 @@ impl Session {
             double_buffer: self.double_buffer,
             inter_accel_reduction: self.inter_accel_reduction,
             pipeline: self.pipeline.unwrap_or_else(|| self.scenario.default_pipeline()),
+            tile_pipeline: self.tile_pipeline,
         }
     }
 
@@ -332,9 +346,11 @@ impl Session {
                 let mut rep = baseline.expect("at least one sweep value ran");
                 rep.sweep_axis = Some(axis.name().to_string());
                 rep.sweep = rows;
-                // Per-op records describe only the baseline point; drop
-                // them so the sweep report is not mistaken for one run.
+                // Per-op records and the pipeline section describe only
+                // the baseline point; drop them so the sweep report is
+                // not mistaken for one run.
                 rep.ops.clear();
+                rep.pipeline = None;
                 // How the sweep ran: worker count, cache counters, and
                 // the whole-grid host wall-clock (the baseline's
                 // sim_wallclock_ns would undercount a parallel sweep).
@@ -394,6 +410,9 @@ impl Session {
                 let mut rep =
                     Report::from_sim("camera", sim_report, vec!["systolic".to_string()]);
                 rep.total_ns = frame_ns;
+                // The headline number is the whole frame (camera + DNN);
+                // the DNN-only occupancy section would be misleading.
+                rep.pipeline = None;
                 rep.camera = Some(CameraSummary {
                     stages: stages.iter().map(|s| (s.name.to_string(), s.ns)).collect(),
                     camera_ns: cam_ns,
@@ -645,6 +664,33 @@ mod tests {
             .run()
             .unwrap();
         assert!(!rep.timeline.as_ref().unwrap().events.is_empty());
+    }
+
+    #[test]
+    fn tile_pipeline_beats_serial_and_reports_overlap() {
+        let run = |tile: bool| {
+            Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+                .network("cnn10")
+                .tile_pipeline(tile)
+                .run()
+                .unwrap()
+        };
+        let serial = run(false);
+        let tiled = run(true);
+        assert!(
+            tiled.total_ns < serial.total_ns,
+            "tile {} vs serial {}",
+            tiled.total_ns,
+            serial.total_ns
+        );
+        let p = tiled.pipeline.as_ref().unwrap();
+        assert_eq!(p.mode, "tile");
+        assert!(p.overlap_frac > 0.0);
+        assert_eq!(p.accel_occupancy.len(), 2);
+        assert_eq!(serial.pipeline.as_ref().unwrap().mode, "serial");
+        // Overlap changes when work runs, never how much data moves.
+        assert_eq!(tiled.dram_bytes, serial.dram_bytes);
+        assert!(tiled.config.contains("tile-pipelined"), "{}", tiled.config);
     }
 
     #[test]

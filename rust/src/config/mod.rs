@@ -310,6 +310,19 @@ pub struct SimOptions {
     /// overlaps the next operator's accelerator phase. Off reproduces the
     /// strict serial operator order the paper figures were measured with.
     pub pipeline: bool,
+    /// Cross-operator **tile-level** pipelining (implies [`pipeline`]):
+    /// the event executor runs the task-graph IR at tile granularity, so
+    /// tile *k* of layer *n+1* starts once its input tiles from layer *n*
+    /// have been written back, a consumer's per-tile data preparation
+    /// overlaps the producer's accelerator phase, and successive layers
+    /// double-buffer across the pool. Off reproduces the operator-level
+    /// event schedule bit-for-bit. [`inter_accel_reduction`] forces
+    /// operator granularity (spread reduction groups are scheduled as one
+    /// unit).
+    ///
+    /// [`pipeline`]: SimOptions::pipeline
+    /// [`inter_accel_reduction`]: SimOptions::inter_accel_reduction
+    pub tile_pipeline: bool,
 }
 
 impl Default for SimOptions {
@@ -327,6 +340,7 @@ impl Default for SimOptions {
             double_buffer: false,
             inter_accel_reduction: false,
             pipeline: false,
+            tile_pipeline: false,
         }
     }
 }

@@ -1,0 +1,536 @@
+//! Tile-level task-graph IR: **one lowering, two executors**.
+//!
+//! Every workload — a single forward pass, a serving batch, a sweep
+//! point — is lowered to the same intermediate representation before
+//! execution: each network [`crate::graph::Op`] expands (through its
+//! cached tiling plan) into per-tile **prep / compute / finalize** tasks
+//! carrying
+//! explicit resource claims (CPU thread pool, pinned accelerator-pool
+//! slot, DRAM bandwidth request) and data dependencies. The lowering
+//! includes **cross-operator tile edges**: a consumer's per-tile data
+//! preparation depends on exactly the producer tiles whose written-back
+//! output regions overlap its input region, so tile *k* of layer *n+1*
+//! can start once its input tiles from layer *n* finalize — the
+//! structure that exposes cross-layer double buffering.
+//!
+//! Two executors interpret this one IR ([`crate::sched`]):
+//!
+//! * the **serial executor** ([`crate::sched::Scheduler::run_serial`])
+//!   walks operators in the lowering's topological order, each op's
+//!   tiles in item order — bit-for-bit the seed scheduler's reference
+//!   schedule;
+//! * the **event executor** resolves tasks as their dependencies
+//!   complete. At operator granularity (the default) it reproduces the
+//!   operator-level event schedule exactly; with
+//!   [`crate::config::SimOptions::tile_pipeline`] it commits individual
+//!   tile tasks, overlapping consecutive layers' accelerator phases and
+//!   hiding per-tile data preparation under upstream compute.
+//!
+//! Structure of one accelerated op's tasks (ids are contiguous):
+//!
+//! ```text
+//!   [Prep chunk 0 .. Prep chunk n-1]  [Tile 0 .. Tile m-1]  [Finalize]
+//!        |  cross-op edges from            |  chunk -> tile      | all
+//!        |  producer write-back tiles      |  group chains       | tiles
+//! ```
+//!
+//! Edges always point from a lower task id to a higher one (operators
+//! are lowered in topological order), so the task graph is acyclic by
+//! construction — pinned by `tests/taskgraph_invariants.rs` along with
+//! "every plan work item appears as exactly one tile task".
+//!
+//! **When is cross-op tile pipelining legal?** A consumer tile may start
+//! when (1) its input data exists — its prep chunk ran, which itself
+//! waited for every producer tile overlapping that chunk's input region
+//! to be written back — and (2) its buffer constraints hold: tiles of a
+//! reduction group accumulate in one scratchpad, so group members are
+//! chained in order on one pinned slot, and spread reduction groups
+//! ([`crate::config::SimOptions::inter_accel_reduction`]) force operator
+//! granularity because their partial-sum merge is a whole-op barrier.
+//! Work quantities (traffic bytes, CPU spans, energy) are
+//! schedule-invariant: pipelining moves *when* tasks run, never *how
+//! much* they do.
+//!
+//! One **documented approximation**: the tile-level executor may commit
+//! a foreign tile on a slot between two chained members of an open
+//! reduction group. This is modeled as costless — the engine's output
+//! buffer is assumed to keep the group's partial-sum block resident
+//! across the interleaving (group chains still guarantee accumulation
+//! *order*). A scratchpad save/restore cost model (which would add the
+//! spill traffic the paper warns about) is future work; holding the
+//! slot outright can deadlock against cross-op edges, so it is
+//! deliberately not done.
+
+use std::collections::HashMap;
+
+use crate::cpu::PhaseTime;
+use crate::graph::{Graph, OpKind};
+use crate::sched::{CachedPlan, Scheduler};
+use crate::tiling::Region;
+
+/// What one lowered operator executes as.
+pub enum OpWork {
+    /// Accelerated operator with its (possibly cache-shared) tiling plan.
+    Accel(CachedPlan),
+    /// CPU-only operator (Flatten: dispatch overhead, no tiles).
+    CpuOnly,
+    /// Input placeholder: completes instantly at job arrival.
+    Source,
+}
+
+/// One lowered operator of the workload (one node per (job, op) pair, in
+/// (job, topological) order).
+pub struct OpNode {
+    /// Job (request) index within the workload.
+    pub job: usize,
+    /// Operator id within the job's graph.
+    pub op_id: usize,
+    /// The job's arrival time — no task of this node may start earlier.
+    pub arrival_ns: f64,
+    /// What this operator executes as.
+    pub work: OpWork,
+    /// Task-id range `[start, end)` of this node's tasks (empty until
+    /// tile-level expansion).
+    pub tasks: (usize, usize),
+    /// Data producers (op-node indices), one entry per produced input.
+    pub op_deps: Vec<usize>,
+    /// Data consumers (op-node indices), mirror of `op_deps`.
+    pub op_consumers: Vec<usize>,
+}
+
+/// What kind of work a task performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Input placeholder; completes at job arrival.
+    Source,
+    /// CPU-only operator (Flatten).
+    CpuOnly,
+    /// One chunk of an op's data-preparation phase (per input tile).
+    Prep {
+        /// Chunk index within the op's prep phase.
+        chunk: u32,
+    },
+    /// One accelerator work item of the op's tiling plan.
+    Tile {
+        /// Index into `plan.items`.
+        item: u32,
+    },
+    /// The op's data-finalization phase + dispatch overhead.
+    Finalize,
+}
+
+/// The resources a task occupies while it runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceClaim {
+    /// Occupies the (exclusive) CPU thread pool.
+    pub cpu: bool,
+    /// Pinned accelerator command queue (tile tasks; groups pin to
+    /// `reduce_group % pool size`).
+    pub accel_slot: Option<usize>,
+    /// DRAM bandwidth request: bytes this task streams (tile transfers,
+    /// or read+write tiling-copy traffic for CPU phases).
+    pub dram_bytes: u64,
+}
+
+/// One schedulable unit of the lowered workload.
+pub struct Task {
+    /// The op node this task belongs to.
+    pub op_node: usize,
+    /// What the task does.
+    pub kind: TaskKind,
+    /// Resources it occupies.
+    pub claim: ResourceClaim,
+    /// Model-level duration for [`TaskKind::Prep`] chunks — this chunk's
+    /// share of the op's monolithic prep-phase span, split by
+    /// single-thread copy cost so the shares sum exactly to the span the
+    /// serial executor charges. 0 for every other kind (those durations
+    /// are resolved at execution time).
+    pub prep_dur_ns: f64,
+    /// Task ids that must complete before this task may start.
+    pub deps: Vec<usize>,
+    /// Mirror of `deps`: task ids released when this task completes.
+    pub consumers: Vec<usize>,
+}
+
+/// The lowered workload: op nodes in (job, topological) order plus —
+/// after tile-level expansion — the flat task list.
+pub struct TaskGraph {
+    /// One node per (job, operator), in (job, topological) order.
+    pub ops: Vec<OpNode>,
+    /// Tile-level tasks (empty when lowered at operator granularity).
+    pub tasks: Vec<Task>,
+    /// Op-node index range `[start, end)` per job.
+    pub job_ranges: Vec<(usize, usize)>,
+}
+
+impl TaskGraph {
+    /// The tile-task ids of an accelerated op node, as a (first tile
+    /// task id, item count) pair. Layout per node: prep chunks, then one
+    /// task per plan item, then finalize.
+    fn tile_range(&self, node: usize) -> (usize, usize) {
+        let n = &self.ops[node];
+        let n_items = match &n.work {
+            OpWork::Accel(cp) => cp.planned.plan.items.len(),
+            _ => return (n.tasks.0, 0),
+        };
+        let n_chunks = (n.tasks.1 - n.tasks.0) - n_items - 1;
+        (n.tasks.0 + n_chunks, n_items)
+    }
+}
+
+/// Lower a workload to the task-graph IR. Op nodes (with their cached
+/// plans and data edges) are always built; `tile_level` additionally
+/// expands every op into its prep-chunk / tile / finalize tasks with
+/// cross-operator tile edges. Both executors consume this one lowering —
+/// the operator-granularity view is exactly the task expansion collapsed
+/// per op.
+pub(crate) fn lower(sched: &Scheduler, jobs: &[(f64, &Graph)], tile_level: bool) -> TaskGraph {
+    let mut ops: Vec<OpNode> = Vec::new();
+    let mut job_ranges: Vec<(usize, usize)> = Vec::with_capacity(jobs.len());
+    for (j, &(arrival, graph)) in jobs.iter().enumerate() {
+        let base = ops.len();
+        let order = graph.topo_order();
+        let mut node_of_op = vec![usize::MAX; graph.ops.len()];
+        for (pos, &oid) in order.iter().enumerate() {
+            node_of_op[oid] = base + pos;
+        }
+        for &oid in &order {
+            let op = &graph.ops[oid];
+            let work = match sched.plan_cached(op, graph) {
+                Some(cp) => OpWork::Accel(cp),
+                None if matches!(op.kind, OpKind::Flatten) => OpWork::CpuOnly,
+                None => OpWork::Source,
+            };
+            ops.push(OpNode {
+                job: j,
+                op_id: oid,
+                arrival_ns: arrival,
+                work,
+                tasks: (0, 0),
+                op_deps: Vec::new(),
+                op_consumers: Vec::new(),
+            });
+        }
+        // Data edges: consumer waits for each producing op.
+        let producer: HashMap<usize, usize> = graph.ops.iter().map(|o| (o.output, o.id)).collect();
+        for &oid in &order {
+            let me = node_of_op[oid];
+            for &t in &graph.ops[oid].inputs {
+                if let Some(&p) = producer.get(&t) {
+                    let pn = node_of_op[p];
+                    ops[pn].op_consumers.push(me);
+                    ops[me].op_deps.push(pn);
+                }
+            }
+        }
+        job_ranges.push((base, ops.len()));
+    }
+    let mut tg = TaskGraph {
+        ops,
+        tasks: Vec::new(),
+        job_ranges,
+    };
+    if tile_level {
+        expand_tasks(sched, &mut tg);
+    }
+    tg
+}
+
+/// Task-level dependencies of `node` on its data producers, narrowed to
+/// the producer tiles whose written-back output regions overlap `region`
+/// when tile regions live in the same coordinate space (equal rank);
+/// otherwise — and whenever the overlap set would come out empty — every
+/// write-back tile of the producer (conservative whole-tensor handoff,
+/// never weaker than the operator-level edge).
+fn producer_task_deps(tg: &TaskGraph, node: usize, region: Option<&Region>) -> Vec<usize> {
+    let mut deps = Vec::new();
+    for &p in &tg.ops[node].op_deps {
+        match &tg.ops[p].work {
+            OpWork::Source | OpWork::CpuOnly => deps.push(tg.ops[p].tasks.0),
+            OpWork::Accel(pcp) => {
+                let items = &pcp.planned.plan.items;
+                let (tile0, _) = tg.tile_range(p);
+                // One pass collects both the region-matched tiles and
+                // the whole write-back set (the fallback).
+                let mut matched: Vec<usize> = Vec::new();
+                let mut all: Vec<usize> = Vec::new();
+                for (i, it) in items.iter().enumerate() {
+                    if !it.last_in_group {
+                        continue;
+                    }
+                    all.push(tile0 + i);
+                    let hit = match region {
+                        Some(r) => r.intersects(&it.out_region),
+                        None => true,
+                    };
+                    if hit {
+                        matched.push(tile0 + i);
+                    }
+                }
+                deps.extend(if matched.is_empty() { all } else { matched });
+            }
+        }
+    }
+    deps
+}
+
+/// Split an op's monolithic prep-phase span into per-chunk durations by
+/// single-thread copy cost; the last chunk absorbs float rounding so the
+/// shares sum exactly to the span the serial executor charges.
+fn split_prep(phase: &PhaseTime, weights: &[f64]) -> Vec<f64> {
+    let n = weights.len();
+    let sum_w: f64 = weights.iter().sum();
+    let mut durs = Vec::with_capacity(n);
+    let mut acc = 0.0f64;
+    for (j, &w) in weights.iter().enumerate() {
+        let d = if j + 1 == n {
+            (phase.span_ns - acc).max(0.0)
+        } else if sum_w > 0.0 {
+            phase.span_ns * w / sum_w
+        } else {
+            phase.span_ns / n as f64
+        };
+        acc += d;
+        durs.push(d);
+    }
+    durs
+}
+
+/// Expand every op node into its tile-level tasks (see the module docs
+/// for the per-op layout and edge rules).
+fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
+    let threads = sched.options().sw_threads;
+    let n_accels = sched.n_accels();
+    let mut tasks: Vec<Task> = Vec::new();
+    let no_claim = ResourceClaim {
+        cpu: false,
+        accel_slot: None,
+        dram_bytes: 0,
+    };
+    let cpu_claim = |bytes: u64| ResourceClaim {
+        cpu: true,
+        accel_slot: None,
+        dram_bytes: bytes,
+    };
+    for ni in 0..tg.ops.len() {
+        let start = tasks.len();
+        match &tg.ops[ni].work {
+            OpWork::Source => tasks.push(Task {
+                op_node: ni,
+                kind: TaskKind::Source,
+                claim: no_claim,
+                prep_dur_ns: 0.0,
+                deps: Vec::new(),
+                consumers: Vec::new(),
+            }),
+            OpWork::CpuOnly => {
+                let deps = producer_task_deps(tg, ni, None);
+                tasks.push(Task {
+                    op_node: ni,
+                    kind: TaskKind::CpuOnly,
+                    claim: cpu_claim(0),
+                    prep_dur_ns: 0.0,
+                    deps,
+                    consumers: Vec::new(),
+                });
+            }
+            OpWork::Accel(cp) => {
+                let plan = &cp.planned.plan;
+                let n_items = plan.items.len();
+                // One prep chunk per input tile when the planner's item
+                // order repeats its prep-task order (true for every
+                // in-tree planner: items cycle through the prepared
+                // tiles, so chunk = item % chunks). The correspondence
+                // is *checked*, not assumed: every item's input region
+                // must equal its chunk representative's, else the op
+                // falls back to one monolithic chunk (conservative,
+                // never wrong — a planner with a different emission
+                // order degrades to op-level handoff instead of wiring
+                // tiles to the wrong inputs).
+                let n_prep = plan.prep_tasks.len();
+                let chunkable = n_prep > 0
+                    && n_items % n_prep == 0
+                    && plan
+                        .items
+                        .iter()
+                        .enumerate()
+                        .all(|(i, it)| it.in_region == plan.items[i % n_prep].in_region);
+                let n_chunks = if chunkable { n_prep } else { 1 };
+                let phase = sched.cpu_model().tiling_phase(&plan.prep_tasks, threads);
+                let (durs, bytes): (Vec<f64>, Vec<u64>) = if n_chunks == 1 {
+                    (vec![phase.span_ns], vec![phase.traffic_bytes])
+                } else {
+                    let w: Vec<f64> = plan
+                        .prep_tasks
+                        .iter()
+                        .map(|s| sched.cpu_model().memcpy_task_ns(*s))
+                        .collect();
+                    // Read + write both stream, as in the monolithic phase.
+                    let b: Vec<u64> = plan.prep_tasks.iter().map(|s| 2 * s.bytes).collect();
+                    (split_prep(&phase, &w), b)
+                };
+                let prep0 = tasks.len();
+                for (j, (&dur, &byt)) in durs.iter().zip(&bytes).enumerate() {
+                    // Chunk j prepares the same input region as plan item
+                    // j (the planners emit prep tasks in the order their
+                    // first item cycle consumes them).
+                    let region = if chunkable {
+                        Some(&plan.items[j].in_region)
+                    } else {
+                        None
+                    };
+                    let deps = producer_task_deps(tg, ni, region);
+                    tasks.push(Task {
+                        op_node: ni,
+                        kind: TaskKind::Prep { chunk: j as u32 },
+                        claim: cpu_claim(byt),
+                        prep_dur_ns: dur,
+                        deps,
+                        consumers: Vec::new(),
+                    });
+                }
+                let tile0 = tasks.len();
+                let mut last_of_group: HashMap<u32, usize> = HashMap::new();
+                for (i, it) in plan.items.iter().enumerate() {
+                    let mut deps = vec![prep0 + (i % n_chunks)];
+                    // Reduction-group members accumulate into one
+                    // scratchpad: chain them in plan order on one slot.
+                    if let Some(&prev) = last_of_group.get(&it.reduce_group) {
+                        deps.push(prev);
+                    }
+                    last_of_group.insert(it.reduce_group, tile0 + i);
+                    tasks.push(Task {
+                        op_node: ni,
+                        kind: TaskKind::Tile { item: i as u32 },
+                        claim: ResourceClaim {
+                            cpu: false,
+                            accel_slot: Some((it.reduce_group as usize) % n_accels),
+                            dram_bytes: it.in_bytes + it.wgt_bytes + it.out_bytes,
+                        },
+                        prep_dur_ns: 0.0,
+                        deps,
+                        consumers: Vec::new(),
+                    });
+                }
+                tasks.push(Task {
+                    op_node: ni,
+                    kind: TaskKind::Finalize,
+                    claim: cpu_claim(2 * plan.finalize.bytes),
+                    prep_dur_ns: 0.0,
+                    deps: (tile0..tile0 + n_items).collect(),
+                    consumers: Vec::new(),
+                });
+            }
+        }
+        tg.ops[ni].tasks = (start, tasks.len());
+    }
+    // Mirror deps into consumer lists.
+    for id in 0..tasks.len() {
+        for di in 0..tasks[id].deps.len() {
+            let d = tasks[id].deps[di];
+            tasks[d].consumers.push(id);
+        }
+    }
+    tg.tasks = tasks;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SimOptions, SocConfig};
+    use crate::nets;
+
+    fn lower_net(net: &str) -> (TaskGraph, Graph) {
+        let g = nets::build_network(net).unwrap();
+        let sched = Scheduler::new(SocConfig::default(), SimOptions::default());
+        let tg = sched.lower_workload(&[(0.0, &g)]);
+        (tg, g)
+    }
+
+    #[test]
+    fn op_skeleton_matches_graph() {
+        let (tg, g) = lower_net("lenet5");
+        assert_eq!(tg.ops.len(), g.ops.len());
+        assert_eq!(tg.job_ranges, vec![(0, g.ops.len())]);
+        // Data edges mirror each other.
+        for (i, n) in tg.ops.iter().enumerate() {
+            for &c in &n.op_consumers {
+                assert!(tg.ops[c].op_deps.contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_are_topological_by_id() {
+        let (tg, _) = lower_net("cnn10");
+        assert!(!tg.tasks.is_empty());
+        for (id, t) in tg.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                assert!(d < id, "edge {d} -> {id} not forward");
+            }
+            for &c in &t.consumers {
+                assert!(c > id, "consumer {c} of {id} not forward");
+            }
+        }
+    }
+
+    #[test]
+    fn every_tile_claims_its_group_slot() {
+        let g = nets::build_network("minerva").unwrap();
+        let sched = Scheduler::new(
+            SocConfig::default(),
+            SimOptions {
+                num_accels: 2,
+                ..SimOptions::default()
+            },
+        );
+        let tg = sched.lower_workload(&[(0.0, &g)]);
+        let mut saw_tile = false;
+        for t in &tg.tasks {
+            match t.kind {
+                TaskKind::Tile { item } => {
+                    saw_tile = true;
+                    let OpWork::Accel(cp) = &tg.ops[t.op_node].work else {
+                        panic!("tile task on a non-accel node");
+                    };
+                    let it = &cp.planned.plan.items[item as usize];
+                    assert_eq!(t.claim.accel_slot, Some(it.reduce_group as usize % 2));
+                    assert_eq!(
+                        t.claim.dram_bytes,
+                        it.in_bytes + it.wgt_bytes + it.out_bytes
+                    );
+                }
+                TaskKind::Prep { .. } | TaskKind::Finalize | TaskKind::CpuOnly => {
+                    assert!(t.claim.cpu);
+                    assert!(t.claim.accel_slot.is_none());
+                }
+                TaskKind::Source => assert!(!t.claim.cpu),
+            }
+        }
+        assert!(saw_tile);
+    }
+
+    #[test]
+    fn prep_chunks_sum_to_the_monolithic_span() {
+        let (tg, g) = lower_net("cnn10");
+        let sched = Scheduler::new(SocConfig::default(), SimOptions::default());
+        for n in &tg.ops {
+            let OpWork::Accel(cp) = &n.work else { continue };
+            let phase = sched
+                .cpu_model()
+                .tiling_phase(&cp.planned.plan.prep_tasks, 1);
+            let chunk_sum: f64 = tg.tasks[n.tasks.0..n.tasks.1]
+                .iter()
+                .filter(|t| matches!(t.kind, TaskKind::Prep { .. }))
+                .map(|t| t.prep_dur_ns)
+                .sum();
+            assert!(
+                (chunk_sum - phase.span_ns).abs() <= 1e-9 * phase.span_ns.max(1.0),
+                "{}: chunks {} vs span {}",
+                g.ops[n.op_id].name,
+                chunk_sum,
+                phase.span_ns
+            );
+        }
+    }
+}

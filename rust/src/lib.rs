@@ -20,13 +20,43 @@
 //! ([`runtime`]), while timing and energy come from the microarchitectural
 //! models. Python never runs at simulation time.
 //!
-//! The runtime scheduler is **event-driven** ([`sched`]): operators are
-//! released as their dependencies resolve and contend for explicit
-//! resources (the CPU thread pool, per-accelerator command queues, shared
-//! DRAM bandwidth). With [`config::SimOptions::pipeline`] off (the
-//! default) it reproduces the strict serial operator order of the paper
-//! figures; with it on, independent operators overlap across the
-//! accelerator pool and CPU phases overlap accelerator phases.
+//! ## Graph → TaskGraph lowering: one IR, two executors
+//!
+//! Execution is organized around a **tile-level task-graph IR**
+//! ([`ir`]): every workload's operator [`graph::Graph`] lowers — through
+//! each op's cached tiling plan — into per-tile *prep / compute /
+//! finalize* tasks carrying explicit resource claims (CPU thread pool,
+//! pinned accelerator-pool slot, DRAM bandwidth request) and data
+//! dependencies, including **cross-operator tile edges**: a consumer's
+//! per-tile data preparation depends on exactly the producer tiles whose
+//! written-back output regions overlap its input region.
+//!
+//! Two executors interpret that one lowering ([`sched`]):
+//!
+//! * the **serial executor** ([`sched::Scheduler::run_serial`]) walks
+//!   operators in topological order, tiles in item order — the seed
+//!   scheduler's reference schedule, bit-for-bit;
+//! * the **event executor** releases tasks as their dependencies resolve
+//!   and contends for explicit resources (CPU pool, per-accelerator
+//!   command queues, shared DRAM bandwidth). With
+//!   [`config::SimOptions::pipeline`] off (the default) it reproduces
+//!   the strict serial operator order of the paper figures; with it on,
+//!   independent operators overlap across the pool; and with
+//!   [`config::SimOptions::tile_pipeline`] it commits *individual tile
+//!   tasks*, so tile *k* of layer *n+1* starts once its input tiles from
+//!   layer *n* are written back — cross-layer double buffering, the
+//!   paper's "no-microarchitecture-change" class of speedup.
+//!
+//! Cross-op tile pipelining is legal exactly when the IR's dependency
+//! and buffer constraints hold: a tile needs its prep chunk (which needs
+//! the overlapping producer write-backs), reduction-group members chain
+//! in order on one scratchpad/slot, and spread reduction groups
+//! ([`config::SimOptions::inter_accel_reduction`]) force operator
+//! granularity. Work quantities — traffic bytes, CPU spans, energy —
+//! are schedule-invariant; only *when* tasks run changes (pinned by
+//! `tests/taskgraph_invariants.rs`). The `pipeline` section of the
+//! unified report records the realized overlap fraction and
+//! per-resource occupancy.
 //!
 //! ## Quick start
 //!
@@ -72,8 +102,9 @@
 //!
 //! Sweeps ([`api::SweepAxis`]), the paper-§V camera pipeline, and a
 //! training step are the remaining [`api::Scenario`] variants — one enum,
-//! not five entry points. The old [`sim::Simulator`] methods remain as
-//! `#[deprecated]` delegating shims.
+//! not five entry points. (The old `sim::Simulator` shims are gone;
+//! [`sim`] now only hosts the functional-execution machinery `Session`
+//! drives.)
 //!
 //! ## Parallel sweeps and the layer-timing cache
 //!
@@ -119,6 +150,7 @@ pub mod cpu;
 pub mod energy;
 pub mod figures;
 pub mod graph;
+pub mod ir;
 pub mod mem;
 pub mod nets;
 pub mod refexec;

@@ -7,7 +7,8 @@
 //! smaug run --net vgg16 [--accels 8 | --accels nvdla,systolic,nvdla]
 //!           [--interface acp] [--threads 8] [--accel nvdla|systolic]
 //!           [--sampling N] [--soc file.cfg] [--functional off|native|pjrt]
-//!           [--train] [--double-buffer] [--inter-accel-reduction] [--pipeline]
+//!           [--train] [--double-buffer] [--inter-accel-reduction]
+//!           [--pipeline] [--tile-pipeline]
 //!           [--report summary|ops|timeline|json|csv|trace-json]
 //! smaug serve --net resnet50 [--requests 8] [--interval-us 50]
 //!           [--accels 4] [--threads 8] [--no-pipeline] [--report summary|json]
@@ -57,7 +58,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  usage:\n  smaug run --net <name> [--accels N|kind,kind,...] [--interface dma|acp]\n\
                  \x20          [--threads N] [--accel nvdla|systolic] [--sampling N]\n\
                  \x20          [--functional off|native|pjrt] [--report summary|ops|timeline|json|csv|trace-json]\n\
-                 \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction] [--pipeline]\n\
+                 \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction]\n\
+                 \x20          [--pipeline] [--tile-pipeline]\n\
                  \x20 smaug serve --net <name> [--requests N] [--interval-us F]\n\
                  \x20          [--accels N|kinds] [--threads N] [--no-pipeline] [--report summary|json]\n\
                  \x20 smaug sweep --net <name> [--axis accels|threads] [--values 1,2,4,8]\n\
@@ -142,6 +144,9 @@ fn build_session(args: &[String]) -> Result<Session> {
     }
     if has(args, "--no-pipeline") {
         s = s.pipeline(false);
+    }
+    if has(args, "--tile-pipeline") {
+        s = s.tile_pipeline(true);
     }
     Ok(s)
 }

@@ -1,37 +1,48 @@
-//! Discrete-event execution engine for the scheduler.
+//! Discrete-event executors of the task-graph IR ([`crate::ir`]).
 //!
 //! A workload is a list of jobs `(arrival_ns, graph)` — one for a plain
-//! forward pass, several for serving mode. Every operator of every job
-//! becomes a node; the engine releases nodes as their dependencies
-//! resolve and multiplexes their CPU phases over the exclusive thread
-//! pool ([`PoolGate`]) while accelerator phases queue on the persistent
-//! [`AccelPool`]. All shared-resource contention (DRAM bandwidth,
-//! command queues, CPU pool) is resolved with absolute timestamps, so
-//! out-of-order dispatch is safe and fully deterministic.
+//! forward pass, several for serving mode. The workload is lowered once
+//! ([`crate::ir::lower`]) and interpreted at one of two granularities.
+//! All shared-resource contention (DRAM bandwidth, command queues, CPU
+//! pool) is resolved with absolute timestamps, so out-of-order dispatch
+//! is safe and fully deterministic.
 //!
-//! Dependency model:
+//! **Operator granularity** (the default): every lowered op is one node
+//! whose accelerator phase dispatches all its tiles atomically.
 //!
 //! * `pipeline = false` — schedulable nodes are chained in (job, topo)
 //!   order and each waits for the *complete* predecessor (prep → accel →
 //!   finalize → dispatch). This reproduces the serial reference schedule
 //!   [`Scheduler::run_serial`] exactly.
 //! * `pipeline = true` — a node waits only for its data producers'
-//!   accelerator phases to have written their output tiles back
-//!   (tile-granularity handoff approximated at phase granularity). The
+//!   accelerator phases to have written their output tiles back. The
 //!   producer's CPU finalization then overlaps the consumer's
 //!   accelerator phase, and independent DAG branches overlap across the
 //!   accelerator pool.
 //!
+//! **Tile granularity** ([`SimOptions::tile_pipeline`]): the executor
+//! commits individual IR tasks — per-tile prep chunks, tile computes,
+//! finalizations — as their dependencies resolve. Cross-operator tile
+//! edges let tile *k* of layer *n+1* start once its input tiles from
+//! layer *n* are written back, so consecutive layers' accelerator phases
+//! overlap (cross-layer double buffering) and per-tile data preparation
+//! hides under upstream compute. Work quantities (traffic, CPU spans,
+//! energy) are unchanged — only *when* tasks run moves.
+//! Inter-accelerator reduction forces operator granularity (its
+//! partial-sum merge is a whole-op barrier).
+//!
 //! CPU arbitration: among runnable phases, preparations win over
 //! finalizations (dispatching new accelerator work hides more latency),
-//! ties broken by (job, topo) position — fully deterministic.
+//! ties broken by task position — fully deterministic.
+//!
+//! [`SimOptions::tile_pipeline`]: crate::config::SimOptions::tile_pipeline
 
-use std::collections::HashMap;
-
-use super::{AccelPool, CachedPlan, HwOutcome, PrepOutcome, Scheduler};
+use super::{AccelPool, HwOutcome, OpAccelState, PrepOutcome, Scheduler};
 use crate::cpu::PoolGate;
-use crate::graph::{Graph, OpKind};
+use crate::graph::Graph;
+use crate::ir::{OpWork, TaskGraph, TaskKind};
 use crate::stats::OpRecord;
+use crate::trace::{EventKind, Lane};
 
 /// Result of one job (request) in a workload.
 pub(crate) struct JobOutcome {
@@ -41,19 +52,24 @@ pub(crate) struct JobOutcome {
     pub end_ns: f64,
 }
 
-enum Work {
-    /// Accelerated operator with its (possibly cache-shared) tiling plan.
-    Accel(CachedPlan),
-    /// CPU-only operator (Flatten: dispatch overhead).
-    CpuOnly,
-    /// Input placeholder: completes instantly at job arrival.
-    Source,
+/// Execute a workload on the scheduler's SoC; returns one outcome per job.
+pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<JobOutcome> {
+    // One source of truth for the granularity decision: the same
+    // predicate the report's `pipeline.mode` field is stamped from.
+    let tiled = sched.pipeline_mode() == "tile";
+    let tg = crate::ir::lower(sched, jobs, tiled);
+    if tiled {
+        run_tile_level(sched, jobs, &tg)
+    } else {
+        run_op_level(sched, jobs, &tg)
+    }
 }
 
-struct Node {
-    job: usize,
-    op_id: usize,
-    work: Work,
+// ---------------------------------------------------------------------
+// Operator-granularity executor
+// ---------------------------------------------------------------------
+
+struct NodeState {
     /// Unresolved dependency count.
     deps: usize,
     /// Node indices released when this node's handoff point is reached.
@@ -69,7 +85,7 @@ struct Node {
 }
 
 #[derive(Clone, Copy)]
-struct Task {
+struct CpuTask {
     ready_ns: f64,
     /// 0 = preparation (or CPU-only op), 1 = finalization.
     class: u8,
@@ -78,7 +94,7 @@ struct Task {
 
 /// Resolve one dependency of each consumer of `from` at time `t`,
 /// queueing consumers that become runnable.
-fn release(nodes: &mut [Node], pending: &mut Vec<Task>, from: usize, t: f64) {
+fn release(nodes: &mut [NodeState], pending: &mut Vec<CpuTask>, from: usize, t: f64) {
     let consumers = std::mem::take(&mut nodes[from].consumers);
     for &c in &consumers {
         let n = &mut nodes[c];
@@ -86,7 +102,7 @@ fn release(nodes: &mut [Node], pending: &mut Vec<Task>, from: usize, t: f64) {
         n.deps -= 1;
         if n.deps == 0 && !n.queued {
             n.queued = true;
-            pending.push(Task {
+            pending.push(CpuTask {
                 ready_ns: n.ready_ns,
                 class: 0,
                 node: c,
@@ -96,65 +112,43 @@ fn release(nodes: &mut [Node], pending: &mut Vec<Task>, from: usize, t: f64) {
     nodes[from].consumers = consumers;
 }
 
-/// Execute a workload on the scheduler's SoC; returns one outcome per job.
-pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<JobOutcome> {
-    let pipeline = sched.opts.pipeline;
+/// The operator-granularity event loop: one CPU phase at a time; each
+/// node's accelerator phase dispatches all its tiles atomically.
+fn run_op_level(sched: &mut Scheduler, jobs: &[(f64, &Graph)], tg: &TaskGraph) -> Vec<JobOutcome> {
+    let pipeline = sched.opts.pipeline || sched.opts.tile_pipeline;
     let mut pool = AccelPool::new(sched.n_accels());
     let mut cpu = PoolGate::new();
 
-    // ---- Build the node table in (job, topo) order.
-    let mut nodes: Vec<Node> = Vec::new();
-    let mut job_range: Vec<(usize, usize)> = Vec::with_capacity(jobs.len());
-    for (j, &(arrival, graph)) in jobs.iter().enumerate() {
-        let base = nodes.len();
-        let order = graph.topo_order();
-        let mut node_of_op = vec![usize::MAX; graph.ops.len()];
-        for (pos, &oid) in order.iter().enumerate() {
-            node_of_op[oid] = base + pos;
-        }
-        for &oid in &order {
-            let op = &graph.ops[oid];
-            let work = match sched.plan_cached(op, graph) {
-                Some(planned) => Work::Accel(planned),
-                None if matches!(op.kind, OpKind::Flatten) => Work::CpuOnly,
-                None => Work::Source,
-            };
-            nodes.push(Node {
-                job: j,
-                op_id: oid,
-                work,
-                deps: 0,
-                consumers: Vec::new(),
-                ready_ns: arrival,
-                queued: false,
-                start_ns: arrival,
-                prep: None,
-                hw: None,
-                done_ns: arrival,
-                rec: None,
-            });
-        }
-        if pipeline {
-            // Data dependencies: consumer waits for each producing op.
-            let producer: HashMap<usize, usize> =
-                graph.ops.iter().map(|o| (o.output, o.id)).collect();
-            for &oid in &order {
-                let me = node_of_op[oid];
-                for &t in &graph.ops[oid].inputs {
-                    if let Some(&p) = producer.get(&t) {
-                        nodes[node_of_op[p]].consumers.push(me);
-                        nodes[me].deps += 1;
-                    }
-                }
+    // ---- Node table mirrors the IR's op nodes, in (job, topo) order.
+    let mut nodes: Vec<NodeState> = tg
+        .ops
+        .iter()
+        .map(|o| NodeState {
+            deps: 0,
+            consumers: Vec::new(),
+            ready_ns: o.arrival_ns,
+            queued: false,
+            start_ns: o.arrival_ns,
+            prep: None,
+            hw: None,
+            done_ns: o.arrival_ns,
+            rec: None,
+        })
+        .collect();
+    if pipeline {
+        // Data dependencies from the lowering: consumer waits for each
+        // producing op's write-back handoff.
+        for (i, o) in tg.ops.iter().enumerate() {
+            for &c in &o.op_consumers {
+                nodes[i].consumers.push(c);
+                nodes[c].deps += 1;
             }
         }
-        job_range.push((base, nodes.len()));
-    }
-    if !pipeline {
+    } else {
         // Strict serial chain over every schedulable node of the whole
         // workload, in submission order.
-        let chain: Vec<usize> = (0..nodes.len())
-            .filter(|&i| !matches!(nodes[i].work, Work::Source))
+        let chain: Vec<usize> = (0..tg.ops.len())
+            .filter(|&i| !matches!(tg.ops[i].work, OpWork::Source))
             .collect();
         for w in chain.windows(2) {
             nodes[w[0]].consumers.push(w[1]);
@@ -164,18 +158,18 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
 
     // ---- Seed the task queue: sources complete at arrival, dep-free
     // schedulable nodes become runnable.
-    let mut pending: Vec<Task> = Vec::new();
+    let mut pending: Vec<CpuTask> = Vec::new();
     for i in 0..nodes.len() {
-        if matches!(nodes[i].work, Work::Source) {
+        if matches!(tg.ops[i].work, OpWork::Source) {
             let t = nodes[i].ready_ns;
             nodes[i].done_ns = t;
             release(&mut nodes, &mut pending, i, t);
         }
     }
     for (i, n) in nodes.iter_mut().enumerate() {
-        if n.deps == 0 && !n.queued && !matches!(n.work, Work::Source) {
+        if n.deps == 0 && !n.queued && !matches!(tg.ops[i].work, OpWork::Source) {
             n.queued = true;
-            pending.push(Task {
+            pending.push(CpuTask {
                 ready_ns: n.ready_ns,
                 class: 0,
                 node: i,
@@ -206,9 +200,9 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
         let task = pending.swap_remove(best);
         let node_idx = task.node;
         let start = cpu.acquire(task.ready_ns);
-        let (job, op_id) = (nodes[node_idx].job, nodes[node_idx].op_id);
-        let op = &jobs[job].1.ops[op_id];
-        let cpu_only = matches!(nodes[node_idx].work, Work::CpuOnly);
+        let onode = &tg.ops[node_idx];
+        let op = &jobs[onode.job].1.ops[onode.op_id];
+        let cpu_only = matches!(onode.work, OpWork::CpuOnly);
         if task.class == 0 && cpu_only {
             let rec = sched.flatten_op(op, start);
             let end = rec.end_ns;
@@ -219,7 +213,7 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
             release(&mut nodes, &mut pending, node_idx, end);
         } else if task.class == 0 {
             let (prep, hw) = {
-                let Work::Accel(cp) = &nodes[node_idx].work else {
+                let OpWork::Accel(cp) = &onode.work else {
                     unreachable!("sources never queue tasks")
                 };
                 let prep = sched.prep_phase(op, &cp.planned.plan, start);
@@ -237,7 +231,7 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
             nodes[node_idx].start_ns = start;
             nodes[node_idx].prep = Some(prep);
             nodes[node_idx].hw = Some(hw);
-            pending.push(Task {
+            pending.push(CpuTask {
                 ready_ns: hw_end,
                 class: 1,
                 node: node_idx,
@@ -249,7 +243,7 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
             }
         } else {
             let (end, rec) = {
-                let Work::Accel(cp) = &nodes[node_idx].work else {
+                let OpWork::Accel(cp) = &onode.work else {
                     unreachable!("only accel nodes finalize")
                 };
                 let fin = sched.finalize_phase(op, &cp.planned.plan, start);
@@ -272,16 +266,213 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
         }
     }
 
-    // ---- Collect per-job outcomes (records in topo order).
-    job_range
+    collect_outcomes(
+        jobs,
+        tg,
+        nodes.iter_mut().map(|n| (n.done_ns, n.rec.take())),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Tile-granularity executor
+// ---------------------------------------------------------------------
+
+/// Per-op bookkeeping while its tasks execute out of order.
+struct OpExec {
+    /// Accelerator-phase accumulator, opened on the op's first tile.
+    accel: Option<OpAccelState>,
+    /// Sum of committed prep-chunk durations (= the monolithic span).
+    prep_span: f64,
+    /// When the op's last prep chunk finished.
+    prep_end: f64,
+    /// Earliest task start — the op record's start time.
+    first_start: f64,
+    done_ns: f64,
+    rec: Option<OpRecord>,
+}
+
+/// The tile-granularity event loop: commits individual IR tasks in
+/// earliest-start order (ties: prep < tile < finalize, then task id) so
+/// bandwidth reservations stay chronological and fully deterministic.
+///
+/// Complexity: each commit rescans the runnable frontier, O(tasks x
+/// frontier) overall — fine for single-net runs and modest serving
+/// batches (the frontier stays narrow); per-resource ready queues are
+/// the upgrade path if tile-level serving sweeps ever dominate
+/// simulation wall-clock.
+///
+/// Modeling note: a foreign tile may interleave between two chained
+/// members of an open reduction group on the same slot, costlessly —
+/// see the approximation note in [`crate::ir`]'s module docs.
+fn run_tile_level(
+    sched: &mut Scheduler,
+    jobs: &[(f64, &Graph)],
+    tg: &TaskGraph,
+) -> Vec<JobOutcome> {
+    let n_tasks = tg.tasks.len();
+    let dbuf = sched.opts.double_buffer;
+    let mut pool = AccelPool::new(sched.n_accels());
+    let mut cpu = PoolGate::new();
+    let mut remaining: Vec<usize> = tg.tasks.iter().map(|t| t.deps.len()).collect();
+    let mut ready: Vec<f64> = tg
+        .tasks
+        .iter()
+        .map(|t| tg.ops[t.op_node].arrival_ns)
+        .collect();
+    let mut opx: Vec<OpExec> = tg
+        .ops
+        .iter()
+        .map(|o| OpExec {
+            accel: None,
+            prep_span: 0.0,
+            prep_end: o.arrival_ns,
+            first_start: f64::INFINITY,
+            done_ns: o.arrival_ns,
+            rec: None,
+        })
+        .collect();
+    let mut runnable: Vec<usize> = (0..n_tasks).filter(|&i| remaining[i] == 0).collect();
+    let mut committed = 0usize;
+    while !runnable.is_empty() {
+        // Pick the committable task with the earliest feasible start.
+        let mut best_pos = usize::MAX;
+        let mut best_key = (f64::INFINITY, u8::MAX, usize::MAX);
+        for (pos, &t) in runnable.iter().enumerate() {
+            let task = &tg.tasks[t];
+            let (start, class) = match task.kind {
+                TaskKind::Source => (ready[t], 0u8),
+                TaskKind::Prep { .. } => (cpu.acquire(ready[t]), 1),
+                TaskKind::CpuOnly => (cpu.acquire(ready[t]), 1),
+                TaskKind::Tile { .. } => {
+                    let a = task.claim.accel_slot.expect("tiles are slot-pinned");
+                    let free = if dbuf { pool.xfer_free[a] } else { pool.busy[a] };
+                    (free.max(ready[t]), 2)
+                }
+                TaskKind::Finalize => (cpu.acquire(ready[t]), 3),
+            };
+            let key = (start, class, t);
+            if key < best_key {
+                best_key = key;
+                best_pos = pos;
+            }
+        }
+        let tid = runnable.swap_remove(best_pos);
+        let task = &tg.tasks[tid];
+        let ni = task.op_node;
+        let onode = &tg.ops[ni];
+        let op = &jobs[onode.job].1.ops[onode.op_id];
+        let end = match task.kind {
+            TaskKind::Source => {
+                opx[ni].done_ns = ready[tid];
+                ready[tid]
+            }
+            TaskKind::CpuOnly => {
+                let start = cpu.acquire(ready[tid]);
+                let rec = sched.flatten_op(op, start);
+                let end = rec.end_ns;
+                cpu.release(end);
+                opx[ni].first_start = opx[ni].first_start.min(start);
+                opx[ni].done_ns = end;
+                opx[ni].rec = Some(rec);
+                end
+            }
+            TaskKind::Prep { .. } => {
+                let start = cpu.acquire(ready[tid]);
+                let dur = task.prep_dur_ns;
+                let end = start + dur;
+                cpu.release(end);
+                if task.claim.dram_bytes > 0 {
+                    let rate = task.claim.dram_bytes as f64 / dur.max(1e-9);
+                    sched.mem.cpu_traffic(start, task.claim.dram_bytes, rate);
+                    sched.sw_windows.push((start, end));
+                }
+                sched
+                    .timeline
+                    .push(start, end, Lane::Cpu, EventKind::Prep, &op.name);
+                sched.energy.charge_cpu_ns(dur, sched.soc.cpu_ghz);
+                opx[ni].prep_span += dur;
+                opx[ni].prep_end = opx[ni].prep_end.max(end);
+                opx[ni].first_start = opx[ni].first_start.min(start);
+                end
+            }
+            TaskKind::Tile { item } => {
+                let OpWork::Accel(cp) = &onode.work else {
+                    unreachable!("tile tasks only exist on accel nodes")
+                };
+                if opx[ni].accel.is_none() {
+                    opx[ni].accel = Some(sched.begin_accel(&cp.planned, 0.0));
+                }
+                let st = opx[ni].accel.as_mut().expect("just opened");
+                sched.exec_tile(
+                    op,
+                    &cp.planned,
+                    cp.costs.as_deref(),
+                    item as usize,
+                    ready[tid],
+                    &mut pool,
+                    st,
+                )
+            }
+            TaskKind::Finalize => {
+                let OpWork::Accel(cp) = &onode.work else {
+                    unreachable!("only accel nodes finalize")
+                };
+                // Every in-tree plan has >= 1 item, so the accel state is
+                // normally open; an (hypothetical) itemless plan still
+                // finalizes cleanly against an empty state.
+                let mut st = opx[ni]
+                    .accel
+                    .take()
+                    .unwrap_or_else(|| sched.begin_accel(&cp.planned, opx[ni].prep_end));
+                sched.merge_groups(op, &mut pool, &mut st);
+                let hw = Scheduler::hw_outcome(opx[ni].prep_end, &st);
+                let start = cpu.acquire(ready[tid]);
+                let fin = sched.finalize_phase(op, &cp.planned.plan, start);
+                cpu.release(fin.end_ns);
+                let prep = PrepOutcome {
+                    end_ns: opx[ni].prep_end,
+                    span_ns: opx[ni].prep_span,
+                };
+                let rec = Scheduler::record(op, &cp.planned, opx[ni].first_start, &prep, &hw, &fin);
+                opx[ni].done_ns = fin.end_ns;
+                opx[ni].rec = Some(rec);
+                fin.end_ns
+            }
+        };
+        committed += 1;
+        for &c in &tg.tasks[tid].consumers {
+            ready[c] = ready[c].max(end);
+            remaining[c] -= 1;
+            if remaining[c] == 0 {
+                runnable.push(c);
+            }
+        }
+    }
+    assert_eq!(
+        committed, n_tasks,
+        "tile-level executor stalled with unresolved dependencies"
+    );
+
+    collect_outcomes(jobs, tg, opx.iter_mut().map(|x| (x.done_ns, x.rec.take())))
+}
+
+/// Collect per-job outcomes (records in topo order) from per-node
+/// completion times and records.
+fn collect_outcomes(
+    jobs: &[(f64, &Graph)],
+    tg: &TaskGraph,
+    per_node: impl Iterator<Item = (f64, Option<OpRecord>)>,
+) -> Vec<JobOutcome> {
+    let mut states: Vec<(f64, Option<OpRecord>)> = per_node.collect();
+    tg.job_ranges
         .iter()
         .enumerate()
         .map(|(j, &(lo, hi))| {
             let mut end_ns = jobs[j].0;
             let mut records = Vec::new();
-            for n in &mut nodes[lo..hi] {
-                end_ns = end_ns.max(n.done_ns);
-                if let Some(rec) = n.rec.take() {
+            for s in &mut states[lo..hi] {
+                end_ns = end_ns.max(s.0);
+                if let Some(rec) = s.1.take() {
                     records.push(rec);
                 }
             }

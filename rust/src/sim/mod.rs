@@ -1,32 +1,25 @@
-//! Legacy simulator facade (superseded by [`crate::api::Session`]).
+//! Execution-driven (functional) simulation support.
 //!
-//! The [`Simulator`] type and its five entry points remain as thin,
-//! `#[deprecated]` delegating shims so pre-existing code and doc examples
-//! keep compiling; new code should drive everything through
-//! `Session::on(Soc)::scenario(...)::run()`, which returns the unified
-//! [`crate::api::Report`] for every scenario.
+//! The old `Simulator` facade and its `#[deprecated]` delegating shims
+//! are gone — every entry point is [`crate::api::Session`] (one builder,
+//! one [`crate::api::Scenario`] enum, one unified report). What remains
+//! here is the functional-execution machinery `Session` drives: the
+//! tile-level forward pass through the tiling plans ([`functional`]) and
+//! the validation of its composition against the direct reference.
 
 pub mod functional;
 
 pub use functional::{direct_forward, gen_input, gen_params, tiled_forward};
 
-use crate::config::{FunctionalMode, ServeOptions, SimOptions, SocConfig};
+use crate::config::{FunctionalMode, SimOptions, SocConfig};
 use crate::graph::Graph;
 use crate::runtime::{GemmExec, NativeGemm, PjrtRuntime};
 use crate::sched::Scheduler;
-use crate::stats::{ServeReport, SimReport};
+use crate::stats::SimReport;
 use crate::tensor::Tensor;
 use crate::trace::Timeline;
 use crate::util::max_abs_diff;
 use anyhow::{Context, Result};
-
-/// The SMAUG simulator: one SoC configuration + run options.
-///
-/// Superseded by [`crate::api::Session`]; kept as a delegating shim.
-pub struct Simulator {
-    soc: SocConfig,
-    opts: SimOptions,
-}
 
 /// Result of a functional (execution-driven) run.
 pub struct FunctionalRun {
@@ -46,8 +39,8 @@ pub struct FunctionalRun {
 /// Execution-driven run: timing simulation plus a functional forward pass
 /// through the tiling plans, validated against the direct reference. The
 /// backend follows [`SimOptions::functional`] (`Pjrt` = AOT artifacts on
-/// the PJRT CPU client). Shared implementation behind both
-/// [`crate::api::Session`] and the deprecated [`Simulator`] facade.
+/// the PJRT CPU client). Implementation behind
+/// [`crate::api::Session::functional`].
 pub(crate) fn run_functional_impl(
     soc: &SocConfig,
     opts: &SimOptions,
@@ -87,75 +80,10 @@ pub(crate) fn run_functional_impl(
     })
 }
 
-impl Simulator {
-    /// Create a simulator.
-    pub fn new(soc: SocConfig, opts: SimOptions) -> Self {
-        Self { soc, opts }
-    }
-
-    /// Timing/energy simulation of one forward pass (event-driven; the
-    /// serial schedule when [`SimOptions::pipeline`] is off).
-    #[deprecated(
-        since = "0.2.0",
-        note = "use smaug::api::Session with Scenario::Inference"
-    )]
-    pub fn run(&self, graph: &Graph) -> Result<SimReport> {
-        Ok(Scheduler::new(self.soc.clone(), self.opts.clone()).run(graph))
-    }
-
-    /// Timing/energy simulation through the strict serial reference
-    /// schedule (the seed scheduler), regardless of pipelining options.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use smaug::sched::Scheduler::run_serial (the reference schedule) \
-                or smaug::api::Session for studies"
-    )]
-    pub fn run_serial(&self, graph: &Graph) -> Result<SimReport> {
-        Ok(Scheduler::new(self.soc.clone(), self.opts.clone()).run_serial(graph))
-    }
-
-    /// Serving mode: simulate `serve.requests` concurrent inference
-    /// requests of `graph` sharing one SoC.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use smaug::api::Session with Scenario::Serving"
-    )]
-    pub fn serve(&self, graph: &Graph, serve: &ServeOptions) -> Result<ServeReport> {
-        Ok(Scheduler::new(self.soc.clone(), self.opts.clone()).serve(graph, serve))
-    }
-
-    /// Timing simulation that also returns the captured timeline.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use smaug::api::Session::capture_timeline(true); the timeline \
-                lands in Report::timeline"
-    )]
-    pub fn run_with_timeline(&self, graph: &Graph) -> Result<(SimReport, Timeline)> {
-        let mut opts = self.opts.clone();
-        opts.capture_timeline = true;
-        let mut sched = Scheduler::new(self.soc.clone(), opts);
-        let report = sched.run(graph);
-        Ok((report, std::mem::take(&mut sched.timeline)))
-    }
-
-    /// Execution-driven run: timing simulation plus a functional forward
-    /// pass through the tiling plans, validated against the direct
-    /// reference.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use smaug::api::Session::functional(mode); the validation \
-                lands in Report::functional"
-    )]
-    pub fn run_functional(&self, graph: &Graph, input: Option<Tensor>) -> Result<FunctionalRun> {
-        run_functional_impl(&self.soc, &self.opts, graph, input)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::api::{Scenario, Session, Soc};
-    use crate::config::AccelKind;
     use crate::nets;
 
     #[test]
@@ -172,28 +100,11 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_deliver() {
-        let g = nets::build_network("lenet5").unwrap();
-        let sim = Simulator::new(SocConfig::default(), SimOptions::default());
-        let r = sim.run(&g).unwrap();
-        assert!(r.total_ns > 0.0);
-        let (r2, tl) = sim.run_with_timeline(&g).unwrap();
-        assert_eq!(r2.total_ns, r.total_ns);
-        assert!(!tl.events.is_empty());
-        let serial = sim.run_serial(&g).unwrap();
-        assert_eq!(serial.total_ns, r.total_ns); // pipeline off => identical
-        let serve = sim.serve(&g, &ServeOptions::default()).unwrap();
-        assert_eq!(serve.requests.len(), 4);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn shims_agree_with_session() {
+    fn session_matches_direct_scheduler_run() {
+        // The Session front door and a hand-built Scheduler agree — the
+        // equivalence the deleted `Simulator` shims used to pin.
         let g = nets::build_network("minerva").unwrap();
-        let old = Simulator::new(SocConfig::default(), SimOptions::default())
-            .run(&g)
-            .unwrap();
+        let old = Scheduler::new(SocConfig::default(), SimOptions::default()).run(&g);
         let new = Session::on(Soc::default())
             .network("minerva")
             .scenario(Scenario::Inference)
@@ -202,32 +113,5 @@ mod tests {
         assert_eq!(old.total_ns, new.total_ns);
         assert_eq!(old.dram_bytes, new.dram_bytes);
         assert_eq!(old.energy.total_pj(), new.energy.total_pj());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn serve_shim_matches_serving_scenario() {
-        let g = nets::build_network("minerva").unwrap();
-        let opts = SimOptions {
-            pipeline: true,
-            num_accels: 2,
-            ..SimOptions::default()
-        };
-        let old = Simulator::new(SocConfig::default(), opts)
-            .serve(&g, &ServeOptions::default())
-            .unwrap();
-        let new = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
-            .network("minerva")
-            .scenario(Scenario::Serving {
-                requests: 4,
-                arrival_interval_ns: 0.0,
-            })
-            .run()
-            .unwrap();
-        assert_eq!(old.requests.len(), new.requests.len());
-        assert_eq!(old.makespan_ns, new.total_ns);
-        for (a, b) in old.requests.iter().zip(&new.requests) {
-            assert_eq!(a.end_ns, b.end_ns);
-        }
     }
 }

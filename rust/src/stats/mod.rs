@@ -90,6 +90,26 @@ impl Breakdown {
     }
 }
 
+/// How much of the workload's serialized work the schedule hid, plus
+/// per-resource occupancy — the `pipeline` section of the unified
+/// report. A strict serial schedule has `overlap_frac ~ 0`; cross-op
+/// tile pipelining pushes it toward the accelerator-idle fraction the
+/// paper's Fig 1 exposes.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    /// Granularity the event engine ran: `serial`, `op`, or `tile`.
+    pub mode: String,
+    /// `1 - makespan / sum-of-components`: the fraction of serialized
+    /// work hidden by overlap (0 when nothing overlaps).
+    pub overlap_frac: f64,
+    /// CPU software-stack busy fraction of the makespan.
+    pub cpu_occupancy: f64,
+    /// Datapath busy fraction of the makespan, one entry per pool slot.
+    pub accel_occupancy: Vec<f64>,
+    /// Mean DRAM bandwidth utilization over the makespan.
+    pub dram_utilization: f64,
+}
+
 /// Complete simulation report for one forward pass.
 #[derive(Debug, Clone, Default)]
 pub struct SimReport {
@@ -114,6 +134,9 @@ pub struct SimReport {
     pub sw_phase_dram_utilization: f64,
     /// Energy account.
     pub energy: EnergyAccount,
+    /// Overlap fraction + per-resource occupancy for the schedule that
+    /// produced this report.
+    pub pipeline: PipelineStats,
     /// Host wall-clock spent simulating, ns (Fig 10's metric).
     pub sim_wallclock_ns: f64,
 }
@@ -329,6 +352,8 @@ pub struct ServeReport {
     pub llc_bytes: u64,
     /// Energy account for the whole workload.
     pub energy: EnergyAccount,
+    /// Overlap fraction + per-resource occupancy over the makespan.
+    pub pipeline: PipelineStats,
     /// Host wall-clock spent simulating, ns.
     pub sim_wallclock_ns: f64,
 }

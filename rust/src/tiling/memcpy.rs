@@ -54,6 +54,18 @@ impl Region {
         self.shape[..self.rank()].iter().product()
     }
 
+    /// True if this region and `other` (same rank, same coordinate
+    /// space) overlap in every dimension. Regions of different ranks
+    /// never intersect — callers comparing tiles across operators must
+    /// fall back to a conservative whole-tensor dependency instead.
+    pub fn intersects(&self, other: &Region) -> bool {
+        self.rank == other.rank
+            && (0..self.rank()).all(|d| {
+                self.off[d] < other.off[d] + other.shape[d]
+                    && other.off[d] < self.off[d] + self.shape[d]
+            })
+    }
+
     /// True if the region stays within `bounds`.
     pub fn fits_in(&self, bounds: &Shape) -> bool {
         self.rank() == bounds.rank()
@@ -235,6 +247,21 @@ mod tests {
         assert_eq!(region_copy_stats(&s, &hw, 2).memcpys, 1);
         let ch = Region::new(&[0, 0, 0, 0], &[1, 32, 64, 8]);
         assert_eq!(region_copy_stats(&s, &ch, 2).memcpys, 2048);
+    }
+
+    #[test]
+    fn region_intersection_is_per_dimension() {
+        let a = Region::new(&[0, 0, 0, 0], &[1, 4, 4, 8]);
+        let b = Region::new(&[0, 3, 3, 0], &[1, 4, 4, 8]);
+        let c = Region::new(&[0, 4, 0, 0], &[1, 4, 4, 8]);
+        let d = Region::new(&[0, 0, 0, 8], &[1, 4, 4, 8]);
+        assert!(a.intersects(&b) && b.intersects(&a));
+        assert!(!a.intersects(&c), "touching edges do not overlap");
+        assert!(!a.intersects(&d), "disjoint channel ranges");
+        // Rank mismatch never intersects (different coordinate spaces).
+        let flat = Region::new(&[0, 0], &[1, 128]);
+        assert!(!a.intersects(&flat));
+        assert!(flat.intersects(&Region::new(&[0, 100], &[1, 50])));
     }
 
     #[test]

@@ -64,6 +64,7 @@ const V1_KEYS: &[&str] = &[
     "sweep_axis",
     "sweep",
     "sweep_engine",
+    "pipeline",
     "camera",
     "functional",
     "timeline",
@@ -104,6 +105,23 @@ fn inference_json_matches_v1_snapshot() {
     assert!(json.contains("\"throughput_rps\":null"));
     assert!(json.contains("\"latency_ns\":null"));
     assert!(json.contains("\"camera\":null"));
+    // Single-run scenarios populate the pipeline section.
+    assert!(json.contains("\"pipeline\":{\"mode\":\"serial\""));
+    for key in ["overlap_frac", "cpu_occupancy", "accel_occupancy"] {
+        assert!(json.contains(&format!("\"{key}\":")), "pipeline.{key}");
+    }
+}
+
+#[test]
+fn tile_pipeline_json_reports_overlap() {
+    let json = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+        .network("lenet5")
+        .tile_pipeline(true)
+        .run()
+        .unwrap()
+        .to_json();
+    assert_eq!(top_level_keys(&json), V1_KEYS);
+    assert!(json.contains("\"pipeline\":{\"mode\":\"tile\""), "{json}");
 }
 
 #[test]
@@ -164,6 +182,9 @@ fn sweep_and_camera_share_the_same_key_set() {
     assert!(camera.contains("\"sweep_engine\":null"));
     assert!(camera.contains("\"meets_budget\":"));
     assert!(camera.contains("\"budget_ms\":"));
+    // Aggregate scenarios carry the pipeline section as null.
+    assert!(sweep.contains("\"pipeline\":null"));
+    assert!(camera.contains("\"pipeline\":null"));
 }
 
 #[test]

@@ -25,6 +25,7 @@ TOP_KEYS = [
     "sweep_axis",
     "sweep",
     "sweep_engine",
+    "pipeline",
     "camera",
     "functional",
     "timeline",
@@ -47,6 +48,13 @@ SWEEP_ENGINE_KEYS = [
     "cost_hits",
     "cost_misses",
     "wall_ns",
+]
+PIPELINE_KEYS = [
+    "mode",
+    "overlap_frac",
+    "cpu_occupancy",
+    "accel_occupancy",
+    "dram_utilization",
 ]
 
 
@@ -107,6 +115,23 @@ def main() -> None:
             fail(f"{r['scenario']} report should have latency_ns null")
     if r["scenario"] != "sweep" and r["sweep_engine"] is not None:
         fail(f"{r['scenario']} report should have sweep_engine null")
+    pipe = r["pipeline"]
+    if r["scenario"] in ("inference", "training", "serving"):
+        if pipe is None:
+            fail(f"{r['scenario']} report must populate pipeline")
+        for key in PIPELINE_KEYS:
+            if key not in pipe:
+                fail(f"pipeline missing {key}")
+        if pipe["mode"] not in ("serial", "op", "tile"):
+            fail(f"unknown pipeline mode {pipe['mode']!r}")
+        if not 0.0 <= pipe["overlap_frac"] <= 1.0:
+            fail(f"overlap_frac out of range: {pipe['overlap_frac']}")
+        if not pipe["accel_occupancy"]:
+            fail("accel_occupancy must list every pool slot")
+        if any(not 0.0 <= o <= 1.0 for o in pipe["accel_occupancy"]):
+            fail(f"accel_occupancy out of range: {pipe['accel_occupancy']}")
+    elif pipe is not None:
+        fail(f"{r['scenario']} report should have pipeline null")
     print(f"report schema OK: {r['scenario']} {r['network']} ({len(r['ops'])} ops)")
 
 
