@@ -1,12 +1,115 @@
 //! Bench harness for paper Fig 13: DRAM traffic growth and bandwidth
 //! utilization as the accelerator count scales (paper: <=6% growth,
-//! better utilization, ~60% transfer-time drop).
+//! better utilization, ~60% transfer-time drop) — extended with the
+//! routed memory-system sweep: the same workloads across
+//! `--dram-channels 1,2,4` on a 2-accelerator tile-pipelined SoC,
+//! emitting `BENCH_memsys.json` (per-channel traffic/occupancy plus the
+//! end-to-end win from memory parallelism) at the repository root.
 
+use smaug::api::{Report, Session, Soc};
+use smaug::config::AccelKind;
 use smaug::figures;
 use smaug::nets::ALL_NETWORKS;
+use smaug::util::{fmt_ns, JsonWriter};
+use std::path::Path;
+
+const CHANNEL_NETS: &[&str] = &["cnn10", "vgg16"];
+const CHANNELS: &[usize] = &[1, 2, 4];
+
+fn run(net: &str, channels: usize) -> anyhow::Result<Report> {
+    Session::on(
+        Soc::builder()
+            .accels(AccelKind::Nvdla, 2)
+            .dram_channels(channels)
+            .build(),
+    )
+    .network(net)
+    .threads(8)
+    .tile_pipeline(true)
+    .run()
+}
 
 fn main() -> anyhow::Result<()> {
-    let rows = figures::fig12(ALL_NETWORKS, &[1, 2, 4, 8])?;
-    figures::print_fig13(&rows);
+    // The classic Fig-13 table (ALL_NETWORKS x four pools, incl.
+    // ImageNet-scale nets) is the slow part and PR CI only needs the
+    // gated channel sweep below — the figure portion is opt-in
+    // (nightly.yml sets SMAUG_FIG_FULL=1).
+    if std::env::var("SMAUG_FIG_FULL").is_ok() {
+        let rows = figures::fig12(ALL_NETWORKS, &[1, 2, 4, 8])?;
+        figures::print_fig13(&rows);
+    } else {
+        println!("fig13 table skipped (set SMAUG_FIG_FULL=1 for the full figure sweep)");
+    }
+
+    // Routed memory-system sweep: channel count as the SoC-integration
+    // DSE axis on a 2-accel tile-pipelined SoC.
+    println!("\nmemsys — DRAM channel sweep (2x nvdla, tile-pipelined, 8 threads)");
+    println!(
+        "{:<8} {:>9} {:>12} {:>9} {:>14} {:>20}",
+        "net", "channels", "latency", "speedup", "dram traffic", "per-channel busy"
+    );
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("memsys_channels");
+    w.key("pool").string("2x nvdla");
+    w.key("rows").begin_array();
+    let mut headline = 0.0f64;
+    for &net in CHANNEL_NETS {
+        let mut one_ns = 0.0f64;
+        let mut one_bytes = 0u64;
+        for &ch in CHANNELS {
+            let rep = run(net, ch)?;
+            if ch == 1 {
+                one_ns = rep.total_ns;
+                one_bytes = rep.dram_bytes;
+            } else {
+                // Routing moves *when* bytes stream, never how many.
+                assert_eq!(
+                    rep.dram_bytes, one_bytes,
+                    "{net}/{ch}ch: channel count must not change traffic"
+                );
+            }
+            let speedup = one_ns / rep.total_ns.max(1e-12);
+            if net == "vgg16" && ch == *CHANNELS.last().unwrap() {
+                headline = speedup;
+            }
+            let m = rep.memsys.as_ref().expect("single runs report memsys");
+            println!(
+                "{:<8} {:>9} {:>12} {:>8.2}x {:>14} {:>20}",
+                net,
+                ch,
+                fmt_ns(rep.total_ns),
+                speedup,
+                rep.dram_bytes,
+                m.busy_string()
+            );
+            w.begin_object();
+            w.key("net").string(net);
+            w.key("channels").uint(ch as u64);
+            w.key("total_ns").number(rep.total_ns);
+            w.key("speedup_vs_1ch").number(speedup);
+            w.key("dram_bytes").uint(rep.dram_bytes);
+            m.write_per_channel(&mut w);
+            w.end_object();
+        }
+    }
+    w.end_array();
+    w.key("speedup_vgg16_4ch").number(headline);
+    w.end_object();
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_memsys.json");
+    std::fs::write(&out, w.finish())?;
+    println!(
+        "headline: {headline:.2}x vgg16 at 4 channels vs 1 (target >= 1.1x)\nwrote {}",
+        out.display()
+    );
+    // Simulated-time speedup — deterministic — so the acceptance bar is
+    // a hard failure CI can see, exactly like pipeline_overlap's.
+    if headline < 1.1 {
+        eprintln!("FAIL: {headline:.2}x is below the 1.1x acceptance bar");
+        std::process::exit(1);
+    }
     Ok(())
 }

@@ -1,11 +1,43 @@
 //! Bench harness for paper Fig 17: DRAM bandwidth utilization during the
 //! data preparation/gathering phases, 1 vs 8 threads (paper: ~2.7x on
-//! ResNet50; small nets like Minerva gain little).
+//! ResNet50; small nets like Minerva gain little) — extended with a
+//! routed-topology sweep: the same software-phase utilization metric
+//! across `--dram-channels 1,2,4`, showing how interleaving spreads the
+//! tiling-copy traffic the figure measures.
 
+use smaug::api::{Session, Soc};
+use smaug::config::AccelKind;
 use smaug::figures;
 
 fn main() -> anyhow::Result<()> {
     let rows = figures::fig16(&["minerva", "cnn10", "vgg16", "elu24", "resnet50"], &[1, 8])?;
     figures::print_fig17(&rows);
+
+    // Channel sweep: per-channel occupancy of the same transfer stream.
+    println!("\nmemsys — sw-phase DRAM utilization vs channel count (vgg16, 8 threads)");
+    println!(
+        "{:<9} {:>14} {:>14} {:>20}",
+        "channels", "sw-phase util", "overall util", "per-channel busy"
+    );
+    for ch in [1usize, 2, 4] {
+        let rep = Session::on(
+            Soc::builder()
+                .accels(AccelKind::Nvdla, 2)
+                .dram_channels(ch)
+                .build(),
+        )
+        .network("vgg16")
+        .threads(8)
+        .tile_pipeline(true)
+        .run()?;
+        let m = rep.memsys.as_ref().expect("single runs report memsys");
+        println!(
+            "{:<9} {:>13.1}% {:>13.1}% {:>20}",
+            ch,
+            100.0 * rep.sw_phase_dram_utilization,
+            100.0 * rep.dram_utilization,
+            m.busy_string()
+        );
+    }
     Ok(())
 }

@@ -5,6 +5,7 @@
 //! key set is identical across scenarios — tooling can rely on it.
 
 use crate::energy::EnergyAccount;
+use crate::mem::MemsysSnapshot;
 use crate::stats::{Breakdown, OpRecord, PipelineStats, RequestRecord, ServeReport, SimReport};
 use crate::trace::Timeline;
 use crate::util::{fmt_bytes, fmt_ns, fmt_pj, JsonWriter};
@@ -151,6 +152,10 @@ pub struct Report {
     /// and serving scenarios; `None` for sweep/camera, whose headline
     /// numbers aggregate more than one schedule).
     pub pipeline: Option<PipelineStats>,
+    /// Routed memory-system occupancy: per-channel and per-link traffic
+    /// and utilization (single-run and serving scenarios; `None` for
+    /// sweep/camera, whose headline numbers aggregate several runs).
+    pub memsys: Option<MemsysSnapshot>,
     /// Sweep axis name (sweep only).
     pub sweep_axis: Option<String>,
     /// Per-value sweep rows (sweep only).
@@ -188,6 +193,7 @@ impl Report {
             sw_phase_dram_utilization: r.sw_phase_dram_utilization,
             energy: r.energy,
             pipeline: Some(r.pipeline),
+            memsys: Some(r.memsys),
             sim_wallclock_ns: r.sim_wallclock_ns,
             ..Self::default()
         }
@@ -216,6 +222,7 @@ impl Report {
             latency: Some(latency),
             requests: r.requests,
             pipeline: Some(r.pipeline),
+            memsys: Some(r.memsys),
             sim_wallclock_ns: r.sim_wallclock_ns,
             ..Self::default()
         }
@@ -354,6 +361,29 @@ impl Report {
                 w.end_object()
             }
             None => w.key("pipeline").null(),
+        };
+        match &self.memsys {
+            Some(m) => {
+                w.key("memsys").begin_object();
+                w.key("channels").uint(m.channels as u64);
+                w.key("channel_gbps").number(m.channel_gbps);
+                m.write_per_channel(&mut w);
+                w.key("links").begin_array();
+                for l in &m.links {
+                    w.begin_object();
+                    w.key("name").string(&l.name);
+                    match l.gbps {
+                        Some(g) => w.key("gbps").number(g),
+                        None => w.key("gbps").null(),
+                    };
+                    w.key("bytes").uint(l.bytes);
+                    w.key("utilization").number(l.utilization);
+                    w.end_object();
+                }
+                w.end_array();
+                w.end_object()
+            }
+            None => w.key("memsys").null(),
         };
         match &self.camera {
             Some(c) => {
@@ -500,6 +530,16 @@ impl Report {
                     .join("/"),
             ));
         }
+        if let Some(m) = &self.memsys {
+            if m.channels > 1 || m.links.iter().any(|l| l.gbps.is_some()) {
+                s.push_str(&format!(
+                    "memsys    : {} channel(s) x {:.1} GB/s, busy {}\n",
+                    m.channels,
+                    m.channel_gbps,
+                    m.busy_string(),
+                ));
+            }
+        }
         s.push_str(&format!(
             "dram traffic : {}\nllc traffic  : {}\nenergy       : {} (dram {}, llc {}, macc {}, cpu {})",
             fmt_bytes(self.dram_bytes),
@@ -604,6 +644,7 @@ mod tests {
             "\"sweep\"",
             "\"sweep_engine\"",
             "\"pipeline\"",
+            "\"memsys\"",
             "\"camera\"",
             "\"functional\"",
             "\"timeline\"",
@@ -626,7 +667,43 @@ mod tests {
         assert!(j.contains("\"sweep\":[]"));
         assert!(j.contains("\"sweep_engine\":null"));
         assert!(j.contains("\"pipeline\":null"));
+        assert!(j.contains("\"memsys\":null"));
         assert!(j.contains("\"requests\":[]"));
+    }
+
+    #[test]
+    fn memsys_section_serializes() {
+        use crate::mem::{LinkSnapshot, MemsysSnapshot};
+        let rep = Report {
+            scenario: "inference".into(),
+            memsys: Some(MemsysSnapshot {
+                channels: 2,
+                channel_gbps: 25.6,
+                channel_bytes: vec![1000, 2000],
+                channel_utilization: vec![0.5, 0.75],
+                links: vec![
+                    LinkSnapshot {
+                        name: "accel0.in".into(),
+                        gbps: None,
+                        bytes: 1500,
+                        utilization: 0.0,
+                    },
+                    LinkSnapshot {
+                        name: "bus".into(),
+                        gbps: Some(12.8),
+                        bytes: 1500,
+                        utilization: 0.25,
+                    },
+                ],
+            }),
+            ..Report::default()
+        };
+        let j = rep.to_json();
+        assert!(j.contains("\"memsys\":{\"channels\":2,\"channel_gbps\":25.6"), "{j}");
+        assert!(j.contains("\"per_channel\":[{\"bytes\":1000,\"utilization\":0.5}"), "{j}");
+        assert!(j.contains("\"name\":\"accel0.in\",\"gbps\":null"), "{j}");
+        assert!(j.contains("\"name\":\"bus\",\"gbps\":12.8"), "{j}");
+        assert!(rep.summary().contains("2 channel(s)"), "{}", rep.summary());
     }
 
     #[test]

@@ -346,11 +346,12 @@ impl Session {
                 let mut rep = baseline.expect("at least one sweep value ran");
                 rep.sweep_axis = Some(axis.name().to_string());
                 rep.sweep = rows;
-                // Per-op records and the pipeline section describe only
-                // the baseline point; drop them so the sweep report is
-                // not mistaken for one run.
+                // Per-op records and the pipeline/memsys sections
+                // describe only the baseline point; drop them so the
+                // sweep report is not mistaken for one run.
                 rep.ops.clear();
                 rep.pipeline = None;
+                rep.memsys = None;
                 // How the sweep ran: worker count, cache counters, and
                 // the whole-grid host wall-clock (the baseline's
                 // sim_wallclock_ns would undercount a parallel sweep).
@@ -411,8 +412,9 @@ impl Session {
                     Report::from_sim("camera", sim_report, vec!["systolic".to_string()]);
                 rep.total_ns = frame_ns;
                 // The headline number is the whole frame (camera + DNN);
-                // the DNN-only occupancy section would be misleading.
+                // the DNN-only occupancy sections would be misleading.
                 rep.pipeline = None;
+                rep.memsys = None;
                 rep.camera = Some(CameraSummary {
                     stages: stages.iter().map(|s| (s.name.to_string(), s.ns)).collect(),
                     camera_ns: cam_ns,

@@ -101,6 +101,30 @@ impl SocBuilder {
         self
     }
 
+    /// Number of routed DRAM channels (≥ 1). Each channel is a full
+    /// `dram_gbps` pipe and transfers are address-interleaved over them
+    /// by tile offset; 1 (the default) models the paper's LP-DDR4
+    /// subsystem as one aggregated flat pipe, bit-for-bit the pre-routed
+    /// model.
+    pub fn dram_channels(mut self, n: usize) -> Self {
+        self.config.dram_channels = n.max(1);
+        self
+    }
+
+    /// Per-accelerator ingress/egress link bandwidth in GB/s; 0 models
+    /// unbounded links (the default).
+    pub fn link_bw(mut self, gbps: f64) -> Self {
+        self.config.accel_link_gbps = gbps.max(0.0);
+        self
+    }
+
+    /// Shared coherent system-bus bandwidth in GB/s (ACP + CPU tiling
+    /// traffic); 0 models an unbounded bus (the default).
+    pub fn bus_bw(mut self, gbps: f64) -> Self {
+        self.config.sys_bus_gbps = gbps.max(0.0);
+        self
+    }
+
     /// Append one accelerator instance to the pool.
     pub fn accel(mut self, kind: AccelKind) -> Self {
         self.accels.push(kind);
@@ -181,5 +205,21 @@ mod tests {
     fn tune_overrides_parameters() {
         let soc = Soc::builder().tune(|c| c.dram_gbps = 12.8).build();
         assert_eq!(soc.config().dram_gbps, 12.8);
+    }
+
+    #[test]
+    fn memsys_knobs_compose() {
+        let soc = Soc::builder()
+            .dram_channels(4)
+            .link_bw(16.0)
+            .bus_bw(12.8)
+            .build();
+        assert_eq!(soc.config().dram_channels, 4);
+        assert_eq!(soc.config().accel_link_gbps, 16.0);
+        assert_eq!(soc.config().sys_bus_gbps, 12.8);
+        // Degenerate values clamp to the neutral topology.
+        let soc = Soc::builder().dram_channels(0).link_bw(-1.0).build();
+        assert_eq!(soc.config().dram_channels, 1);
+        assert_eq!(soc.config().accel_link_gbps, 0.0);
     }
 }

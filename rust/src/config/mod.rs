@@ -7,7 +7,7 @@
 //! | CPU | 8 OoO x86 cores @ 2.5 GHz, 8-uop issue, 192-entry ROB |
 //! | L1  | 64 KB I+D, 4-way, 32 B lines, 2-cycle |
 //! | L2 (LLC) | 2 MB, 16-way, MESI, 20-cycle |
-//! | DRAM | LP-DDR4 @1600 MHz, 4 GB, 4 channels, 25.6 GB/s |
+//! | DRAM | LP-DDR4 @1600 MHz, 4 GB, 25.6 GB/s aggregate (modeled as 1 routed channel by default; see [`SocConfig::dram_channels`]) |
 //! | Accels | NVDLA-style conv engine + others; 8x8 systolic array; 1 GHz; 32 KB scratchpads |
 
 use std::fmt;
@@ -78,12 +78,29 @@ pub struct SocConfig {
     pub llc_ways: usize,
     /// LLC access latency in CPU cycles (also the ACP hit latency).
     pub llc_latency_cycles: u64,
-    /// DRAM peak bandwidth in GB/s (4 channels LP-DDR4 => 25.6).
+    /// DRAM peak bandwidth in GB/s **per routed channel**. The default
+    /// single channel aggregates the paper's 4-channel LP-DDR4 subsystem
+    /// into one 25.6 GB/s pipe.
     pub dram_gbps: f64,
-    /// Number of DRAM channels.
+    /// Number of independently-arbitrated DRAM channels in the routed
+    /// memory model ([`crate::mem::MemorySystem`]). Transfers are
+    /// address-interleaved over channels by tile offset; each channel is
+    /// a full `dram_gbps` pipe, so raising the count is the
+    /// SoC-integration DSE axis (more memory parallelism and aggregate
+    /// bandwidth). The default 1 reproduces the pre-routed flat-timeline
+    /// model bit-for-bit.
     pub dram_channels: usize,
     /// Achievable fraction of peak DRAM bandwidth for streaming access.
     pub dram_efficiency: f64,
+    /// Per-accelerator ingress/egress link bandwidth in GB/s; 0 (the
+    /// default) models unbounded links (byte accounting only). DMA path
+    /// only: ACP coherent traffic crosses the shared system bus
+    /// ([`SocConfig::sys_bus_gbps`]) instead of the private links, so
+    /// this knob is inert under `--interface acp`.
+    pub accel_link_gbps: f64,
+    /// Shared coherent system-bus bandwidth in GB/s (ACP traffic and CPU
+    /// tiling copies); 0 (the default) models an unbounded bus.
+    pub sys_bus_gbps: f64,
     /// Accelerator scratchpad size in bytes (each of input/weight/output).
     pub spad_bytes: usize,
     /// Datapath element size in bytes (16-bit fixed point in the paper).
@@ -109,8 +126,10 @@ impl Default for SocConfig {
             llc_ways: 16,
             llc_latency_cycles: 20,
             dram_gbps: 25.6,
-            dram_channels: 4,
+            dram_channels: 1,
             dram_efficiency: 0.80,
+            accel_link_gbps: 0.0,
+            sys_bus_gbps: 0.0,
             spad_bytes: 32 * 1024,
             elem_bytes: 2,
             nvdla_pes: 8,
@@ -140,10 +159,19 @@ impl SocConfig {
         self.spad_bytes / self.elem_bytes
     }
 
-    /// Effective streaming DRAM bandwidth in bytes/ns (= GB/s).
+    /// Effective per-stream DRAM bandwidth in bytes/ns (= GB/s).
     #[inline]
     pub fn dram_eff_bytes_per_ns(&self) -> f64 {
         self.dram_gbps * self.dram_efficiency
+    }
+
+    /// Render the memory-link configuration (`-` when unbounded).
+    fn fmt_link(gbps: f64) -> String {
+        if gbps > 0.0 {
+            format!("{gbps:.1} GB/s")
+        } else {
+            "unbounded".to_string()
+        }
     }
 
     /// Render the configuration as a Table-II-style listing.
@@ -152,7 +180,8 @@ impl SocConfig {
             "Component   Parameters\n\
              CPU Core    {} OoO x86 cores @{:.1}GHz\n\
              LLC (L2)    {} KiB, {}-way, MESI, {}-cycle access\n\
-             DRAM        LP-DDR4, {} channels, {:.1} GB/s peak ({:.0}% eff.)\n\
+             DRAM        LP-DDR4, {} channel(s) x {:.1} GB/s peak ({:.0}% eff.)\n\
+             Links       accel in/out {}, system bus {}\n\
              Accels      NVDLA conv engine ({} PEs x {}-way MACC), systolic ({}x{}), @{:.1}GHz\n\
              Scratchpads {} KiB each (in/wgt/out), {}-bit datapath",
             self.cpu_cores,
@@ -163,6 +192,8 @@ impl SocConfig {
             self.dram_channels,
             self.dram_gbps,
             self.dram_efficiency * 100.0,
+            Self::fmt_link(self.accel_link_gbps),
+            Self::fmt_link(self.sys_bus_gbps),
             self.nvdla_pes,
             self.nvdla_macc_width,
             self.systolic_rows,
@@ -184,6 +215,13 @@ impl SocConfig {
     /// dram_gbps = 12.8
     /// systolic_rows = 16
     /// ```
+    ///
+    /// **Migration note (v0.4):** `dram_channels` became a live routing
+    /// knob and `dram_gbps` is now **per channel**. A pre-v0.4 cfg that
+    /// pinned the old cosmetic default `dram_channels = 4` with
+    /// `dram_gbps = 25.6` (then meaning 25.6 GB/s *total*) now models
+    /// 4 x 25.6 GB/s; drop the `dram_channels` line (or set it to 1) to
+    /// keep the old aggregate behavior.
     pub fn from_str_cfg(text: &str) -> Result<Self, String> {
         let mut c = SocConfig::default();
         for (no, line) in text.lines().enumerate() {
@@ -212,6 +250,8 @@ impl SocConfig {
                 "dram_gbps" => set!(dram_gbps, f64),
                 "dram_channels" => set!(dram_channels, usize),
                 "dram_efficiency" => set!(dram_efficiency, f64),
+                "accel_link_gbps" => set!(accel_link_gbps, f64),
+                "sys_bus_gbps" => set!(sys_bus_gbps, f64),
                 "spad_bytes" => set!(spad_bytes, usize),
                 "elem_bytes" => set!(elem_bytes, usize),
                 "nvdla_pes" => set!(nvdla_pes, usize),
@@ -245,6 +285,8 @@ impl SocConfig {
              dram_gbps = {}\n\
              dram_channels = {}\n\
              dram_efficiency = {}\n\
+             accel_link_gbps = {}\n\
+             sys_bus_gbps = {}\n\
              spad_bytes = {}\n\
              elem_bytes = {}\n\
              nvdla_pes = {}\n\
@@ -261,6 +303,8 @@ impl SocConfig {
             self.dram_gbps,
             self.dram_channels,
             self.dram_efficiency,
+            self.accel_link_gbps,
+            self.sys_bus_gbps,
             self.spad_bytes,
             self.elem_bytes,
             self.nvdla_pes,
@@ -501,6 +545,24 @@ mod tests {
     }
 
     #[test]
+    fn memsys_knobs_default_neutral_and_parse() {
+        let c = SocConfig::default();
+        assert_eq!(c.dram_channels, 1, "default must stay the flat pipe");
+        assert_eq!(c.accel_link_gbps, 0.0);
+        assert_eq!(c.sys_bus_gbps, 0.0);
+        let c = SocConfig::from_str_cfg(
+            "dram_channels = 4\naccel_link_gbps = 16.0\nsys_bus_gbps = 12.8\n",
+        )
+        .unwrap();
+        assert_eq!(c.dram_channels, 4);
+        assert_eq!(c.accel_link_gbps, 16.0);
+        assert_eq!(c.sys_bus_gbps, 12.8);
+        let t = c.table();
+        assert!(t.contains("4 channel(s)"), "{t}");
+        assert!(t.contains("16.0 GB/s"), "{t}");
+    }
+
+    #[test]
     fn cfg_rejects_unknown_keys_and_garbage() {
         assert!(SocConfig::from_str_cfg("cpu_coresss = 4\n").is_err());
         assert!(SocConfig::from_str_cfg("cpu_cores four\n").is_err());
@@ -518,6 +580,8 @@ mod tests {
         assert_eq!(a.dram_gbps, b.dram_gbps);
         assert_eq!(a.dram_channels, b.dram_channels);
         assert_eq!(a.dram_efficiency, b.dram_efficiency);
+        assert_eq!(a.accel_link_gbps, b.accel_link_gbps);
+        assert_eq!(a.sys_bus_gbps, b.sys_bus_gbps);
         assert_eq!(a.spad_bytes, b.spad_bytes);
         assert_eq!(a.elem_bytes, b.elem_bytes);
         assert_eq!(a.nvdla_pes, b.nvdla_pes);

@@ -6,7 +6,9 @@
 //! cached tiling plan) into per-tile **prep / compute / finalize** tasks
 //! carrying
 //! explicit resource claims (CPU thread pool, pinned accelerator-pool
-//! slot, DRAM bandwidth request) and data dependencies. The lowering
+//! slot, routed DRAM claim — bytes plus the link path and channel
+//! selector the bytes take through [`crate::mem::MemorySystem`]) and
+//! data dependencies. The lowering
 //! includes **cross-operator tile edges**: a consumer's per-tile data
 //! preparation depends on exactly the producer tiles whose written-back
 //! output regions overlap its input region, so tile *k* of layer *n+1*
@@ -65,6 +67,7 @@ use std::collections::HashMap;
 
 use crate::cpu::PhaseTime;
 use crate::graph::{Graph, OpKind};
+use crate::mem::Route;
 use crate::sched::{CachedPlan, Scheduler};
 use crate::tiling::Region;
 
@@ -130,6 +133,12 @@ pub struct ResourceClaim {
     /// DRAM bandwidth request: bytes this task streams (tile transfers,
     /// or read+write tiling-copy traffic for CPU phases).
     pub dram_bytes: u64,
+    /// The routed path the bytes take through the memory system: which
+    /// link set (the pinned slot's ingress/egress pair, or the CPU's
+    /// coherent bus path) and the DRAM-channel interleave selector
+    /// (`op id + tile index`, a pure function of the tile so channel
+    /// assignment is schedule- and worker-count-independent).
+    pub route: Route,
 }
 
 /// One schedulable unit of the lowered workload.
@@ -306,14 +315,17 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
         cpu: false,
         accel_slot: None,
         dram_bytes: 0,
+        route: Route::cpu(0),
     };
-    let cpu_claim = |bytes: u64| ResourceClaim {
+    let cpu_claim = |bytes: u64, hint: u32| ResourceClaim {
         cpu: true,
         accel_slot: None,
         dram_bytes: bytes,
+        route: Route::cpu(hint),
     };
     for ni in 0..tg.ops.len() {
         let start = tasks.len();
+        let oid = tg.ops[ni].op_id;
         match &tg.ops[ni].work {
             OpWork::Source => tasks.push(Task {
                 op_node: ni,
@@ -328,7 +340,7 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                 tasks.push(Task {
                     op_node: ni,
                     kind: TaskKind::CpuOnly,
-                    claim: cpu_claim(0),
+                    claim: cpu_claim(0, oid as u32),
                     prep_dur_ns: 0.0,
                     deps,
                     consumers: Vec::new(),
@@ -383,7 +395,7 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                     tasks.push(Task {
                         op_node: ni,
                         kind: TaskKind::Prep { chunk: j as u32 },
-                        claim: cpu_claim(byt),
+                        claim: cpu_claim(byt, oid as u32),
                         prep_dur_ns: dur,
                         deps,
                         consumers: Vec::new(),
@@ -399,13 +411,15 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                         deps.push(prev);
                     }
                     last_of_group.insert(it.reduce_group, tile0 + i);
+                    let slot = (it.reduce_group as usize) % n_accels;
                     tasks.push(Task {
                         op_node: ni,
                         kind: TaskKind::Tile { item: i as u32 },
                         claim: ResourceClaim {
                             cpu: false,
-                            accel_slot: Some((it.reduce_group as usize) % n_accels),
+                            accel_slot: Some(slot),
                             dram_bytes: it.in_bytes + it.wgt_bytes + it.out_bytes,
+                            route: Route::for_tile(oid, i, slot),
                         },
                         prep_dur_ns: 0.0,
                         deps,
@@ -415,7 +429,7 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                 tasks.push(Task {
                     op_node: ni,
                     kind: TaskKind::Finalize,
-                    claim: cpu_claim(2 * plan.finalize.bytes),
+                    claim: cpu_claim(2 * plan.finalize.bytes, oid as u32),
                     prep_dur_ns: 0.0,
                     deps: (tile0..tile0 + n_items).collect(),
                     consumers: Vec::new(),
@@ -499,10 +513,23 @@ mod tests {
                         t.claim.dram_bytes,
                         it.in_bytes + it.wgt_bytes + it.out_bytes
                     );
+                    // The routed claim names the pinned slot's link pair
+                    // and the tile's channel-interleave selector.
+                    assert_eq!(
+                        t.claim.route,
+                        Route::accel(
+                            it.reduce_group as usize % 2,
+                            (tg.ops[t.op_node].op_id + item as usize) as u32
+                        )
+                    );
                 }
                 TaskKind::Prep { .. } | TaskKind::Finalize | TaskKind::CpuOnly => {
                     assert!(t.claim.cpu);
                     assert!(t.claim.accel_slot.is_none());
+                    assert_eq!(
+                        t.claim.route,
+                        Route::cpu(tg.ops[t.op_node].op_id as u32)
+                    );
                 }
                 TaskKind::Source => assert!(!t.claim.cpu),
             }

@@ -7,8 +7,9 @@
 //! * **L3 (this crate)** — the SMAUG system itself: operator graph and
 //!   runtime scheduler, per-dataflow tiling optimizer, accelerator timing
 //!   models (NVDLA-style convolution engine, cycle-level systolic array),
-//!   SoC memory system (LLC, DRAM bandwidth sharing, DMA vs. ACP
-//!   interfaces), CPU software-stack cost model with a thread-pool model,
+//!   routed SoC memory system (multi-channel DRAM, per-accelerator
+//!   ingress/egress links, a shared coherent system bus, LLC, DMA vs.
+//!   ACP interfaces), CPU software-stack cost model with a thread-pool model,
 //!   Aladdin-style loop sampling, an energy model, and timeline tracing.
 //! * **L2 (python/compile/model.py)** — the JAX operator library for the
 //!   accelerator's canonical tiles, lowered AOT to HLO text.

@@ -7,6 +7,7 @@
 //! smaug run --net vgg16 [--accels 8 | --accels nvdla,systolic,nvdla]
 //!           [--interface acp] [--threads 8] [--accel nvdla|systolic]
 //!           [--sampling N] [--soc file.cfg] [--functional off|native|pjrt]
+//!           [--dram-channels N] [--link-gbps F] [--bus-gbps F]
 //!           [--train] [--double-buffer] [--inter-accel-reduction]
 //!           [--pipeline] [--tile-pipeline]
 //!           [--report summary|ops|timeline|json|csv|trace-json]
@@ -59,6 +60,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20          [--threads N] [--accel nvdla|systolic] [--sampling N]\n\
                  \x20          [--functional off|native|pjrt] [--report summary|ops|timeline|json|csv|trace-json]\n\
                  \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction]\n\
+                 \x20          [--dram-channels N] [--link-gbps F] [--bus-gbps F]\n\
                  \x20          [--pipeline] [--tile-pipeline]\n\
                  \x20 smaug serve --net <name> [--requests N] [--interval-us F]\n\
                  \x20          [--accels N|kinds] [--threads N] [--no-pipeline] [--report summary|json]\n\
@@ -108,6 +110,16 @@ fn parse_soc(args: &[String]) -> Result<Soc> {
             }
         }
         None => b = b.accel(default_kind),
+    }
+    // Routed memory-system topology: DRAM channel count and link caps.
+    if let Some(v) = flag(args, "--dram-channels") {
+        b = b.dram_channels(v.parse().context("--dram-channels")?);
+    }
+    if let Some(v) = flag(args, "--link-gbps") {
+        b = b.link_bw(v.parse().context("--link-gbps")?);
+    }
+    if let Some(v) = flag(args, "--bus-gbps") {
+        b = b.bus_bw(v.parse().context("--bus-gbps")?);
     }
     Ok(b.build())
 }

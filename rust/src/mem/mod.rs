@@ -1,5 +1,6 @@
-//! SoC memory system: shared DRAM bandwidth, LLC, and the two
-//! SoC-accelerator interfaces the paper compares (paper §III-A, §IV-A).
+//! SoC memory system: routed multi-channel DRAM, interconnect links,
+//! LLC, and the two SoC-accelerator interfaces the paper compares
+//! (paper §III-A, §IV-A).
 //!
 //! * **DMA** — software-managed: the CPU flushes/invalidates the cache
 //!   lines covering each buffer before the engine streams it over the
@@ -9,10 +10,49 @@
 //!   A53-measured value). No flushes; hits never touch DRAM, converting
 //!   expensive DRAM accesses into cheap LLC hits (the paper's ~20%
 //!   average energy win).
+//!
+//! ## Routed topology
+//!
+//! Transfers no longer draw from one flat pipe: every request carries a
+//! [`Route`] and reserves capacity on each hop of its path, with the
+//! bottleneck hop setting the transfer time:
+//!
+//! ```text
+//!   accel k ──ingress/egress link──┐
+//!   (DMA)                          ├──► DRAM channel (chan % N)
+//!   accel k ──┐                    │
+//!   (ACP)     ├── shared system bus┤
+//!   CPU   ────┘   (coherent path)  │
+//! ```
+//!
+//! * **DRAM channels** — `SocConfig::dram_channels` independent
+//!   [`BandwidthTimeline`]s, each a full `dram_gbps` pipe; transfers are
+//!   address-interleaved over them by tile offset. The default single
+//!   channel aggregates the paper's LP-DDR4 subsystem into one flat
+//!   25.6 GB/s pipe — bit-for-bit the pre-routed model. Raising the
+//!   count is the SoC-integration DSE axis: more channels add memory
+//!   parallelism (and aggregate bandwidth), so concurrent accelerators
+//!   stop contending on one pipe.
+//! * **Per-accelerator links** — each pool slot owns an ingress and an
+//!   egress link (`SocConfig::accel_link_gbps`; 0 = unbounded). DMA
+//!   payloads reserve the slot's link in their direction.
+//! * **Shared system bus** — ACP/coherent traffic and CPU tiling copies
+//!   cross one shared bus (`SocConfig::sys_bus_gbps`; 0 = unbounded).
+//!
+//! Each hop conserves its own bytes (per-channel/per-link counters feed
+//! the report's `memsys` section). Hops are reserved independently and
+//! the transfer ends at the latest hop end — a documented approximation:
+//! a slower downstream hop does not retroactively lower the rate booked
+//! on an upstream hop. With the default topology (1 channel, unbounded
+//! links) every non-channel hop is a no-op and the arithmetic reduces
+//! exactly to the old flat-timeline model, which
+//! `tests/memsys_invariants.rs` pins bit-for-bit.
 
 mod bandwidth;
+mod route;
 
 pub use bandwidth::BandwidthTimeline;
+pub use route::{PathKind, Route};
 
 use crate::config::{InterfaceKind, SocConfig};
 
@@ -27,7 +67,8 @@ pub const LLC_BYTES_PER_NS: f64 = 40.0;
 /// Fraction of LLC capacity usable by one op's streaming working set.
 pub const LLC_USABLE_FRAC: f64 = 0.75;
 
-/// What a transfer carries (decides LLC residency heuristics + energy).
+/// What a transfer carries (decides LLC residency heuristics + energy,
+/// and which direction of a pool slot's link pair it crosses).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrafficClass {
     /// Input activation tiles (just written by CPU data prep: LLC-warm).
@@ -52,6 +93,8 @@ pub struct TransferReq {
     /// Fraction of this buffer expected LLC-resident (scheduler computes
     /// per-op from working-set size; ignored for DMA).
     pub llc_resident_frac: f64,
+    /// The routed path these bytes take (link hops + channel selector).
+    pub route: Route,
 }
 
 /// The outcome of a scheduled transfer.
@@ -83,10 +126,127 @@ pub struct MemStats {
     pub transfers: u64,
 }
 
+/// One interconnect hop: bounded (its own bandwidth timeline) or
+/// unbounded (byte accounting only — the default, and a no-op on timing).
+#[derive(Debug, Clone)]
+pub struct Link {
+    name: String,
+    tl: Option<BandwidthTimeline>,
+    bytes: u64,
+}
+
+impl Link {
+    fn new(name: String, gbps: f64) -> Self {
+        Self {
+            name,
+            tl: (gbps > 0.0).then(|| BandwidthTimeline::new(gbps)),
+            bytes: 0,
+        }
+    }
+
+    /// Reserve `bytes` starting no earlier than `earliest` at up to
+    /// `max_rate`; returns this hop's end time (`earliest` when the link
+    /// is unbounded, so an unbounded hop never moves a transfer's end).
+    fn reserve(&mut self, earliest: f64, bytes: u64, max_rate: f64) -> f64 {
+        self.bytes += bytes;
+        match &mut self.tl {
+            Some(tl) => tl.request(earliest, bytes, max_rate).1,
+            None => earliest,
+        }
+    }
+
+    /// Link name (`accel0.in`, `accel0.out`, `bus`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Capacity in GB/s; `None` = unbounded.
+    pub fn gbps(&self) -> Option<f64> {
+        self.tl.as_ref().map(BandwidthTimeline::capacity)
+    }
+
+    /// Total bytes that crossed this link.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Mean utilization over `[t0, t1)`; 0 for unbounded links.
+    pub fn utilization_between(&self, t0: f64, t1: f64) -> f64 {
+        self.tl
+            .as_ref()
+            .map_or(0.0, |tl| tl.utilization_between(t0, t1))
+    }
+}
+
+/// Occupancy/traffic snapshot of one link for the report's `memsys`
+/// section.
+#[derive(Debug, Clone, Default)]
+pub struct LinkSnapshot {
+    /// Link name (`accel0.in`, `accel0.out`, `bus`).
+    pub name: String,
+    /// Capacity in GB/s; `None` = unbounded.
+    pub gbps: Option<f64>,
+    /// Bytes that crossed the link.
+    pub bytes: u64,
+    /// Mean utilization over the run (0 for unbounded links).
+    pub utilization: f64,
+}
+
+/// Snapshot of the routed memory system after a run — the `memsys`
+/// section of the unified report.
+#[derive(Debug, Clone, Default)]
+pub struct MemsysSnapshot {
+    /// Number of DRAM channels.
+    pub channels: usize,
+    /// Per-channel peak bandwidth, GB/s.
+    pub channel_gbps: f64,
+    /// Bytes served by each channel (sums to total DRAM traffic).
+    pub channel_bytes: Vec<u64>,
+    /// Mean utilization of each channel over the run.
+    pub channel_utilization: Vec<f64>,
+    /// Per-accelerator ingress/egress links followed by the shared bus.
+    pub links: Vec<LinkSnapshot>,
+}
+
+impl MemsysSnapshot {
+    /// Per-channel busy percentages as one `50%/75%/...` string — the
+    /// shared rendering for the report summary and the bench tables.
+    pub fn busy_string(&self) -> String {
+        self.channel_utilization
+            .iter()
+            .map(|u| format!("{:.0}%", 100.0 * u))
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+
+    /// Emit the `per_channel` array (one `{bytes, utilization}` object
+    /// per channel) through `w` — the one serialization shared by the
+    /// unified report and the bench emissions, so they cannot drift.
+    pub fn write_per_channel(&self, w: &mut crate::util::JsonWriter) {
+        w.key("per_channel").begin_array();
+        for (i, &bytes) in self.channel_bytes.iter().enumerate() {
+            w.begin_object();
+            w.key("bytes").uint(bytes);
+            w.key("utilization")
+                .number(self.channel_utilization.get(i).copied().unwrap_or(0.0));
+            w.end_object();
+        }
+        w.end_array();
+    }
+}
+
 /// The SoC memory system.
 pub struct MemorySystem {
-    /// Shared DRAM bandwidth timeline.
-    pub dram: BandwidthTimeline,
+    /// Independently-arbitrated DRAM channels (address-interleaved).
+    channels: Vec<BandwidthTimeline>,
+    /// Bytes served per channel (parallel to `channels`).
+    channel_bytes: Vec<u64>,
+    /// Per-accelerator ingress links (toward the scratchpad).
+    ingress: Vec<Link>,
+    /// Per-accelerator egress links (write-back).
+    egress: Vec<Link>,
+    /// Shared coherent system bus (ACP + CPU traffic).
+    bus: Link,
     interface: InterfaceKind,
     cacheline: usize,
     cpu_cycle_ns: f64,
@@ -97,10 +257,22 @@ pub struct MemorySystem {
 }
 
 impl MemorySystem {
-    /// Build the memory system for a SoC + interface choice.
-    pub fn new(soc: &SocConfig, interface: InterfaceKind) -> Self {
+    /// Build the memory system for a SoC + interface choice and an
+    /// accelerator-pool size (one ingress/egress link pair per slot).
+    pub fn new(soc: &SocConfig, interface: InterfaceKind, n_accels: usize) -> Self {
+        let n_chan = soc.dram_channels.max(1);
         Self {
-            dram: BandwidthTimeline::new(soc.dram_gbps),
+            channels: (0..n_chan)
+                .map(|_| BandwidthTimeline::new(soc.dram_gbps))
+                .collect(),
+            channel_bytes: vec![0; n_chan],
+            ingress: (0..n_accels)
+                .map(|i| Link::new(format!("accel{i}.in"), soc.accel_link_gbps))
+                .collect(),
+            egress: (0..n_accels)
+                .map(|i| Link::new(format!("accel{i}.out"), soc.accel_link_gbps))
+                .collect(),
+            bus: Link::new("bus".into(), soc.sys_bus_gbps),
             interface,
             cacheline: soc.cacheline_bytes,
             cpu_cycle_ns: soc.cpu_cycle_ns(),
@@ -112,6 +284,59 @@ impl MemorySystem {
     /// Which interface this system models.
     pub fn interface(&self) -> InterfaceKind {
         self.interface
+    }
+
+    /// The DRAM channel timelines.
+    pub fn channels(&self) -> &[BandwidthTimeline] {
+        &self.channels
+    }
+
+    /// Bytes served per channel.
+    pub fn channel_bytes(&self) -> &[u64] {
+        &self.channel_bytes
+    }
+
+    /// The per-accelerator ingress/egress links followed by the bus.
+    pub fn links(&self) -> impl Iterator<Item = &Link> {
+        self.ingress
+            .iter()
+            .chain(self.egress.iter())
+            .chain(std::iter::once(&self.bus))
+    }
+
+    /// Reserve the DRAM-channel hop of a route.
+    fn channel_request(
+        &mut self,
+        route: Route,
+        earliest: f64,
+        bytes: u64,
+        max_rate: f64,
+    ) -> (f64, f64) {
+        let c = route.chan as usize % self.channels.len();
+        self.channel_bytes[c] += bytes;
+        self.channels[c].request(earliest, bytes, max_rate)
+    }
+
+    /// Reserve the link hop of an accelerator DMA route (direction from
+    /// the traffic class); returns the hop end.
+    fn dma_link_reserve(
+        &mut self,
+        route: Route,
+        class: TrafficClass,
+        earliest: f64,
+        bytes: u64,
+    ) -> f64 {
+        match route.path {
+            PathKind::Accel(a) => {
+                let link = match class {
+                    TrafficClass::Output => &mut self.egress[a as usize],
+                    _ => &mut self.ingress[a as usize],
+                };
+                link.reserve(earliest, bytes, f64::INFINITY)
+            }
+            // CPU-path DMA does not exist; bytes cross the bus.
+            PathKind::Cpu => self.bus.reserve(earliest, bytes, f64::INFINITY),
+        }
     }
 
     /// Schedule an accelerator transfer and return its timing/traffic.
@@ -130,7 +355,11 @@ impl MemorySystem {
         let cpu_overhead_ns =
             (lines * FLUSH_CYCLES_PER_LINE + DMA_SETUP_CYCLES) * self.cpu_cycle_ns;
         let begin = req.earliest_ns + cpu_overhead_ns;
-        let (start, end) = self.dram.request(begin, req.bytes, self.stream_rate);
+        let rate = self.stream_rate;
+        let (start, dram_end) = self.channel_request(req.route, begin, req.bytes, rate);
+        // Private ingress/egress link hop (no-op when unbounded).
+        let link_end = self.dma_link_reserve(req.route, req.class, begin, req.bytes);
+        let end = dram_end.max(link_end);
         self.stats.dram_bytes += req.bytes;
         self.stats.coherency_ns += cpu_overhead_ns;
         TransferRes {
@@ -156,8 +385,12 @@ impl MemorySystem {
         let dram_bytes = req.bytes - llc_bytes;
         // LLC-served portion: latency-pipelined line requests at LLC bw.
         let llc_time = llc_bytes as f64 / LLC_BYTES_PER_NS;
-        let (_, dram_end) = self.dram.request(req.earliest_ns, dram_bytes, self.stream_rate);
-        let end = (req.earliest_ns + llc_time).max(dram_end);
+        let rate = self.stream_rate;
+        let (_, dram_end) = self.channel_request(req.route, req.earliest_ns, dram_bytes, rate);
+        // The whole coherent payload (hits and misses) crosses the
+        // shared system bus; a no-op when the bus is unbounded.
+        let bus_end = self.bus.reserve(req.earliest_ns, req.bytes, f64::INFINITY);
+        let end = (req.earliest_ns + llc_time).max(dram_end).max(bus_end);
         self.stats.dram_bytes += dram_bytes;
         // Misses stream with a no-allocate hint (weights are read once);
         // only hit bytes are charged as LLC activity.
@@ -172,14 +405,53 @@ impl MemorySystem {
     }
 
     /// Schedule CPU software-stack memory traffic (tiling copies) on the
-    /// shared DRAM: returns the finish time given `earliest` and the
-    /// aggregate CPU-side rate.
-    pub fn cpu_traffic(&mut self, earliest_ns: f64, bytes: u64, rate: f64) -> f64 {
-        let (_, end) = self.dram.request(earliest_ns, bytes, rate);
+    /// routed system — system bus plus the channel `chan_hint` selects —
+    /// and return the finish time given `earliest` and the aggregate
+    /// CPU-side rate.
+    pub fn cpu_traffic(&mut self, earliest_ns: f64, bytes: u64, rate: f64, chan_hint: u32) -> f64 {
+        let route = Route::cpu(chan_hint);
+        let (_, dram_end) = self.channel_request(route, earliest_ns, bytes, rate);
+        let bus_end = self.bus.reserve(earliest_ns, bytes, rate);
         // CPU copies are charged as DRAM traffic (they stream through the
         // cache hierarchy but tiles exceed L1/L2 for large tensors).
         self.stats.dram_bytes += bytes;
-        end
+        dram_end.max(bus_end)
+    }
+
+    /// Mean DRAM utilization (fraction of aggregate capacity) over
+    /// `[t0, t1)` — averaged over channels, so a single channel matches
+    /// the old flat-pipe metric exactly.
+    pub fn dram_utilization_between(&self, t0: f64, t1: f64) -> f64 {
+        let n = self.channels.len();
+        self.channels
+            .iter()
+            .map(|c| c.utilization_between(t0, t1))
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// Snapshot per-channel/per-link traffic and occupancy over
+    /// `[0, horizon_ns)` for the report's `memsys` section.
+    pub fn snapshot(&self, horizon_ns: f64) -> MemsysSnapshot {
+        MemsysSnapshot {
+            channels: self.channels.len(),
+            channel_gbps: self.channels[0].capacity(),
+            channel_bytes: self.channel_bytes.clone(),
+            channel_utilization: self
+                .channels
+                .iter()
+                .map(|c| c.utilization_between(0.0, horizon_ns))
+                .collect(),
+            links: self
+                .links()
+                .map(|l| LinkSnapshot {
+                    name: l.name().to_string(),
+                    gbps: l.gbps(),
+                    bytes: l.bytes(),
+                    utilization: l.utilization_between(0.0, horizon_ns),
+                })
+                .collect(),
+        }
     }
 }
 
@@ -197,12 +469,13 @@ mod tests {
             earliest_ns: t,
             class,
             llc_resident_frac: frac,
+            route: Route::accel(0, 0),
         }
     }
 
     #[test]
     fn dma_charges_flush_overhead() {
-        let mut m = MemorySystem::new(&soc(), InterfaceKind::Dma);
+        let mut m = MemorySystem::new(&soc(), InterfaceKind::Dma, 1);
         let r = m.transfer(req(32 * 1024, 0.0, TrafficClass::Input, 1.0));
         // 1024 lines * 5 cycles + 750 setup = 5870 cycles * 0.4ns = 2348ns.
         assert!((r.cpu_overhead_ns - 2348.0).abs() < 1.0, "{}", r.cpu_overhead_ns);
@@ -213,7 +486,7 @@ mod tests {
 
     #[test]
     fn acp_has_no_cpu_overhead_and_hits_llc() {
-        let mut m = MemorySystem::new(&soc(), InterfaceKind::Acp);
+        let mut m = MemorySystem::new(&soc(), InterfaceKind::Acp, 1);
         let r = m.transfer(req(32 * 1024, 0.0, TrafficClass::Input, 1.0));
         assert_eq!(r.cpu_overhead_ns, 0.0);
         assert_eq!(r.dram_bytes, 0);
@@ -222,7 +495,7 @@ mod tests {
 
     #[test]
     fn acp_weights_always_miss() {
-        let mut m = MemorySystem::new(&soc(), InterfaceKind::Acp);
+        let mut m = MemorySystem::new(&soc(), InterfaceKind::Acp, 1);
         let r = m.transfer(req(16 * 1024, 0.0, TrafficClass::Weight, 1.0));
         assert_eq!(r.dram_bytes, 16 * 1024);
     }
@@ -230,8 +503,8 @@ mod tests {
     #[test]
     fn acp_faster_than_dma_for_hot_data() {
         let bytes = 32 * 1024;
-        let mut dma = MemorySystem::new(&soc(), InterfaceKind::Dma);
-        let mut acp = MemorySystem::new(&soc(), InterfaceKind::Acp);
+        let mut dma = MemorySystem::new(&soc(), InterfaceKind::Dma, 1);
+        let mut acp = MemorySystem::new(&soc(), InterfaceKind::Acp, 1);
         let rd = dma.transfer(req(bytes, 0.0, TrafficClass::Input, 1.0));
         let ra = acp.transfer(req(bytes, 0.0, TrafficClass::Input, 1.0));
         assert!(
@@ -244,7 +517,7 @@ mod tests {
 
     #[test]
     fn stats_accumulate() {
-        let mut m = MemorySystem::new(&soc(), InterfaceKind::Dma);
+        let mut m = MemorySystem::new(&soc(), InterfaceKind::Dma, 1);
         m.transfer(req(1000, 0.0, TrafficClass::Input, 0.0));
         m.transfer(req(2000, 0.0, TrafficClass::Output, 0.0));
         assert_eq!(m.stats.dram_bytes, 3000);
@@ -254,7 +527,7 @@ mod tests {
 
     #[test]
     fn partial_llc_residency_splits_traffic() {
-        let mut m = MemorySystem::new(&soc(), InterfaceKind::Acp);
+        let mut m = MemorySystem::new(&soc(), InterfaceKind::Acp, 1);
         let r = m.transfer(req(10_000, 0.0, TrafficClass::Output, 0.4));
         assert_eq!(r.llc_bytes, 4000);
         assert_eq!(r.dram_bytes, 6000);
@@ -262,14 +535,123 @@ mod tests {
 
     #[test]
     fn cpu_traffic_contends_with_dma() {
-        let mut m = MemorySystem::new(&soc(), InterfaceKind::Dma);
+        let mut m = MemorySystem::new(&soc(), InterfaceKind::Dma, 1);
         // Saturate DRAM with a big accel transfer...
         let big = req(2_000_000, 0.0, TrafficClass::Weight, 0.0);
         let r = m.transfer(big);
         // ...then CPU traffic overlapping the stream finishes later than
         // it would on an idle DRAM.
         let idle_span = 100_000.0 / 10.0;
-        let end = m.cpu_traffic(r.start_ns, 100_000, 10.0);
+        let end = m.cpu_traffic(r.start_ns, 100_000, 10.0, 0);
         assert!(end - r.start_ns > idle_span, "span {}", end - r.start_ns);
+    }
+
+    #[test]
+    fn channels_are_interleaved_and_independent() {
+        let mut cfg = soc();
+        cfg.dram_channels = 2;
+        let mut m = MemorySystem::new(&cfg, InterfaceKind::Dma, 2);
+        // Two concurrent streams on different channels do not contend...
+        let mut a = req(2_000_000, 0.0, TrafficClass::Weight, 0.0);
+        a.route = Route::accel(0, 0);
+        let mut b = req(2_000_000, 0.0, TrafficClass::Weight, 0.0);
+        b.route = Route::accel(1, 1);
+        let ra = m.transfer(a);
+        let rb = m.transfer(b);
+        assert!((ra.end_ns - rb.end_ns).abs() < 1e-6);
+        // ...and byte accounting is per channel.
+        assert_eq!(m.channel_bytes(), &[2_000_000, 2_000_000]);
+        assert_eq!(m.stats.dram_bytes, 4_000_000);
+        // On one channel the same pair contends and finishes later.
+        let mut flat = MemorySystem::new(&soc(), InterfaceKind::Dma, 2);
+        flat.transfer(req(2_000_000, 0.0, TrafficClass::Weight, 0.0));
+        let rf = flat.transfer(req(2_000_000, 0.0, TrafficClass::Weight, 0.0));
+        assert!(rf.end_ns > rb.end_ns * 1.2, "flat {} routed {}", rf.end_ns, rb.end_ns);
+    }
+
+    #[test]
+    fn channel_selector_wraps_modulo() {
+        let mut cfg = soc();
+        cfg.dram_channels = 2;
+        let mut m = MemorySystem::new(&cfg, InterfaceKind::Dma, 1);
+        let mut r = req(1000, 0.0, TrafficClass::Input, 0.0);
+        r.route = Route::accel(0, 5); // 5 % 2 == channel 1
+        m.transfer(r);
+        assert_eq!(m.channel_bytes(), &[0, 1000]);
+    }
+
+    #[test]
+    fn bounded_link_is_the_bottleneck_hop() {
+        let mut cfg = soc();
+        cfg.accel_link_gbps = 1.0; // 1 GB/s link vs 25.6 GB/s DRAM
+        let mut m = MemorySystem::new(&cfg, InterfaceKind::Dma, 1);
+        let r = m.transfer(req(100_000, 0.0, TrafficClass::Input, 0.0));
+        // Payload time dominated by the link: 100 kB at 1 B/ns.
+        assert!(
+            r.end_ns - r.cpu_overhead_ns >= 100_000.0 - 1e-6,
+            "end {} overhead {}",
+            r.end_ns,
+            r.cpu_overhead_ns
+        );
+        let ml = m.links().find(|l| l.name() == "accel0.in").unwrap();
+        assert_eq!(ml.bytes(), 100_000);
+        assert!(ml.gbps().unwrap() == 1.0);
+    }
+
+    #[test]
+    fn unbounded_links_count_bytes_but_never_delay() {
+        let mut m = MemorySystem::new(&soc(), InterfaceKind::Dma, 1);
+        let r_in = m.transfer(req(50_000, 0.0, TrafficClass::Input, 0.0));
+        let r_out = m.transfer(req(20_000, r_in.end_ns, TrafficClass::Output, 0.0));
+        let names: Vec<(String, u64)> = m
+            .links()
+            .map(|l| (l.name().to_string(), l.bytes()))
+            .collect();
+        assert!(names.contains(&("accel0.in".into(), 50_000)));
+        assert!(names.contains(&("accel0.out".into(), 20_000)));
+        assert!(r_out.end_ns > r_in.end_ns);
+        // Unbounded links report no capacity and zero utilization.
+        assert!(m.links().all(|l| l.gbps().is_none()));
+        assert_eq!(m.links().map(|l| l.utilization_between(0.0, 1e9)).sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn shared_bus_throttles_acp_and_cpu() {
+        let mut cfg = soc();
+        cfg.sys_bus_gbps = 2.0;
+        let mut m = MemorySystem::new(&cfg, InterfaceKind::Acp, 1);
+        let r = m.transfer(req(100_000, 0.0, TrafficClass::Input, 1.0));
+        // All hits (no DRAM), but the bus caps the coherent stream at
+        // 2 B/ns: 50 us, much slower than LLC bandwidth alone.
+        assert!(r.end_ns >= 50_000.0 - 1e-6, "{}", r.end_ns);
+        let before = r.end_ns;
+        // CPU traffic shares the same bus and queues behind it.
+        let end = m.cpu_traffic(0.0, 100_000, 100.0, 0);
+        assert!(end > before * 0.9, "cpu end {end} vs acp {before}");
+        let bus = m.links().find(|l| l.name() == "bus").unwrap();
+        assert_eq!(bus.bytes(), 200_000);
+    }
+
+    #[test]
+    fn snapshot_conserves_bytes() {
+        let mut cfg = soc();
+        cfg.dram_channels = 4;
+        let mut m = MemorySystem::new(&cfg, InterfaceKind::Dma, 2);
+        for i in 0..10u32 {
+            let mut r = req(10_000 + i as u64, (i as f64) * 50.0, TrafficClass::Input, 0.0);
+            r.route = Route::accel((i % 2) as usize, i);
+            m.transfer(r);
+        }
+        m.cpu_traffic(0.0, 5_000, 10.0, 3);
+        let snap = m.snapshot(m.channels().iter().map(|c| c.horizon()).fold(0.0, f64::max));
+        assert_eq!(snap.channels, 4);
+        assert_eq!(snap.channel_bytes.iter().sum::<u64>(), m.stats.dram_bytes);
+        assert_eq!(snap.links.len(), 2 * 2 + 1);
+        let link_total: u64 = snap.links.iter().map(|l| l.bytes).sum();
+        assert_eq!(link_total, m.stats.dram_bytes);
+        assert!(snap
+            .channel_utilization
+            .iter()
+            .all(|&u| (0.0..=1.0).contains(&u)));
     }
 }

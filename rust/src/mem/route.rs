@@ -1,0 +1,87 @@
+//! Routed paths through the SoC memory system.
+//!
+//! Every transfer names the *path* its bytes take — which agent issued it
+//! and therefore which interconnect links it crosses — plus a channel
+//! selector that address-interleaves it over the DRAM channels. The
+//! [`crate::mem::MemorySystem`] reserves capacity on each hop of the
+//! path; the bottleneck hop sets the transfer time.
+//!
+//! Routes are part of the task-graph IR's resource claims
+//! ([`crate::ir::ResourceClaim`]), so both executors reserve identical
+//! paths for identical tiles regardless of schedule order — channel
+//! assignment is a pure function of (operator, tile), never of arrival
+//! order, which is what keeps multi-channel runs deterministic across
+//! sweep worker counts.
+
+/// Which SoC agent a transfer belongs to (decides the link hops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathKind {
+    /// CPU software-stack traffic (tiling copies, coherent by
+    /// construction): shared system bus → DRAM channel.
+    Cpu,
+    /// Accelerator pool slot `n`. DMA traffic crosses the slot's private
+    /// ingress (toward the scratchpad) or egress (write-back) link; ACP
+    /// traffic crosses the shared coherent system bus instead.
+    Accel(u16),
+}
+
+/// A routed transfer claim: the path plus the DRAM-channel interleave
+/// selector. The selector is reduced modulo the configured channel count
+/// at reservation time, so one lowering serves every channel count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    /// Which agent/link-set the bytes cross.
+    pub path: PathKind,
+    /// Channel-interleave selector (`chan % channels` picks the DRAM
+    /// channel). Derived from the tile offset: `op id + tile index`.
+    pub chan: u32,
+}
+
+impl Route {
+    /// CPU software-stack route (system bus → channel `chan % n`).
+    pub fn cpu(chan: u32) -> Self {
+        Self {
+            path: PathKind::Cpu,
+            chan,
+        }
+    }
+
+    /// Accelerator route for pool slot `slot`.
+    pub fn accel(slot: usize, chan: u32) -> Self {
+        Self {
+            path: PathKind::Accel(slot as u16),
+            chan,
+        }
+    }
+
+    /// The canonical route of one tiling-plan work item: the pinned
+    /// slot's link pair plus the tile-offset channel interleave
+    /// (`op id + item index`). The ONE derivation shared by the IR
+    /// lowering's resource claims and the executors' reservations —
+    /// change it here and both stay in agreement.
+    pub fn for_tile(op_id: usize, item_idx: usize, slot: usize) -> Self {
+        Self::accel(slot, (op_id + item_idx) as u32)
+    }
+}
+
+impl Default for Route {
+    /// CPU path, channel 0 — the neutral route.
+    fn default() -> Self {
+        Self::cpu(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_set_path_and_selector() {
+        let r = Route::accel(3, 17);
+        assert_eq!(r.path, PathKind::Accel(3));
+        assert_eq!(r.chan, 17);
+        let c = Route::cpu(5);
+        assert_eq!(c.path, PathKind::Cpu);
+        assert_eq!(Route::default(), Route::cpu(0));
+    }
+}

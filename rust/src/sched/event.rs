@@ -383,7 +383,9 @@ fn run_tile_level(
                 cpu.release(end);
                 if task.claim.dram_bytes > 0 {
                     let rate = task.claim.dram_bytes as f64 / dur.max(1e-9);
-                    sched.mem.cpu_traffic(start, task.claim.dram_bytes, rate);
+                    sched
+                        .mem
+                        .cpu_traffic(start, task.claim.dram_bytes, rate, task.claim.route.chan);
                     sched.sw_windows.push((start, end));
                 }
                 sched

@@ -10,10 +10,13 @@
 //!   engine and a datapath whose availability persists across operators
 //!   ([`AccelPool`]), so independent operators dispatched concurrently
 //!   queue at the same pool rather than magically duplicating hardware.
-//! * **Shared DRAM bandwidth** — every transfer (DMA streams, ACP misses,
-//!   CPU tiling copies) draws from one interval-based bandwidth timeline
-//!   ([`crate::mem::BandwidthTimeline`]), so overlapping phases contend
-//!   instead of double-counting bandwidth.
+//! * **Routed memory system** — every transfer (DMA streams, ACP misses,
+//!   CPU tiling copies) reserves capacity on each hop of its routed path
+//!   through [`crate::mem::MemorySystem`]: an address-interleaved DRAM
+//!   channel, the pinned slot's ingress/egress link (DMA), or the shared
+//!   coherent system bus (ACP + CPU). Overlapping phases contend per hop
+//!   instead of double-counting bandwidth; the default topology (one
+//!   channel, unbounded links) is exactly the old flat shared pipe.
 //!
 //! Execution per accelerated operator is still the paper's three phases —
 //! CPU data preparation, accelerator phase (transfer in → compute →
@@ -61,7 +64,7 @@ use crate::cpu::CpuModel;
 use crate::energy::EnergyAccount;
 use crate::graph::{Graph, Op, OpKind};
 use crate::ir::{OpWork, TaskGraph};
-use crate::mem::{MemorySystem, TrafficClass, TransferReq, LLC_USABLE_FRAC};
+use crate::mem::{MemorySystem, Route, TrafficClass, TransferReq, LLC_USABLE_FRAC};
 use crate::stats::{Breakdown, OpRecord, PipelineStats, RequestRecord, ServeReport, SimReport};
 use crate::tiling::{plan_conv, plan_eltwise, plan_fc, plan_pool, TilingPlan};
 use crate::trace::{EventKind, Lane, Timeline};
@@ -231,7 +234,7 @@ impl Scheduler {
     pub fn new(soc: SocConfig, opts: SimOptions) -> Self {
         let pool_kinds = opts.resolved_pool();
         let models = build_pool(&pool_kinds, &soc);
-        let mem = MemorySystem::new(&soc, opts.interface);
+        let mem = MemorySystem::new(&soc, opts.interface, models.len());
         let cpu = CpuModel::new(&soc);
         let timeline = Timeline::new(opts.capture_timeline);
         let slots = models.len();
@@ -518,12 +521,13 @@ impl Scheduler {
             requests,
             makespan_ns: makespan,
             breakdown,
-            dram_utilization: self.mem.dram.utilization_between(0.0, makespan),
+            dram_utilization: self.mem.dram_utilization_between(0.0, makespan),
             sw_phase_dram_utilization: self.sw_phase_utilization(),
             dram_bytes: self.mem.stats.dram_bytes,
             llc_bytes: self.mem.stats.llc_bytes,
             energy: self.energy,
             pipeline,
+            memsys: self.mem.snapshot(makespan),
             sim_wallclock_ns: wall_start.elapsed().as_nanos() as f64,
         }
     }
@@ -554,7 +558,7 @@ impl Scheduler {
                 .iter()
                 .map(|&b| (b / total).clamp(0.0, 1.0))
                 .collect(),
-            dram_utilization: self.mem.dram.utilization_between(0.0, makespan_ns),
+            dram_utilization: self.mem.dram_utilization_between(0.0, makespan_ns),
         }
     }
 
@@ -583,7 +587,7 @@ impl Scheduler {
         let prep_end = start + prep.span_ns;
         if prep.traffic_bytes > 0 {
             let rate = prep.traffic_bytes as f64 / prep.span_ns.max(1e-9);
-            self.mem.cpu_traffic(start, prep.traffic_bytes, rate);
+            self.mem.cpu_traffic(start, prep.traffic_bytes, rate, op.id as u32);
             self.sw_windows.push((start, prep_end));
         }
         self.timeline
@@ -695,18 +699,23 @@ impl Scheduler {
         }
         .max(earliest);
         st.first_start = st.first_start.min(t0);
+        // The routed path these bytes take — the shared canonical
+        // derivation, so the reservation always matches the IR claim.
+        let route = Route::for_tile(op.id, idx, a);
         // Transfer in: input tile + weight tile.
         let rin = self.mem.transfer(TransferReq {
             bytes: item.in_bytes,
             earliest_ns: t0,
             class: TrafficClass::Input,
             llc_resident_frac: st.llc_frac,
+            route,
         });
         let rwgt = self.mem.transfer(TransferReq {
             bytes: item.wgt_bytes,
             earliest_ns: t0,
             class: TrafficClass::Weight,
             llc_resident_frac: 0.0,
+            route,
         });
         let xfer_in_end = rin.end_ns.max(rwgt.end_ns);
         // Compute, costed by the model of the accelerator instance the
@@ -738,6 +747,7 @@ impl Scheduler {
                 earliest_ns: c1,
                 class: TrafficClass::Output,
                 llc_resident_frac: st.llc_frac,
+                route,
             });
             rout.end_ns
         } else {
@@ -787,6 +797,7 @@ impl Scheduler {
                 earliest_ns: g.max_end.max(pool.busy[a]),
                 class: TrafficClass::Input,
                 llc_resident_frac: st.llc_frac,
+                route: Route::accel(a, op.id as u32),
             });
             let add_ops = (g.blocks - 1) as u64 * g.mn as u64;
             let merge_cycles = add_ops.div_ceil(32) as f64 + 24.0;
@@ -843,7 +854,7 @@ impl Scheduler {
         let fin_end = start + fin.span_ns;
         if fin.traffic_bytes > 0 {
             let rate = fin.traffic_bytes as f64 / fin.span_ns.max(1e-9);
-            self.mem.cpu_traffic(start, fin.traffic_bytes, rate);
+            self.mem.cpu_traffic(start, fin.traffic_bytes, rate, op.id as u32);
             self.sw_windows.push((start, fin_end));
         }
         self.timeline
@@ -895,7 +906,7 @@ impl Scheduler {
     fn sw_phase_utilization(&self) -> f64 {
         let (mut busy, mut span) = (0.0, 0.0);
         for &(t0, t1) in &self.sw_windows {
-            busy += self.mem.dram.utilization_between(t0, t1) * (t1 - t0);
+            busy += self.mem.dram_utilization_between(t0, t1) * (t1 - t0);
             span += t1 - t0;
         }
         if span > 0.0 {
@@ -930,10 +941,11 @@ impl Scheduler {
             ops,
             dram_bytes: self.mem.stats.dram_bytes,
             llc_bytes: self.mem.stats.llc_bytes,
-            dram_utilization: self.mem.dram.utilization_between(0.0, total_ns),
+            dram_utilization: self.mem.dram_utilization_between(0.0, total_ns),
             sw_phase_dram_utilization: sw_util,
             energy: self.energy,
             pipeline,
+            memsys: self.mem.snapshot(total_ns),
             sim_wallclock_ns: wallclock_ns,
         }
     }

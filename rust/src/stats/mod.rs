@@ -1,6 +1,7 @@
 //! Per-operator records and end-to-end reports (Fig 1 / 12 / 15 / 18).
 
 use crate::energy::EnergyAccount;
+use crate::mem::MemsysSnapshot;
 use crate::util::{fmt_bytes, fmt_ns, fmt_pj};
 
 /// Timing/traffic record for one operator.
@@ -137,6 +138,9 @@ pub struct SimReport {
     /// Overlap fraction + per-resource occupancy for the schedule that
     /// produced this report.
     pub pipeline: PipelineStats,
+    /// Routed memory-system snapshot: per-channel and per-link traffic
+    /// and occupancy over the run.
+    pub memsys: MemsysSnapshot,
     /// Host wall-clock spent simulating, ns (Fig 10's metric).
     pub sim_wallclock_ns: f64,
 }
@@ -354,6 +358,8 @@ pub struct ServeReport {
     pub energy: EnergyAccount,
     /// Overlap fraction + per-resource occupancy over the makespan.
     pub pipeline: PipelineStats,
+    /// Routed memory-system snapshot over the makespan.
+    pub memsys: MemsysSnapshot,
     /// Host wall-clock spent simulating, ns.
     pub sim_wallclock_ns: f64,
 }

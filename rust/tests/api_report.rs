@@ -65,6 +65,7 @@ const V1_KEYS: &[&str] = &[
     "sweep",
     "sweep_engine",
     "pipeline",
+    "memsys",
     "camera",
     "functional",
     "timeline",
@@ -110,6 +111,39 @@ fn inference_json_matches_v1_snapshot() {
     for key in ["overlap_frac", "cpu_occupancy", "accel_occupancy"] {
         assert!(json.contains(&format!("\"{key}\":")), "pipeline.{key}");
     }
+    // ...and the routed memory-system section (default: one flat channel,
+    // unbounded links).
+    assert!(
+        json.contains("\"memsys\":{\"channels\":1,\"channel_gbps\":25.6"),
+        "{json}"
+    );
+    for key in ["per_channel", "links"] {
+        assert!(json.contains(&format!("\"{key}\":")), "memsys.{key}");
+    }
+    assert!(json.contains("\"name\":\"accel0.in\""));
+    assert!(json.contains("\"name\":\"bus\""));
+}
+
+#[test]
+fn multi_channel_json_reports_per_channel_occupancy() {
+    let json = Session::on(
+        Soc::builder()
+            .accels(AccelKind::Nvdla, 2)
+            .dram_channels(2)
+            .build(),
+    )
+    .network("lenet5")
+    .tile_pipeline(true)
+    .run()
+    .unwrap()
+    .to_json();
+    assert_eq!(top_level_keys(&json), V1_KEYS);
+    assert!(json.contains("\"memsys\":{\"channels\":2"), "{json}");
+    // Two per-channel entries, each with bytes + utilization.
+    let per_chan = json.split("\"per_channel\":[").nth(1).unwrap();
+    let per_chan = per_chan.split(']').next().unwrap();
+    assert_eq!(per_chan.matches("\"bytes\":").count(), 2, "{per_chan}");
+    assert_eq!(per_chan.matches("\"utilization\":").count(), 2);
 }
 
 #[test]
@@ -182,9 +216,11 @@ fn sweep_and_camera_share_the_same_key_set() {
     assert!(camera.contains("\"sweep_engine\":null"));
     assert!(camera.contains("\"meets_budget\":"));
     assert!(camera.contains("\"budget_ms\":"));
-    // Aggregate scenarios carry the pipeline section as null.
+    // Aggregate scenarios carry the pipeline/memsys sections as null.
     assert!(sweep.contains("\"pipeline\":null"));
     assert!(camera.contains("\"pipeline\":null"));
+    assert!(sweep.contains("\"memsys\":null"));
+    assert!(camera.contains("\"memsys\":null"));
 }
 
 #[test]

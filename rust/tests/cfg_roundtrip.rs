@@ -25,6 +25,11 @@ fn assert_same(a: &SocConfig, b: &SocConfig, what: &str) {
     assert_eq!(a.dram_gbps, b.dram_gbps, "{what}: dram_gbps");
     assert_eq!(a.dram_channels, b.dram_channels, "{what}: dram_channels");
     assert_eq!(a.dram_efficiency, b.dram_efficiency, "{what}: dram_efficiency");
+    assert_eq!(
+        a.accel_link_gbps, b.accel_link_gbps,
+        "{what}: accel_link_gbps"
+    );
+    assert_eq!(a.sys_bus_gbps, b.sys_bus_gbps, "{what}: sys_bus_gbps");
     assert_eq!(a.spad_bytes, b.spad_bytes, "{what}: spad_bytes");
     assert_eq!(a.elem_bytes, b.elem_bytes, "{what}: elem_bytes");
     assert_eq!(a.nvdla_pes, b.nvdla_pes, "{what}: nvdla_pes");
@@ -47,6 +52,17 @@ fn random_config(rng: &mut Rng) -> SocConfig {
         dram_gbps: rng.range_f32(1.0, 200.0) as f64,
         dram_channels: 1 + rng.below(8),
         dram_efficiency: rng.range_f32(0.05, 1.0) as f64,
+        // 0 = unbounded about half the time, else a bounded link/bus.
+        accel_link_gbps: if rng.below(2) == 0 {
+            0.0
+        } else {
+            rng.range_f32(1.0, 64.0) as f64
+        },
+        sys_bus_gbps: if rng.below(2) == 0 {
+            0.0
+        } else {
+            rng.range_f32(1.0, 64.0) as f64
+        },
         spad_bytes: (1 + rng.below(128)) * 1024,
         elem_bytes: 1 << rng.below(3), // 1, 2, 4
         nvdla_pes: 1 + rng.below(64),

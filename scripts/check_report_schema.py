@@ -26,6 +26,7 @@ TOP_KEYS = [
     "sweep",
     "sweep_engine",
     "pipeline",
+    "memsys",
     "camera",
     "functional",
     "timeline",
@@ -56,6 +57,7 @@ PIPELINE_KEYS = [
     "accel_occupancy",
     "dram_utilization",
 ]
+MEMSYS_KEYS = ["channels", "channel_gbps", "per_channel", "links"]
 
 
 def fail(msg: str) -> None:
@@ -132,6 +134,29 @@ def main() -> None:
             fail(f"accel_occupancy out of range: {pipe['accel_occupancy']}")
     elif pipe is not None:
         fail(f"{r['scenario']} report should have pipeline null")
+    mem = r["memsys"]
+    if r["scenario"] in ("inference", "training", "serving"):
+        if mem is None:
+            fail(f"{r['scenario']} report must populate memsys")
+        for key in MEMSYS_KEYS:
+            if key not in mem:
+                fail(f"memsys missing {key}")
+        if not mem["channels"] >= 1:
+            fail(f"memsys.channels must be >= 1 (got {mem['channels']})")
+        if len(mem["per_channel"]) != mem["channels"]:
+            fail("memsys.per_channel must list every channel")
+        for ch in mem["per_channel"]:
+            if not -1e-9 <= ch["utilization"] <= 1.0 + 1e-9:
+                fail(f"channel utilization out of range: {ch}")
+        if sum(ch["bytes"] for ch in mem["per_channel"]) != r["traffic"]["dram_bytes"]:
+            fail("per-channel bytes do not sum to traffic.dram_bytes")
+        if not any(l["name"] == "bus" for l in mem["links"]):
+            fail("memsys.links must include the shared bus")
+        for l in mem["links"]:
+            if not -1e-9 <= l["utilization"] <= 1.0 + 1e-9:
+                fail(f"link utilization out of range: {l}")
+    elif mem is not None:
+        fail(f"{r['scenario']} report should have memsys null")
     print(f"report schema OK: {r['scenario']} {r['network']} ({len(r['ops'])} ops)")
 
 

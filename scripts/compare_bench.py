@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Gate a BENCH_*.json emission against a committed baseline.
+
+Usage:
+    compare_bench.py CURRENT.json BASELINE.json [--bless]
+
+The baseline file pins one or more headline metrics of a bench emission:
+
+    {
+      "bench": "pipeline_overlap",
+      "metrics": {
+        "speedup_tile_vs_off": {
+          "value": 1.30,        # blessed reference value
+          "direction": "higher",# "higher" = bigger is better, or "lower"
+          "tolerance": 0.10     # allowed relative regression (0.10 = 10%)
+        }
+      }
+    }
+
+Each metric key is looked up at the top level of CURRENT.json. A
+"higher"-is-better metric regresses when
+`current < value * (1 - tolerance)`; a "lower"-is-better metric when
+`current > value * (1 + tolerance)`. Any regression exits 1 with a
+per-metric table; improvements are reported but never fail.
+
+Blessing a new baseline (after an intentional perf change):
+
+    cargo bench --bench <name>            # emits BENCH_<x>.json
+    python3 scripts/compare_bench.py BENCH_<x>.json bench_baselines/<x>.json --bless
+    git add bench_baselines/<x>.json      # commit the new reference
+
+A missing baseline file is a soft skip (exit 0 with a notice) so the
+gate can land before the first toolchain-enabled bless run. `--bless`
+rewrites the `value` of every metric already listed in the baseline
+file; it does NOT create the file — the baseline names which keys
+matter (and their direction/tolerance), so a new gated bench starts by
+committing a baseline with the metric entries and a provisional value,
+then blessing it from a real run.
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+DEFAULT_TOLERANCE = 0.10
+
+
+def fail(msg: str) -> None:
+    print(f"bench gate FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if a != "--bless"]
+    bless = "--bless" in sys.argv[1:]
+    if len(args) != 2:
+        fail("usage: compare_bench.py CURRENT.json BASELINE.json [--bless]")
+    current_path, baseline_path = Path(args[0]), Path(args[1])
+
+    if not current_path.exists():
+        fail(f"bench emission {current_path} not found (did the bench run?)")
+    current = json.loads(current_path.read_text())
+
+    if not baseline_path.exists():
+        if bless:
+            fail(
+                f"no baseline template at {baseline_path}: create one naming "
+                "the metric keys to pin (see the module docstring)"
+            )
+        print(
+            f"bench gate SKIP: no committed baseline at {baseline_path} "
+            f"(bless one with: compare_bench.py {current_path} {baseline_path} --bless)"
+        )
+        return
+    baseline = json.loads(baseline_path.read_text())
+    metrics = baseline.get("metrics", {})
+    if not metrics:
+        fail(f"{baseline_path} has no metrics to gate")
+
+    if bless:
+        for key, spec in metrics.items():
+            if key not in current:
+                fail(f"metric {key!r} missing from {current_path}")
+            val = current[key]
+            if not (isinstance(val, (int, float)) and math.isfinite(val) and val > 0):
+                fail(
+                    f"refusing to bless {key!r} = {val!r}: a non-positive or "
+                    "non-finite reference would disable the gate forever"
+                )
+            spec["value"] = val
+        baseline_path.write_text(json.dumps(baseline, indent=2) + "\n")
+        print(f"blessed {baseline_path} from {current_path}:")
+        for key, spec in metrics.items():
+            print(f"  {key} = {spec['value']}")
+        return
+
+    regressions = []
+    print(f"bench gate: {current_path} vs {baseline_path}")
+    print(f"{'metric':<28} {'baseline':>12} {'current':>12} {'delta':>8}  verdict")
+    for key, spec in metrics.items():
+        if key not in current:
+            fail(f"metric {key!r} missing from {current_path} (bench drifted?)")
+        try:
+            cur = float(current[key])
+            ref = float(spec["value"])
+            tol = float(spec.get("tolerance", DEFAULT_TOLERANCE))
+        except (KeyError, TypeError, ValueError) as e:
+            fail(
+                f"metric {key!r}: malformed entry in {baseline_path} or "
+                f"{current_path} ({e!r}) — see bench_baselines/README.md"
+            )
+        if not (math.isfinite(ref) and ref > 0):
+            fail(
+                f"metric {key!r}: baseline value {ref!r} is not a positive "
+                f"finite number — the relative gate would be inert; fix "
+                f"{baseline_path}"
+            )
+        direction = spec.get("direction", "higher")
+        delta = (cur - ref) / ref if ref != 0 else 0.0
+        if direction == "higher":
+            regressed = cur < ref * (1.0 - tol)
+            improved = cur > ref
+        elif direction == "lower":
+            regressed = cur > ref * (1.0 + tol)
+            improved = cur < ref
+        else:
+            fail(f"metric {key!r}: unknown direction {direction!r}")
+        verdict = "REGRESSED" if regressed else ("improved" if improved else "ok")
+        print(f"{key:<28} {ref:>12.4g} {cur:>12.4g} {delta:>+7.1%}  {verdict}")
+        if regressed:
+            regressions.append(key)
+    if regressions:
+        fail(
+            f"{len(regressions)} metric(s) regressed beyond tolerance: "
+            + ", ".join(regressions)
+            + " — if intentional, re-bless with --bless and commit the baseline"
+        )
+    print("bench gate OK")
+
+
+if __name__ == "__main__":
+    main()
