@@ -1,20 +1,21 @@
-//! Serving mode: N concurrent inference requests share one SoC on the
-//! event-driven scheduler — per-request latency percentiles + aggregate
-//! throughput, and the multi-accelerator scaling the serial per-op loop
-//! cannot express. Includes a heterogeneous pool (NVDLA + systolic
-//! side by side) composed with the `SocBuilder`.
+//! Serving mode: open-loop requests share one SoC on the event-driven
+//! scheduler — per-request latency percentiles, goodput under an SLO,
+//! and the multi-accelerator scaling the serial per-op loop cannot
+//! express. Includes a heterogeneous pool (NVDLA + systolic side by
+//! side) composed with the `SocBuilder`.
 //!
 //! Run: `cargo run --release --example serving`
 
 use smaug::api::{Scenario, Session, Soc};
-use smaug::config::AccelKind;
+use smaug::config::{AccelKind, ServeOptions};
 use smaug::util::fmt_ns;
 
 fn main() -> anyhow::Result<()> {
-    let scenario = Scenario::Serving {
-        requests: 8,
-        arrival_interval_ns: 100_000.0, // one request every 100 us
-    };
+    // Open-loop Poisson arrivals at 10k req/s with an SLO of 4x the
+    // uncontended single-request latency.
+    let mut serve = ServeOptions::poisson(8, 10_000.0);
+    serve.slo_multiple = Some(4.0);
+    let scenario = Scenario::Serving(serve);
 
     let mut baseline_rps = None;
     for accels in [1usize, 8] {

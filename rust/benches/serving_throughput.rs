@@ -4,8 +4,8 @@
 //! `BENCH_serving.json` at the repository root so the serving-performance
 //! trajectory is tracked from this change on.
 
-use smaug::api::{Scenario, Session, Soc};
-use smaug::config::AccelKind;
+use smaug::api::{Report, Scenario, Session, Soc};
+use smaug::config::{AccelKind, ServeOptions};
 use smaug::util::{fmt_ns, JsonWriter};
 use std::path::Path;
 
@@ -17,35 +17,48 @@ fn main() -> anyhow::Result<()> {
         "{:<7} {:>12} {:>12} {:>12} {:>12} {:>12}",
         "accels", "req/s", "p50", "p90", "p99", "makespan"
     );
-    let mut w = JsonWriter::new();
-    w.begin_object();
-    w.key("bench").string("serving_throughput");
-    w.key("network").string(net);
-    w.key("requests").uint(requests as u64);
-    w.key("rows").begin_array();
-    for &accels in &[1usize, 2, 4, 8] {
+    let pool_sizes = [1usize, 2, 4, 8];
+    let mut reports: Vec<(usize, Report)> = Vec::with_capacity(pool_sizes.len());
+    for &accels in &pool_sizes {
         let r = Session::on(Soc::builder().accels(AccelKind::Nvdla, accels).build())
             .network(net)
             .threads(8)
-            .scenario(Scenario::Serving {
-                requests,
-                arrival_interval_ns: 0.0,
-            })
+            .scenario(Scenario::Serving(ServeOptions::closed(requests, 0.0)))
             .run()?;
         let l = r.latency.expect("serving reports latency stats");
-        let rps = r.throughput_rps.unwrap_or(0.0);
         println!(
             "{:<7} {:>12.1} {:>12} {:>12} {:>12} {:>12}",
             accels,
-            rps,
+            r.throughput_rps.unwrap_or(0.0),
             fmt_ns(l.p50_ns),
             fmt_ns(l.p90_ns),
             fmt_ns(l.p99_ns),
             fmt_ns(r.total_ns)
         );
+        reports.push((accels, r));
+    }
+    let rps_at = |n: usize| {
+        reports
+            .iter()
+            .find(|(a, _)| *a == n)
+            .and_then(|(_, r)| r.throughput_rps)
+            .unwrap_or(0.0)
+    };
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("serving_throughput");
+    w.key("network").string(net);
+    w.key("requests").uint(requests as u64);
+    // Headline metric for the CI bench gate: how much throughput the
+    // full 8-accelerator pool buys over a single accelerator.
+    w.key("throughput_scaling_8x_vs_1x")
+        .number(rps_at(8) / rps_at(1).max(1e-9));
+    w.key("rows").begin_array();
+    for (accels, r) in &reports {
+        let l = r.latency.expect("serving reports latency stats");
         w.begin_object();
-        w.key("accels").uint(accels as u64);
-        w.key("throughput_rps").number(rps);
+        w.key("accels").uint(*accels as u64);
+        w.key("throughput_rps").number(r.throughput_rps.unwrap_or(0.0));
         w.key("p50_ns").number(l.p50_ns);
         w.key("p90_ns").number(l.p90_ns);
         w.key("p99_ns").number(l.p99_ns);

@@ -6,17 +6,18 @@
 //!   microarchitectural parameters plus a (possibly heterogeneous)
 //!   accelerator pool, one [`crate::config::AccelKind`] per instance.
 //! * [`Scenario`] — pick the workload: single-batch [`Scenario::Inference`],
-//!   multi-request [`Scenario::Serving`], an axis [`Scenario::Sweep`], the
-//!   paper-§V [`Scenario::Camera`] pipeline, or a [`Scenario::Training`]
-//!   step. New studies are new variants, not new entry points.
+//!   open-loop [`Scenario::Serving`], a knee-finding [`Scenario::QpsSweep`],
+//!   an axis [`Scenario::Sweep`], the paper-§V [`Scenario::Camera`]
+//!   pipeline, or a [`Scenario::Training`] step. New studies are new
+//!   variants, not new entry points.
 //! * [`Report`] — every scenario returns the same unified report: timing
 //!   breakdown, per-op stats, traffic, energy, optional latency
-//!   percentiles / sweep rows / camera stages / timeline, serialized by
-//!   one versioned JSON schema ([`REPORT_SCHEMA`]).
+//!   percentiles / serving section / sweep rows / camera stages /
+//!   timeline, serialized by one versioned JSON schema ([`REPORT_SCHEMA`]).
 //!
 //! ```no_run
 //! use smaug::api::{Scenario, Session, Soc};
-//! use smaug::config::AccelKind;
+//! use smaug::config::{AccelKind, ServeOptions};
 //!
 //! // A heterogeneous SoC: two NVDLA-style engines + one systolic array.
 //! let soc = Soc::builder()
@@ -25,17 +26,42 @@
 //!     .accel(AccelKind::Systolic)
 //!     .build();
 //!
-//! // Serve 8 concurrent ResNet50 requests on it.
+//! // Open-loop serving: 64 ResNet50 requests arriving Poisson at
+//! // 2000 req/s, under a 5 ms latency SLO.
+//! let mut serve = ServeOptions::poisson(64, 2000.0);
+//! serve.slo_ns = Some(5e6);
 //! let report = Session::on(soc)
 //!     .network("resnet50")
 //!     .threads(8)
-//!     .scenario(Scenario::Serving { requests: 8, arrival_interval_ns: 50_000.0 })
+//!     .scenario(Scenario::Serving(serve))
 //!     .run()
 //!     .unwrap();
 //! println!("{}", report.summary());
 //! println!("p99 = {} ns", report.latency.unwrap().p99_ns);
+//! let sv = report.serving.as_ref().unwrap();
+//! println!("goodput = {:.1} req/s @ {:.1}% SLO attainment",
+//!          sv.goodput_rps, 100.0 * sv.slo_attainment);
 //! println!("{}", report.to_json());
 //! ```
+//!
+//! # The open-loop serving model
+//!
+//! Serving is *open-loop*: requests arrive on their own clock — a seeded
+//! [`crate::config::ArrivalProcess`] (`closed` legacy gaps, `poisson`,
+//! `bursty`, or a replayed `trace`) — rather than all being pre-admitted
+//! at t = 0. Arrivals enter an admission queue; an optional
+//! [`crate::config::BatchPolicy`] holds them until queue depth hits
+//! `max_batch` or the oldest request has waited `max_delay_ns`, so
+//! batching delay is part of every request's measured latency. Multiple
+//! [`crate::config::TenantSpec`] tenants (each possibly a different
+//! network, with a weight and a dispatch priority) share one SoC pool.
+//! The report's `serving` section carries p99/p99.9 tails, goodput under
+//! the SLO, a queue-depth timeline, and per-tenant breakdowns; identical
+//! seeds reproduce identical traces bit for bit.
+//!
+//! [`Scenario::QpsSweep`] re-runs serving across offered loads (sharded
+//! over [`Session::workers`], sharing one timing cache) and reports the
+//! SLO knee — the highest load that still met the attainment target.
 
 mod report;
 mod scenario;
@@ -44,8 +70,8 @@ mod soc;
 mod sweep;
 
 pub use report::{
-    CameraSummary, FunctionalSummary, LatencyStats, Report, SweepEngineSummary, SweepRow,
-    REPORT_SCHEMA,
+    CameraSummary, FunctionalSummary, LatencyStats, QpsRow, QpsSweepSummary, Report,
+    SweepEngineSummary, SweepRow, REPORT_SCHEMA,
 };
 pub use scenario::{Scenario, SweepAxis};
 pub use session::{quick_run, Session};

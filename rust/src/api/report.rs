@@ -6,7 +6,9 @@
 
 use crate::energy::EnergyAccount;
 use crate::mem::MemsysSnapshot;
-use crate::stats::{Breakdown, OpRecord, PipelineStats, RequestRecord, ServeReport, SimReport};
+use crate::stats::{
+    Breakdown, OpRecord, PipelineStats, RequestRecord, ServeReport, ServingStats, SimReport,
+};
 use crate::trace::Timeline;
 use crate::util::{fmt_bytes, fmt_ns, fmt_pj, JsonWriter};
 
@@ -25,6 +27,8 @@ pub struct LatencyStats {
     pub p90_ns: f64,
     /// 99th percentile.
     pub p99_ns: f64,
+    /// 99.9th percentile (tail SLO metric).
+    pub p999_ns: f64,
     /// Worst request.
     pub max_ns: f64,
 }
@@ -37,6 +41,7 @@ impl LatencyStats {
             p50_ns: crate::stats::percentile(&sorted, 50.0),
             p90_ns: crate::stats::percentile(&sorted, 90.0),
             p99_ns: crate::stats::percentile(&sorted, 99.0),
+            p999_ns: crate::stats::percentile(&sorted, 99.9),
             max_ns: sorted.last().copied().unwrap_or(0.0),
         }
     }
@@ -81,6 +86,49 @@ pub struct SweepEngineSummary {
     pub cost_misses: u64,
     /// Host wall-clock for the whole sweep grid, ns.
     pub wall_ns: f64,
+}
+
+/// One offered-load point of a [`crate::api::Scenario::QpsSweep`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QpsRow {
+    /// Offered load simulated, requests/s.
+    pub qps: f64,
+    /// Completed-request throughput, requests/s of makespan.
+    pub throughput_rps: f64,
+    /// SLO-meeting requests per second of makespan.
+    pub goodput_rps: f64,
+    /// Fraction of requests that met the SLO (1.0 without an SLO).
+    pub slo_attainment: f64,
+    /// Mean request latency, ns.
+    pub mean_ns: f64,
+    /// Median request latency, ns.
+    pub p50_ns: f64,
+    /// 99th-percentile request latency, ns.
+    pub p99_ns: f64,
+    /// 99.9th-percentile request latency, ns.
+    pub p999_ns: f64,
+    /// Peak admission-queue depth at this load.
+    pub max_queue_depth: usize,
+}
+
+/// Knee-finding serving sweep section: per-load rows plus the detected
+/// SLO knee. Additive `smaug.report/v1` extension — `null` for every
+/// other scenario.
+#[derive(Debug, Clone, Default)]
+pub struct QpsSweepSummary {
+    /// Latency SLO the attainment columns are measured against, ns.
+    pub slo_ns: Option<f64>,
+    /// Worker threads the load grid was sharded over.
+    pub workers: usize,
+    /// Estimated saturation rate used to build the auto grid, requests/s
+    /// (pool size / uncontended latency).
+    pub qps_ref: f64,
+    /// Highest offered load that still met the SLO-attainment target
+    /// (≥ 99%), or sustained ≥ 95% of offered load when no SLO is set;
+    /// `None` when even the lightest load missed it.
+    pub knee_qps: Option<f64>,
+    /// Per-load outcomes, in offered-load order.
+    pub rows: Vec<QpsRow>,
 }
 
 /// Camera-pipeline section (paper §V).
@@ -148,6 +196,9 @@ pub struct Report {
     pub latency: Option<LatencyStats>,
     /// Per-request records (serving only).
     pub requests: Vec<RequestRecord>,
+    /// Open-loop serving section: arrival process, SLO attainment and
+    /// goodput, queue timeline, per-tenant breakdown (serving only).
+    pub serving: Option<ServingStats>,
     /// Schedule-overlap fraction + per-resource occupancy (single-run
     /// and serving scenarios; `None` for sweep/camera, whose headline
     /// numbers aggregate more than one schedule).
@@ -162,6 +213,8 @@ pub struct Report {
     pub sweep: Vec<SweepRow>,
     /// Parallel-sweep engine section (sweep only).
     pub sweep_engine: Option<SweepEngineSummary>,
+    /// Knee-finding serving sweep section (qps_sweep only).
+    pub qps_sweep: Option<QpsSweepSummary>,
     /// Camera-pipeline section (camera only).
     pub camera: Option<CameraSummary>,
     /// Functional-execution section (execution-driven runs).
@@ -202,6 +255,7 @@ impl Report {
     /// Build the unified report from a serving-mode report.
     pub(crate) fn from_serve(r: ServeReport, accel_pool: Vec<String>) -> Self {
         let latency = LatencyStats::from_serve(&r);
+        let serving = r.serving.clone();
         Self {
             scenario: "serving".to_string(),
             network: r.network,
@@ -221,6 +275,7 @@ impl Report {
             }),
             latency: Some(latency),
             requests: r.requests,
+            serving: Some(serving),
             pipeline: Some(r.pipeline),
             memsys: Some(r.memsys),
             sim_wallclock_ns: r.sim_wallclock_ns,
@@ -299,6 +354,7 @@ impl Report {
                 w.key("p50").number(l.p50_ns);
                 w.key("p90").number(l.p90_ns);
                 w.key("p99").number(l.p99_ns);
+                w.key("p99_9").number(l.p999_ns);
                 w.key("max").number(l.max_ns);
                 w.end_object()
             }
@@ -309,12 +365,60 @@ impl Report {
             w.begin_object();
             w.key("id").uint(r.id as u64);
             w.key("network").string(&r.network);
+            w.key("tenant").string(&r.tenant);
             w.key("arrival_ns").number(r.arrival_ns);
+            w.key("dispatch_ns").number(r.dispatch_ns);
             w.key("end_ns").number(r.end_ns);
             w.key("latency_ns").number(r.latency_ns());
             w.end_object();
         }
         w.end_array();
+        match &self.serving {
+            Some(sv) => {
+                w.key("serving").begin_object();
+                w.key("arrival").string(&sv.arrival);
+                match sv.offered_qps {
+                    Some(q) => w.key("offered_qps").number(q),
+                    None => w.key("offered_qps").null(),
+                };
+                match sv.slo_ns {
+                    Some(slo) => w.key("slo_ns").number(slo),
+                    None => w.key("slo_ns").null(),
+                };
+                w.key("slo_met").uint(sv.slo_met as u64);
+                w.key("slo_attainment").number(sv.slo_attainment);
+                w.key("goodput_rps").number(sv.goodput_rps);
+                w.key("batches").uint(sv.batches as u64);
+                w.key("max_queue_depth").uint(sv.max_queue_depth as u64);
+                w.key("mean_queue_ns").number(sv.mean_queue_ns);
+                w.key("queue_depth").begin_array();
+                for &(t_ns, depth) in &sv.queue_depth {
+                    w.begin_object();
+                    w.key("t_ns").number(t_ns);
+                    w.key("depth").uint(depth as u64);
+                    w.end_object();
+                }
+                w.end_array();
+                w.key("tenants").begin_array();
+                for t in &sv.tenants {
+                    w.begin_object();
+                    w.key("name").string(&t.name);
+                    w.key("priority").uint(t.priority as u64);
+                    w.key("requests").uint(t.requests as u64);
+                    w.key("slo_met").uint(t.slo_met as u64);
+                    w.key("mean_ns").number(t.mean_ns);
+                    w.key("p50_ns").number(t.p50_ns);
+                    w.key("p99_ns").number(t.p99_ns);
+                    w.key("p99_9_ns").number(t.p999_ns);
+                    w.key("max_ns").number(t.max_ns);
+                    w.key("mean_queue_ns").number(t.mean_queue_ns);
+                    w.end_object();
+                }
+                w.end_array();
+                w.end_object()
+            }
+            None => w.key("serving").null(),
+        };
         match &self.sweep_axis {
             Some(axis) => w.key("sweep_axis").string(axis),
             None => w.key("sweep_axis").null(),
@@ -345,6 +449,38 @@ impl Report {
                 w.end_object()
             }
             None => w.key("sweep_engine").null(),
+        };
+        match &self.qps_sweep {
+            Some(qs) => {
+                w.key("qps_sweep").begin_object();
+                match qs.slo_ns {
+                    Some(slo) => w.key("slo_ns").number(slo),
+                    None => w.key("slo_ns").null(),
+                };
+                w.key("workers").uint(qs.workers as u64);
+                w.key("qps_ref").number(qs.qps_ref);
+                match qs.knee_qps {
+                    Some(k) => w.key("knee_qps").number(k),
+                    None => w.key("knee_qps").null(),
+                };
+                w.key("rows").begin_array();
+                for row in &qs.rows {
+                    w.begin_object();
+                    w.key("qps").number(row.qps);
+                    w.key("throughput_rps").number(row.throughput_rps);
+                    w.key("goodput_rps").number(row.goodput_rps);
+                    w.key("slo_attainment").number(row.slo_attainment);
+                    w.key("mean_ns").number(row.mean_ns);
+                    w.key("p50_ns").number(row.p50_ns);
+                    w.key("p99_ns").number(row.p99_ns);
+                    w.key("p99_9_ns").number(row.p999_ns);
+                    w.key("max_queue_depth").uint(row.max_queue_depth as u64);
+                    w.end_object();
+                }
+                w.end_array();
+                w.end_object()
+            }
+            None => w.key("qps_sweep").null(),
         };
         match &self.pipeline {
             Some(p) => {
@@ -434,7 +570,7 @@ impl Report {
             "serving" => {
                 let l = self.latency.unwrap_or_default();
                 s.push_str(&format!(
-                    "requests   : {}\nmakespan   : {}\nthroughput : {:.1} req/s\nlatency    : mean {}  p50 {}  p90 {}  p99 {}\n",
+                    "requests   : {}\nmakespan   : {}\nthroughput : {:.1} req/s\nlatency    : mean {}  p50 {}  p90 {}  p99 {}  p99.9 {}\n",
                     self.requests.len(),
                     fmt_ns(self.total_ns),
                     self.throughput_rps.unwrap_or(0.0),
@@ -442,7 +578,63 @@ impl Report {
                     fmt_ns(l.p50_ns),
                     fmt_ns(l.p90_ns),
                     fmt_ns(l.p99_ns),
+                    fmt_ns(l.p999_ns),
                 ));
+                if let Some(sv) = &self.serving {
+                    s.push_str(&format!(
+                        "serving    : {} arrivals{}, goodput {:.1} req/s (SLO attainment {:.1}%), {} batch(es), peak queue {}\n",
+                        sv.arrival,
+                        sv.offered_qps
+                            .map(|q| format!(" @ {q:.1} req/s offered"))
+                            .unwrap_or_default(),
+                        sv.goodput_rps,
+                        100.0 * sv.slo_attainment,
+                        sv.batches,
+                        sv.max_queue_depth,
+                    ));
+                    if sv.tenants.len() > 1 {
+                        for t in &sv.tenants {
+                            s.push_str(&format!(
+                                "  tenant {:<10} prio {}  {} req  p99 {}  queue {}\n",
+                                t.name,
+                                t.priority,
+                                t.requests,
+                                fmt_ns(t.p99_ns),
+                                fmt_ns(t.mean_queue_ns),
+                            ));
+                        }
+                    }
+                }
+            }
+            "qps_sweep" => {
+                if let Some(qs) = &self.qps_sweep {
+                    s.push_str(&format!(
+                        "slo        : {}\nqps_ref    : {:.1} req/s\nknee       : {}\n{:>10} {:>12} {:>12} {:>10} {:>12} {:>12}\n",
+                        qs.slo_ns.map(fmt_ns).unwrap_or_else(|| "none".into()),
+                        qs.qps_ref,
+                        qs.knee_qps
+                            .map(|k| format!("{k:.1} req/s"))
+                            .unwrap_or_else(|| "not reached".into()),
+                        "qps",
+                        "goodput",
+                        "attainment",
+                        "p50",
+                        "p99",
+                        "p99.9",
+                    ));
+                    for row in &qs.rows {
+                        s.push_str(&format!(
+                            "{:>10.1} {:>12.1} {:>11.1}% {:>10} {:>12} {:>12}\n",
+                            row.qps,
+                            row.goodput_rps,
+                            100.0 * row.slo_attainment,
+                            fmt_ns(row.p50_ns),
+                            fmt_ns(row.p99_ns),
+                            fmt_ns(row.p999_ns),
+                        ));
+                    }
+                    s.push_str(&format!("engine     : {} worker(s)\n", qs.workers));
+                }
             }
             "sweep" => {
                 s.push_str(&format!(
@@ -578,7 +770,9 @@ impl Report {
             .iter()
             .map(RequestRecord::latency_ns)
             .collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a single NaN latency must
+        // not panic the report (NaN sorts last and never becomes p50/p99).
+        v.sort_by(f64::total_cmp);
         crate::stats::percentile(&v, q)
     }
 }
@@ -598,10 +792,21 @@ mod tests {
             serve.requests.push(RequestRecord {
                 id: i,
                 network: "cnn10".into(),
+                tenant: "default".into(),
                 arrival_ns: i as f64 * 1e5,
+                dispatch_ns: i as f64 * 1e5,
                 end_ns: 1e6 + i as f64 * 1e6,
             });
         }
+        serve.serving = ServingStats::from_requests(
+            "poisson",
+            Some(1000.0),
+            Some(3.5e6),
+            4,
+            &[("default".into(), 0)],
+            &serve.requests,
+            serve.makespan_ns,
+        );
         Report::from_serve(serve, vec!["nvdla".into(), "nvdla".into()])
     }
 
@@ -611,9 +816,60 @@ mod tests {
         assert_eq!(r.scenario, "serving");
         assert_eq!(r.requests.len(), 4);
         let l = r.latency.unwrap();
-        assert!(l.p50_ns <= l.p90_ns && l.p90_ns <= l.p99_ns && l.p99_ns <= l.max_ns);
+        assert!(l.p50_ns <= l.p90_ns && l.p90_ns <= l.p99_ns);
+        assert!(l.p99_ns <= l.p999_ns && l.p999_ns <= l.max_ns);
         assert!((r.throughput_rps.unwrap() - 1000.0).abs() < 1e-9);
-        assert!(r.summary().contains("p99"));
+        assert!(r.summary().contains("p99.9"));
+        assert!(r.summary().contains("poisson arrivals"));
+        let sv = r.serving.as_ref().unwrap();
+        assert_eq!(sv.slo_met, 3); // the 3.9 ms request misses the 3.5 ms SLO
+        let j = r.to_json();
+        assert!(j.contains("\"serving\":{\"arrival\":\"poisson\""), "{j}");
+        assert!(j.contains("\"goodput_rps\":"), "{j}");
+        assert!(j.contains("\"tenant\":\"default\""), "{j}");
+        assert!(j.contains("\"dispatch_ns\":"), "{j}");
+        assert!(j.contains("\"p99_9\":"), "{j}");
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_latency_percentile() {
+        let mut r = serving_report();
+        r.requests[1].end_ns = f64::NAN;
+        // Must not panic; NaN sorts to the tail, finite ranks stay sane.
+        let p50 = r.latency_percentile(50.0);
+        assert!(p50.is_finite());
+        assert!(r.latency_percentile(100.0).is_nan());
+    }
+
+    #[test]
+    fn qps_sweep_section_serializes() {
+        let rep = Report {
+            scenario: "qps_sweep".into(),
+            qps_sweep: Some(QpsSweepSummary {
+                slo_ns: Some(2e6),
+                workers: 4,
+                qps_ref: 800.0,
+                knee_qps: Some(560.0),
+                rows: vec![QpsRow {
+                    qps: 80.0,
+                    throughput_rps: 80.0,
+                    goodput_rps: 79.0,
+                    slo_attainment: 0.9875,
+                    mean_ns: 1e6,
+                    p50_ns: 9e5,
+                    p99_ns: 1.8e6,
+                    p999_ns: 1.9e6,
+                    max_queue_depth: 3,
+                }],
+            }),
+            ..Report::default()
+        };
+        let j = rep.to_json();
+        assert!(j.contains("\"qps_sweep\":{\"slo_ns\":2000000"), "{j}");
+        assert!(j.contains("\"knee_qps\":560"), "{j}");
+        assert!(j.contains("\"slo_attainment\":0.9875"), "{j}");
+        assert!(rep.summary().contains("knee"), "{}", rep.summary());
+        assert!(rep.summary().contains("4 worker(s)"), "{}", rep.summary());
     }
 
     #[test]
@@ -640,9 +896,11 @@ mod tests {
             "\"throughput_rps\"",
             "\"latency_ns\"",
             "\"requests\"",
+            "\"serving\"",
             "\"sweep_axis\"",
             "\"sweep\"",
             "\"sweep_engine\"",
+            "\"qps_sweep\"",
             "\"pipeline\"",
             "\"memsys\"",
             "\"camera\"",
@@ -666,6 +924,8 @@ mod tests {
         assert!(j.contains("\"throughput_rps\":null"));
         assert!(j.contains("\"sweep\":[]"));
         assert!(j.contains("\"sweep_engine\":null"));
+        assert!(j.contains("\"serving\":null"));
+        assert!(j.contains("\"qps_sweep\":null"));
         assert!(j.contains("\"pipeline\":null"));
         assert!(j.contains("\"memsys\":null"));
         assert!(j.contains("\"requests\":[]"));

@@ -2,6 +2,8 @@
 //! workload shape. Adding a new study to the simulator means adding a
 //! variant here (and its dispatch arm), not a new entry point.
 
+use crate::config::ServeOptions;
+
 /// Which knob a [`Scenario::Sweep`] varies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SweepAxis {
@@ -29,14 +31,22 @@ impl SweepAxis {
 pub enum Scenario {
     /// One single-batch forward pass (paper Fig 1's experiment).
     Inference,
-    /// N concurrent inference requests sharing the SoC (per-request
-    /// latency percentiles + aggregate throughput).
-    Serving {
-        /// Number of requests to simulate.
-        requests: usize,
-        /// Inter-arrival gap between consecutive requests, ns (0 = all
-        /// arrive at t = 0).
-        arrival_interval_ns: f64,
+    /// Open-loop serving: requests arrive by `ServeOptions::arrival`
+    /// (closed / Poisson / bursty / trace), queue under the dynamic
+    /// batching policy, and share the SoC across tenants (per-request
+    /// latency percentiles, goodput under SLO, queue timeline).
+    Serving(ServeOptions),
+    /// Knee-finding serving sweep: re-run the serving scenario across
+    /// offered loads (qps values, or an auto grid around the pool's
+    /// saturation rate when empty), in parallel with a shared timing
+    /// cache, and report goodput/attainment per point plus the SLO knee.
+    QpsSweep {
+        /// The serving configuration each point runs; its arrival process
+        /// must carry a rate (Poisson or bursty).
+        serve: ServeOptions,
+        /// Offered loads to simulate, requests/s. Empty = auto grid
+        /// spanning ~0.1x to ~1.3x the estimated saturation rate.
+        qps: Vec<f64>,
     },
     /// Repeat the forward pass across values of one axis (Fig 12/16-style
     /// scaling studies); per-value rows land in `Report::sweep`.
@@ -66,7 +76,8 @@ impl Scenario {
     pub fn name(&self) -> &'static str {
         match self {
             Scenario::Inference => "inference",
-            Scenario::Serving { .. } => "serving",
+            Scenario::Serving(_) => "serving",
+            Scenario::QpsSweep { .. } => "qps_sweep",
             Scenario::Sweep { .. } => "sweep",
             Scenario::Camera { .. } => "camera",
             Scenario::Training => "training",
@@ -77,7 +88,7 @@ impl Scenario {
     /// scenario. Serving is the event engine's home turf; everything else
     /// defaults to the strict serial order the paper figures use.
     pub(crate) fn default_pipeline(&self) -> bool {
-        matches!(self, Scenario::Serving { .. })
+        matches!(self, Scenario::Serving(_) | Scenario::QpsSweep { .. })
     }
 }
 
@@ -88,9 +99,14 @@ mod tests {
     #[test]
     fn names_are_stable() {
         assert_eq!(Scenario::Inference.name(), "inference");
+        assert_eq!(Scenario::Serving(ServeOptions::closed(4, 0.0)).name(), "serving");
         assert_eq!(
-            Scenario::Serving { requests: 4, arrival_interval_ns: 0.0 }.name(),
-            "serving"
+            Scenario::QpsSweep {
+                serve: ServeOptions::poisson(16, 100.0),
+                qps: vec![]
+            }
+            .name(),
+            "qps_sweep"
         );
         assert_eq!(
             Scenario::Sweep { axis: SweepAxis::Accels, values: vec![1, 2] }.name(),
@@ -104,8 +120,12 @@ mod tests {
 
     #[test]
     fn only_serving_pipelines_by_default() {
-        assert!(Scenario::Serving { requests: 1, arrival_interval_ns: 0.0 }
-            .default_pipeline());
+        assert!(Scenario::Serving(ServeOptions::closed(1, 0.0)).default_pipeline());
+        assert!(Scenario::QpsSweep {
+            serve: ServeOptions::poisson(8, 50.0),
+            qps: vec![10.0]
+        }
+        .default_pipeline());
         assert!(!Scenario::Inference.default_pipeline());
         assert!(!Scenario::Training.default_pipeline());
     }

@@ -5,14 +5,20 @@
 //! execution, timeline capture) and produces the unified [`Report`].
 
 use anyhow::{bail, Result};
+use crate::cache::TimingCache;
 use crate::camera::{self, RawFrame};
-use crate::config::{AccelKind, FunctionalMode, InterfaceKind, ServeOptions, SimOptions};
+use crate::config::{
+    AccelKind, ArrivalProcess, FunctionalMode, InterfaceKind, SimOptions, SocConfig, TenantSpec,
+};
 use crate::graph::{training_step, Graph};
 use crate::nets;
-use crate::sched::Scheduler;
+use crate::sched::{serve::plan_admission, Scheduler};
 use crate::sim;
+use std::sync::Arc;
 
-use super::report::{CameraSummary, FunctionalSummary, Report, SweepEngineSummary, SweepRow};
+use super::report::{
+    CameraSummary, FunctionalSummary, QpsRow, QpsSweepSummary, Report, SweepEngineSummary, SweepRow,
+};
 use super::scenario::{Scenario, SweepAxis};
 use super::soc::Soc;
 use super::sweep;
@@ -161,10 +167,11 @@ impl Session {
         self
     }
 
-    /// Host worker threads for [`Scenario::Sweep`] (default: 1). Sweep
-    /// points are sharded across workers with deterministic, index-based
-    /// result assembly: the report rows are bit-identical for any worker
-    /// count. Other scenarios ignore this knob.
+    /// Host worker threads for [`Scenario::Sweep`] and
+    /// [`Scenario::QpsSweep`] (default: 1). Points are sharded across
+    /// workers with deterministic, index-based result assembly: the
+    /// report rows are bit-identical for any worker count. Other
+    /// scenarios ignore this knob.
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
         self
@@ -255,24 +262,165 @@ impl Session {
                 }
                 Ok(rep)
             }
-            Scenario::Serving {
-                requests,
-                arrival_interval_ns,
-            } => {
+            Scenario::Serving(ref serve_opts) => {
                 Self::reject_functional(functional, "serving")?;
                 let opts = self.options(pool);
+                let mut serve = serve_opts.clone();
+                if serve.slo_ns.is_none() {
+                    if let Some(m) = serve.slo_multiple {
+                        if m <= 0.0 || !m.is_finite() {
+                            bail!("SLO multiple must be finite and > 0 (got {m})");
+                        }
+                        let base_ns = Self::uncontended_latency_ns(&soc_cfg, &opts, &graph);
+                        serve.slo_ns = Some(m * base_ns);
+                    }
+                }
+                let plan = plan_admission(&serve).map_err(|e| anyhow::anyhow!(e))?;
+                let graphs = Self::tenant_graphs(&plan.tenants, &graph)?;
+                let refs: Vec<&Graph> = graphs.iter().collect();
                 let mut sched = Scheduler::new(soc_cfg, opts);
-                let serve = sched.serve(
-                    &graph,
-                    &ServeOptions {
-                        requests,
-                        arrival_interval_ns,
-                    },
-                );
-                let mut rep = Report::from_serve(serve, pool_names);
+                let serve_report = sched.serve_admitted(&plan, &refs);
+                let mut rep = Report::from_serve(serve_report, pool_names);
                 if capture_timeline {
                     rep.timeline = Some(std::mem::take(&mut sched.timeline));
                 }
+                Ok(rep)
+            }
+            Scenario::QpsSweep {
+                serve: ref base_serve,
+                ref qps,
+            } => {
+                Self::reject_functional(functional, "qps_sweep")?;
+                if capture_timeline {
+                    bail!(
+                        "timeline capture is not supported in qps-sweep scenarios \
+                         (one timeline per load point; run the point of interest as \
+                         Scenario::Serving instead)"
+                    );
+                }
+                let wall_start = std::time::Instant::now();
+                let pool_size = pool.len();
+                let opts = self.options(pool);
+                // One request alone on the idle pool: anchors the SLO
+                // multiple and the auto load grid.
+                let base_ns = Self::uncontended_latency_ns(&soc_cfg, &opts, &graph);
+                let qps_ref = pool_size as f64 / (base_ns.max(1e-9) * 1e-9);
+                let mut serve = base_serve.clone();
+                if serve.slo_ns.is_none() {
+                    if let Some(m) = serve.slo_multiple {
+                        if m <= 0.0 || !m.is_finite() {
+                            bail!("SLO multiple must be finite and > 0 (got {m})");
+                        }
+                        serve.slo_ns = Some(m * base_ns);
+                    }
+                }
+                let grid: Vec<f64> = if qps.is_empty() {
+                    [0.1, 0.25, 0.5, 0.7, 0.85, 1.0, 1.15, 1.3]
+                        .iter()
+                        .map(|f| f * qps_ref)
+                        .collect()
+                } else {
+                    qps.clone()
+                };
+                // Plan every load point up front (cheap and serial) so
+                // invalid options surface as clean errors, not worker
+                // panics.
+                let mut plans = Vec::with_capacity(grid.len());
+                for &rate in &grid {
+                    if rate <= 0.0 || !rate.is_finite() {
+                        bail!("qps sweep loads must be finite and > 0 (got {rate})");
+                    }
+                    let mut point = serve.clone();
+                    point.arrival = match &serve.arrival {
+                        ArrivalProcess::Poisson { .. } => ArrivalProcess::Poisson { qps: rate },
+                        ArrivalProcess::Bursty { burst, .. } => ArrivalProcess::Bursty {
+                            qps: rate,
+                            burst: *burst,
+                        },
+                        other => bail!(
+                            "a qps sweep varies the offered load, which needs a rated \
+                             arrival process (poisson or bursty), not {}",
+                            other.tag()
+                        ),
+                    };
+                    plans.push(plan_admission(&point).map_err(|e| anyhow::anyhow!(e))?);
+                }
+                let graphs = Self::tenant_graphs(&plans[0].tenants, &graph)?;
+                let refs: Vec<&Graph> = graphs.iter().collect();
+                let workers = self.workers.clamp(1, grid.len());
+                let cache = self
+                    .use_cache
+                    .then(|| Arc::new(TimingCache::for_soc(&soc_cfg)));
+                // Shard load points across workers exactly like an axis
+                // sweep: index-addressed results, shared timing cache.
+                let reports = sweep::parallel_map(grid.len(), workers, |i| {
+                    let mut sched = Scheduler::new(soc_cfg.clone(), opts.clone());
+                    if let Some(c) = &cache {
+                        sched = sched.with_cache(c.clone());
+                    }
+                    sched.serve_admitted(&plans[i], &refs)
+                });
+                let rows: Vec<QpsRow> = grid
+                    .iter()
+                    .zip(&reports)
+                    .map(|(&rate, r)| {
+                        let sorted = r.latencies_sorted();
+                        QpsRow {
+                            qps: rate,
+                            throughput_rps: if r.makespan_ns > 0.0 {
+                                r.requests.len() as f64 / (r.makespan_ns * 1e-9)
+                            } else {
+                                0.0
+                            },
+                            goodput_rps: r.serving.goodput_rps,
+                            slo_attainment: r.serving.slo_attainment,
+                            mean_ns: r.mean_latency_ns(),
+                            p50_ns: crate::stats::percentile(&sorted, 50.0),
+                            p99_ns: crate::stats::percentile(&sorted, 99.0),
+                            p999_ns: crate::stats::percentile(&sorted, 99.9),
+                            max_queue_depth: r.serving.max_queue_depth,
+                        }
+                    })
+                    .collect();
+                // The knee: the highest load that still held the SLO
+                // target (>= 99% attainment), or — with no SLO — the
+                // highest load the pool sustained (completed >= 95% of
+                // the offered rate).
+                let has_slo = serve.slo_ns.is_some();
+                let knee_qps = rows
+                    .iter()
+                    .filter(|row| {
+                        if has_slo {
+                            row.slo_attainment >= 0.99
+                        } else {
+                            row.throughput_rps >= 0.95 * row.qps
+                        }
+                    })
+                    .map(|row| row.qps)
+                    .reduce(f64::max);
+                let first = reports
+                    .into_iter()
+                    .next()
+                    .expect("at least one load point ran");
+                let mut rep = Report::from_serve(first, pool_names);
+                rep.scenario = "qps_sweep".into();
+                // The per-request sections describe only the first load
+                // point; drop them so the sweep report is not mistaken
+                // for one serving run.
+                rep.requests.clear();
+                rep.latency = None;
+                rep.serving = None;
+                rep.throughput_rps = None;
+                rep.pipeline = None;
+                rep.memsys = None;
+                rep.sim_wallclock_ns = wall_start.elapsed().as_nanos() as f64;
+                rep.qps_sweep = Some(QpsSweepSummary {
+                    slo_ns: serve.slo_ns,
+                    workers,
+                    qps_ref,
+                    knee_qps,
+                    rows,
+                });
                 Ok(rep)
             }
             Scenario::Sweep { axis, ref values } => {
@@ -431,6 +579,28 @@ impl Session {
         }
     }
 
+    /// One request alone on the idle pool: the latency that anchors
+    /// `ServeOptions::slo_multiple` and the qps-sweep auto grid.
+    fn uncontended_latency_ns(soc: &SocConfig, opts: &SimOptions, graph: &Graph) -> f64 {
+        Scheduler::new(soc.clone(), opts.clone()).run(graph).total_ns
+    }
+
+    /// Resolve the per-tenant graphs for a serving plan: a tenant whose
+    /// network is empty or names the base graph shares it; anything else
+    /// is built from the zoo.
+    fn tenant_graphs(tenants: &[TenantSpec], base: &Graph) -> Result<Vec<Graph>> {
+        tenants
+            .iter()
+            .map(|t| {
+                if t.network.is_empty() || t.network == base.name {
+                    Ok(base.clone())
+                } else {
+                    nets::build_network(&t.network)
+                }
+            })
+            .collect()
+    }
+
     /// Functional tile execution only makes sense where a single forward
     /// pass is validated; reject it elsewhere instead of silently
     /// dropping the knob.
@@ -456,6 +626,7 @@ pub fn quick_run(network: &str, scenario: Scenario) -> Result<Report> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ServeOptions;
 
     #[test]
     fn inference_runs_and_reports() {
@@ -475,10 +646,7 @@ mod tests {
     fn serving_defaults_to_pipelined_and_reports_percentiles() {
         let rep = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
             .network("lenet5")
-            .scenario(Scenario::Serving {
-                requests: 4,
-                arrival_interval_ns: 0.0,
-            })
+            .scenario(Scenario::Serving(ServeOptions::closed(4, 0.0)))
             .run()
             .unwrap();
         assert_eq!(rep.requests.len(), 4);
@@ -486,6 +654,111 @@ mod tests {
         let l = rep.latency.unwrap();
         assert!(l.p50_ns > 0.0 && l.p50_ns <= l.p90_ns && l.p90_ns <= l.p99_ns);
         assert!(rep.throughput_rps.unwrap() > 0.0);
+        let sv = rep.serving.unwrap();
+        assert_eq!(sv.arrival, "closed");
+        assert_eq!(sv.slo_attainment, 1.0);
+    }
+
+    #[test]
+    fn open_loop_serving_reports_slo_and_queue() {
+        let mut serve = ServeOptions::poisson(8, 5_000.0);
+        serve.slo_multiple = Some(4.0);
+        let rep = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+            .network("lenet5")
+            .scenario(Scenario::Serving(serve))
+            .run()
+            .unwrap();
+        assert_eq!(rep.requests.len(), 8);
+        let sv = rep.serving.unwrap();
+        assert_eq!(sv.arrival, "poisson");
+        assert!(sv.slo_ns.unwrap() > 0.0);
+        assert!(sv.goodput_rps >= 0.0);
+        assert!(!sv.queue_depth.is_empty());
+        // Arrivals are stamped by the plan: latency = end - arrival, so
+        // every request is at least dispatch-delayed, never negative.
+        for r in &rep.requests {
+            assert!(r.dispatch_ns >= r.arrival_ns);
+            assert!(r.latency_ns() > 0.0);
+        }
+    }
+
+    #[test]
+    fn multi_tenant_serving_resolves_networks_and_reports_tenants() {
+        let mut serve = ServeOptions::poisson(6, 10_000.0);
+        serve.tenants = vec![
+            TenantSpec::new("a", "lenet5"),
+            TenantSpec {
+                priority: 2,
+                ..TenantSpec::new("b", "minerva")
+            },
+        ];
+        let rep = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+            .network("lenet5")
+            .scenario(Scenario::Serving(serve))
+            .run()
+            .unwrap();
+        let sv = rep.serving.unwrap();
+        assert_eq!(sv.tenants.len(), 2);
+        assert_eq!(
+            sv.tenants.iter().map(|t| t.requests).sum::<usize>(),
+            rep.requests.len()
+        );
+        // Tenant b's requests ran minerva, not the base lenet5 graph.
+        assert!(rep
+            .requests
+            .iter()
+            .filter(|r| r.tenant == "b")
+            .all(|r| r.network == "minerva"));
+    }
+
+    #[test]
+    fn qps_sweep_finds_rows_and_is_worker_invariant() {
+        let run = |workers: usize| {
+            let mut serve = ServeOptions::poisson(8, 1.0);
+            serve.slo_multiple = Some(8.0);
+            Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
+                .network("lenet5")
+                .scenario(Scenario::QpsSweep {
+                    serve,
+                    qps: vec![],
+                })
+                .workers(workers)
+                .run()
+                .unwrap()
+        };
+        let base = run(1);
+        assert_eq!(base.scenario, "qps_sweep");
+        let qs = base.qps_sweep.as_ref().unwrap();
+        assert_eq!(qs.rows.len(), 8);
+        assert!(qs.qps_ref > 0.0);
+        assert!(qs.slo_ns.unwrap() > 0.0);
+        // Low offered load must hold the SLO, so a knee exists.
+        assert!(qs.rows[0].slo_attainment > 0.99, "{:?}", qs.rows[0]);
+        assert!(qs.knee_qps.is_some());
+        // Attainment cannot improve as load rises monotonically... it can
+        // plateau; just pin the endpoints.
+        assert!(qs.rows[0].p99_ns <= qs.rows[qs.rows.len() - 1].p99_ns * 1.0001);
+        // Sharding the load grid must not change a single row bit.
+        let sharded = run(4);
+        let qs4 = sharded.qps_sweep.as_ref().unwrap();
+        assert_eq!(qs4.workers, 4);
+        for (a, b) in qs.rows.iter().zip(&qs4.rows) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+        assert_eq!(qs.knee_qps, qs4.knee_qps);
+    }
+
+    #[test]
+    fn qps_sweep_rejects_unrated_arrivals() {
+        let err = Session::on(Soc::default())
+            .network("lenet5")
+            .scenario(Scenario::QpsSweep {
+                serve: ServeOptions::closed(4, 0.0),
+                qps: vec![100.0],
+            })
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("poisson"), "{err}");
     }
 
     #[test]
@@ -602,10 +875,7 @@ mod tests {
         let err = Session::on(Soc::default())
             .network("lenet5")
             .functional(FunctionalMode::Native)
-            .scenario(Scenario::Serving {
-                requests: 2,
-                arrival_interval_ns: 0.0,
-            })
+            .scenario(Scenario::Serving(ServeOptions::closed(2, 0.0)))
             .run()
             .unwrap_err();
         assert!(format!("{err}").contains("functional"), "{err}");

@@ -14,6 +14,7 @@
 //! (see [`crate::cache`]), so cache on/off is also bit-identical — both
 //! properties are enforced by `tests/sweep_parallel.rs`.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -60,45 +61,67 @@ pub(crate) fn run_sweep(
 ) -> SweepOutcome {
     let cache = use_cache.then(|| Arc::new(TimingCache::for_soc(soc)));
     let workers = workers.clamp(1, points.len().max(1));
-    let run_point = |p: &SweepPoint| -> SimReport {
+    let reports = parallel_map(points.len(), workers, |i| {
+        let p = &points[i];
         let mut sched = Scheduler::new(soc.clone(), p.opts.clone());
         if let Some(c) = &cache {
             sched = sched.with_cache(c.clone());
         }
         sched.run(graph)
-    };
-    let reports: Vec<SimReport> = if workers <= 1 {
-        points.iter().map(run_point).collect()
-    } else {
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<SimReport>>> =
-            points.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= points.len() {
-                        break;
-                    }
-                    let report = run_point(&points[i]);
-                    *slots[i].lock().unwrap() = Some(report);
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .map(|m| {
-                m.into_inner()
-                    .unwrap()
-                    .expect("every sweep point was simulated")
-            })
-            .collect()
-    };
+    });
     SweepOutcome {
         reports,
         workers,
         cache,
     }
+}
+
+/// Map `f` over `0..n`, sharded across `workers` OS threads, returning
+/// results in index order (dynamic sharding off a shared atomic counter;
+/// `workers <= 1` runs serially on the caller's thread).
+///
+/// A panicking call cannot poison the engine: each invocation runs under
+/// `catch_unwind`, its slot stores the `thread::Result`, and the first
+/// panic (in index order) is re-raised on the calling thread with its
+/// *original* payload once all workers have drained. Result locks are
+/// recovered with `into_inner` on poison, so the caller sees "boom from
+/// point 3", never an opaque `PoisonError` double-panic.
+pub(crate) fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<std::thread::Result<T>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let outcome = catch_unwind(AssertUnwindSafe(|| f(i)));
+                *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(outcome);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            match m
+                .into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .expect("every index was mapped")
+            {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -152,6 +175,30 @@ mod tests {
             "{stats:?}"
         );
         assert!(stats.plan_misses > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn parallel_map_is_index_ordered() {
+        let out = parallel_map(16, 4, |i| i * i);
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_panic_surfaces_the_original_payload() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map(4, 2, |i| {
+                if i == 2 {
+                    panic!("boom from point {i}");
+                }
+                i * 10
+            })
+        });
+        let payload = caught.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom from point 2"), "{msg}");
     }
 
     #[test]

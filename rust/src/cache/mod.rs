@@ -237,7 +237,7 @@ impl TimingCache {
                     .collect::<Vec<_>>()
             })
             .collect();
-        v.sort_by(|a, b| b.3.compute_ns.partial_cmp(&a.3.compute_ns).unwrap());
+        v.sort_by(|a, b| b.3.compute_ns.total_cmp(&a.3.compute_ns));
         v
     }
 }

@@ -389,23 +389,160 @@ impl Default for SimOptions {
     }
 }
 
-/// Serving-mode knobs: a batch of concurrent inference requests sharing
-/// one SoC (multi-batch/multi-network serving on the event-driven
+/// How serving requests arrive at the admission queue. Every process is
+/// seeded and deterministic: the same [`ServeOptions::seed`] produces a
+/// bit-identical arrival trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Closed batch (the pre-open-loop model): request `i` arrives at
+    /// exactly `i * interval_ns` (0 = all requests at t = 0). Consumes no
+    /// randomness, so it reproduces the legacy serving schedule
+    /// bit-for-bit.
+    Closed {
+        /// Inter-arrival gap between consecutive requests, ns.
+        interval_ns: f64,
+    },
+    /// Open-loop Poisson arrivals: exponentially distributed inter-arrival
+    /// gaps with mean `1/qps` seconds.
+    Poisson {
+        /// Offered load, requests per second.
+        qps: f64,
+    },
+    /// Bursty open-loop arrivals: bursts of `burst` coincident requests
+    /// whose burst epochs are Poisson at `qps / burst`, so the mean
+    /// offered load stays `qps` while the instantaneous queue depth spikes.
+    Bursty {
+        /// Mean offered load, requests per second.
+        qps: f64,
+        /// Requests per burst (>= 1; 1 degenerates to `Poisson`).
+        burst: usize,
+    },
+    /// Trace-driven arrivals: explicit monotone arrival offsets (ns) for
+    /// one trace period. Requests beyond the trace length replay the
+    /// trace shifted by whole periods (period = last offset + mean gap).
+    Trace {
+        /// Arrival offsets within one period, ns, non-decreasing.
+        arrivals_ns: Vec<f64>,
+    },
+}
+
+impl ArrivalProcess {
+    /// Short tag used in reports (`closed`, `poisson`, `bursty`, `trace`).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Closed { .. } => "closed",
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Trace { .. } => "trace",
+        }
+    }
+
+    /// Mean offered load in requests/second, where the process defines
+    /// one (`None` for closed batches and traces).
+    pub fn offered_qps(&self) -> Option<f64> {
+        match self {
+            ArrivalProcess::Poisson { qps } | ArrivalProcess::Bursty { qps, .. } => Some(*qps),
+            _ => None,
+        }
+    }
+}
+
+/// Dynamic-batching policy: requests queue per tenant and a batch
+/// dispatches when it reaches `max_batch` requests (queue-depth
+/// pressure) or when its oldest request has waited `max_delay_ns`
+/// (deadline pressure) — never on a fixed size alone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are queued (>= 1).
+    pub max_batch: usize,
+    /// Dispatch when the oldest queued request has waited this long, ns.
+    pub max_delay_ns: f64,
+}
+
+/// One tenant of a shared serving pool: a named request class bound to a
+/// network, with an arrival-mix weight and a dispatch priority.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant name (report key).
+    pub name: String,
+    /// Network this tenant's requests run (empty = the session network).
+    pub network: String,
+    /// Relative share of the arrival mix (> 0).
+    pub weight: f64,
+    /// Dispatch priority: higher dispatches first among requests ready at
+    /// the same instant.
+    pub priority: u32,
+}
+
+impl TenantSpec {
+    /// A tenant with weight 1 and priority 0.
+    pub fn new(name: &str, network: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            network: network.to_string(),
+            weight: 1.0,
+            priority: 0,
+        }
+    }
+}
+
+/// Serving-mode knobs: the arrival process feeding the admission queue,
+/// the SLO and dynamic-batching policy, and the tenant mix sharing the
+/// SoC pool (multi-batch/multi-network serving on the event-driven
 /// scheduler).
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
-    /// Number of concurrent inference requests to simulate.
+    /// Number of requests to simulate.
     pub requests: usize,
-    /// Inter-arrival gap between consecutive requests in ns (0 = all
-    /// requests arrive at t = 0).
-    pub arrival_interval_ns: f64,
+    /// How requests arrive (default: closed batch, all at t = 0).
+    pub arrival: ArrivalProcess,
+    /// Latency SLO, ns: requests finishing within this of their arrival
+    /// count toward goodput. `None` = no SLO (goodput = throughput).
+    pub slo_ns: Option<f64>,
+    /// SLO as a multiple of the uncontended single-request latency
+    /// (resolved by the session when `slo_ns` is `None`).
+    pub slo_multiple: Option<f64>,
+    /// Dynamic-batching policy (`None` = dispatch each request on
+    /// arrival).
+    pub batching: Option<BatchPolicy>,
+    /// Tenant mix (empty = one anonymous tenant running the session
+    /// network).
+    pub tenants: Vec<TenantSpec>,
+    /// Seed for the arrival process and tenant assignment.
+    pub seed: u64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
         Self {
             requests: 4,
-            arrival_interval_ns: 0.0,
+            arrival: ArrivalProcess::Closed { interval_ns: 0.0 },
+            slo_ns: None,
+            slo_multiple: None,
+            batching: None,
+            tenants: Vec::new(),
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// The legacy closed-batch workload: `requests` requests arriving
+    /// `interval_ns` apart, no SLO, no batching, one tenant.
+    pub fn closed(requests: usize, interval_ns: f64) -> Self {
+        Self {
+            requests,
+            arrival: ArrivalProcess::Closed { interval_ns },
+            ..Self::default()
+        }
+    }
+
+    /// Open-loop Poisson arrivals at `qps` requests/second.
+    pub fn poisson(requests: usize, qps: f64) -> Self {
+        Self {
+            requests,
+            arrival: ArrivalProcess::Poisson { qps },
+            ..Self::default()
         }
     }
 }
@@ -538,7 +675,12 @@ mod tests {
     fn serving_defaults_and_serial_default() {
         let s = ServeOptions::default();
         assert_eq!(s.requests, 4);
-        assert_eq!(s.arrival_interval_ns, 0.0);
+        assert_eq!(s.arrival, ArrivalProcess::Closed { interval_ns: 0.0 });
+        assert!(s.slo_ns.is_none() && s.batching.is_none() && s.tenants.is_empty());
+        assert_eq!(ServeOptions::closed(8, 50.0).requests, 8);
+        assert_eq!(ServeOptions::poisson(8, 100.0).arrival.offered_qps(), Some(100.0));
+        assert_eq!(ArrivalProcess::Closed { interval_ns: 0.0 }.offered_qps(), None);
+        assert_eq!(ArrivalProcess::Poisson { qps: 5.0 }.tag(), "poisson");
         // The paper-figure benches rely on the serial schedule by default.
         assert!(!SimOptions::default().pipeline);
         assert!(!SimOptions::optimized().pipeline);

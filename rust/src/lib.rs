@@ -76,29 +76,34 @@
 //! println!("{}", report.to_json()); // versioned smaug.report/v1 schema
 //! ```
 //!
-//! ## Heterogeneous SoCs and serving
+//! ## Heterogeneous SoCs and open-loop serving
 //!
 //! The accelerator pool is composed one instance at a time and may mix
-//! kinds; serving reports per-request latency percentiles plus aggregate
-//! throughput from the same unified report:
+//! kinds; serving is open-loop — requests arrive by a seeded arrival
+//! process (Poisson/bursty/trace), queue under a latency SLO with
+//! dynamic batching, and the unified report carries p99/p99.9 tails,
+//! goodput under the SLO, and per-tenant breakdowns:
 //!
 //! ```no_run
 //! use smaug::api::{Scenario, Session, Soc};
-//! use smaug::config::AccelKind;
+//! use smaug::config::{AccelKind, ServeOptions};
 //!
 //! let soc = Soc::builder()
 //!     .accel(AccelKind::Nvdla)
 //!     .accel(AccelKind::Systolic)
 //!     .accels(AccelKind::Nvdla, 2)
 //!     .build();
+//! let mut serve = ServeOptions::poisson(64, 2000.0); // 64 reqs @ 2000 req/s
+//! serve.slo_ns = Some(5e6); // 5 ms SLO
 //! let report = Session::on(soc)
 //!     .network("resnet50")
 //!     .threads(8)
-//!     .scenario(Scenario::Serving { requests: 8, arrival_interval_ns: 50_000.0 })
+//!     .scenario(Scenario::Serving(serve))
 //!     .run()
 //!     .unwrap();
 //! println!("{}", report.summary());
 //! println!("p99 latency: {} ns", report.latency.unwrap().p99_ns);
+//! println!("goodput: {:.1} req/s", report.serving.unwrap().goodput_rps);
 //! ```
 //!
 //! Sweeps ([`api::SweepAxis`]), the paper-§V camera pipeline, and a

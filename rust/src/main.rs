@@ -11,7 +11,12 @@
 //!           [--train] [--double-buffer] [--inter-accel-reduction]
 //!           [--pipeline] [--tile-pipeline]
 //!           [--report summary|ops|timeline|json|csv|trace-json]
-//! smaug serve --net resnet50 [--requests 8] [--interval-us 50]
+//! smaug serve --net resnet50 [--requests 64] [--arrival closed|poisson|bursty|trace]
+//!           [--qps F] [--burst N] [--trace file] [--interval-us F] [--seed N]
+//!           [--slo-ms F | --slo-x F] [--max-batch N] [--max-delay-us F]
+//!           [--tenants net[:weight[:prio]],...]
+//!           [--sweep-qps auto|q1,q2,...] [--workers N] [--no-cache]
+//!           [--bench-json PATH]
 //!           [--accels 4] [--threads 8] [--no-pipeline] [--report summary|json]
 //! smaug sweep --net cnn10 [--axis accels|threads] [--values 1,2,4,8]
 //!           [--workers N] [--no-cache] [--report summary|json]
@@ -26,7 +31,9 @@
 
 use anyhow::{bail, Context, Result};
 use smaug::api::{Report, Scenario, Session, Soc, SweepAxis};
-use smaug::config::{AccelKind, SimOptions, SocConfig};
+use smaug::config::{
+    AccelKind, ArrivalProcess, BatchPolicy, ServeOptions, SimOptions, SocConfig, TenantSpec,
+};
 use smaug::nets;
 use smaug::util::{fmt_ns, JsonWriter};
 
@@ -62,7 +69,11 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction]\n\
                  \x20          [--dram-channels N] [--link-gbps F] [--bus-gbps F]\n\
                  \x20          [--pipeline] [--tile-pipeline]\n\
-                 \x20 smaug serve --net <name> [--requests N] [--interval-us F]\n\
+                 \x20 smaug serve --net <name> [--requests N] [--arrival closed|poisson|bursty|trace]\n\
+                 \x20          [--qps F] [--burst N] [--trace file] [--interval-us F] [--seed N]\n\
+                 \x20          [--slo-ms F | --slo-x F] [--max-batch N] [--max-delay-us F]\n\
+                 \x20          [--tenants net[:weight[:prio]],...]\n\
+                 \x20          [--sweep-qps auto|q1,q2,...] [--workers N] [--no-cache] [--bench-json PATH]\n\
                  \x20          [--accels N|kinds] [--threads N] [--no-pipeline] [--report summary|json]\n\
                  \x20 smaug sweep --net <name> [--axis accels|threads] [--values 1,2,4,8]\n\
                  \x20          [--workers N] [--no-cache] [--report summary|json]\n\
@@ -218,28 +229,221 @@ fn print_summary_or_json(report: &Report, kind: &str) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> Result<()> {
-    if flag(args, "--net").is_none() {
-        bail!("--net <name> is required (see `smaug nets`)");
-    }
+/// Parse the serving workload flags into [`ServeOptions`].
+fn parse_serve_options(args: &[String], sweeping_qps: bool) -> Result<ServeOptions> {
+    let defaults = ServeOptions::default();
     let requests = flag(args, "--requests")
         .map(str::parse::<usize>)
         .transpose()
         .context("--requests")?
-        .unwrap_or(4);
-    let arrival_interval_ns = flag(args, "--interval-us")
+        .unwrap_or(defaults.requests);
+    let seed = flag(args, "--seed")
+        .map(str::parse::<u64>)
+        .transpose()
+        .context("--seed")?
+        .unwrap_or(defaults.seed);
+    let qps = flag(args, "--qps")
         .map(str::parse::<f64>)
         .transpose()
-        .context("--interval-us")?
-        .unwrap_or(0.0)
-        * 1000.0;
-    let report = build_session(args)?
-        .scenario(Scenario::Serving {
-            requests,
-            arrival_interval_ns,
+        .context("--qps")?;
+    // A qps sweep substitutes the per-point rate, so `--qps` is optional
+    // there; a plain open-loop serve needs the offered rate.
+    let rate = |kind: &str| -> Result<f64> {
+        match qps {
+            Some(q) => Ok(q),
+            None if sweeping_qps => Ok(1.0),
+            None => bail!("--arrival {kind} needs --qps <requests/s>"),
+        }
+    };
+    let arrival_kind = flag(args, "--arrival")
+        .unwrap_or(if sweeping_qps { "poisson" } else { "closed" });
+    let arrival = match arrival_kind {
+        "closed" => ArrivalProcess::Closed {
+            interval_ns: flag(args, "--interval-us")
+                .map(str::parse::<f64>)
+                .transpose()
+                .context("--interval-us")?
+                .unwrap_or(0.0)
+                * 1000.0,
+        },
+        "poisson" => ArrivalProcess::Poisson { qps: rate("poisson")? },
+        "bursty" => ArrivalProcess::Bursty {
+            qps: rate("bursty")?,
+            burst: flag(args, "--burst")
+                .map(str::parse::<usize>)
+                .transpose()
+                .context("--burst")?
+                .unwrap_or(4),
+        },
+        "trace" => {
+            let path = flag(args, "--trace")
+                .context("--arrival trace needs --trace <file> (request offsets in µs)")?;
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading arrival trace {path}"))?;
+            let arrivals_ns = text
+                .split(|c: char| c.is_whitespace() || c == ',')
+                .filter(|t| !t.is_empty())
+                .map(|t| t.parse::<f64>().map(|us| us * 1000.0))
+                .collect::<std::result::Result<Vec<f64>, _>>()
+                .context("--trace offsets must be numbers (µs from start)")?;
+            ArrivalProcess::Trace { arrivals_ns }
+        }
+        other => bail!("unknown arrival '{other}' (closed|poisson|bursty|trace)"),
+    };
+    let slo_ns = flag(args, "--slo-ms")
+        .map(str::parse::<f64>)
+        .transpose()
+        .context("--slo-ms")?
+        .map(|ms| ms * 1e6);
+    let slo_multiple = flag(args, "--slo-x")
+        .map(str::parse::<f64>)
+        .transpose()
+        .context("--slo-x")?;
+    let max_batch = flag(args, "--max-batch")
+        .map(str::parse::<usize>)
+        .transpose()
+        .context("--max-batch")?;
+    let max_delay_us = flag(args, "--max-delay-us")
+        .map(str::parse::<f64>)
+        .transpose()
+        .context("--max-delay-us")?;
+    let batching = if max_batch.is_some() || max_delay_us.is_some() {
+        let max_delay_ns = match (max_delay_us, slo_ns) {
+            (Some(us), _) => us * 1000.0,
+            // Classic SLO-aware default: spend at most a quarter of the
+            // budget waiting to batch.
+            (None, Some(slo)) => slo / 4.0,
+            (None, None) => bail!(
+                "--max-batch needs --max-delay-us <f> (or --slo-ms, which defaults the \
+                 batching delay to SLO/4)"
+            ),
+        };
+        Some(BatchPolicy {
+            max_batch: max_batch.unwrap_or(8),
+            max_delay_ns,
         })
-        .run()?;
-    print_summary_or_json(&report, flag(args, "--report").unwrap_or("summary"))
+    } else {
+        None
+    };
+    let tenants = match flag(args, "--tenants") {
+        None => vec![],
+        Some(spec) => {
+            let mut v = Vec::new();
+            for (i, part) in spec
+                .split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .enumerate()
+            {
+                let mut it = part.split(':');
+                let net = it.next().unwrap_or("").to_string();
+                let weight: f64 = it
+                    .next()
+                    .map(str::parse)
+                    .transpose()
+                    .context("--tenants net[:weight[:priority]]")?
+                    .unwrap_or(1.0);
+                let priority: u32 = it
+                    .next()
+                    .map(str::parse)
+                    .transpose()
+                    .context("--tenants net[:weight[:priority]]")?
+                    .unwrap_or(0);
+                v.push(TenantSpec {
+                    weight,
+                    priority,
+                    ..TenantSpec::new(&format!("t{i}:{net}"), &net)
+                });
+            }
+            v
+        }
+    };
+    Ok(ServeOptions {
+        requests,
+        arrival,
+        slo_ns,
+        slo_multiple,
+        batching,
+        tenants,
+        seed,
+    })
+}
+
+/// `BENCH_serve.json`: top-level knee/attainment metrics for the CI
+/// bench gate (`scripts/compare_bench.py`) plus the per-load rows.
+fn write_serve_bench(report: &Report, path: &str) -> Result<()> {
+    let qs = report
+        .qps_sweep
+        .as_ref()
+        .context("--sweep-qps report carries no qps_sweep section")?;
+    let knee_row = qs
+        .rows
+        .iter()
+        .find(|r| Some(r.qps) == qs.knee_qps);
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("serve_qps");
+    w.key("network").string(&report.network);
+    w.key("qps_ref").number(qs.qps_ref);
+    match qs.knee_qps {
+        Some(k) => w.key("knee_qps").number(k),
+        None => w.key("knee_qps").null(),
+    };
+    w.key("knee_ratio")
+        .number(qs.knee_qps.map_or(0.0, |k| k / qs.qps_ref.max(1e-9)));
+    w.key("slo_attainment_low_load")
+        .number(qs.rows.first().map_or(0.0, |r| r.slo_attainment));
+    w.key("goodput_rps_at_knee")
+        .number(knee_row.map_or(0.0, |r| r.goodput_rps));
+    w.key("rows").begin_array();
+    for row in &qs.rows {
+        w.begin_object();
+        w.key("qps").number(row.qps);
+        w.key("throughput_rps").number(row.throughput_rps);
+        w.key("goodput_rps").number(row.goodput_rps);
+        w.key("slo_attainment").number(row.slo_attainment);
+        w.key("p99_ns").number(row.p99_ns);
+        w.end_object();
+    }
+    w.end_array();
+    w.end_object();
+    std::fs::write(path, w.finish() + "\n").with_context(|| format!("writing {path}"))?;
+    eprintln!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    if flag(args, "--net").is_none() {
+        bail!("--net <name> is required (see `smaug nets`)");
+    }
+    let sweep_spec = flag(args, "--sweep-qps");
+    let serve = parse_serve_options(args, sweep_spec.is_some())?;
+    let report_kind = flag(args, "--report").unwrap_or("summary");
+    if let Some(spec) = sweep_spec {
+        let qps: Vec<f64> = if spec == "auto" {
+            vec![]
+        } else {
+            spec.split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .context("--sweep-qps takes `auto` or a comma list of rates")
+                })
+                .collect::<Result<_>>()?
+        };
+        let mut session = build_session(args)?.scenario(Scenario::QpsSweep { serve, qps });
+        if let Some(v) = flag(args, "--workers") {
+            session = session.workers(v.parse().context("--workers")?);
+        }
+        if has(args, "--no-cache") {
+            session = session.cache(false);
+        }
+        let report = session.run()?;
+        write_serve_bench(&report, flag(args, "--bench-json").unwrap_or("BENCH_serve.json"))?;
+        return print_summary_or_json(&report, report_kind);
+    }
+    let report = build_session(args)?.scenario(Scenario::Serving(serve)).run()?;
+    print_summary_or_json(&report, report_kind)
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {

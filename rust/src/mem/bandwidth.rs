@@ -114,7 +114,7 @@ impl BandwidthTimeline {
         let mut local: Vec<Seg> = self.segs[lo..hi].to_vec();
         local.extend(add);
         let mut bounds: Vec<f64> = local.iter().flat_map(|s| [s.t0, s.t1]).collect();
-        bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bounds.sort_by(f64::total_cmp);
         bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
         let mut out: Vec<Seg> = Vec::with_capacity(bounds.len());
         for w in bounds.windows(2) {

@@ -53,6 +53,7 @@
 //! reference the event engine is validated against.
 
 mod event;
+pub mod serve;
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -65,7 +66,9 @@ use crate::energy::EnergyAccount;
 use crate::graph::{Graph, Op, OpKind};
 use crate::ir::{OpWork, TaskGraph};
 use crate::mem::{MemorySystem, Route, TrafficClass, TransferReq, LLC_USABLE_FRAC};
-use crate::stats::{Breakdown, OpRecord, PipelineStats, RequestRecord, ServeReport, SimReport};
+use crate::stats::{
+    Breakdown, OpRecord, PipelineStats, RequestRecord, ServeReport, ServingStats, SimReport,
+};
 use crate::tiling::{plan_conv, plan_eltwise, plan_fc, plan_pool, TilingPlan};
 use crate::trace::{EventKind, Lane, Timeline};
 
@@ -475,38 +478,104 @@ impl Scheduler {
         )
     }
 
-    /// Serving mode: simulate `serve.requests` concurrent inference
-    /// requests of `graph` sharing this SoC, arriving
-    /// `serve.arrival_interval_ns` apart, and report per-request latency
-    /// percentiles plus aggregate throughput.
+    /// Serving mode: plan the admission queue from `serve` (arrival
+    /// process, dynamic batching, tenant mix — see [`serve::plan_admission`])
+    /// and simulate the planned workload on this SoC, every tenant running
+    /// `graph`. For per-tenant networks resolve the graphs yourself and
+    /// call [`Scheduler::serve_admitted`] (the session front door does).
+    ///
+    /// Panics on unsatisfiable options (zero qps, empty trace, ...); use
+    /// [`serve::plan_admission`] directly for a recoverable error.
     pub fn serve(&mut self, graph: &Graph, serve: &ServeOptions) -> ServeReport {
-        let n = serve.requests.max(1);
-        let gap = serve.arrival_interval_ns.max(0.0);
-        let jobs: Vec<(f64, &Graph)> = (0..n).map(|i| (i as f64 * gap, graph)).collect();
-        self.serve_workload(&jobs)
+        let plan = serve::plan_admission(serve).expect("invalid ServeOptions");
+        let graphs: Vec<&Graph> = vec![graph; plan.tenants.len()];
+        self.serve_admitted(&plan, &graphs)
+    }
+
+    /// Serving mode over a planned admission queue: request `r` of the
+    /// plan enters the event engine at its dispatch time and runs
+    /// `graphs[r.tenant]`. Request latency is measured from *arrival*
+    /// (queueing + service), so batching delay is visible in the tail.
+    pub fn serve_admitted(
+        &mut self,
+        plan: &serve::AdmissionPlan,
+        graphs: &[&Graph],
+    ) -> ServeReport {
+        let jobs: Vec<(f64, &Graph)> = plan
+            .requests
+            .iter()
+            .map(|r| (r.dispatch_ns, graphs[r.tenant]))
+            .collect();
+        self.serve_core(&jobs, Some(plan))
     }
 
     /// Serving mode over an explicit workload: `(arrival_ns, graph)` per
     /// request — requests may run different networks (multi-network
-    /// serving).
+    /// serving). Kept as the raw single-tenant entry point; the serving
+    /// section degenerates to a closed single-tenant model.
     pub fn serve_workload(&mut self, jobs: &[(f64, &Graph)]) -> ServeReport {
+        self.serve_core(jobs, None)
+    }
+
+    fn serve_core(
+        &mut self,
+        jobs: &[(f64, &Graph)],
+        plan: Option<&serve::AdmissionPlan>,
+    ) -> ServeReport {
         let wall_start = std::time::Instant::now();
         let outcomes = event::run_jobs(self, jobs);
         let mut requests = Vec::with_capacity(jobs.len());
         let mut makespan = 0.0f64;
         let mut breakdown = Breakdown::default();
-        for (i, ((arrival, graph), outcome)) in jobs.iter().zip(&outcomes).enumerate() {
+        for (i, ((submit_ns, graph), outcome)) in jobs.iter().zip(&outcomes).enumerate() {
             makespan = makespan.max(outcome.end_ns);
             for r in &outcome.records {
                 breakdown.add_record(r);
             }
+            let (id, tenant, arrival_ns, dispatch_ns) = match plan {
+                Some(p) => {
+                    let a = &p.requests[i];
+                    (
+                        a.id,
+                        p.tenants[a.tenant].name.clone(),
+                        a.arrival_ns,
+                        a.dispatch_ns,
+                    )
+                }
+                None => (i, "default".to_string(), *submit_ns, *submit_ns),
+            };
             requests.push(RequestRecord {
-                id: i,
+                id,
                 network: graph.name.clone(),
-                arrival_ns: *arrival,
+                tenant,
+                arrival_ns,
+                dispatch_ns,
                 end_ns: outcome.end_ns,
             });
         }
+        let serving = match plan {
+            Some(p) => ServingStats::from_requests(
+                p.arrival,
+                p.offered_qps,
+                p.slo_ns,
+                p.batches,
+                &p.tenants
+                    .iter()
+                    .map(|t| (t.name.clone(), t.priority))
+                    .collect::<Vec<_>>(),
+                &requests,
+                makespan,
+            ),
+            None => ServingStats::from_requests(
+                "closed",
+                None,
+                None,
+                requests.len(),
+                &[("default".to_string(), 0)],
+                &requests,
+                makespan,
+            ),
+        };
         // Memory-system energy from aggregate traffic (the per-run charge
         // finish_report applies for single-pass simulations).
         self.energy
@@ -526,6 +595,7 @@ impl Scheduler {
             dram_bytes: self.mem.stats.dram_bytes,
             llc_bytes: self.mem.stats.llc_bytes,
             energy: self.energy,
+            serving,
             pipeline,
             memsys: self.mem.snapshot(makespan),
             sim_wallclock_ns: wall_start.elapsed().as_nanos() as f64,
@@ -789,7 +859,7 @@ impl Scheduler {
         let groups = std::mem::take(&mut st.groups);
         for (_gid, g) in groups.iter().filter(|(_, g)| g.blocks > 1) {
             let a = (0..n_accels)
-                .min_by(|&x, &y| pool.busy[x].partial_cmp(&pool.busy[y]).unwrap())
+                .min_by(|&x, &y| pool.busy[x].total_cmp(&pool.busy[y]))
                 .unwrap();
             let merge_bytes = ((g.blocks - 1) as usize * g.mn * self.soc.elem_bytes) as u64;
             let rin = self.mem.transfer(TransferReq {
@@ -1225,13 +1295,7 @@ mod tests {
         };
         let total = Scheduler::new(SocConfig::default(), o.clone()).run(&g).total_ns;
         let mut s = Scheduler::new(SocConfig::default(), o);
-        let r = s.serve(
-            &g,
-            &ServeOptions {
-                requests: 1,
-                arrival_interval_ns: 0.0,
-            },
-        );
+        let r = s.serve(&g, &ServeOptions::closed(1, 0.0));
         assert_eq!(r.makespan_ns, total);
         assert_eq!(r.requests[0].latency_ns(), total);
     }

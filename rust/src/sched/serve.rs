@@ -1,0 +1,412 @@
+//! Open-loop admission planning for serving mode.
+//!
+//! The planner turns a [`ServeOptions`] into a deterministic
+//! [`AdmissionPlan`]: a seeded arrival trace (closed / Poisson / bursty /
+//! trace-driven), a tenant assignment for every request, and the
+//! dynamic-batching decisions — *when* each request is released from the
+//! admission queue to the event engine. The plan is pure data computed
+//! single-threaded from the seed, so the same options produce a
+//! bit-identical plan regardless of how many worker threads later
+//! simulate it, and [`ArrivalProcess::Closed`] consumes no randomness at
+//! all: its plan is exactly the legacy `(i * gap, graph)` job list.
+
+use crate::config::{ArrivalProcess, ServeOptions, TenantSpec};
+use crate::util::Rng;
+
+/// One admitted request: when it arrived, when the batcher released it,
+/// which tenant it belongs to, and which batch carried it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmittedRequest {
+    /// Request identity: index in arrival order.
+    pub id: usize,
+    /// Arrival time at the admission queue, ns.
+    pub arrival_ns: f64,
+    /// Dispatch time — when the batcher released it to the SoC, ns
+    /// (always >= `arrival_ns`).
+    pub dispatch_ns: f64,
+    /// Index into [`AdmissionPlan::tenants`].
+    pub tenant: usize,
+    /// Batch this request dispatched with (batch ids are dense).
+    pub batch: usize,
+}
+
+/// A fully planned serving workload, requests in dispatch order (the
+/// event engine's job-submission order: dispatch time, then priority,
+/// then arrival, then id).
+#[derive(Debug, Clone)]
+pub struct AdmissionPlan {
+    /// Requests in dispatch order.
+    pub requests: Vec<AdmittedRequest>,
+    /// Resolved tenant table (never empty; a single `default` tenant
+    /// when the options named none).
+    pub tenants: Vec<TenantSpec>,
+    /// Number of batches dispatched.
+    pub batches: usize,
+    /// Arrival-process tag for reports.
+    pub arrival: &'static str,
+    /// Mean offered load, requests/second, when the process defines one.
+    pub offered_qps: Option<f64>,
+    /// Latency SLO carried through to the report, ns.
+    pub slo_ns: Option<f64>,
+}
+
+/// Uniform f64 in [0, 1) with full 53-bit resolution.
+fn next_f64(rng: &mut Rng) -> f64 {
+    (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Arrival times for `n` requests, non-decreasing, deterministic in the
+/// seed. Closed batches consume no randomness.
+fn arrival_times(arrival: &ArrivalProcess, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    match arrival {
+        ArrivalProcess::Closed { interval_ns } => {
+            let gap = interval_ns.max(0.0);
+            (0..n).map(|i| i as f64 * gap).collect()
+        }
+        ArrivalProcess::Poisson { qps } => {
+            let rate = qps.max(1e-12);
+            let mut t = 0.0f64;
+            (0..n)
+                .map(|_| {
+                    let u = next_f64(&mut rng);
+                    t += -(1.0 - u).ln() / rate * 1e9;
+                    t
+                })
+                .collect()
+        }
+        ArrivalProcess::Bursty { qps, burst } => {
+            let burst = (*burst).max(1);
+            let epoch_rate = (qps.max(1e-12)) / burst as f64;
+            let mut t = 0.0f64;
+            let mut out = Vec::with_capacity(n);
+            while out.len() < n {
+                let u = next_f64(&mut rng);
+                t += -(1.0 - u).ln() / epoch_rate * 1e9;
+                for _ in 0..burst.min(n - out.len()) {
+                    out.push(t);
+                }
+            }
+            out
+        }
+        ArrivalProcess::Trace { arrivals_ns } => {
+            if arrivals_ns.is_empty() {
+                return vec![0.0; n];
+            }
+            let len = arrivals_ns.len();
+            let first = arrivals_ns[0];
+            let last = arrivals_ns[len - 1];
+            // One replay period: the trace span plus one mean gap, so
+            // back-to-back replays keep the trace's average rate.
+            let period = if len >= 2 {
+                (last + (last - first) / (len - 1) as f64).max(1.0)
+            } else {
+                last.max(1.0)
+            };
+            (0..n)
+                .map(|i| arrivals_ns[i % len] + (i / len) as f64 * period)
+                .collect()
+        }
+    }
+}
+
+/// Weighted seeded tenant assignment (a separate RNG stream from the
+/// arrival process, so closed-batch arrivals stay randomness-free).
+fn assign_tenants(tenants: &[TenantSpec], n: usize, seed: u64) -> Vec<usize> {
+    if tenants.len() <= 1 {
+        return vec![0; n];
+    }
+    let total: f64 = tenants.iter().map(|t| t.weight.max(0.0)).sum();
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    (0..n)
+        .map(|_| {
+            let mut x = next_f64(&mut rng) * total.max(1e-12);
+            for (i, t) in tenants.iter().enumerate() {
+                x -= t.weight.max(0.0);
+                if x < 0.0 {
+                    return i;
+                }
+            }
+            tenants.len() - 1
+        })
+        .collect()
+}
+
+/// Plan the admission queue for a serving workload. Errors are
+/// human-readable strings (the session maps them to `anyhow`).
+pub fn plan_admission(serve: &ServeOptions) -> Result<AdmissionPlan, String> {
+    match &serve.arrival {
+        ArrivalProcess::Poisson { qps } | ArrivalProcess::Bursty { qps, .. } if *qps <= 0.0 => {
+            return Err(format!("open-loop arrivals need qps > 0 (got {qps})"));
+        }
+        ArrivalProcess::Bursty { burst: 0, .. } => {
+            return Err("bursty arrivals need burst >= 1".into());
+        }
+        ArrivalProcess::Trace { arrivals_ns } => {
+            if arrivals_ns.is_empty() {
+                return Err("trace-driven arrivals need at least one offset".into());
+            }
+            if arrivals_ns.windows(2).any(|w| w[1] < w[0]) || arrivals_ns[0] < 0.0 {
+                return Err("trace arrival offsets must be non-negative and non-decreasing".into());
+            }
+        }
+        _ => {}
+    }
+    if let Some(b) = &serve.batching {
+        if b.max_batch == 0 {
+            return Err("batching needs max_batch >= 1".into());
+        }
+        if b.max_delay_ns.is_nan() || b.max_delay_ns < 0.0 {
+            return Err(format!("batching needs max_delay_ns >= 0 (got {})", b.max_delay_ns));
+        }
+    }
+    if serve.tenants.iter().any(|t| t.weight <= 0.0) {
+        return Err("tenant weights must be > 0".into());
+    }
+
+    let n = serve.requests.max(1);
+    let tenants: Vec<TenantSpec> = if serve.tenants.is_empty() {
+        vec![TenantSpec::new("default", "")]
+    } else {
+        serve.tenants.clone()
+    };
+    let arrivals = arrival_times(&serve.arrival, n, serve.seed);
+    let assignment = assign_tenants(&tenants, n, serve.seed);
+
+    // Dynamic batching: per-tenant queues, dispatch on queue depth
+    // (max_batch) or deadline pressure (first arrival + max_delay).
+    let mut requests: Vec<AdmittedRequest> = arrivals
+        .iter()
+        .zip(&assignment)
+        .enumerate()
+        .map(|(id, (&arrival_ns, &tenant))| AdmittedRequest {
+            id,
+            arrival_ns,
+            dispatch_ns: arrival_ns,
+            tenant,
+            batch: id,
+        })
+        .collect();
+    let mut batches = requests.len();
+    if let Some(policy) = &serve.batching {
+        let mut next_batch = 0usize;
+        // Open batch per tenant: (first arrival, member ids).
+        let mut open: Vec<Option<(f64, Vec<usize>)>> = vec![None; tenants.len()];
+        let close = |requests: &mut Vec<AdmittedRequest>,
+                         members: &[usize],
+                         dispatch_ns: f64,
+                         next_batch: &mut usize| {
+            for &id in members {
+                requests[id].dispatch_ns = dispatch_ns;
+                requests[id].batch = *next_batch;
+            }
+            *next_batch += 1;
+        };
+        for id in 0..n {
+            let t = requests[id].tenant;
+            let arr = requests[id].arrival_ns;
+            if let Some((first, mut members)) = open[t].take() {
+                if arr > first + policy.max_delay_ns {
+                    // Deadline pressure fired before this arrival.
+                    close(&mut requests, &members, first + policy.max_delay_ns, &mut next_batch);
+                    open[t] = Some((arr, vec![id]));
+                } else {
+                    members.push(id);
+                    if members.len() >= policy.max_batch {
+                        close(&mut requests, &members, arr, &mut next_batch);
+                    } else {
+                        open[t] = Some((first, members));
+                    }
+                }
+            } else {
+                open[t] = Some((arr, vec![id]));
+            }
+            // A size-1 policy dispatches on arrival.
+            if policy.max_batch == 1 {
+                if let Some((first, members)) = open[t].take() {
+                    close(&mut requests, &members, first, &mut next_batch);
+                }
+            }
+        }
+        for t in 0..tenants.len() {
+            if let Some((first, members)) = open[t].take() {
+                close(&mut requests, &members, first + policy.max_delay_ns, &mut next_batch);
+            }
+        }
+        batches = next_batch;
+    }
+
+    // Job-submission order: dispatch time, then tenant priority (higher
+    // first), then arrival, then id. A single-tenant unbatched plan is a
+    // stable identity sort — the legacy submission order.
+    requests.sort_by(|a, b| {
+        a.dispatch_ns
+            .total_cmp(&b.dispatch_ns)
+            .then(tenants[b.tenant].priority.cmp(&tenants[a.tenant].priority))
+            .then(a.arrival_ns.total_cmp(&b.arrival_ns))
+            .then(a.id.cmp(&b.id))
+    });
+
+    Ok(AdmissionPlan {
+        requests,
+        tenants,
+        batches,
+        arrival: serve.arrival.tag(),
+        offered_qps: serve.arrival.offered_qps(),
+        slo_ns: serve.slo_ns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BatchPolicy;
+
+    #[test]
+    fn closed_plan_is_the_legacy_job_list() {
+        let plan = plan_admission(&ServeOptions::closed(5, 2_000.0)).unwrap();
+        assert_eq!(plan.requests.len(), 5);
+        assert_eq!(plan.batches, 5);
+        for (i, r) in plan.requests.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert_eq!(r.arrival_ns.to_bits(), (i as f64 * 2_000.0).to_bits());
+            assert_eq!(r.dispatch_ns.to_bits(), r.arrival_ns.to_bits());
+            assert_eq!(r.tenant, 0);
+        }
+        assert_eq!(plan.arrival, "closed");
+        assert_eq!(plan.offered_qps, None);
+    }
+
+    #[test]
+    fn poisson_plan_is_seeded_monotone_and_deterministic() {
+        let opts = ServeOptions::poisson(64, 10_000.0);
+        let a = plan_admission(&opts).unwrap();
+        let b = plan_admission(&opts).unwrap();
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_ns.to_bits(), y.arrival_ns.to_bits());
+        }
+        let mut last = 0.0;
+        for r in &a.requests {
+            assert!(r.arrival_ns >= last, "arrivals not monotone");
+            last = r.arrival_ns;
+        }
+        let other = plan_admission(&ServeOptions {
+            seed: 7,
+            ..ServeOptions::poisson(64, 10_000.0)
+        })
+        .unwrap();
+        assert!(a
+            .requests
+            .iter()
+            .zip(&other.requests)
+            .any(|(x, y)| x.arrival_ns != y.arrival_ns));
+    }
+
+    #[test]
+    fn bursty_arrivals_come_in_coincident_groups() {
+        let plan = plan_admission(&ServeOptions {
+            arrival: ArrivalProcess::Bursty {
+                qps: 10_000.0,
+                burst: 4,
+            },
+            ..ServeOptions::poisson(16, 0.0)
+        })
+        .unwrap();
+        for chunk in plan.requests.chunks(4) {
+            for r in chunk {
+                assert_eq!(r.arrival_ns.to_bits(), chunk[0].arrival_ns.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn trace_replays_cyclically() {
+        let plan = plan_admission(&ServeOptions {
+            arrival: ArrivalProcess::Trace {
+                arrivals_ns: vec![0.0, 100.0, 200.0],
+            },
+            requests: 6,
+            ..ServeOptions::default()
+        })
+        .unwrap();
+        let times: Vec<f64> = plan.requests.iter().map(|r| r.arrival_ns).collect();
+        assert_eq!(times, vec![0.0, 100.0, 200.0, 300.0, 400.0, 500.0]);
+    }
+
+    #[test]
+    fn batching_respects_depth_and_deadline_pressure() {
+        let plan = plan_admission(&ServeOptions {
+            batching: Some(BatchPolicy {
+                max_batch: 4,
+                max_delay_ns: 5_000.0,
+            }),
+            ..ServeOptions::poisson(64, 50_000.0)
+        })
+        .unwrap();
+        assert!(plan.batches <= plan.requests.len());
+        let mut sizes = vec![0usize; plan.batches];
+        let mut firsts = vec![f64::INFINITY; plan.batches];
+        for r in &plan.requests {
+            assert!(r.dispatch_ns >= r.arrival_ns, "dispatched before arrival");
+            sizes[r.batch] += 1;
+            firsts[r.batch] = firsts[r.batch].min(r.arrival_ns);
+        }
+        for r in &plan.requests {
+            assert!(
+                r.dispatch_ns <= firsts[r.batch] + 5_000.0 + 1e-9,
+                "deadline pressure violated: dispatch {} first {}",
+                r.dispatch_ns,
+                firsts[r.batch]
+            );
+        }
+        assert!(sizes.iter().all(|&s| (1..=4).contains(&s)), "{sizes:?}");
+        assert!(sizes.iter().any(|&s| s > 1), "batching never batched");
+    }
+
+    #[test]
+    fn tenants_are_weighted_and_priority_orders_ties() {
+        let plan = plan_admission(&ServeOptions {
+            tenants: vec![
+                TenantSpec {
+                    weight: 3.0,
+                    priority: 0,
+                    ..TenantSpec::new("bulk", "vgg16")
+                },
+                TenantSpec {
+                    weight: 1.0,
+                    priority: 5,
+                    ..TenantSpec::new("premium", "lenet5")
+                },
+            ],
+            ..ServeOptions::closed(64, 0.0)
+        })
+        .unwrap();
+        let premium = plan.requests.iter().filter(|r| r.tenant == 1).count();
+        assert!(premium > 0 && premium < 64, "weighted mix degenerate: {premium}");
+        // All requests dispatch at t = 0: priority must order the
+        // submission, premium first.
+        let first_bulk = plan.requests.iter().position(|r| r.tenant == 0).unwrap();
+        assert!(
+            plan.requests[..first_bulk].iter().all(|r| r.tenant == 1),
+            "higher-priority tenant not dispatched first"
+        );
+    }
+
+    #[test]
+    fn invalid_options_are_clear_errors() {
+        assert!(plan_admission(&ServeOptions::poisson(4, 0.0)).is_err());
+        assert!(plan_admission(&ServeOptions {
+            arrival: ArrivalProcess::Trace { arrivals_ns: vec![] },
+            ..ServeOptions::default()
+        })
+        .is_err());
+        assert!(plan_admission(&ServeOptions {
+            batching: Some(BatchPolicy {
+                max_batch: 0,
+                max_delay_ns: 0.0
+            }),
+            ..ServeOptions::default()
+        })
+        .is_err());
+    }
+}

@@ -305,20 +305,31 @@ pub fn per_op_table(ops: &[OpRecord]) -> String {
 /// One inference request served by the event-driven scheduler.
 #[derive(Debug, Clone, Default)]
 pub struct RequestRecord {
-    /// Request index within the workload.
+    /// Request index within the workload (arrival order).
     pub id: usize,
     /// Network this request ran.
     pub network: String,
-    /// Arrival time, ns.
+    /// Tenant this request belongs to (`default` for single-tenant
+    /// workloads).
+    pub tenant: String,
+    /// Arrival time at the admission queue, ns.
     pub arrival_ns: f64,
+    /// Dispatch time — when the batcher released it to the SoC, ns
+    /// (equals `arrival_ns` without dynamic batching).
+    pub dispatch_ns: f64,
     /// Completion time (all operators fully finalized), ns.
     pub end_ns: f64,
 }
 
 impl RequestRecord {
-    /// End-to-end latency of the request.
+    /// End-to-end latency of the request (queueing + service).
     pub fn latency_ns(&self) -> f64 {
         self.end_ns - self.arrival_ns
+    }
+
+    /// Time spent waiting in the admission queue, ns.
+    pub fn queue_ns(&self) -> f64 {
+        self.dispatch_ns - self.arrival_ns
     }
 }
 
@@ -330,6 +341,163 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     let n = sorted.len();
     let rank = ((q / 100.0) * n as f64).ceil() as usize;
     sorted[rank.clamp(1, n) - 1]
+}
+
+/// Per-tenant serving summary: request count, SLO attainment, queueing,
+/// and tail latency for one tenant of a shared pool.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStat {
+    /// Tenant name.
+    pub name: String,
+    /// Dispatch priority.
+    pub priority: u32,
+    /// Requests this tenant issued.
+    pub requests: usize,
+    /// Requests that met the SLO (= `requests` when no SLO is set).
+    pub slo_met: usize,
+    /// Mean latency, ns.
+    pub mean_ns: f64,
+    /// Median latency, ns.
+    pub p50_ns: f64,
+    /// 99th-percentile latency, ns.
+    pub p99_ns: f64,
+    /// 99.9th-percentile latency, ns.
+    pub p999_ns: f64,
+    /// Worst latency, ns.
+    pub max_ns: f64,
+    /// Mean admission-queue wait, ns.
+    pub mean_queue_ns: f64,
+}
+
+/// The open-loop serving section: arrival process, SLO attainment and
+/// goodput, dynamic-batching outcome, admission-queue timeline, and the
+/// per-tenant breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    /// Arrival-process tag (`closed`, `poisson`, `bursty`, `trace`).
+    pub arrival: String,
+    /// Mean offered load, requests/second (open-loop processes only).
+    pub offered_qps: Option<f64>,
+    /// Latency SLO, ns (`None` = no SLO).
+    pub slo_ns: Option<f64>,
+    /// Requests that finished within the SLO.
+    pub slo_met: usize,
+    /// Fraction of requests that met the SLO (1.0 without an SLO).
+    pub slo_attainment: f64,
+    /// SLO-meeting requests per second of makespan (= throughput without
+    /// an SLO).
+    pub goodput_rps: f64,
+    /// Batches dispatched (= request count without batching).
+    pub batches: usize,
+    /// Peak admission-queue depth.
+    pub max_queue_depth: usize,
+    /// Mean admission-queue wait per request, ns.
+    pub mean_queue_ns: f64,
+    /// Admission-queue depth timeline: (time ns, depth after the event),
+    /// downsampled to at most [`Self::QUEUE_TIMELINE_CAP`] points.
+    pub queue_depth: Vec<(f64, u32)>,
+    /// Per-tenant breakdown, in tenant-table order.
+    pub tenants: Vec<TenantStat>,
+}
+
+impl ServingStats {
+    /// Maximum points kept in [`ServingStats::queue_depth`].
+    pub const QUEUE_TIMELINE_CAP: usize = 256;
+
+    /// Build the serving section from finished request records.
+    pub fn from_requests(
+        arrival: &str,
+        offered_qps: Option<f64>,
+        slo_ns: Option<f64>,
+        batches: usize,
+        tenant_order: &[(String, u32)],
+        requests: &[RequestRecord],
+        makespan_ns: f64,
+    ) -> Self {
+        let met = |r: &RequestRecord| slo_ns.is_none_or(|s| r.latency_ns() <= s);
+        let slo_met = requests.iter().filter(|r| met(r)).count();
+        let goodput_rps = if makespan_ns > 0.0 {
+            slo_met as f64 / (makespan_ns * 1e-9)
+        } else {
+            0.0
+        };
+        // Admission-queue depth: +1 at arrival, -1 at dispatch, departures
+        // first at identical instants so a dispatch-on-arrival request
+        // never reads as queued.
+        let mut events: Vec<(f64, i32)> = Vec::with_capacity(2 * requests.len());
+        for r in requests {
+            events.push((r.arrival_ns, 1));
+            events.push((r.dispatch_ns, -1));
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut depth = 0i64;
+        let mut max_depth = 0i64;
+        let mut timeline: Vec<(f64, u32)> = Vec::new();
+        for (t, d) in events {
+            depth += d as i64;
+            max_depth = max_depth.max(depth);
+            match timeline.last_mut() {
+                Some(last) if last.0 == t => last.1 = depth.max(0) as u32,
+                _ => timeline.push((t, depth.max(0) as u32)),
+            }
+        }
+        if timeline.len() > Self::QUEUE_TIMELINE_CAP {
+            let stride = timeline.len().div_ceil(Self::QUEUE_TIMELINE_CAP);
+            timeline = timeline
+                .iter()
+                .step_by(stride)
+                .copied()
+                .collect();
+        }
+        let mean_queue_ns = if requests.is_empty() {
+            0.0
+        } else {
+            requests.iter().map(RequestRecord::queue_ns).sum::<f64>() / requests.len() as f64
+        };
+        let tenants = tenant_order
+            .iter()
+            .map(|(name, priority)| {
+                let rs: Vec<&RequestRecord> =
+                    requests.iter().filter(|r| &r.tenant == name).collect();
+                let mut lat: Vec<f64> = rs.iter().map(|r| r.latency_ns()).collect();
+                lat.sort_by(f64::total_cmp);
+                let n = rs.len();
+                TenantStat {
+                    name: name.clone(),
+                    priority: *priority,
+                    requests: n,
+                    slo_met: rs.iter().filter(|r| met(r)).count(),
+                    mean_ns: if n > 0 { lat.iter().sum::<f64>() / n as f64 } else { 0.0 },
+                    p50_ns: percentile(&lat, 50.0),
+                    p99_ns: percentile(&lat, 99.0),
+                    p999_ns: percentile(&lat, 99.9),
+                    max_ns: lat.last().copied().unwrap_or(0.0),
+                    mean_queue_ns: if n > 0 {
+                        rs.iter().map(|r| r.queue_ns()).sum::<f64>() / n as f64
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect();
+        Self {
+            arrival: arrival.to_string(),
+            offered_qps,
+            slo_ns,
+            slo_met,
+            slo_attainment: if requests.is_empty() {
+                1.0
+            } else {
+                slo_met as f64 / requests.len() as f64
+            },
+            goodput_rps,
+            batches,
+            max_queue_depth: max_depth.max(0) as usize,
+            mean_queue_ns,
+            queue_depth: timeline,
+            tenants,
+        }
+    }
 }
 
 /// Serving-mode report: per-request latencies with percentile summaries
@@ -360,15 +528,19 @@ pub struct ServeReport {
     pub pipeline: PipelineStats,
     /// Routed memory-system snapshot over the makespan.
     pub memsys: MemsysSnapshot,
+    /// Open-loop serving section: arrival process, SLO/goodput, batching,
+    /// queue timeline, per-tenant breakdown.
+    pub serving: ServingStats,
     /// Host wall-clock spent simulating, ns.
     pub sim_wallclock_ns: f64,
 }
 
 impl ServeReport {
-    /// Request latencies, ascending.
+    /// Request latencies, ascending. NaN-safe: a corrupt latency sorts to
+    /// the end (`f64::total_cmp`) instead of panicking the report.
     pub fn latencies_sorted(&self) -> Vec<f64> {
         let mut v: Vec<f64> = self.requests.iter().map(RequestRecord::latency_ns).collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         v
     }
 
@@ -399,8 +571,8 @@ impl ServeReport {
 
     /// Multi-line human-readable summary.
     pub fn summary(&self) -> String {
-        format!(
-            "network    : {}\nconfig     : {}\nrequests   : {}\nmakespan   : {}\nthroughput : {:.1} req/s\nlatency    : mean {}  p50 {}  p90 {}  p99 {}\ndram traffic : {}\nenergy       : {}",
+        let mut s = format!(
+            "network    : {}\nconfig     : {}\nrequests   : {}\nmakespan   : {}\nthroughput : {:.1} req/s\nlatency    : mean {}  p50 {}  p90 {}  p99 {}  p99.9 {}\n",
             self.network,
             self.config,
             self.requests.len(),
@@ -410,9 +582,33 @@ impl ServeReport {
             fmt_ns(self.latency_percentile(50.0)),
             fmt_ns(self.latency_percentile(90.0)),
             fmt_ns(self.latency_percentile(99.0)),
+            fmt_ns(self.latency_percentile(99.9)),
+        );
+        let sv = &self.serving;
+        s.push_str(&format!(
+            "serving    : {} arrivals, goodput {:.1} req/s (SLO attainment {:.1}%), {} batch(es), peak queue {}\n",
+            sv.arrival,
+            sv.goodput_rps,
+            100.0 * sv.slo_attainment,
+            sv.batches,
+            sv.max_queue_depth,
+        ));
+        for t in sv.tenants.iter().filter(|_| sv.tenants.len() > 1) {
+            s.push_str(&format!(
+                "  tenant {:<12} prio {}  {} req  p99 {}  queue {}\n",
+                t.name,
+                t.priority,
+                t.requests,
+                fmt_ns(t.p99_ns),
+                fmt_ns(t.mean_queue_ns),
+            ));
+        }
+        s.push_str(&format!(
+            "dram traffic : {}\nenergy       : {}",
             fmt_bytes(self.dram_bytes),
             fmt_pj(self.energy.total_pj()),
-        )
+        ));
+        s
     }
 
     /// Machine-readable JSON of the serving report.
@@ -428,7 +624,10 @@ impl ServeReport {
         w.key("p50").number(self.latency_percentile(50.0));
         w.key("p90").number(self.latency_percentile(90.0));
         w.key("p99").number(self.latency_percentile(99.0));
+        w.key("p99_9").number(self.latency_percentile(99.9));
         w.end_object();
+        w.key("goodput_rps").number(self.serving.goodput_rps);
+        w.key("slo_attainment").number(self.serving.slo_attainment);
         w.key("dram_bytes").uint(self.dram_bytes);
         w.key("llc_bytes").uint(self.llc_bytes);
         w.key("energy_total_pj").number(self.energy.total_pj());
@@ -437,7 +636,9 @@ impl ServeReport {
             w.begin_object();
             w.key("id").uint(r.id as u64);
             w.key("network").string(&r.network);
+            w.key("tenant").string(&r.tenant);
             w.key("arrival_ns").number(r.arrival_ns);
+            w.key("dispatch_ns").number(r.dispatch_ns);
             w.key("end_ns").number(r.end_ns);
             w.key("latency_ns").number(r.latency_ns());
             w.end_object();
@@ -549,10 +750,21 @@ mod tests {
             r.requests.push(RequestRecord {
                 id: i,
                 network: "cnn10".into(),
+                tenant: "default".into(),
                 arrival_ns: i as f64 * 1e5,
+                dispatch_ns: i as f64 * 1e5,
                 end_ns: 1e6 + i as f64 * 1e6,
             });
         }
+        r.serving = ServingStats::from_requests(
+            "closed",
+            None,
+            None,
+            r.requests.len(),
+            &[("default".into(), 0)],
+            &r.requests,
+            r.makespan_ns,
+        );
         r
     }
 
@@ -574,9 +786,91 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("throughput"));
         assert!(s.contains("p99"));
+        assert!(s.contains("goodput"));
         let j = r.to_json();
         assert!(j.contains("\"throughput_rps\""));
         assert!(j.contains("\"p99\""));
+        assert!(j.contains("\"p99_9\""));
+        assert!(j.contains("\"goodput_rps\""));
+        assert!(j.contains("\"tenant\""));
         assert!(j.contains("\"requests\""));
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_percentiles() {
+        // A corrupt (NaN) latency must degrade gracefully, never panic —
+        // tail percentiles are the headline serving metric.
+        let mut r = serve_report();
+        r.requests[2].end_ns = f64::NAN;
+        let sorted = r.latencies_sorted();
+        assert_eq!(sorted.len(), 4);
+        assert!(sorted[..3].windows(2).all(|w| w[0] <= w[1]));
+        assert!(sorted[3].is_nan(), "NaN sorts last under total_cmp");
+        let _ = r.latency_percentile(50.0);
+        let _ = r.summary();
+    }
+
+    #[test]
+    fn serving_stats_track_slo_queue_and_tenants() {
+        let reqs: Vec<RequestRecord> = (0..8)
+            .map(|i| RequestRecord {
+                id: i,
+                network: "cnn10".into(),
+                tenant: if i % 2 == 0 { "a".into() } else { "b".into() },
+                arrival_ns: i as f64 * 100.0,
+                // Everything queues until t = 1000 (batched dispatch).
+                dispatch_ns: 1_000.0,
+                end_ns: 2_000.0 + i as f64 * 500.0,
+            })
+            .collect();
+        let s = ServingStats::from_requests(
+            "poisson",
+            Some(1e7),
+            Some(3_500.0),
+            2,
+            &[("a".into(), 1), ("b".into(), 0)],
+            &reqs,
+            6_000.0,
+        );
+        assert_eq!(s.arrival, "poisson");
+        assert_eq!(s.batches, 2);
+        // Latencies: 2000-100i .. grows; met when end-arrival <= 3500.
+        let met = reqs.iter().filter(|r| r.latency_ns() <= 3_500.0).count();
+        assert_eq!(s.slo_met, met);
+        assert!((s.slo_attainment - met as f64 / 8.0).abs() < 1e-12);
+        assert!((s.goodput_rps - met as f64 / 6e-6).abs() < 1.0);
+        // All 8 arrive before any dispatch: the queue peaks at 8.
+        assert_eq!(s.max_queue_depth, 8);
+        assert!(!s.queue_depth.is_empty());
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[0].requests + s.tenants[1].requests, 8);
+        assert_eq!(s.tenants[0].priority, 1);
+        assert!(s.tenants[0].mean_queue_ns > 0.0);
+        assert!(s.mean_queue_ns > 0.0);
+    }
+
+    #[test]
+    fn queue_timeline_is_bounded() {
+        let reqs: Vec<RequestRecord> = (0..4_000)
+            .map(|i| RequestRecord {
+                id: i,
+                network: "x".into(),
+                tenant: "default".into(),
+                arrival_ns: i as f64 * 10.0,
+                dispatch_ns: i as f64 * 10.0 + 5.0,
+                end_ns: i as f64 * 10.0 + 100.0,
+            })
+            .collect();
+        let s = ServingStats::from_requests(
+            "poisson",
+            Some(1e8),
+            None,
+            4_000,
+            &[("default".into(), 0)],
+            &reqs,
+            5e4,
+        );
+        assert!(s.queue_depth.len() <= ServingStats::QUEUE_TIMELINE_CAP);
+        assert_eq!(s.slo_attainment, 1.0, "no SLO means full attainment");
     }
 }

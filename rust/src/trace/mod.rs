@@ -171,7 +171,7 @@ impl Timeline {
             })
             .map(|e| (e.t0, e.t1))
             .collect();
-        iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        iv.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut overlap = 0.0;
         let mut cur_end = f64::NEG_INFINITY;
         for (a, b) in iv {

@@ -3,7 +3,7 @@
 //! downstream tooling), and serving percentiles behave.
 
 use smaug::api::{Scenario, Session, Soc, SweepAxis, REPORT_SCHEMA};
-use smaug::config::AccelKind;
+use smaug::config::{AccelKind, ServeOptions};
 
 /// Keys of the outermost JSON object, in emission order (no serde
 /// offline, so a tiny depth tracker does the walking).
@@ -61,9 +61,11 @@ const V1_KEYS: &[&str] = &[
     "throughput_rps",
     "latency_ns",
     "requests",
+    "serving",
     "sweep_axis",
     "sweep",
     "sweep_engine",
+    "qps_sweep",
     "pipeline",
     "memsys",
     "camera",
@@ -162,19 +164,38 @@ fn tile_pipeline_json_reports_overlap() {
 fn serving_json_matches_v1_snapshot_with_latency() {
     let json = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
         .network("lenet5")
-        .scenario(Scenario::Serving {
-            requests: 4,
-            arrival_interval_ns: 1_000.0,
-        })
+        .scenario(Scenario::Serving(ServeOptions::closed(4, 1_000.0)))
         .run()
         .unwrap()
         .to_json();
     assert_eq!(top_level_keys(&json), V1_KEYS, "top-level keys drifted");
-    for key in ["mean", "p50", "p90", "p99", "max"] {
+    for key in ["mean", "p50", "p90", "p99", "p99_9", "max"] {
         assert!(json.contains(&format!("\"{key}\":")), "latency_ns.{key}");
     }
     assert!(!json.contains("\"latency_ns\":null"));
     assert!(json.contains("\"arrival_ns\":"));
+    assert!(json.contains("\"dispatch_ns\":"));
+    // The serving section is populated, with per-tenant breakdowns and a
+    // queue-depth timeline.
+    assert!(!json.contains("\"serving\":null"));
+    for key in [
+        "arrival",
+        "offered_qps",
+        "slo_ns",
+        "slo_met",
+        "slo_attainment",
+        "goodput_rps",
+        "batches",
+        "max_queue_depth",
+        "mean_queue_ns",
+        "queue_depth",
+        "tenants",
+    ] {
+        assert!(json.contains(&format!("\"{key}\":")), "serving.{key}");
+    }
+    assert!(json.contains("\"arrival\":\"closed\""));
+    // Serving runs carry the qps_sweep section as null.
+    assert!(json.contains("\"qps_sweep\":null"));
 }
 
 #[test]
@@ -229,10 +250,7 @@ fn serving_percentiles_are_monotone() {
     let report = Session::on(Soc::builder().accels(AccelKind::Nvdla, 2).build())
         .network("cnn10")
         .threads(2)
-        .scenario(Scenario::Serving {
-            requests: 8,
-            arrival_interval_ns: 5_000.0,
-        })
+        .scenario(Scenario::Serving(ServeOptions::closed(8, 5_000.0)))
         .run()
         .unwrap();
     let l = report.latency.expect("serving populates latency");

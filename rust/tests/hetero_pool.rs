@@ -141,10 +141,7 @@ fn hetero_pipeline_conserves_work() {
 #[test]
 fn hetero_serving_is_deterministic_and_exclusive() {
     let g = nets::build_network("lenet5").unwrap();
-    let serve = ServeOptions {
-        requests: 5,
-        arrival_interval_ns: 2_000.0,
-    };
+    let serve = ServeOptions::closed(5, 2_000.0);
     let run = || {
         let mut sched = Scheduler::new(
             SocConfig::default(),
@@ -183,13 +180,7 @@ fn session_hetero_serving_matches_scheduler() {
             ..hetero_opts(true)
         },
     )
-    .serve(
-        &g,
-        &ServeOptions {
-            requests: 4,
-            arrival_interval_ns: 1_000.0,
-        },
-    );
+    .serve(&g, &ServeOptions::closed(4, 1_000.0));
     let via_session = Session::on(
         Soc::builder()
             .accel(AccelKind::Nvdla)
@@ -198,10 +189,7 @@ fn session_hetero_serving_matches_scheduler() {
     )
     .network("lenet5")
     .threads(2)
-    .scenario(Scenario::Serving {
-        requests: 4,
-        arrival_interval_ns: 1_000.0,
-    })
+    .scenario(Scenario::Serving(ServeOptions::closed(4, 1_000.0)))
     .run()
     .unwrap();
     assert_eq!(direct.makespan_ns.to_bits(), via_session.total_ns.to_bits());

@@ -246,13 +246,7 @@ fn serving_respects_resource_exclusivity() {
         ..SimOptions::default()
     };
     let mut sched = smaug::sched::Scheduler::new(SocConfig::default(), opts);
-    let report = sched.serve(
-        &g,
-        &ServeOptions {
-            requests: 6,
-            arrival_interval_ns: 10_000.0,
-        },
-    );
+    let report = sched.serve(&g, &ServeOptions::closed(6, 10_000.0));
     assert_eq!(report.requests.len(), 6);
     for a in 0..4 {
         let ov = sched
@@ -285,10 +279,7 @@ fn identical_configs_are_bit_deterministic() {
         assert_eq!(x.end_ns.to_bits(), y.end_ns.to_bits(), "op {}", x.name);
     }
 
-    let serve = ServeOptions {
-        requests: 5,
-        arrival_interval_ns: 2_500.0,
-    };
+    let serve = ServeOptions::closed(5, 2_500.0);
     let run_serve = || -> ServeReport {
         Scheduler::new(SocConfig::default(), opts.clone()).serve(&g, &serve)
     };
@@ -339,13 +330,8 @@ fn serving_latency_percentiles_behave() {
         ..SimOptions::default()
     };
     // Burst arrival: 8 requests at t=0 contend.
-    let burst = Scheduler::new(SocConfig::default(), opts.clone()).serve(
-        &g,
-        &ServeOptions {
-            requests: 8,
-            arrival_interval_ns: 0.0,
-        },
-    );
+    let burst = Scheduler::new(SocConfig::default(), opts.clone())
+        .serve(&g, &ServeOptions::closed(8, 0.0));
     assert_eq!(burst.requests.len(), 8);
     let (p50, p90, p99) = (
         burst.latency_percentile(50.0),
@@ -358,13 +344,8 @@ fn serving_latency_percentiles_behave() {
     // Widely spaced arrivals: no queueing, so every latency matches one
     // uncontended run.
     let single = run(&g, &opts).total_ns;
-    let spaced = Scheduler::new(SocConfig::default(), opts.clone()).serve(
-        &g,
-        &ServeOptions {
-            requests: 4,
-            arrival_interval_ns: single * 10.0,
-        },
-    );
+    let spaced = Scheduler::new(SocConfig::default(), opts.clone())
+        .serve(&g, &ServeOptions::closed(4, single * 10.0));
     for r in &spaced.requests {
         assert!(
             rel(r.latency_ns(), single) < 1e-9,

@@ -22,9 +22,11 @@ TOP_KEYS = [
     "throughput_rps",
     "latency_ns",
     "requests",
+    "serving",
     "sweep_axis",
     "sweep",
     "sweep_engine",
+    "qps_sweep",
     "pipeline",
     "memsys",
     "camera",
@@ -40,7 +42,44 @@ TRAFFIC_KEYS = [
     "sw_phase_dram_utilization",
 ]
 ENERGY_KEYS = ["total", "soc", "dram", "llc", "macc", "spad", "cpu"]
-LATENCY_KEYS = ["mean", "p50", "p90", "p99", "max"]
+LATENCY_KEYS = ["mean", "p50", "p90", "p99", "p99_9", "max"]
+SERVING_KEYS = [
+    "arrival",
+    "offered_qps",
+    "slo_ns",
+    "slo_met",
+    "slo_attainment",
+    "goodput_rps",
+    "batches",
+    "max_queue_depth",
+    "mean_queue_ns",
+    "queue_depth",
+    "tenants",
+]
+TENANT_KEYS = [
+    "name",
+    "priority",
+    "requests",
+    "slo_met",
+    "mean_ns",
+    "p50_ns",
+    "p99_ns",
+    "p99_9_ns",
+    "max_ns",
+    "mean_queue_ns",
+]
+QPS_SWEEP_KEYS = ["slo_ns", "workers", "qps_ref", "knee_qps", "rows"]
+QPS_ROW_KEYS = [
+    "qps",
+    "throughput_rps",
+    "goodput_rps",
+    "slo_attainment",
+    "mean_ns",
+    "p50_ns",
+    "p99_ns",
+    "p99_9_ns",
+    "max_queue_depth",
+]
 SWEEP_ENGINE_KEYS = [
     "workers",
     "cache_enabled",
@@ -89,10 +128,60 @@ def main() -> None:
         for key in LATENCY_KEYS:
             if key not in lat:
                 fail(f"latency_ns missing {key}")
-        if not (lat["p50"] <= lat["p90"] <= lat["p99"] <= lat["max"]):
+        if not (lat["p50"] <= lat["p90"] <= lat["p99"] <= lat["p99_9"] <= lat["max"]):
             fail(f"percentiles not monotone: {lat}")
         if not r["requests"]:
             fail("serving report has no requests")
+        for req in r["requests"]:
+            if req["dispatch_ns"] < req["arrival_ns"]:
+                fail(f"request {req['id']} dispatched before it arrived: {req}")
+        srv = r["serving"]
+        if srv is None:
+            fail("serving report must populate the serving section")
+        for key in SERVING_KEYS:
+            if key not in srv:
+                fail(f"serving missing {key}")
+        if srv["arrival"] not in ("closed", "poisson", "bursty", "trace"):
+            fail(f"unknown arrival process {srv['arrival']!r}")
+        if not 0.0 <= srv["slo_attainment"] <= 1.0:
+            fail(f"slo_attainment out of range: {srv['slo_attainment']}")
+        if not srv["batches"] >= 1:
+            fail(f"serving.batches must be >= 1 (got {srv['batches']})")
+        if srv["slo_met"] > len(r["requests"]):
+            fail("serving.slo_met exceeds the request count")
+        if not srv["tenants"]:
+            fail("serving.tenants must list at least the default tenant")
+        for t in srv["tenants"]:
+            for key in TENANT_KEYS:
+                if key not in t:
+                    fail(f"serving.tenants[{t.get('name')!r}] missing {key}")
+        if sum(t["requests"] for t in srv["tenants"]) != len(r["requests"]):
+            fail("per-tenant request counts do not sum to the request count")
+    elif r["scenario"] == "qps_sweep":
+        qs = r["qps_sweep"]
+        if qs is None:
+            fail("qps_sweep report must populate the qps_sweep section")
+        for key in QPS_SWEEP_KEYS:
+            if key not in qs:
+                fail(f"qps_sweep missing {key}")
+        if not qs["rows"]:
+            fail("qps_sweep report has no rows")
+        if not qs["workers"] >= 1:
+            fail(f"qps_sweep.workers must be >= 1 (got {qs['workers']})")
+        if not qs["qps_ref"] > 0:
+            fail(f"qps_sweep.qps_ref must be positive (got {qs['qps_ref']})")
+        for row in qs["rows"]:
+            for key in QPS_ROW_KEYS:
+                if key not in row:
+                    fail(f"qps_sweep row missing {key}: {row}")
+            if not row["qps"] > 0:
+                fail(f"qps_sweep row has non-positive qps: {row}")
+            if not 0.0 <= row["slo_attainment"] <= 1.0:
+                fail(f"qps_sweep row attainment out of range: {row}")
+        if qs["knee_qps"] is not None and qs["knee_qps"] not in [
+            row["qps"] for row in qs["rows"]
+        ]:
+            fail(f"knee_qps {qs['knee_qps']} is not one of the swept rates")
     elif r["scenario"] == "sweep":
         if not r["sweep"]:
             fail("sweep report has no rows")
@@ -117,6 +206,10 @@ def main() -> None:
             fail(f"{r['scenario']} report should have latency_ns null")
     if r["scenario"] != "sweep" and r["sweep_engine"] is not None:
         fail(f"{r['scenario']} report should have sweep_engine null")
+    if r["scenario"] != "serving" and r["serving"] is not None:
+        fail(f"{r['scenario']} report should have serving null")
+    if r["scenario"] != "qps_sweep" and r["qps_sweep"] is not None:
+        fail(f"{r['scenario']} report should have qps_sweep null")
     pipe = r["pipeline"]
     if r["scenario"] in ("inference", "training", "serving"):
         if pipe is None:

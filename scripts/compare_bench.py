@@ -101,14 +101,25 @@ def main() -> None:
     for key, spec in metrics.items():
         if key not in current:
             fail(f"metric {key!r} missing from {current_path} (bench drifted?)")
+        # Each failure mode gets its own message naming the offending file:
+        # a single broad except here used to blame both files at once.
+        if not isinstance(spec, dict):
+            fail(f"metric {key!r}: entry in {baseline_path} must be an object, got {spec!r}")
+        if "value" not in spec:
+            fail(f"metric {key!r}: entry in {baseline_path} has no 'value' field")
         try:
             cur = float(current[key])
+        except (TypeError, ValueError):
+            fail(f"metric {key!r}: current value {current[key]!r} in {current_path} is not numeric")
+        try:
             ref = float(spec["value"])
+        except (TypeError, ValueError):
+            fail(f"metric {key!r}: blessed value {spec['value']!r} in {baseline_path} is not numeric")
+        try:
             tol = float(spec.get("tolerance", DEFAULT_TOLERANCE))
-        except (KeyError, TypeError, ValueError) as e:
+        except (TypeError, ValueError):
             fail(
-                f"metric {key!r}: malformed entry in {baseline_path} or "
-                f"{current_path} ({e!r}) — see bench_baselines/README.md"
+                f"metric {key!r}: tolerance {spec['tolerance']!r} in {baseline_path} is not numeric"
             )
         if not (math.isfinite(ref) and ref > 0):
             fail(
