@@ -1,0 +1,119 @@
+//! Cluster-scaling bench: VGG16 data-parallel throughput across SoC
+//! counts on an unbounded vs throttled fabric, plus the pipeline split.
+//! Emits `BENCH_cluster.json` at the repository root; CI gates the two
+//! headline metrics against `bench_baselines/cluster.json`.
+//!
+//! Both headlines are simulated-time, so they are deterministic:
+//!
+//! * `speedup_dp4_vs_1` — 4-SoC data-parallel throughput over 1-SoC, on
+//!   an unbounded fabric. The partitioner's ideal-scaling contract says
+//!   this is exactly 4.0.
+//! * `throttled_ratio_dp4` — 4-SoC throughput with a starved root NIC
+//!   divided by the unbounded figure. Must never exceed 1.0 (a throttled
+//!   fabric cannot help), and tracks how hard the modeled scatter path
+//!   bites.
+
+use smaug::api::{Report, Scenario, Session, Soc};
+use smaug::cluster::Partition;
+use smaug::util::JsonWriter;
+use std::path::Path;
+
+const NET: &str = "vgg16";
+const QUERIES: usize = 8;
+const THROTTLED_NIC_GBPS: f64 = 0.05;
+
+fn run(socs: usize, partition: Partition, nic_gbps: f64, workers: usize) -> anyhow::Result<Report> {
+    let mut s = Session::on(Soc::default())
+        .network(NET)
+        .cluster(socs)
+        .partition(partition)
+        .queries(QUERIES)
+        .workers(workers)
+        .scenario(Scenario::Inference);
+    if nic_gbps > 0.0 {
+        s = s.nic_gbps(nic_gbps);
+    }
+    s.run()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("cluster_scaling — {NET}, {QUERIES} queries, dp/pp across SoC counts");
+    println!(
+        "{:<26} {:>5} {:>10} {:>14} {:>10}",
+        "config", "socs", "nic", "makespan_ms", "q/s"
+    );
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("cluster_scaling");
+    w.key("network").string(NET);
+    w.key("queries").uint(QUERIES as u64);
+    w.key("rows").begin_array();
+    let mut qps_by_name: Vec<(String, f64)> = Vec::new();
+    let configs: &[(&str, usize, Partition, f64)] = &[
+        ("dp1", 1, Partition::DataParallel, 0.0),
+        ("dp2", 2, Partition::DataParallel, 0.0),
+        ("dp4", 4, Partition::DataParallel, 0.0),
+        ("dp4-throttled", 4, Partition::DataParallel, THROTTLED_NIC_GBPS),
+        ("pp4", 4, Partition::Pipeline { stages: 4 }, 0.0),
+    ];
+    for &(name, socs, partition, nic) in configs {
+        let report = run(socs, partition, nic, 4)?;
+        let c = report.cluster.as_ref().expect("cluster section");
+        println!(
+            "{:<26} {:>5} {:>10} {:>14.3} {:>10.2}",
+            name,
+            socs,
+            if nic > 0.0 { format!("{nic} GB/s") } else { "unbound".to_string() },
+            c.makespan_ns / 1e6,
+            c.throughput_qps
+        );
+        w.begin_object();
+        w.key("config").string(name);
+        w.key("socs").uint(socs as u64);
+        w.key("partition").string(&c.partition);
+        w.key("nic_gbps").number(nic);
+        w.key("makespan_ns").number(c.makespan_ns);
+        w.key("throughput_qps").number(c.throughput_qps);
+        w.key("fabric_bytes").uint(c.fabric_bytes);
+        w.key("collective_ns").number(c.collective.time_ns);
+        w.end_object();
+        qps_by_name.push((name.to_string(), c.throughput_qps));
+    }
+    w.end_array();
+    let get = |n: &str| qps_by_name.iter().find(|(k, _)| k == n).unwrap().1;
+    let speedup = get("dp4") / get("dp1");
+    let throttled_ratio = get("dp4-throttled") / get("dp4");
+    w.key("speedup_dp4_vs_1").number(speedup);
+    w.key("throttled_ratio_dp4").number(throttled_ratio);
+    w.end_object();
+
+    // Determinism spot-check on the sharded per-stage sims: the pipeline
+    // split must not depend on the worker count.
+    let a = run(4, Partition::Pipeline { stages: 4 }, 0.0, 1)?;
+    let b = run(4, Partition::Pipeline { stages: 4 }, 0.0, 4)?;
+    let (ma, mb) = (
+        a.cluster.as_ref().unwrap().makespan_ns,
+        b.cluster.as_ref().unwrap().makespan_ns,
+    );
+    assert_eq!(ma.to_bits(), mb.to_bits(), "pp makespan drifted with workers");
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_cluster.json");
+    std::fs::write(&out, w.finish())?;
+    println!(
+        "headline: dp4 speedup {speedup:.2}x (ideal 4.0), throttled ratio \
+         {throttled_ratio:.2} (must stay <= 1.0)\nwrote {}",
+        out.display()
+    );
+    assert!(
+        speedup >= 3.0,
+        "dp4 on an unbounded fabric fell below the 3x acceptance floor"
+    );
+    assert!(
+        throttled_ratio <= 1.0 + 1e-9,
+        "a throttled fabric must never beat an unbounded one"
+    );
+    Ok(())
+}

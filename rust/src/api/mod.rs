@@ -62,12 +62,21 @@
 //! [`Scenario::QpsSweep`] re-runs serving across offered loads (sharded
 //! over [`Session::workers`], sharing one timing cache) and reports the
 //! SLO knee — the highest load that still met the attainment target.
+//!
+//! [`Session::cluster`] lifts an Inference or Training run onto K SoCs
+//! joined by a modeled NIC + switch fabric (see [`crate::cluster`]):
+//! pick a [`crate::cluster::Partition`] with [`Session::partition`],
+//! cap the fabric with [`Session::nic_gbps`] / [`Session::switch_gbps`],
+//! and read the cluster-wide aggregates from the report's `cluster`
+//! section.
 
 mod report;
 mod scenario;
 mod session;
 mod soc;
-mod sweep;
+// Crate-visible: the cluster partitioners shard per-stage simulations
+// through the same index-addressed worker pool as the sweep engine.
+pub(crate) mod sweep;
 
 pub use report::{
     CameraSummary, FunctionalSummary, LatencyStats, QpsRow, QpsSweepSummary, Report,

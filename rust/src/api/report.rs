@@ -4,6 +4,7 @@
 //! present-but-null (objects) or present-but-empty (arrays), so the JSON
 //! key set is identical across scenarios — tooling can rely on it.
 
+use crate::cluster::ClusterSummary;
 use crate::energy::EnergyAccount;
 use crate::mem::MemsysSnapshot;
 use crate::stats::{
@@ -207,6 +208,11 @@ pub struct Report {
     /// and utilization (single-run and serving scenarios; `None` for
     /// sweep/camera, whose headline numbers aggregate several runs).
     pub memsys: Option<MemsysSnapshot>,
+    /// Multi-SoC cluster section: per-SoC busy/occupancy, per-link
+    /// fabric traffic, collective breakdown, cluster throughput and
+    /// energy-per-query (cluster runs only; the top-level sections then
+    /// describe the single-SoC per-query reference run).
+    pub cluster: Option<ClusterSummary>,
     /// Sweep axis name (sweep only).
     pub sweep_axis: Option<String>,
     /// Per-value sweep rows (sweep only).
@@ -521,6 +527,61 @@ impl Report {
             }
             None => w.key("memsys").null(),
         };
+        match &self.cluster {
+            Some(c) => {
+                w.key("cluster").begin_object();
+                w.key("socs").uint(c.socs as u64);
+                w.key("partition").string(&c.partition);
+                w.key("queries").uint(c.queries as u64);
+                match c.nic_gbps {
+                    Some(g) => w.key("nic_gbps").number(g),
+                    None => w.key("nic_gbps").null(),
+                };
+                match c.switch_gbps {
+                    Some(g) => w.key("switch_gbps").number(g),
+                    None => w.key("switch_gbps").null(),
+                };
+                w.key("makespan_ns").number(c.makespan_ns);
+                w.key("throughput_qps").number(c.throughput_qps);
+                w.key("energy_per_query_pj").number(c.energy_per_query_pj);
+                w.key("collective").begin_object();
+                w.key("kind").string(&c.collective.kind);
+                w.key("steps").uint(c.collective.steps as u64);
+                w.key("bytes").uint(c.collective.bytes);
+                w.key("time_ns").number(c.collective.time_ns);
+                w.end_object();
+                w.key("per_soc").begin_array();
+                for n in &c.per_soc {
+                    w.begin_object();
+                    w.key("soc").uint(n.soc as u64);
+                    w.key("role").string(&n.role);
+                    w.key("queries").uint(n.queries as u64);
+                    w.key("busy_ns").number(n.busy_ns);
+                    w.key("accel_busy_ns").number(n.accel_busy_ns);
+                    w.key("occupancy").number(n.occupancy);
+                    w.key("dram_bytes").uint(n.dram_bytes);
+                    w.key("energy_pj").number(n.energy_pj);
+                    w.end_object();
+                }
+                w.end_array();
+                w.key("links").begin_array();
+                for l in &c.links {
+                    w.begin_object();
+                    w.key("name").string(&l.name);
+                    match l.gbps {
+                        Some(g) => w.key("gbps").number(g),
+                        None => w.key("gbps").null(),
+                    };
+                    w.key("bytes").uint(l.bytes);
+                    w.key("utilization").number(l.utilization);
+                    w.end_object();
+                }
+                w.end_array();
+                w.key("fabric_bytes").uint(c.fabric_bytes);
+                w.end_object()
+            }
+            None => w.key("cluster").null(),
+        };
         match &self.camera {
             Some(c) => {
                 w.key("camera").begin_object();
@@ -732,6 +793,21 @@ impl Report {
                 ));
             }
         }
+        if let Some(c) = &self.cluster {
+            s.push_str(&format!(
+                "cluster   : {} SoC(s), {} partition, {} query(ies) -> makespan {}, {:.1} q/s, {}/query\n  fabric  : {} payload, collective {} ({} step(s), {})\n",
+                c.socs,
+                c.partition,
+                c.queries,
+                fmt_ns(c.makespan_ns),
+                c.throughput_qps,
+                fmt_pj(c.energy_per_query_pj),
+                fmt_bytes(c.fabric_bytes),
+                c.collective.kind,
+                c.collective.steps,
+                fmt_ns(c.collective.time_ns),
+            ));
+        }
         s.push_str(&format!(
             "dram traffic : {}\nllc traffic  : {}\nenergy       : {} (dram {}, llc {}, macc {}, cpu {})",
             fmt_bytes(self.dram_bytes),
@@ -903,6 +979,7 @@ mod tests {
             "\"qps_sweep\"",
             "\"pipeline\"",
             "\"memsys\"",
+            "\"cluster\"",
             "\"camera\"",
             "\"functional\"",
             "\"timeline\"",
@@ -928,6 +1005,7 @@ mod tests {
         assert!(j.contains("\"qps_sweep\":null"));
         assert!(j.contains("\"pipeline\":null"));
         assert!(j.contains("\"memsys\":null"));
+        assert!(j.contains("\"cluster\":null"));
         assert!(j.contains("\"requests\":[]"));
     }
 
@@ -964,6 +1042,61 @@ mod tests {
         assert!(j.contains("\"name\":\"accel0.in\",\"gbps\":null"), "{j}");
         assert!(j.contains("\"name\":\"bus\",\"gbps\":12.8"), "{j}");
         assert!(rep.summary().contains("2 channel(s)"), "{}", rep.summary());
+    }
+
+    #[test]
+    fn cluster_section_serializes() {
+        use crate::cluster::{CollectiveSummary, SocNodeStats};
+        use crate::mem::LinkSnapshot;
+        let rep = Report {
+            scenario: "inference".into(),
+            cluster: Some(ClusterSummary {
+                socs: 2,
+                partition: "dp".into(),
+                queries: 4,
+                nic_gbps: Some(25.0),
+                switch_gbps: None,
+                makespan_ns: 2e6,
+                throughput_qps: 2000.0,
+                energy_per_query_pj: 1.5e9,
+                collective: CollectiveSummary {
+                    kind: "scatter-gather".into(),
+                    steps: 4,
+                    bytes: 4096,
+                    time_ns: 100.0,
+                },
+                per_soc: vec![SocNodeStats {
+                    soc: 0,
+                    role: "replica".into(),
+                    queries: 2,
+                    busy_ns: 1e6,
+                    accel_busy_ns: 8e5,
+                    occupancy: 0.5,
+                    dram_bytes: 1 << 20,
+                    energy_pj: 3e9,
+                }],
+                links: vec![LinkSnapshot {
+                    name: "soc0.tx".into(),
+                    gbps: Some(25.0),
+                    bytes: 2048,
+                    utilization: 0.125,
+                }],
+                fabric_bytes: 4096,
+            }),
+            ..Report::default()
+        };
+        let j = rep.to_json();
+        assert!(j.contains("\"cluster\":{\"socs\":2,\"partition\":\"dp\""), "{j}");
+        assert!(j.contains("\"nic_gbps\":25"), "{j}");
+        assert!(j.contains("\"switch_gbps\":null"), "{j}");
+        assert!(j.contains("\"collective\":{\"kind\":\"scatter-gather\",\"steps\":4"), "{j}");
+        assert!(j.contains("\"per_soc\":[{\"soc\":0,\"role\":\"replica\""), "{j}");
+        assert!(j.contains("\"accel_busy_ns\":800000"), "{j}");
+        assert!(j.contains("\"name\":\"soc0.tx\",\"gbps\":25"), "{j}");
+        assert!(j.contains("\"fabric_bytes\":4096"), "{j}");
+        let s = rep.summary();
+        assert!(s.contains("2 SoC(s)"), "{s}");
+        assert!(s.contains("scatter-gather"), "{s}");
     }
 
     #[test]

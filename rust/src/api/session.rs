@@ -7,6 +7,7 @@
 use anyhow::{bail, Result};
 use crate::cache::TimingCache;
 use crate::camera::{self, RawFrame};
+use crate::cluster::{self, ClusterConfig, Partition};
 use crate::config::{
     AccelKind, ArrivalProcess, FunctionalMode, InterfaceKind, SimOptions, SocConfig, TenantSpec,
 };
@@ -54,6 +55,8 @@ pub struct Session {
     inter_accel_reduction: bool,
     workers: usize,
     use_cache: bool,
+    cluster: Option<ClusterConfig>,
+    cluster_queries: Option<usize>,
 }
 
 impl Session {
@@ -78,6 +81,8 @@ impl Session {
             inter_accel_reduction: defaults.inter_accel_reduction,
             workers: 1,
             use_cache: true,
+            cluster: None,
+            cluster_queries: None,
         }
     }
 
@@ -187,6 +192,43 @@ impl Session {
         self
     }
 
+    /// Run on a cluster of `socs` identical SoCs joined by the modeled
+    /// NIC + switch fabric (see [`crate::cluster`]). Only the Inference
+    /// and Training scenarios can be clustered; the partition defaults
+    /// to [`Partition::DataParallel`] and the fabric to unbounded.
+    pub fn cluster(mut self, socs: usize) -> Self {
+        self.cluster.get_or_insert_with(ClusterConfig::default).socs = socs;
+        self
+    }
+
+    /// Choose the cluster partitioner (implies a cluster; default:
+    /// data-parallel).
+    pub fn partition(mut self, partition: Partition) -> Self {
+        self.cluster.get_or_insert_with(ClusterConfig::default).partition = partition;
+        self
+    }
+
+    /// Per-SoC NIC capacity (each direction), GB/s; 0 = unbounded
+    /// (default). Validated at [`Session::run`].
+    pub fn nic_gbps(mut self, gbps: f64) -> Self {
+        self.cluster.get_or_insert_with(ClusterConfig::default).nic_gbps = gbps;
+        self
+    }
+
+    /// Cluster-switch capacity, GB/s; 0 = unbounded (default).
+    /// Validated at [`Session::run`].
+    pub fn switch_gbps(mut self, gbps: f64) -> Self {
+        self.cluster.get_or_insert_with(ClusterConfig::default).switch_gbps = gbps;
+        self
+    }
+
+    /// Queries to push through the cluster (inference) or per-step
+    /// samples to shard (training). Default: one per SoC.
+    pub fn queries(mut self, n: usize) -> Self {
+        self.cluster_queries = Some(n.max(1));
+        self
+    }
+
     /// The [`SimOptions`] this session resolves to for a given pool.
     fn options(&self, pool: Vec<AccelKind>) -> SimOptions {
         SimOptions {
@@ -233,13 +275,62 @@ impl Session {
         let functional = self.functional;
         let pool_names: Vec<String> = pool.iter().map(|k| k.to_string()).collect();
 
+        if self.cluster.is_some()
+            && !matches!(scenario, Scenario::Inference | Scenario::Training)
+        {
+            bail!(
+                "cluster simulation supports the Inference and Training scenarios \
+                 (requested {})",
+                scenario.name()
+            );
+        }
+
         match scenario {
             Scenario::Inference | Scenario::Training => {
-                let graph = if matches!(scenario, Scenario::Training) {
-                    training_step(&graph)
-                } else {
-                    graph
-                };
+                let training = matches!(scenario, Scenario::Training);
+                if let Some(ccfg) = self.cluster {
+                    if functional != FunctionalMode::Off {
+                        bail!(
+                            "functional execution is not supported for cluster runs \
+                             (validate the single-SoC run instead)"
+                        );
+                    }
+                    if capture_timeline {
+                        bail!(
+                            "timeline capture is not supported in cluster scenarios \
+                             (one timeline per SoC; run the single-SoC point instead)"
+                        );
+                    }
+                    ccfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+                    let wall_start = std::time::Instant::now();
+                    // Gradient payload is the forward network's parameter
+                    // footprint, counted before training-step expansion.
+                    let grad_bytes = graph.param_bytes();
+                    let exec_graph = if training { training_step(&graph) } else { graph };
+                    let queries = self.cluster_queries.unwrap_or(ccfg.socs).max(1);
+                    let workers = self.workers;
+                    let opts = self.options(pool);
+                    let (sim_report, summary) = cluster::simulate(
+                        &ccfg,
+                        &cluster::ClusterWorkload {
+                            soc: &soc_cfg,
+                            opts: &opts,
+                            graph: &exec_graph,
+                            training,
+                            grad_bytes,
+                            queries,
+                            workers,
+                        },
+                    )
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                    let mut rep = Report::from_sim(scenario.name(), sim_report, pool_names);
+                    rep.cluster = Some(summary);
+                    // The reference pass's wall-clock undercounts the
+                    // per-stage sims; report the whole cluster run.
+                    rep.sim_wallclock_ns = wall_start.elapsed().as_nanos() as f64;
+                    return Ok(rep);
+                }
+                let graph = if training { training_step(&graph) } else { graph };
                 let opts = self.options(pool);
                 if functional != FunctionalMode::Off {
                     let fr = sim::run_functional_impl(&soc_cfg, &opts, &graph, None)?;
@@ -936,6 +1027,56 @@ mod tests {
             .run()
             .unwrap();
         assert!(!rep.timeline.as_ref().unwrap().events.is_empty());
+    }
+
+    #[test]
+    fn cluster_k1_matches_single_soc_run() {
+        let base = quick_run("lenet5", Scenario::Inference).unwrap();
+        let clustered = Session::on(Soc::default())
+            .network("lenet5")
+            .cluster(1)
+            .run()
+            .unwrap();
+        assert_eq!(clustered.total_ns.to_bits(), base.total_ns.to_bits());
+        assert_eq!(clustered.dram_bytes, base.dram_bytes);
+        let c = clustered.cluster.unwrap();
+        assert_eq!(c.socs, 1);
+        assert_eq!(c.queries, 1);
+        assert_eq!(c.fabric_bytes, 0);
+        assert_eq!(c.collective.kind, "none");
+        assert!((c.makespan_ns - base.total_ns).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_rejects_incompatible_scenarios_and_knobs() {
+        let err = Session::on(Soc::default())
+            .network("lenet5")
+            .cluster(2)
+            .scenario(Scenario::Serving(ServeOptions::closed(2, 0.0)))
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("cluster"), "{err}");
+        let err = Session::on(Soc::default())
+            .network("lenet5")
+            .cluster(2)
+            .partition(Partition::Pipeline { stages: 4 })
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("stages"), "{err}");
+        let err = Session::on(Soc::default())
+            .network("lenet5")
+            .cluster(2)
+            .nic_gbps(-5.0)
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("nic_gbps"), "{err}");
+        let err = Session::on(Soc::default())
+            .network("lenet5")
+            .cluster(2)
+            .capture_timeline(true)
+            .run()
+            .unwrap_err();
+        assert!(format!("{err}").contains("timeline"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! The modeled interconnect: per-SoC NIC links joined by a central
+//! switch.
+//!
+//! Star topology. Every SoC owns a full-duplex NIC modeled as two
+//! directed hops (`soc{i}.tx` egress and `soc{i}.rx` ingress) that meet
+//! at one shared `switch` hop. An inter-SoC transfer src → dst reserves
+//! capacity on the `soc{src}.tx` → `switch` → `soc{dst}.rx` hop chain —
+//! the same [`crate::mem::Link`] reservation semantics the routed
+//! memory system uses for accelerator links and the system bus: every
+//! hop accounts the full payload (bytes are conserved per hop),
+//! contention stretches transfers via fluid-flow bandwidth sharing, and
+//! the bottleneck hop sets the arrival time. Hops are reserved
+//! independently at the same earliest time (no store-and-forward
+//! serialization), which is the same approximation `mem/` makes for
+//! DRAM-channel + link chains.
+
+use crate::mem::{Link, LinkSnapshot};
+
+/// A route across the cluster fabric: source and destination SoC ids.
+/// The hop sequence is always `soc{src}.tx → switch → soc{dst}.rx`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricRoute {
+    /// Sending SoC id.
+    pub src: usize,
+    /// Receiving SoC id.
+    pub dst: usize,
+}
+
+/// The outcome of one fabric transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricXfer {
+    /// When the last byte arrived at the destination NIC.
+    pub end_ns: f64,
+    /// Time the payload spent on the wire (`end - earliest`; 0 on an
+    /// unbounded fabric or a same-SoC handoff).
+    pub wire_ns: f64,
+}
+
+/// The interconnect state: K NIC hop pairs plus the switch.
+#[derive(Debug)]
+pub struct Fabric {
+    nic_tx: Vec<Link>,
+    nic_rx: Vec<Link>,
+    switch: Link,
+    payload_bytes: u64,
+    transfers: u64,
+}
+
+impl Fabric {
+    /// Build the fabric for `socs` SoCs. Capacities are GB/s (= bytes
+    /// per ns); 0 means unbounded — bytes are still accounted but
+    /// transfers take no time, exactly like an unbounded memory-system
+    /// link.
+    pub fn new(socs: usize, nic_gbps: f64, switch_gbps: f64) -> Self {
+        Self {
+            nic_tx: (0..socs)
+                .map(|i| Link::new(format!("soc{i}.tx"), nic_gbps))
+                .collect(),
+            nic_rx: (0..socs)
+                .map(|i| Link::new(format!("soc{i}.rx"), nic_gbps))
+                .collect(),
+            switch: Link::new("switch".to_string(), switch_gbps),
+            payload_bytes: 0,
+            transfers: 0,
+        }
+    }
+
+    /// Number of SoCs the fabric connects.
+    pub fn socs(&self) -> usize {
+        self.nic_tx.len()
+    }
+
+    /// Move `bytes` from `route.src` to `route.dst` starting no earlier
+    /// than `earliest`. Reserves all three hops; the bottleneck hop sets
+    /// the arrival. A same-SoC route is a local handoff: no hops, no
+    /// bytes, arrives at `earliest`.
+    pub fn transfer(&mut self, route: FabricRoute, bytes: u64, earliest: f64) -> FabricXfer {
+        if route.src == route.dst || bytes == 0 {
+            return FabricXfer {
+                end_ns: earliest,
+                wire_ns: 0.0,
+            };
+        }
+        self.payload_bytes += bytes;
+        self.transfers += 1;
+        // The chain itself imposes no rate cap beyond each hop's own
+        // capacity; INFINITY is clamped per hop.
+        let tx = self.nic_tx[route.src].reserve(earliest, bytes, f64::INFINITY);
+        let sw = self.switch.reserve(earliest, bytes, f64::INFINITY);
+        let rx = self.nic_rx[route.dst].reserve(earliest, bytes, f64::INFINITY);
+        let end = tx.max(sw).max(rx);
+        FabricXfer {
+            end_ns: end,
+            wire_ns: end - earliest,
+        }
+    }
+
+    /// Total payload bytes injected into the fabric. Each transfer is
+    /// counted once here, and every hop it crossed carried exactly this
+    /// many bytes — so `sum(tx bytes) == switch bytes == sum(rx bytes)
+    /// == payload_bytes()`.
+    pub fn payload_bytes(&self) -> u64 {
+        self.payload_bytes
+    }
+
+    /// Number of inter-SoC transfers (same-SoC handoffs excluded).
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    /// Per-link traffic/occupancy over `[0, horizon_ns)`:
+    /// `soc0.tx, soc0.rx, soc1.tx, ..., switch` (switch last, like the
+    /// bus in the memsys section).
+    pub fn snapshot(&self, horizon_ns: f64) -> Vec<LinkSnapshot> {
+        let snap = |l: &Link| LinkSnapshot {
+            name: l.name().to_string(),
+            gbps: l.gbps(),
+            bytes: l.bytes(),
+            utilization: l.utilization_between(0.0, horizon_ns),
+        };
+        let mut out = Vec::with_capacity(2 * self.nic_tx.len() + 1);
+        for i in 0..self.nic_tx.len() {
+            out.push(snap(&self.nic_tx[i]));
+            out.push(snap(&self.nic_rx[i]));
+        }
+        out.push(snap(&self.switch));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_conserved_across_every_hop() {
+        let mut f = Fabric::new(4, 10.0, 40.0);
+        f.transfer(FabricRoute { src: 0, dst: 1 }, 1000, 0.0);
+        f.transfer(FabricRoute { src: 2, dst: 3 }, 500, 0.0);
+        f.transfer(FabricRoute { src: 1, dst: 1 }, 999, 0.0); // local: no hops
+        let snap = f.snapshot(1e6);
+        let tx: u64 = snap.iter().filter(|l| l.name.ends_with(".tx")).map(|l| l.bytes).sum();
+        let rx: u64 = snap.iter().filter(|l| l.name.ends_with(".rx")).map(|l| l.bytes).sum();
+        let sw = snap.iter().find(|l| l.name == "switch").unwrap().bytes;
+        assert_eq!(tx, 1500);
+        assert_eq!(rx, 1500);
+        assert_eq!(sw, 1500);
+        assert_eq!(f.payload_bytes(), 1500);
+        assert_eq!(f.transfers(), 2);
+    }
+
+    #[test]
+    fn bottleneck_hop_sets_the_time() {
+        // 1 GB/s NICs behind a fat switch: 1000 bytes take 1000 ns.
+        let mut f = Fabric::new(2, 1.0, 1000.0);
+        let x = f.transfer(FabricRoute { src: 0, dst: 1 }, 1000, 5.0);
+        assert!((x.end_ns - 1005.0).abs() < 1e-6, "{}", x.end_ns);
+        assert!((x.wire_ns - 1000.0).abs() < 1e-6);
+        // A narrow switch serializes two concurrent flows: together they
+        // need 2000 bytes at 2 GB/s, so the later one cannot finish
+        // before 1000 ns and total switch occupancy covers both.
+        let mut f = Fabric::new(4, 1000.0, 2.0);
+        let a = f.transfer(FabricRoute { src: 0, dst: 1 }, 1000, 0.0);
+        let b = f.transfer(FabricRoute { src: 2, dst: 3 }, 1000, 0.0);
+        assert!((a.end_ns - 500.0).abs() < 1e-6, "{}", a.end_ns);
+        assert!((b.end_ns - 1000.0).abs() < 1e-6, "{}", b.end_ns);
+    }
+
+    #[test]
+    fn unbounded_fabric_is_free_but_counted() {
+        let mut f = Fabric::new(2, 0.0, 0.0);
+        let x = f.transfer(FabricRoute { src: 0, dst: 1 }, 1 << 30, 42.0);
+        assert_eq!(x.end_ns, 42.0);
+        assert_eq!(x.wire_ns, 0.0);
+        assert_eq!(f.payload_bytes(), 1 << 30);
+        let snap = f.snapshot(100.0);
+        assert!(snap.iter().all(|l| l.gbps.is_none() && l.utilization == 0.0));
+    }
+}

@@ -1,0 +1,321 @@
+//! Multi-SoC cluster fabric: distributed inference and training across
+//! a modeled interconnect.
+//!
+//! One level up from the SoC, the same SMAUG argument repeats: at fleet
+//! scale the *interconnect* — NIC links, the switch, collective traffic —
+//! dominates end-to-end behavior, not the accelerators. This module
+//! joins K copies of the simulated SoC with a star fabric
+//! ([`Fabric`]: per-SoC NIC tx/rx hops + a central switch, reusing the
+//! [`crate::mem::Link`] hop-reservation machinery) and lowers a workload
+//! onto it with one of two partitioners:
+//!
+//! * **Data-parallel** ([`Partition::DataParallel`]) — the graph is
+//!   replicated on every SoC and the query batch is sharded round-robin.
+//!   Inference scatters each query's input tensor from SoC 0 and gathers
+//!   the output back, so a throttled `--nic-gbps` visibly degrades
+//!   throughput; training runs one local step per shard sample and then
+//!   ring-all-reduces the gradients in `2(K-1)` synchronous steps of
+//!   `ceil(param_bytes / K)`-byte chunks around the ring.
+//! * **Pipeline-parallel** ([`Partition::Pipeline`]) — the layer
+//!   sequence is split into contiguous stages balanced by the measured
+//!   per-op time, one stage per SoC; activation tensors crossing a stage
+//!   boundary become fabric transfers, and queries stream through the
+//!   stages as microbatches. With `tile_pipeline` on, activations start
+//!   streaming when the producer stage *starts* (tiles cross the fabric
+//!   under compute) instead of when it ends.
+//!
+//! Every cluster run first simulates the unmodified single-SoC
+//! reference pass; the unified report's top-level sections describe that
+//! per-query reference run (so `K = 1` is bit-identical to a plain run)
+//! and everything cluster-wide — per-SoC busy/occupancy, per-link bytes
+//! and utilization, collective breakdown, cluster throughput and
+//! energy-per-query — lives in the report's `cluster` section
+//! ([`ClusterSummary`]).
+
+mod fabric;
+mod partition;
+
+pub use fabric::{Fabric, FabricRoute, FabricXfer};
+pub(crate) use partition::{simulate, ClusterWorkload};
+
+use crate::mem::LinkSnapshot;
+
+/// How the workload is partitioned across the cluster's SoCs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    /// Replicate the graph on every SoC and shard the query batch.
+    DataParallel,
+    /// Split the layer sequence into contiguous stages, one per SoC;
+    /// `stages == 0` means one stage per SoC.
+    Pipeline {
+        /// Number of pipeline stages (0 = one per SoC).
+        stages: usize,
+    },
+}
+
+impl Partition {
+    /// Parse a partition spec: `dp`, `pp`, or `pp:<stages>`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "dp" | "data-parallel" => Ok(Partition::DataParallel),
+            "pp" | "pipeline" => Ok(Partition::Pipeline { stages: 0 }),
+            other => match other.strip_prefix("pp:") {
+                Some(n) => {
+                    let stages: usize = n
+                        .parse()
+                        .map_err(|_| format!("invalid pipeline stage count '{n}' (want pp:<stages>)"))?;
+                    Ok(Partition::Pipeline { stages })
+                }
+                None => Err(format!(
+                    "unknown partition '{other}' (want dp, pp, or pp:<stages>)"
+                )),
+            },
+        }
+    }
+
+    /// Canonical spec string: `dp`, `pp`, or `pp:<stages>` — the inverse
+    /// of [`Partition::parse`].
+    pub fn tag(&self) -> String {
+        match self {
+            Partition::DataParallel => "dp".to_string(),
+            Partition::Pipeline { stages: 0 } => "pp".to_string(),
+            Partition::Pipeline { stages } => format!("pp:{stages}"),
+        }
+    }
+}
+
+/// Cluster composition: SoC count, partitioner, and fabric capacities.
+/// Bandwidths are GB/s; 0 means unbounded (bytes still accounted,
+/// transfers take no time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of SoCs in the cluster.
+    pub socs: usize,
+    /// Workload partitioner.
+    pub partition: Partition,
+    /// Per-SoC NIC capacity (each direction), GB/s; 0 = unbounded.
+    pub nic_gbps: f64,
+    /// Central-switch capacity, GB/s; 0 = unbounded.
+    pub switch_gbps: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            socs: 1,
+            partition: Partition::DataParallel,
+            nic_gbps: 0.0,
+            switch_gbps: 0.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Check the configuration, rejecting nonsense (zero SoCs,
+    /// non-finite or negative bandwidths, more pipeline stages than
+    /// SoCs) with a one-line reason.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.socs == 0 {
+            return Err("cluster needs at least 1 SoC (socs = 0)".to_string());
+        }
+        for (name, v) in [("nic_gbps", self.nic_gbps), ("switch_gbps", self.switch_gbps)] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!(
+                    "{name} must be finite and >= 0 (got {v}); 0 means unbounded"
+                ));
+            }
+        }
+        if let Partition::Pipeline { stages } = self.partition {
+            if stages > self.socs {
+                return Err(format!(
+                    "pipeline needs a SoC per stage: {stages} stages > {} SoCs",
+                    self.socs
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the `key = value` cluster-config format (same syntax as
+    /// [`crate::config::SocConfig::from_str_cfg`]: `#` comments, blank
+    /// lines, unknown keys rejected with a line number).
+    pub fn from_str_cfg(text: &str) -> Result<Self, String> {
+        let mut c = ClusterConfig::default();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", no + 1))?;
+            let (key, val) = (key.trim(), val.trim());
+            let err = |e: &str| format!("line {}: {key}: {e}", no + 1);
+            match key {
+                "socs" => c.socs = val.parse().map_err(|e: std::num::ParseIntError| err(&e.to_string()))?,
+                "partition" => c.partition = Partition::parse(val).map_err(|e| err(&e))?,
+                "nic_gbps" => c.nic_gbps = val.parse().map_err(|e: std::num::ParseFloatError| err(&e.to_string()))?,
+                "switch_gbps" => c.switch_gbps = val.parse().map_err(|e: std::num::ParseFloatError| err(&e.to_string()))?,
+                other => return Err(format!("line {}: unknown key '{other}'", no + 1)),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Emit the configuration in the `key = value` format
+    /// [`ClusterConfig::from_str_cfg`] parses — `from_str_cfg(&c.to_cfg())`
+    /// round-trips every field.
+    pub fn to_cfg(&self) -> String {
+        format!(
+            "socs = {}\npartition = {}\nnic_gbps = {}\nswitch_gbps = {}\n",
+            self.socs,
+            self.partition.tag(),
+            self.nic_gbps,
+            self.switch_gbps,
+        )
+    }
+}
+
+/// One SoC's share of a cluster run.
+#[derive(Debug, Clone, Default)]
+pub struct SocNodeStats {
+    /// SoC id (0-based).
+    pub soc: usize,
+    /// What this SoC ran: `replica` (dp), `stage<N>` (pp), or `idle`.
+    pub role: String,
+    /// Queries computed on this SoC.
+    pub queries: usize,
+    /// Time this SoC spent computing, ns.
+    pub busy_ns: f64,
+    /// Accelerator-compute component of `busy_ns`, ns. Per-op
+    /// accelerator time is context-free, so these sum to
+    /// `queries x` the single-SoC run's `breakdown.accel_ns` under any
+    /// partitioning — the work-conservation invariant.
+    pub accel_busy_ns: f64,
+    /// `busy_ns / makespan_ns`.
+    pub occupancy: f64,
+    /// Local DRAM traffic, bytes.
+    pub dram_bytes: u64,
+    /// Local energy, pJ.
+    pub energy_pj: f64,
+}
+
+/// Collective-communication breakdown for a cluster run.
+#[derive(Debug, Clone, Default)]
+pub struct CollectiveSummary {
+    /// `none`, `scatter-gather` (dp inference), `ring-all-reduce`
+    /// (dp training), or `activation-shuffle` (pp).
+    pub kind: String,
+    /// Transfer steps taken (all-reduce ring steps, or individual
+    /// scatter/gather/shuffle transfers).
+    pub steps: usize,
+    /// Payload bytes moved by the collective.
+    pub bytes: u64,
+    /// Time attribution, ns: wall time for the synchronous all-reduce;
+    /// summed wire time for scatter/gather and activation shuffles
+    /// (which overlap compute).
+    pub time_ns: f64,
+}
+
+/// The report's `cluster` section: cluster-wide aggregates of a
+/// partitioned run. The report's top-level sections describe the
+/// single-SoC per-query reference run.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSummary {
+    /// Number of SoCs.
+    pub socs: usize,
+    /// Partition actually used: `dp` or `pp:<stages>`.
+    pub partition: String,
+    /// Queries pushed through the cluster.
+    pub queries: usize,
+    /// Per-SoC NIC capacity, GB/s; `None` = unbounded.
+    pub nic_gbps: Option<f64>,
+    /// Switch capacity, GB/s; `None` = unbounded.
+    pub switch_gbps: Option<f64>,
+    /// End-to-end cluster makespan for all queries, ns.
+    pub makespan_ns: f64,
+    /// `queries / makespan`, queries per second.
+    pub throughput_qps: f64,
+    /// Total cluster energy / queries, pJ.
+    pub energy_per_query_pj: f64,
+    /// Collective-communication breakdown.
+    pub collective: CollectiveSummary,
+    /// Per-SoC busy/occupancy/traffic/energy.
+    pub per_soc: Vec<SocNodeStats>,
+    /// Per-link traffic + utilization (`soc<i>.tx`, `soc<i>.rx`, ...,
+    /// `switch` last). Every link's bytes count the full payload of each
+    /// transfer that crossed it, so tx sums == switch == rx sums ==
+    /// `fabric_bytes`.
+    pub links: Vec<LinkSnapshot>,
+    /// Total payload bytes injected into the fabric.
+    pub fabric_bytes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_parses_and_round_trips() {
+        assert_eq!(Partition::parse("dp").unwrap(), Partition::DataParallel);
+        assert_eq!(Partition::parse("pp").unwrap(), Partition::Pipeline { stages: 0 });
+        assert_eq!(Partition::parse("pp:3").unwrap(), Partition::Pipeline { stages: 3 });
+        for p in [
+            Partition::DataParallel,
+            Partition::Pipeline { stages: 0 },
+            Partition::Pipeline { stages: 7 },
+        ] {
+            assert_eq!(Partition::parse(&p.tag()).unwrap(), p);
+        }
+        assert!(Partition::parse("ring").unwrap_err().contains("dp"));
+        assert!(Partition::parse("pp:x").unwrap_err().contains("stage count"));
+    }
+
+    #[test]
+    fn config_validates_nonsense() {
+        let ok = ClusterConfig { socs: 4, ..ClusterConfig::default() };
+        assert!(ok.validate().is_ok());
+        assert!(ClusterConfig { socs: 0, ..ok }.validate().unwrap_err().contains("at least 1"));
+        assert!(ClusterConfig { nic_gbps: -1.0, ..ok }
+            .validate()
+            .unwrap_err()
+            .contains("nic_gbps"));
+        assert!(ClusterConfig { switch_gbps: f64::NAN, ..ok }
+            .validate()
+            .unwrap_err()
+            .contains("switch_gbps"));
+        assert!(ClusterConfig { nic_gbps: f64::INFINITY, ..ok }
+            .validate()
+            .unwrap_err()
+            .contains("finite"));
+        let pp = ClusterConfig {
+            partition: Partition::Pipeline { stages: 5 },
+            ..ok
+        };
+        assert!(pp.validate().unwrap_err().contains("5 stages > 4 SoCs"));
+    }
+
+    #[test]
+    fn cfg_text_round_trips_and_rejects_unknown_keys() {
+        let c = ClusterConfig {
+            socs: 8,
+            partition: Partition::Pipeline { stages: 4 },
+            nic_gbps: 12.5,
+            switch_gbps: 100.0,
+        };
+        assert_eq!(ClusterConfig::from_str_cfg(&c.to_cfg()).unwrap(), c);
+        let parsed = ClusterConfig::from_str_cfg(
+            "# cluster\nsocs = 4\npartition = dp # default fabric\n",
+        )
+        .unwrap();
+        assert_eq!(parsed.socs, 4);
+        assert_eq!(parsed.nic_gbps, 0.0);
+        assert!(ClusterConfig::from_str_cfg("nics = 3\n")
+            .unwrap_err()
+            .contains("unknown key"));
+        assert!(ClusterConfig::from_str_cfg("nic_gbps = -2\n")
+            .unwrap_err()
+            .contains("finite and >= 0"));
+    }
+}

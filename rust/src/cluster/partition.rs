@@ -1,0 +1,471 @@
+//! Workload partitioners: lower a graph + query batch onto the cluster.
+//!
+//! Both partitioners first run the unmodified single-SoC reference
+//! simulation; its report becomes the unified report's top level (so a
+//! 1-SoC cluster is bit-identical to a plain run) and its measured
+//! per-op times drive the pipeline stage split. All inter-SoC traffic is
+//! booked on the [`Fabric`], so hop-level byte conservation and
+//! contention come from the same machinery as the SoC memory system.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::config::{SimOptions, SocConfig};
+use crate::graph::{Graph, OpId, OpKind, TensorId};
+use crate::sched::Scheduler;
+use crate::stats::SimReport;
+
+use super::fabric::{Fabric, FabricRoute};
+use super::{ClusterConfig, ClusterSummary, CollectiveSummary, Partition, SocNodeStats};
+
+/// Everything a cluster simulation needs besides the [`ClusterConfig`]:
+/// the per-node SoC, resolved options, the graph to run (already
+/// training-expanded when `training`), and the batch to push through.
+pub(crate) struct ClusterWorkload<'a> {
+    /// Per-node SoC configuration (every node is identical).
+    pub soc: &'a SocConfig,
+    /// Resolved simulation options (shared by every node).
+    pub opts: &'a SimOptions,
+    /// The graph each query executes (the training-step graph when
+    /// `training`).
+    pub graph: &'a Graph,
+    /// Training run: no input scatter, gradients ring-all-reduced.
+    pub training: bool,
+    /// Gradient payload for the all-reduce: the *forward* network's
+    /// parameter bytes (the training-step graph re-counts parameters on
+    /// backward ops, which are not separate gradient state).
+    pub grad_bytes: u64,
+    /// Queries (inference) or per-step samples (training) to shard.
+    pub queries: usize,
+    /// Host worker threads for the per-stage simulations.
+    pub workers: usize,
+}
+
+/// Run the cluster: single-SoC reference pass + the configured
+/// partitioner. Returns the reference [`SimReport`] (the unified
+/// report's top level) and the cluster section.
+pub(crate) fn simulate(
+    cfg: &ClusterConfig,
+    w: &ClusterWorkload<'_>,
+) -> Result<(SimReport, ClusterSummary), String> {
+    cfg.validate()?;
+    let reference = Scheduler::new(w.soc.clone(), w.opts.clone()).run(w.graph);
+    let summary = match cfg.partition {
+        Partition::DataParallel => data_parallel(cfg, w, &reference),
+        Partition::Pipeline { stages } => pipeline_parallel(cfg, w, &reference, stages)?,
+    };
+    Ok((reference, summary))
+}
+
+/// Sum of the graph's primary-input tensor bytes (scattered per query)
+/// and its unconsumed output tensor bytes (gathered per query).
+fn io_bytes(g: &Graph) -> (u64, u64) {
+    let consumed: HashSet<TensorId> =
+        g.ops.iter().flat_map(|o| o.inputs.iter().copied()).collect();
+    let inputs = g
+        .ops
+        .iter()
+        .filter(|o| matches!(o.kind, OpKind::Input))
+        .map(|o| g.tensors[o.output].bytes())
+        .sum();
+    let outputs = g
+        .ops
+        .iter()
+        .filter(|o| !consumed.contains(&o.output))
+        .map(|o| g.tensors[o.output].bytes())
+        .sum();
+    (inputs, outputs)
+}
+
+fn finish(
+    cfg: &ClusterConfig,
+    queries: usize,
+    makespan_ns: f64,
+    collective: CollectiveSummary,
+    mut per_soc: Vec<SocNodeStats>,
+    fabric: &Fabric,
+    partition: String,
+) -> ClusterSummary {
+    let horizon = makespan_ns.max(1e-12);
+    for n in &mut per_soc {
+        n.occupancy = n.busy_ns / horizon;
+    }
+    let total_pj: f64 = per_soc.iter().map(|n| n.energy_pj).sum();
+    ClusterSummary {
+        socs: cfg.socs,
+        partition,
+        queries,
+        nic_gbps: (cfg.nic_gbps > 0.0).then_some(cfg.nic_gbps),
+        switch_gbps: (cfg.switch_gbps > 0.0).then_some(cfg.switch_gbps),
+        makespan_ns,
+        throughput_qps: if makespan_ns > 0.0 {
+            queries as f64 / (makespan_ns * 1e-9)
+        } else {
+            0.0
+        },
+        energy_per_query_pj: total_pj / queries.max(1) as f64,
+        collective,
+        per_soc,
+        links: fabric.snapshot(makespan_ns),
+        fabric_bytes: fabric.payload_bytes(),
+    }
+}
+
+/// Data-parallel: the graph on every SoC, the batch sharded round-robin
+/// (`query q -> SoC q mod K`). Inference scatters each query's input
+/// from SoC 0 and gathers its output back; training runs the local shard
+/// and ring-all-reduces the gradients.
+fn data_parallel(cfg: &ClusterConfig, w: &ClusterWorkload<'_>, reference: &SimReport) -> ClusterSummary {
+    let k = cfg.socs;
+    let b = w.queries;
+    let l = reference.total_ns;
+    let mut fabric = Fabric::new(k, cfg.nic_gbps, cfg.switch_gbps);
+    let mut shard = vec![0usize; k];
+    for q in 0..b {
+        shard[q % k] += 1;
+    }
+
+    let (makespan, collective) = if w.training {
+        // Each SoC runs its local shard back to back, then the ring
+        // all-reduce starts once the slowest replica finishes: 2(K-1)
+        // synchronous steps, every SoC sending one ceil(grad/K) chunk to
+        // its ring neighbor per step.
+        let compute_end = shard.iter().map(|&n| n as f64 * l).fold(0.0, f64::max);
+        let steps = if k > 1 { 2 * (k - 1) } else { 0 };
+        let chunk = w.grad_bytes.div_ceil(k as u64);
+        let mut t = compute_end;
+        for _ in 0..steps {
+            let mut step_end = t;
+            for i in 0..k {
+                let x = fabric.transfer(
+                    FabricRoute { src: i, dst: (i + 1) % k },
+                    chunk,
+                    t,
+                );
+                step_end = step_end.max(x.end_ns);
+            }
+            t = step_end;
+        }
+        (
+            t,
+            CollectiveSummary {
+                kind: if steps > 0 { "ring-all-reduce" } else { "none" }.to_string(),
+                steps,
+                bytes: fabric.payload_bytes(),
+                time_ns: t - compute_end,
+            },
+        )
+    } else {
+        // Inference: every query's input leaves SoC 0's NIC, the result
+        // comes back — so the root NIC is the scaling bottleneck when
+        // `nic_gbps` is finite, and an unbounded fabric gives exactly
+        // K-fold throughput.
+        let (in_bytes, out_bytes) = io_bytes(w.graph);
+        let mut free = vec![0.0f64; k];
+        let mut makespan = 0.0f64;
+        let mut wire = 0.0f64;
+        for q in 0..b {
+            let i = q % k;
+            let scatter = fabric.transfer(FabricRoute { src: 0, dst: i }, in_bytes, 0.0);
+            let start = free[i].max(scatter.end_ns);
+            let end = start + l;
+            free[i] = end;
+            let gather = fabric.transfer(FabricRoute { src: i, dst: 0 }, out_bytes, end);
+            makespan = makespan.max(gather.end_ns);
+            wire += scatter.wire_ns + gather.wire_ns;
+        }
+        let steps = fabric.transfers() as usize;
+        (
+            makespan,
+            CollectiveSummary {
+                kind: if steps > 0 { "scatter-gather" } else { "none" }.to_string(),
+                steps,
+                bytes: fabric.payload_bytes(),
+                time_ns: wire,
+            },
+        )
+    };
+
+    let per_soc = (0..k)
+        .map(|i| SocNodeStats {
+            soc: i,
+            role: "replica".to_string(),
+            queries: shard[i],
+            busy_ns: shard[i] as f64 * l,
+            accel_busy_ns: shard[i] as f64 * reference.breakdown.accel_ns,
+            occupancy: 0.0, // filled by finish()
+            dram_bytes: shard[i] as u64 * reference.dram_bytes,
+            energy_pj: shard[i] as f64 * reference.energy.total_pj(),
+        })
+        .collect();
+    finish(cfg, b, makespan, collective, per_soc, &fabric, "dp".to_string())
+}
+
+/// Pipeline-parallel: contiguous topo-order stages balanced by measured
+/// per-op time, stage `s` on SoC `s`; activation tensors crossing a
+/// stage boundary become fabric transfers and queries stream through as
+/// microbatches.
+fn pipeline_parallel(
+    cfg: &ClusterConfig,
+    w: &ClusterWorkload<'_>,
+    reference: &SimReport,
+    stages: usize,
+) -> Result<ClusterSummary, String> {
+    let k = cfg.socs;
+    let b = w.queries;
+    let order = w.graph.topo_order();
+    // 0 = one stage per SoC; never more stages than ops to put in them.
+    let s_req = if stages == 0 { k } else { stages };
+    let s = s_req.min(order.len()).max(1);
+
+    // Stage split balanced by the reference run's measured per-op time
+    // (all five components — a stage's cost is everything the op did,
+    // not just accelerator cycles).
+    let cost: HashMap<&str, f64> = reference
+        .ops
+        .iter()
+        .map(|r| {
+            (
+                r.name.as_str(),
+                r.accel_ns + r.transfer_ns + r.prep_ns + r.finalize_ns + r.other_ns,
+            )
+        })
+        .collect();
+    let weight: Vec<f64> = order
+        .iter()
+        .map(|&oid| cost.get(w.graph.ops[oid].name.as_str()).copied().unwrap_or(0.0))
+        .collect();
+    let total: f64 = weight.iter().sum();
+    let mut stage_ops: Vec<Vec<OpId>> = Vec::with_capacity(s);
+    let mut start = 0usize;
+    let mut acc = 0.0f64;
+    for si in 0..s {
+        // Leave at least one op for every later stage.
+        let max_end = order.len() - (s - si - 1);
+        let target = total * (si as f64 + 1.0) / s as f64;
+        let mut end = start + 1;
+        acc += weight[start];
+        while end < max_end && acc < target {
+            acc += weight[end];
+            end += 1;
+        }
+        stage_ops.push(order[start..end].to_vec());
+        start = end;
+    }
+
+    // Per-stage subgraphs: cloned ops reindexed to their position, full
+    // tensor table kept — a tensor produced upstream has no producer in
+    // the stage graph, so topo_order treats it as a natural root.
+    let stage_graphs: Vec<Graph> = stage_ops
+        .iter()
+        .enumerate()
+        .map(|(si, ids)| Graph {
+            name: format!("{}[stage{si}]", w.graph.name),
+            ops: ids
+                .iter()
+                .enumerate()
+                .map(|(new_id, &oid)| {
+                    let mut op = w.graph.ops[oid].clone();
+                    op.id = new_id;
+                    op
+                })
+                .collect(),
+            tensors: w.graph.tensors.clone(),
+        })
+        .collect();
+
+    // Cross-stage activation edges: a tensor produced in stage s' and
+    // consumed in stage s > s' is shipped once per query, whatever the
+    // number of consumers.
+    let mut stage_of: HashMap<OpId, usize> = HashMap::new();
+    for (si, ids) in stage_ops.iter().enumerate() {
+        for &oid in ids {
+            stage_of.insert(oid, si);
+        }
+    }
+    let producer: HashMap<TensorId, OpId> =
+        w.graph.ops.iter().map(|o| (o.output, o.id)).collect();
+    let mut seen: HashSet<(usize, usize, TensorId)> = HashSet::new();
+    let mut edge_bytes: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+    for op in &w.graph.ops {
+        let dst = stage_of[&op.id];
+        for &t in &op.inputs {
+            if let Some(&p) = producer.get(&t) {
+                let src = stage_of[&p];
+                if src != dst && seen.insert((src, dst, t)) {
+                    *edge_bytes.entry((src, dst)).or_default() += w.graph.tensors[t].bytes();
+                }
+            }
+        }
+    }
+    let mut out_edges: Vec<Vec<(usize, u64)>> = vec![Vec::new(); s];
+    for (&(src, dst), &bytes) in &edge_bytes {
+        out_edges[src].push((dst, bytes));
+    }
+
+    // Per-stage reference sims, sharded across workers exactly like a
+    // sweep grid (index-addressed, so worker count never changes a bit).
+    let stage_reports: Vec<SimReport> = if s == 1 {
+        vec![reference.clone()]
+    } else {
+        crate::api::sweep::parallel_map(s, w.workers.clamp(1, s), |si| {
+            Scheduler::new(w.soc.clone(), w.opts.clone()).run(&stage_graphs[si])
+        })
+    };
+    let stage_ns: Vec<f64> = stage_reports.iter().map(|r| r.total_ns).collect();
+
+    // Microbatch streaming: query q enters stage s once the stage is
+    // free and its inbound activations arrived. With tile pipelining the
+    // shuffle streams while the producer computes (earliest = stage
+    // start); either way a consumer never starts before the producer
+    // finished producing.
+    let mut fabric = Fabric::new(k, cfg.nic_gbps, cfg.switch_gbps);
+    let mut free = vec![0.0f64; s];
+    let mut makespan = 0.0f64;
+    let mut wire = 0.0f64;
+    for _q in 0..b {
+        let mut arrive = vec![0.0f64; s];
+        for si in 0..s {
+            let start = free[si].max(arrive[si]);
+            let end = start + stage_ns[si];
+            free[si] = end;
+            if si == s - 1 {
+                makespan = makespan.max(end);
+            }
+            for &(dst, bytes) in &out_edges[si] {
+                let earliest = if w.opts.tile_pipeline { start } else { end };
+                let x = fabric.transfer(FabricRoute { src: si, dst }, bytes, earliest);
+                arrive[dst] = arrive[dst].max(x.end_ns.max(end));
+                wire += x.wire_ns;
+            }
+        }
+    }
+
+    let steps = fabric.transfers() as usize;
+    let collective = CollectiveSummary {
+        kind: if steps > 0 { "activation-shuffle" } else { "none" }.to_string(),
+        steps,
+        bytes: fabric.payload_bytes(),
+        time_ns: wire,
+    };
+    let per_soc = (0..k)
+        .map(|i| {
+            if i < s {
+                SocNodeStats {
+                    soc: i,
+                    role: format!("stage{i}"),
+                    queries: b,
+                    busy_ns: b as f64 * stage_ns[i],
+                    accel_busy_ns: b as f64 * stage_reports[i].breakdown.accel_ns,
+                    occupancy: 0.0,
+                    dram_bytes: b as u64 * stage_reports[i].dram_bytes,
+                    energy_pj: b as f64 * stage_reports[i].energy.total_pj(),
+                }
+            } else {
+                SocNodeStats {
+                    soc: i,
+                    role: "idle".to_string(),
+                    ..SocNodeStats::default()
+                }
+            }
+        })
+        .collect();
+    Ok(finish(
+        cfg,
+        b,
+        makespan,
+        collective,
+        per_soc,
+        &fabric,
+        format!("pp:{s}"),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn dp_unbounded_fabric_scales_exactly() {
+        let graph = nets::build_network("lenet5").unwrap();
+        let (soc, opts) = (SocConfig::default(), SimOptions::default());
+        let cfg = ClusterConfig { socs: 4, ..ClusterConfig::default() };
+        let w = ClusterWorkload {
+            soc: &soc,
+            opts: &opts,
+            graph: &graph,
+            training: false,
+            grad_bytes: graph.param_bytes(),
+            queries: 4,
+            workers: 1,
+        };
+        let (reference, summary) = simulate(&cfg, &w).unwrap();
+        // Unbounded fabric: 4 queries on 4 SoCs take exactly one pass.
+        assert!((summary.makespan_ns - reference.total_ns).abs() < 1e-9);
+        assert_eq!(summary.collective.kind, "scatter-gather");
+        assert!(summary.fabric_bytes > 0);
+        assert_eq!(summary.per_soc.len(), 4);
+        assert!(summary.per_soc.iter().all(|n| n.queries == 1));
+    }
+
+    #[test]
+    fn dp_training_all_reduce_steps_and_bytes() {
+        let graph = crate::graph::training_step(&nets::build_network("lenet5").unwrap());
+        let fwd = nets::build_network("lenet5").unwrap();
+        let (soc, opts) = (SocConfig::default(), SimOptions::default());
+        let cfg = ClusterConfig {
+            socs: 4,
+            nic_gbps: 10.0,
+            switch_gbps: 40.0,
+            ..ClusterConfig::default()
+        };
+        let w = ClusterWorkload {
+            soc: &soc,
+            opts: &opts,
+            graph: &graph,
+            training: true,
+            grad_bytes: fwd.param_bytes(),
+            queries: 4,
+            workers: 1,
+        };
+        let (_, summary) = simulate(&cfg, &w).unwrap();
+        assert_eq!(summary.collective.kind, "ring-all-reduce");
+        assert_eq!(summary.collective.steps, 6); // 2(K-1)
+        let chunk = fwd.param_bytes().div_ceil(4);
+        assert_eq!(summary.fabric_bytes, 6 * 4 * chunk);
+        assert!(summary.collective.time_ns > 0.0);
+    }
+
+    #[test]
+    fn pp_stage_split_covers_all_ops_once() {
+        let graph = nets::build_network("cnn10").unwrap();
+        let (soc, opts) = (SocConfig::default(), SimOptions::default());
+        let cfg = ClusterConfig {
+            socs: 3,
+            partition: Partition::Pipeline { stages: 0 },
+            ..ClusterConfig::default()
+        };
+        let w = ClusterWorkload {
+            soc: &soc,
+            opts: &opts,
+            graph: &graph,
+            training: false,
+            grad_bytes: graph.param_bytes(),
+            queries: 2,
+            workers: 1,
+        };
+        let (reference, summary) = simulate(&cfg, &w).unwrap();
+        assert_eq!(summary.partition, "pp:3");
+        assert_eq!(summary.collective.kind, "activation-shuffle");
+        let stage_busy: f64 = summary.per_soc.iter().map(|n| n.busy_ns).sum();
+        assert!(stage_busy > 0.0);
+        // Work conservation: accelerator cycles are context-free, so the
+        // stages' accel time sums to the reference run's, per query.
+        let stage_accel: f64 = summary.per_soc.iter().map(|n| n.accel_busy_ns).sum();
+        let expect = 2.0 * reference.breakdown.accel_ns;
+        assert!(
+            (stage_accel - expect).abs() <= 1e-6 * expect,
+            "stage accel {stage_accel} vs reference {expect}"
+        );
+    }
+}

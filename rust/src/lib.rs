@@ -125,6 +125,36 @@
 //! sampling factor), so repeated layers across sweep points — every
 //! VGG16 conv at every accelerator count — are planned and costed once.
 //!
+//! ## Multi-SoC clusters
+//!
+//! One level up, [`cluster`] joins K copies of the composed SoC with a
+//! modeled interconnect — per-SoC NIC links plus a central switch,
+//! booked with the same hop-reservation machinery as the SoC memory
+//! system — and partitions the workload **data-parallel** (batch shard +
+//! input scatter/output gather, ring all-reduce of gradients when
+//! training) or **pipeline-parallel** (time-balanced contiguous layer
+//! stages, activation shuffles as fabric transfers, streaming under
+//! compute with tile pipelining). The report's top level stays the
+//! single-SoC per-query reference run — a 1-SoC cluster is bit-identical
+//! to a plain run — and cluster-wide aggregates land in the report's
+//! `cluster` section:
+//!
+//! ```no_run
+//! use smaug::api::{Scenario, Session, Soc};
+//! use smaug::cluster::Partition;
+//!
+//! let report = Session::on(Soc::default())
+//!     .network("vgg16")
+//!     .cluster(4)                            // CLI: smaug cluster --socs 4
+//!     .partition(Partition::DataParallel)    //      --partition dp
+//!     .nic_gbps(25.0)                        //      --nic-gbps 25
+//!     .scenario(Scenario::Inference)
+//!     .run()
+//!     .unwrap();
+//! let c = report.cluster.unwrap();
+//! println!("{} SoCs: {:.1} queries/s", c.socs, c.throughput_qps);
+//! ```
+//!
 //! Cache hits are always **exact**: only pure, contention-free
 //! quantities are memoized (plans and [`accel::AccelModel::tile_cost`]
 //! results), while schedule-dependent effects (DRAM contention, queue
@@ -151,6 +181,7 @@ pub mod api;
 pub mod accel;
 pub mod cache;
 pub mod camera;
+pub mod cluster;
 pub mod config;
 pub mod cpu;
 pub mod energy;

@@ -20,6 +20,9 @@
 //!           [--accels 4] [--threads 8] [--no-pipeline] [--report summary|json]
 //! smaug sweep --net cnn10 [--axis accels|threads] [--values 1,2,4,8]
 //!           [--workers N] [--no-cache] [--report summary|json]
+//! smaug cluster --net vgg16 [--socs K] [--partition dp|pp|pp:N] [--stages N]
+//!           [--nic-gbps F] [--switch-gbps F] [--queries N] [--train]
+//!           [--workers N] [--tile-pipeline] [--report summary|json]
 //! smaug camera [--pe 8x8] [--threads 1] [--fps 30] [--report summary|json]
 //! smaug config
 //! smaug nets [--json]
@@ -31,6 +34,7 @@
 
 use anyhow::{bail, Context, Result};
 use smaug::api::{Report, Scenario, Session, Soc, SweepAxis};
+use smaug::cluster::Partition;
 use smaug::config::{
     AccelKind, ArrivalProcess, BatchPolicy, ServeOptions, SimOptions, SocConfig, TenantSpec,
 };
@@ -50,6 +54,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("cluster") => cmd_cluster(&args[1..]),
         Some("camera") => cmd_camera(&args[1..]),
         Some("config") => {
             println!("{}", SocConfig::default().table());
@@ -77,6 +82,9 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20          [--accels N|kinds] [--threads N] [--no-pipeline] [--report summary|json]\n\
                  \x20 smaug sweep --net <name> [--axis accels|threads] [--values 1,2,4,8]\n\
                  \x20          [--workers N] [--no-cache] [--report summary|json]\n\
+                 \x20 smaug cluster --net <name> [--socs K] [--partition dp|pp|pp:N] [--stages N]\n\
+                 \x20          [--nic-gbps F] [--switch-gbps F] [--queries N] [--train]\n\
+                 \x20          [--workers N] [--tile-pipeline] [--report summary|json]\n\
                  \x20 smaug camera [--pe RxC] [--threads N] [--fps N] [--report summary|json]\n\
                  \x20 smaug config   smaug nets [--json]",
                 smaug::VERSION
@@ -96,6 +104,21 @@ fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
 
 fn has(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
+}
+
+/// Parse a bandwidth flag (GB/s): must be finite and >= 0 (0 =
+/// unbounded). Rejected here with the flag's name — the SoC builder
+/// clamps silently, and silently simulating nonsense is worse than a
+/// one-line error.
+fn parse_bw_flag(args: &[String], name: &str) -> Result<Option<f64>> {
+    let Some(v) = flag(args, name) else {
+        return Ok(None);
+    };
+    let gbps: f64 = v.parse().with_context(|| name.to_string())?;
+    if !gbps.is_finite() || gbps < 0.0 {
+        bail!("{name} must be finite and >= 0 GB/s (got {v}); 0 means unbounded");
+    }
+    Ok(Some(gbps))
 }
 
 /// Compose the SoC from `--soc` (microarchitecture), `--accel` (default
@@ -126,11 +149,11 @@ fn parse_soc(args: &[String]) -> Result<Soc> {
     if let Some(v) = flag(args, "--dram-channels") {
         b = b.dram_channels(v.parse().context("--dram-channels")?);
     }
-    if let Some(v) = flag(args, "--link-gbps") {
-        b = b.link_bw(v.parse().context("--link-gbps")?);
+    if let Some(g) = parse_bw_flag(args, "--link-gbps")? {
+        b = b.link_bw(g);
     }
-    if let Some(v) = flag(args, "--bus-gbps") {
-        b = b.bus_bw(v.parse().context("--bus-gbps")?);
+    if let Some(g) = parse_bw_flag(args, "--bus-gbps")? {
+        b = b.bus_bw(g);
     }
     Ok(b.build())
 }
@@ -246,6 +269,11 @@ fn parse_serve_options(args: &[String], sweeping_qps: bool) -> Result<ServeOptio
         .map(str::parse::<f64>)
         .transpose()
         .context("--qps")?;
+    if let Some(q) = qps {
+        if !q.is_finite() || q <= 0.0 {
+            bail!("--qps must be finite and > 0 requests/s (got {q})");
+        }
+    }
     // A qps sweep substitutes the per-point rate, so `--qps` is optional
     // there; a plain open-loop serve needs the offered rate.
     let rate = |kind: &str| -> Result<f64> {
@@ -495,6 +523,61 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     print_summary_or_json(&report, flag(args, "--report").unwrap_or("summary"))
 }
 
+/// `smaug cluster`: lift an inference/training run onto K SoCs joined
+/// by a NIC + switch fabric, partitioned data- or pipeline-parallel.
+fn cmd_cluster(args: &[String]) -> Result<()> {
+    if flag(args, "--net").is_none() {
+        bail!("--net <name> is required (see `smaug nets`)");
+    }
+    let socs: usize = flag(args, "--socs")
+        .unwrap_or("2")
+        .parse()
+        .context("--socs")?;
+    let mut session = build_session(args)?.cluster(socs).scenario(if has(args, "--train") {
+        Scenario::Training
+    } else {
+        Scenario::Inference
+    });
+    let stages = flag(args, "--stages")
+        .map(str::parse::<usize>)
+        .transpose()
+        .context("--stages")?;
+    match flag(args, "--partition") {
+        Some(spec) => {
+            let mut part = Partition::parse(spec)
+                .map_err(anyhow::Error::msg)
+                .context("--partition")?;
+            if let Some(n) = stages {
+                if !matches!(part, Partition::Pipeline { .. }) {
+                    bail!("--stages only applies to --partition pp");
+                }
+                part = Partition::Pipeline { stages: n };
+            }
+            session = session.partition(part);
+        }
+        // Bare `--stages N` implies pipeline partitioning.
+        None => {
+            if let Some(n) = stages {
+                session = session.partition(Partition::Pipeline { stages: n });
+            }
+        }
+    }
+    if let Some(g) = parse_bw_flag(args, "--nic-gbps")? {
+        session = session.nic_gbps(g);
+    }
+    if let Some(g) = parse_bw_flag(args, "--switch-gbps")? {
+        session = session.switch_gbps(g);
+    }
+    if let Some(v) = flag(args, "--queries") {
+        session = session.queries(v.parse().context("--queries")?);
+    }
+    if let Some(v) = flag(args, "--workers") {
+        session = session.workers(v.parse().context("--workers")?);
+    }
+    let report = session.run()?;
+    print_summary_or_json(&report, flag(args, "--report").unwrap_or("summary"))
+}
+
 fn cmd_camera(args: &[String]) -> Result<()> {
     let pe_spec = flag(args, "--pe").unwrap_or("8x8");
     let (rows, cols) = {
@@ -548,4 +631,49 @@ fn cmd_nets(args: &[String]) -> Result<()> {
     w.end_object();
     println!("{}", w.finish());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn bandwidth_flags_reject_nonsense_with_the_flag_name() {
+        for name in ["--link-gbps", "--bus-gbps", "--nic-gbps", "--switch-gbps"] {
+            for bad in ["-1", "-0.5", "nan", "inf", "-inf"] {
+                let err = parse_bw_flag(&argv(&[name, bad]), name).unwrap_err();
+                let msg = format!("{err:#}");
+                assert!(msg.contains(name), "{name} {bad}: {msg}");
+            }
+            // Unparsable values also name the flag.
+            let err = parse_bw_flag(&argv(&[name, "fast"]), name).unwrap_err();
+            assert!(format!("{err:#}").contains(name));
+        }
+    }
+
+    #[test]
+    fn bandwidth_flags_accept_zero_and_positive() {
+        let args = argv(&["--nic-gbps", "12.5"]);
+        assert_eq!(parse_bw_flag(&args, "--nic-gbps").unwrap(), Some(12.5));
+        // 0 stays legal: it means "unbounded" everywhere in the stack.
+        let args = argv(&["--bus-gbps", "0"]);
+        assert_eq!(parse_bw_flag(&args, "--bus-gbps").unwrap(), Some(0.0));
+        assert_eq!(parse_bw_flag(&argv(&[]), "--link-gbps").unwrap(), None);
+    }
+
+    #[test]
+    fn qps_must_be_finite_and_positive() {
+        for bad in ["0", "-5", "nan", "inf"] {
+            let args = argv(&["--arrival", "poisson", "--qps", bad]);
+            let err = parse_serve_options(&args, false).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("--qps"), "{bad}: {msg}");
+        }
+        let args = argv(&["--arrival", "poisson", "--qps", "100"]);
+        assert!(parse_serve_options(&args, false).is_ok());
+    }
 }

@@ -136,7 +136,10 @@ pub struct Link {
 }
 
 impl Link {
-    fn new(name: String, gbps: f64) -> Self {
+    /// Crate-visible so the cluster fabric (`crate::cluster`) can model
+    /// NIC/switch hops with the same reservation semantics as the SoC's
+    /// accelerator links and system bus.
+    pub(crate) fn new(name: String, gbps: f64) -> Self {
         Self {
             name,
             tl: (gbps > 0.0).then(|| BandwidthTimeline::new(gbps)),
@@ -147,7 +150,7 @@ impl Link {
     /// Reserve `bytes` starting no earlier than `earliest` at up to
     /// `max_rate`; returns this hop's end time (`earliest` when the link
     /// is unbounded, so an unbounded hop never moves a transfer's end).
-    fn reserve(&mut self, earliest: f64, bytes: u64, max_rate: f64) -> f64 {
+    pub(crate) fn reserve(&mut self, earliest: f64, bytes: u64, max_rate: f64) -> f64 {
         self.bytes += bytes;
         match &mut self.tl {
             Some(tl) => tl.request(earliest, bytes, max_rate).1,

@@ -402,7 +402,37 @@ pub struct ServingStats {
 
 impl ServingStats {
     /// Maximum points kept in [`ServingStats::queue_depth`].
-    pub const QUEUE_TIMELINE_CAP: usize = 256;
+    pub const QUEUE_TIMELINE_CAP: usize = 512;
+
+    /// Coarsen a queue-depth timeline to at most `cap` points. The first
+    /// and last points are kept exactly; interior points are grouped into
+    /// equal-count buckets and each bucket keeps its **max-depth** sample
+    /// (earliest on ties), so congestion peaks survive coarsening — a
+    /// stride subsampler would alias them away. Million-request open-loop
+    /// runs thus emit a bounded `queue_depth` array instead of multi-MB
+    /// JSON.
+    fn coarsen_queue_timeline(timeline: Vec<(f64, u32)>, cap: usize) -> Vec<(f64, u32)> {
+        if timeline.len() <= cap || cap < 3 {
+            return timeline;
+        }
+        let n = timeline.len();
+        let interior = &timeline[1..n - 1];
+        let buckets = cap - 2;
+        let mut out = Vec::with_capacity(cap);
+        out.push(timeline[0]);
+        for b in 0..buckets {
+            // Equal-count bucket boundaries over the interior samples.
+            let lo = b * interior.len() / buckets;
+            let hi = (b + 1) * interior.len() / buckets;
+            if let Some(&peak) = interior[lo..hi].iter().max_by(|a, b| {
+                a.1.cmp(&b.1).then(b.0.total_cmp(&a.0)) // max depth, earliest tie
+            }) {
+                out.push(peak);
+            }
+        }
+        out.push(timeline[n - 1]);
+        out
+    }
 
     /// Build the serving section from finished request records.
     pub fn from_requests(
@@ -441,14 +471,7 @@ impl ServingStats {
                 _ => timeline.push((t, depth.max(0) as u32)),
             }
         }
-        if timeline.len() > Self::QUEUE_TIMELINE_CAP {
-            let stride = timeline.len().div_ceil(Self::QUEUE_TIMELINE_CAP);
-            timeline = timeline
-                .iter()
-                .step_by(stride)
-                .copied()
-                .collect();
-        }
+        let timeline = Self::coarsen_queue_timeline(timeline, Self::QUEUE_TIMELINE_CAP);
         let mean_queue_ns = if requests.is_empty() {
             0.0
         } else {
@@ -872,5 +895,65 @@ mod tests {
         );
         assert!(s.queue_depth.len() <= ServingStats::QUEUE_TIMELINE_CAP);
         assert_eq!(s.slo_attainment, 1.0, "no SLO means full attainment");
+    }
+
+    #[test]
+    fn long_poisson_timeline_coarsens_without_losing_the_peak() {
+        // A long open-loop run: ~100k seeded-Poisson arrivals served at a
+        // fixed rate, with a mid-run burst that drives the depth peak. The
+        // coarsened timeline must stay bounded, keep the exact first/last
+        // event instants, and preserve the max depth in some bucket — a
+        // stride subsampler loses all three.
+        let mut rng = crate::util::Rng::new(0xC0A25E);
+        let mut t = 0.0f64;
+        let mut reqs: Vec<RequestRecord> = Vec::with_capacity(100_000);
+        for i in 0..100_000usize {
+            // Exponential gaps (mean 100 ns), with a 5k-request burst of
+            // near-zero gaps in the middle.
+            let gap = if (47_000..52_000).contains(&i) {
+                0.01
+            } else {
+                -100.0 * (1.0 - rng.range_f32(0.0, 1.0) as f64).max(1e-9).ln()
+            };
+            t += gap;
+            // Service drains at one request per 80 ns from a single queue.
+            let dispatch = t.max(i as f64 * 80.0);
+            reqs.push(RequestRecord {
+                id: i,
+                network: "x".into(),
+                tenant: "default".into(),
+                arrival_ns: t,
+                dispatch_ns: dispatch,
+                end_ns: dispatch + 50.0,
+            });
+        }
+        let s = ServingStats::from_requests(
+            "poisson",
+            Some(1e7),
+            None,
+            reqs.len(),
+            &[("default".into(), 0)],
+            &reqs,
+            reqs.last().unwrap().end_ns,
+        );
+        assert!(
+            s.queue_depth.len() <= ServingStats::QUEUE_TIMELINE_CAP,
+            "timeline not bounded: {} points",
+            s.queue_depth.len()
+        );
+        assert!(s.queue_depth.len() > 400, "suspiciously few samples kept");
+        // First and last event instants survive exactly.
+        assert_eq!(s.queue_depth.first().unwrap().0, reqs[0].arrival_ns);
+        let last_event = reqs
+            .iter()
+            .flat_map(|r| [r.arrival_ns, r.dispatch_ns])
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(s.queue_depth.last().unwrap().0, last_event);
+        // The burst's depth peak is preserved by some bucket.
+        let kept_max = s.queue_depth.iter().map(|&(_, d)| d).max().unwrap();
+        assert_eq!(kept_max as usize, s.max_queue_depth);
+        assert!(s.max_queue_depth > 1_000, "burst should pile up the queue");
+        // Timestamps stay sorted after coarsening.
+        assert!(s.queue_depth.windows(2).all(|w| w[0].0 <= w[1].0));
     }
 }

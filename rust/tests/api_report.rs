@@ -68,6 +68,7 @@ const V1_KEYS: &[&str] = &[
     "qps_sweep",
     "pipeline",
     "memsys",
+    "cluster",
     "camera",
     "functional",
     "timeline",

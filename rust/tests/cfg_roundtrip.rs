@@ -8,6 +8,7 @@
 //! including awkward fractions like 0.65 — and the re-emission must be a
 //! fixed point.
 
+use smaug::cluster::{ClusterConfig, Partition};
 use smaug::config::SocConfig;
 use smaug::util::Rng;
 
@@ -100,6 +101,61 @@ fn to_cfg_round_trips_awkward_literals() {
     };
     let parsed = SocConfig::from_str_cfg(&c.to_cfg()).unwrap();
     assert_same(&c, &parsed, "awkward literals");
+}
+
+/// The cluster config (`socs`, `partition`, `nic_gbps`, `switch_gbps`)
+/// round-trips through the same cfg text format, including the
+/// `pp:N` partition spelling and 0-means-unbounded bandwidths.
+#[test]
+fn cluster_cfg_round_trips_over_a_seeded_random_grid() {
+    let mut rng = Rng::new(0xC1_05_7E12);
+    for i in 0..250 {
+        let socs = 1 + rng.below(16);
+        let c = ClusterConfig {
+            socs,
+            // validate() runs on parse, so stages must fit the SoCs.
+            partition: match rng.below(3) {
+                0 => Partition::DataParallel,
+                1 => Partition::Pipeline { stages: 0 },
+                _ => Partition::Pipeline {
+                    stages: 1 + rng.below(socs),
+                },
+            },
+            nic_gbps: if rng.below(2) == 0 {
+                0.0
+            } else {
+                rng.range_f32(1.0, 400.0) as f64
+            },
+            switch_gbps: if rng.below(2) == 0 {
+                0.0
+            } else {
+                rng.range_f32(1.0, 1600.0) as f64
+            },
+        };
+        let emitted = c.to_cfg();
+        let parsed = ClusterConfig::from_str_cfg(&emitted)
+            .unwrap_or_else(|e| panic!("case {i}: emitted cfg failed to parse: {e}\n{emitted}"));
+        assert_eq!(c.socs, parsed.socs, "case {i}: socs");
+        assert_eq!(c.partition, parsed.partition, "case {i}: partition");
+        assert_eq!(c.nic_gbps, parsed.nic_gbps, "case {i}: nic_gbps");
+        assert_eq!(c.switch_gbps, parsed.switch_gbps, "case {i}: switch_gbps");
+        // parse -> emit is a fixed point here too.
+        assert_eq!(parsed.to_cfg(), emitted, "case {i}: re-emission drifted");
+    }
+}
+
+#[test]
+fn cluster_cfg_round_trips_awkward_literals() {
+    let c = ClusterConfig {
+        socs: 7,
+        partition: Partition::Pipeline { stages: 5 },
+        nic_gbps: 0.1 + 0.2, // 0.30000000000000004
+        switch_gbps: 12.625,
+    };
+    let parsed = ClusterConfig::from_str_cfg(&c.to_cfg()).unwrap();
+    assert_eq!(c.nic_gbps, parsed.nic_gbps);
+    assert_eq!(c.switch_gbps, parsed.switch_gbps);
+    assert_eq!(c.partition, parsed.partition);
 }
 
 #[test]

@@ -1,0 +1,189 @@
+//! Cluster-fabric invariants, end to end through the public API.
+//!
+//! The contract of `Session::cluster`:
+//!
+//! * K = 1 is *bit-identical* to a plain single-SoC run — the cluster
+//!   layer adds a section, never perturbs the reference simulation;
+//! * the fabric conserves bytes at every hop — what leaves the NICs is
+//!   what crosses the switch is what arrives;
+//! * partitioning conserves *work* — shards/stages redistribute the
+//!   reference run's accelerator cycles and DRAM traffic, they do not
+//!   create or destroy them;
+//! * results are deterministic for any worker count;
+//! * an unbounded fabric gives data-parallel its ideal K-fold
+//!   throughput, and a throttled NIC strictly degrades it.
+
+use smaug::api::{Report, Scenario, Session, Soc};
+use smaug::cluster::Partition;
+
+fn run_cluster(
+    net: &str,
+    socs: usize,
+    partition: Partition,
+    nic_gbps: f64,
+    training: bool,
+) -> Report {
+    let mut s = Session::on(Soc::default())
+        .network(net)
+        .cluster(socs)
+        .partition(partition);
+    if nic_gbps > 0.0 {
+        s = s.nic_gbps(nic_gbps);
+    }
+    if training {
+        s = s.scenario(Scenario::Training);
+    }
+    s.run().unwrap()
+}
+
+/// The serialized report minus the wall-clock tail, which legitimately
+/// differs between runs (`sim_wallclock_ns` is last in the schema).
+fn stable_json(r: &Report) -> String {
+    let j = r.to_json();
+    let cut = j.find("\"sim_wallclock_ns\"").expect("schema has wallclock");
+    j[..cut].to_string()
+}
+
+#[test]
+fn one_soc_cluster_is_bit_identical_to_a_plain_run() {
+    let plain = Session::on(Soc::default())
+        .network("cnn10")
+        .run()
+        .unwrap();
+    let one = run_cluster("cnn10", 1, Partition::DataParallel, 0.0, false);
+    // The top level IS the reference run: exact bits, not tolerances.
+    assert_eq!(one.total_ns.to_bits(), plain.total_ns.to_bits());
+    assert_eq!(
+        one.breakdown.accel_ns.to_bits(),
+        plain.breakdown.accel_ns.to_bits()
+    );
+    assert_eq!(one.dram_bytes, plain.dram_bytes);
+    assert_eq!(one.llc_bytes, plain.llc_bytes);
+    assert_eq!(
+        one.energy.total_pj().to_bits(),
+        plain.energy.total_pj().to_bits()
+    );
+    assert_eq!(one.ops.len(), plain.ops.len());
+    // All traffic was self-routed: nothing touched the fabric.
+    let c = one.cluster.as_ref().unwrap();
+    assert_eq!(c.socs, 1);
+    assert_eq!(c.fabric_bytes, 0);
+    assert_eq!(c.collective.kind, "none");
+    assert!(c.links.iter().all(|l| l.bytes == 0));
+    assert!((c.makespan_ns - plain.total_ns).abs() < 1e-12);
+    // And the plain run carries no cluster section at all.
+    assert!(plain.cluster.is_none());
+}
+
+#[test]
+fn fabric_conserves_bytes_at_every_hop() {
+    // Training on 4 SoCs over a finite fabric: a ring all-reduce with a
+    // known payload crosses every hop.
+    let rep = run_cluster("lenet5", 4, Partition::DataParallel, 10.0, true);
+    let c = rep.cluster.as_ref().unwrap();
+    assert_eq!(c.collective.kind, "ring-all-reduce");
+    assert_eq!(c.collective.steps, 6); // 2(K-1)
+    let grad = smaug::nets::build_network("lenet5").unwrap().param_bytes();
+    let expect = 6 * 4 * grad.div_ceil(4);
+    assert_eq!(c.fabric_bytes, expect, "payload = steps x K x chunk");
+    // Per-hop conservation, straight off the published link snapshots:
+    // everything the NICs transmitted crossed the switch and was
+    // received — no hop drops or double-counts bytes.
+    let tx: u64 = c.links.iter().filter(|l| l.name.ends_with(".tx")).map(|l| l.bytes).sum();
+    let rx: u64 = c.links.iter().filter(|l| l.name.ends_with(".rx")).map(|l| l.bytes).sum();
+    let switch = c.links.iter().find(|l| l.name == "switch").unwrap();
+    assert_eq!(tx, c.fabric_bytes);
+    assert_eq!(rx, c.fabric_bytes);
+    assert_eq!(switch.bytes, c.fabric_bytes);
+    // The all-reduce is symmetric: every NIC carried exactly 1/K of it.
+    for l in c.links.iter().filter(|l| l.name.starts_with("soc")) {
+        assert_eq!(l.bytes, c.fabric_bytes / 4, "{}", l.name);
+    }
+    // Utilizations are well-formed on every bounded link.
+    for l in &c.links {
+        assert!(
+            (0.0..=1.0 + 1e-9).contains(&l.utilization),
+            "{}: {}",
+            l.name,
+            l.utilization
+        );
+    }
+    assert!(c.collective.time_ns > 0.0, "finite fabric takes time");
+}
+
+#[test]
+fn data_parallel_conserves_work_exactly() {
+    let rep = Session::on(Soc::default())
+        .network("cnn10")
+        .cluster(3)
+        .queries(7) // uneven shard: 3 + 2 + 2
+        .run()
+        .unwrap();
+    let c = rep.cluster.as_ref().unwrap();
+    assert_eq!(c.queries, 7);
+    assert_eq!(c.per_soc.iter().map(|n| n.queries).sum::<usize>(), 7);
+    // Replicas redistribute the reference run's work, exactly.
+    let dram: u64 = c.per_soc.iter().map(|n| n.dram_bytes).sum();
+    assert_eq!(dram, 7 * rep.dram_bytes);
+    let accel: f64 = c.per_soc.iter().map(|n| n.accel_busy_ns).sum();
+    let expect = 7.0 * rep.breakdown.accel_ns;
+    assert!((accel - expect).abs() <= 1e-12 * expect, "{accel} vs {expect}");
+    let energy: f64 = c.per_soc.iter().map(|n| n.energy_pj).sum();
+    assert!((energy - 7.0 * rep.energy.total_pj()).abs() <= 1e-6 * energy);
+}
+
+#[test]
+fn pipeline_parallel_conserves_accelerator_work() {
+    let rep = run_cluster("cnn10", 3, Partition::Pipeline { stages: 0 }, 0.0, false);
+    let c = rep.cluster.as_ref().unwrap();
+    assert_eq!(c.partition, "pp:3");
+    assert_eq!(c.collective.kind, "activation-shuffle");
+    assert!(c.fabric_bytes > 0, "stage boundaries ship activations");
+    // Accelerator cycles are context-free: splitting the layer sequence
+    // across stages must neither create nor destroy them.
+    let accel: f64 = c.per_soc.iter().map(|n| n.accel_busy_ns).sum();
+    let expect = c.queries as f64 * rep.breakdown.accel_ns;
+    assert!(
+        (accel - expect).abs() <= 1e-6 * expect,
+        "stage accel {accel} vs reference {expect}"
+    );
+    // Every stage ran every query; no SoC is idle at stages == socs.
+    assert!(c.per_soc.iter().all(|n| n.role.starts_with("stage")));
+    assert!(c.per_soc.iter().all(|n| n.queries == c.queries));
+}
+
+#[test]
+fn reports_are_bit_identical_for_any_worker_count() {
+    let run = |workers: usize| {
+        Session::on(Soc::default())
+            .network("cnn10")
+            .cluster(4)
+            .partition(Partition::Pipeline { stages: 4 })
+            .queries(6)
+            .workers(workers)
+            .run()
+            .unwrap()
+    };
+    let base = stable_json(&run(1));
+    for workers in [2, 8] {
+        assert_eq!(stable_json(&run(workers)), base, "workers = {workers}");
+    }
+}
+
+#[test]
+fn dp_scales_vgg16_and_a_throttled_nic_degrades_it() {
+    let one = run_cluster("vgg16", 1, Partition::DataParallel, 0.0, false);
+    let four = run_cluster("vgg16", 4, Partition::DataParallel, 0.0, false);
+    let q1 = one.cluster.as_ref().unwrap().throughput_qps;
+    let q4 = four.cluster.as_ref().unwrap().throughput_qps;
+    assert!(
+        q4 >= 3.0 * q1,
+        "4-SoC dp should give >= 3x an unbounded fabric: {q4} vs {q1}"
+    );
+    // A starved root NIC serializes the input scatter, so throughput
+    // strictly drops below the unbounded fabric's.
+    let choked = run_cluster("vgg16", 4, Partition::DataParallel, 0.05, false);
+    let qc = choked.cluster.as_ref().unwrap().throughput_qps;
+    assert!(qc < q4, "throttled NIC must cost throughput: {qc} vs {q4}");
+    assert!(qc > 0.0);
+}

@@ -29,6 +29,7 @@ TOP_KEYS = [
     "qps_sweep",
     "pipeline",
     "memsys",
+    "cluster",
     "camera",
     "functional",
     "timeline",
@@ -97,6 +98,31 @@ PIPELINE_KEYS = [
     "dram_utilization",
 ]
 MEMSYS_KEYS = ["channels", "channel_gbps", "per_channel", "links"]
+CLUSTER_KEYS = [
+    "socs",
+    "partition",
+    "queries",
+    "nic_gbps",
+    "switch_gbps",
+    "makespan_ns",
+    "throughput_qps",
+    "energy_per_query_pj",
+    "collective",
+    "per_soc",
+    "links",
+    "fabric_bytes",
+]
+COLLECTIVE_KEYS = ["kind", "steps", "bytes", "time_ns"]
+PER_SOC_KEYS = [
+    "soc",
+    "role",
+    "queries",
+    "busy_ns",
+    "accel_busy_ns",
+    "occupancy",
+    "dram_bytes",
+    "energy_pj",
+]
 
 
 def fail(msg: str) -> None:
@@ -250,6 +276,55 @@ def main() -> None:
                 fail(f"link utilization out of range: {l}")
     elif mem is not None:
         fail(f"{r['scenario']} report should have memsys null")
+    cl = r["cluster"]
+    if cl is not None and r["scenario"] not in ("inference", "training"):
+        fail(f"{r['scenario']} report should have cluster null")
+    if cl is not None:
+        for key in CLUSTER_KEYS:
+            if key not in cl:
+                fail(f"cluster missing {key}")
+        for key in COLLECTIVE_KEYS:
+            if key not in cl["collective"]:
+                fail(f"cluster.collective missing {key}")
+        if not cl["socs"] >= 1:
+            fail(f"cluster.socs must be >= 1 (got {cl['socs']})")
+        if len(cl["per_soc"]) != cl["socs"]:
+            fail("cluster.per_soc must list every SoC")
+        for n in cl["per_soc"]:
+            for key in PER_SOC_KEYS:
+                if key not in n:
+                    fail(f"cluster.per_soc[{n.get('soc')!r}] missing {key}")
+            if not -1e-9 <= n["occupancy"] <= 1.0 + 1e-9:
+                fail(f"per-SoC occupancy out of range: {n}")
+        # Fabric byte conservation, hop by hop: everything the NICs
+        # transmitted crossed the switch and was received.
+        tx = sum(l["bytes"] for l in cl["links"] if l["name"].endswith(".tx"))
+        rx = sum(l["bytes"] for l in cl["links"] if l["name"].endswith(".rx"))
+        switch = [l for l in cl["links"] if l["name"] == "switch"]
+        if not switch:
+            fail("cluster.links must include the switch")
+        if not tx == rx == switch[0]["bytes"] == cl["fabric_bytes"]:
+            fail(
+                "fabric bytes not conserved per hop: "
+                f"tx {tx} / switch {switch[0]['bytes']} / rx {rx} / "
+                f"payload {cl['fabric_bytes']}"
+            )
+        for l in cl["links"]:
+            if not -1e-9 <= l["utilization"] <= 1.0 + 1e-9:
+                fail(f"cluster link utilization out of range: {l}")
+        # Work conservation: data-parallel replicas redistribute the
+        # reference run's work exactly — per-SoC DRAM traffic sums to
+        # queries x the top-level (single-query reference) traffic.
+        if cl["partition"] == "dp":
+            soc_dram = sum(n["dram_bytes"] for n in cl["per_soc"])
+            want = cl["queries"] * r["traffic"]["dram_bytes"]
+            if soc_dram != want:
+                fail(
+                    "dp work not conserved: per-SoC dram sums to "
+                    f"{soc_dram}, expected queries x reference = {want}"
+                )
+            if sum(n["queries"] for n in cl["per_soc"]) != cl["queries"]:
+                fail("dp per-SoC query shards do not sum to cluster.queries")
     print(f"report schema OK: {r['scenario']} {r['network']} ({len(r['ops'])} ops)")
 
 
