@@ -1,11 +1,13 @@
-//! Ablation bench: the two scheduler extensions DESIGN.md calls out —
-//! double buffering (the NVDLA convolution buffer the paper explicitly
-//! does not model) and inter-accelerator reduction (the paper's §IV-B
-//! future work) — individually and combined, across configurations,
-//! driven through the scenario API.
+//! Ablation bench: scheduler decisions, driven through the
+//! policy-tournament framework. Section 1 races the pluggable policies
+//! (fifo / heft / rr) on homogeneous and heterogeneous pools and
+//! hard-fails if any policy loses work or loses to the serial schedule.
+//! Section 2 keeps the two scheduler extensions DESIGN.md calls out —
+//! double buffering and inter-accelerator reduction — as a baseline-vs-on
+//! table.
 
-use smaug::api::{Session, Soc};
-use smaug::config::AccelKind;
+use smaug::api::{policy_tournament, Session, Soc};
+use smaug::config::{AccelKind, Policy};
 use smaug::util::fmt_ns;
 
 fn run(net: &str, accels: usize, dbuf: bool, inter: bool) -> anyhow::Result<(f64, u64)> {
@@ -18,7 +20,36 @@ fn run(net: &str, accels: usize, dbuf: bool, inter: bool) -> anyhow::Result<(f64
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("Ablation — scheduler extensions (baseline: DMA, 1 thread)");
+    let policies = [Policy::Fifo, Policy::Heft, Policy::Rr];
+    println!("Ablation — scheduler policies (tile-pipelined vs serial)");
+    for net in ["cnn10", "vgg16"] {
+        for (label, soc) in [
+            ("2x nvdla", Soc::builder().accels(AccelKind::Nvdla, 2).build()),
+            (
+                "nvdla+systolic",
+                Soc::builder()
+                    .accel(AccelKind::Nvdla)
+                    .accel(AccelKind::Systolic)
+                    .build(),
+            ),
+        ] {
+            let t = policy_tournament(&Session::on(soc).network(net), &policies, 4)?;
+            println!("\n{net} on {label}");
+            println!("{}", t.summary());
+            assert_eq!(
+                t.work_conserving(),
+                policies.len(),
+                "a policy reordered work into different DRAM traffic"
+            );
+            assert_eq!(
+                t.dominating(),
+                policies.len(),
+                "a policy lost to the serial schedule"
+            );
+        }
+    }
+
+    println!("\nAblation — scheduler extensions (baseline: DMA, 1 thread)");
     println!(
         "{:<10} {:>3} {:>14} {:>14} {:>14} {:>14}",
         "net", "acc", "baseline", "+dbuf", "+inter-red", "+both"
@@ -27,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         for accels in [1usize, 8] {
             let (t0, _) = run(net, accels, false, false)?;
             let (t1, _) = run(net, accels, true, false)?;
-            let (t2, b2) = run(net, accels, false, true)?;
+            let (t2, _) = run(net, accels, false, true)?;
             let (t3, _) = run(net, accels, true, true)?;
             println!(
                 "{:<10} {:>3} {:>14} {:>13}{} {:>13}{} {:>13}{}",
@@ -41,7 +72,6 @@ fn main() -> anyhow::Result<()> {
                 fmt_ns(t3),
                 mark(t0, t3),
             );
-            let _ = b2;
         }
     }
     println!("  (* = >2% faster than baseline; inter-reduction trades extra");

@@ -1,0 +1,253 @@
+//! Policy tournament: race scheduler policies on one workload.
+//!
+//! For each raced [`Policy`] the tournament runs the same session twice —
+//! once tile-pipelined (the event-driven executor, where ready-queue
+//! ordering and placement actually matter) and once serial (the
+//! dependency-order reference schedule) — and derives three invariants
+//! per policy:
+//!
+//! * **work conservation** — every run moves exactly the same DRAM
+//!   traffic as the serial reference; a policy reorders and places work,
+//!   it must never create or lose any.
+//! * **dominance** — the pipelined makespan never loses to the serial
+//!   schedule (a scheduling policy that is slower than not scheduling at
+//!   all is a bug, not a trade-off).
+//! * **speedup vs fifo** — the headline race result.
+//!
+//! The 2 x P runs are sharded through the same index-addressed worker
+//! pool as the sweep engine ([`super::sweep`]), so results are
+//! bit-identical for any worker count.
+
+use anyhow::{bail, Result};
+
+use super::scenario::Scenario;
+use super::session::Session;
+use super::sweep::parallel_map;
+use crate::config::Policy;
+use crate::util::{fmt_ns, JsonWriter};
+
+/// Outcome of one policy in a [`policy_tournament`].
+#[derive(Debug, Clone)]
+pub struct PolicyRow {
+    /// The raced policy.
+    pub policy: Policy,
+    /// Tile-pipelined (event-driven) makespan, ns.
+    pub event_ns: f64,
+    /// Serial reference-schedule makespan, ns.
+    pub serial_ns: f64,
+    /// DRAM traffic of the pipelined run, bytes.
+    pub dram_bytes: u64,
+    /// fifo's pipelined makespan / this policy's pipelined makespan.
+    pub speedup_vs_fifo: f64,
+    /// Pipelined makespan did not lose to the serial schedule.
+    pub dominates_serial: bool,
+    /// Both runs moved exactly the reference DRAM traffic.
+    pub work_conserving: bool,
+}
+
+/// Result of a [`policy_tournament`]: one [`PolicyRow`] per raced policy,
+/// in the order the policies were given.
+#[derive(Debug, Clone)]
+pub struct PolicyTournament {
+    /// Network the policies raced on.
+    pub network: String,
+    /// Accelerator-pool composition of the shared SoC.
+    pub accel_pool: Vec<String>,
+    /// Per-policy outcomes, in input order.
+    pub rows: Vec<PolicyRow>,
+}
+
+/// Race `policies` on `base`'s SoC + network: each policy runs the
+/// inference scenario tile-pipelined and serial, sharded over `workers`
+/// threads. The base session's scenario is overridden; every other knob
+/// (pool, interface, threads, sampling) is raced as configured.
+pub fn policy_tournament(
+    base: &Session,
+    policies: &[Policy],
+    workers: usize,
+) -> Result<PolicyTournament> {
+    if policies.is_empty() {
+        bail!("policy tournament needs at least one policy (fifo|heft|rr)");
+    }
+    // Job 2i = policy i pipelined, job 2i+1 = policy i serial.
+    let outcomes = parallel_map(2 * policies.len(), workers.max(1), |i| {
+        let pipelined = i % 2 == 0;
+        base.clone()
+            .scenario(Scenario::Inference)
+            .policy(policies[i / 2])
+            .pipeline(false)
+            .tile_pipeline(pipelined)
+            .run()
+    });
+    let mut reports = Vec::with_capacity(outcomes.len());
+    for r in outcomes {
+        reports.push(r?);
+    }
+    // Serial fifo-equivalent traffic is the work-conservation reference:
+    // every policy's every run must move exactly this many DRAM bytes.
+    let ref_dram = reports[1].dram_bytes;
+    // fifo's pipelined makespan anchors the speedup column; when fifo is
+    // not raced, the first policy anchors it instead.
+    let fifo_event_ns = policies
+        .iter()
+        .position(|&p| p == Policy::Fifo)
+        .map_or(reports[0].total_ns, |i| reports[2 * i].total_ns);
+    let rows = policies
+        .iter()
+        .enumerate()
+        .map(|(i, &policy)| {
+            let (event, serial) = (&reports[2 * i], &reports[2 * i + 1]);
+            PolicyRow {
+                policy,
+                event_ns: event.total_ns,
+                serial_ns: serial.total_ns,
+                dram_bytes: event.dram_bytes,
+                speedup_vs_fifo: fifo_event_ns / event.total_ns.max(1e-9),
+                // Float makespans: allow 1% + 1 ns of accumulation slop.
+                dominates_serial: event.total_ns <= serial.total_ns * 1.01 + 1.0,
+                work_conserving: event.dram_bytes == ref_dram
+                    && serial.dram_bytes == ref_dram,
+            }
+        })
+        .collect();
+    Ok(PolicyTournament {
+        network: reports[0].network.clone(),
+        accel_pool: reports[0].accel_pool.clone(),
+        rows,
+    })
+}
+
+impl PolicyTournament {
+    /// Policies whose pipelined run did not lose to the serial schedule.
+    pub fn dominating(&self) -> usize {
+        self.rows.iter().filter(|r| r.dominates_serial).count()
+    }
+
+    /// Policies whose runs all moved exactly the reference DRAM traffic.
+    pub fn work_conserving(&self) -> usize {
+        self.rows.iter().filter(|r| r.work_conserving).count()
+    }
+
+    /// Human-readable tournament table.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "policy tournament : {} on {}\n{:<8} {:>12} {:>12} {:>10} {:>10} {:>10}\n",
+            self.network,
+            self.accel_pool.join("+"),
+            "policy",
+            "pipelined",
+            "serial",
+            "vs fifo",
+            "dominates",
+            "conserves",
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:<8} {:>12} {:>12} {:>9.2}x {:>10} {:>10}\n",
+                r.policy,
+                fmt_ns(r.event_ns),
+                fmt_ns(r.serial_ns),
+                r.speedup_vs_fifo,
+                if r.dominates_serial { "yes" } else { "NO" },
+                if r.work_conserving { "yes" } else { "NO" },
+            ));
+        }
+        s.push_str(&format!(
+            "{}/{} policies dominate serial, {}/{} conserve work",
+            self.dominating(),
+            self.rows.len(),
+            self.work_conserving(),
+            self.rows.len(),
+        ));
+        s
+    }
+
+    /// `BENCH_policy.json` emission: per-policy rows plus the top-level
+    /// metrics the CI bench gate (`scripts/compare_bench.py`) pins —
+    /// `<policy>_speedup_vs_fifo`, `policies_dominating_serial`,
+    /// `work_conserving_policies`.
+    pub fn bench_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_object();
+        w.key("bench").string("policy_tournament");
+        w.key("network").string(&self.network);
+        for r in &self.rows {
+            w.key(&format!("{}_speedup_vs_fifo", r.policy))
+                .number(r.speedup_vs_fifo);
+        }
+        w.key("policies_dominating_serial")
+            .number(self.dominating() as f64);
+        w.key("work_conserving_policies")
+            .number(self.work_conserving() as f64);
+        w.key("policies").begin_array();
+        for r in &self.rows {
+            w.begin_object();
+            w.key("policy").string(&r.policy.to_string());
+            w.key("event_ns").number(r.event_ns);
+            w.key("serial_ns").number(r.serial_ns);
+            w.key("dram_bytes").uint(r.dram_bytes);
+            w.key("speedup_vs_fifo").number(r.speedup_vs_fifo);
+            w.key("dominates_serial").boolean(r.dominates_serial);
+            w.key("work_conserving").boolean(r.work_conserving);
+            w.end_object();
+        }
+        w.end_array();
+        w.end_object();
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::soc::Soc;
+    use super::*;
+    use crate::config::AccelKind;
+
+    fn hetero_session() -> Session {
+        let soc = Soc::builder()
+            .accel(AccelKind::Nvdla)
+            .accel(AccelKind::Systolic)
+            .build();
+        Session::on(soc).network("cnn10")
+    }
+
+    #[test]
+    fn tournament_races_all_policies_and_conserves_work() {
+        let t = policy_tournament(
+            &hetero_session(),
+            &[Policy::Fifo, Policy::Heft, Policy::Rr],
+            2,
+        )
+        .unwrap();
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.work_conserving(), 3, "{}", t.summary());
+        assert_eq!(t.dominating(), 3, "{}", t.summary());
+        // fifo's speedup against itself is exactly 1.
+        assert!((t.rows[0].speedup_vs_fifo - 1.0).abs() < 1e-12);
+        let j = t.bench_json();
+        assert!(j.contains("\"bench\":\"policy_tournament\""), "{j}");
+        assert!(j.contains("\"heft_speedup_vs_fifo\":"), "{j}");
+        assert!(j.contains("\"policies_dominating_serial\":3"), "{j}");
+        assert!(j.contains("\"work_conserving_policies\":3"), "{j}");
+        assert!(t.summary().contains("policy tournament"), "{}", t.summary());
+    }
+
+    #[test]
+    fn tournament_is_worker_invariant() {
+        let s = hetero_session();
+        let policies = [Policy::Fifo, Policy::Heft];
+        let a = policy_tournament(&s, &policies, 1).unwrap();
+        let b = policy_tournament(&s, &policies, 4).unwrap();
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.event_ns.to_bits(), y.event_ns.to_bits());
+            assert_eq!(x.serial_ns.to_bits(), y.serial_ns.to_bits());
+            assert_eq!(x.dram_bytes, y.dram_bytes);
+        }
+    }
+
+    #[test]
+    fn empty_policy_list_is_rejected() {
+        let err = policy_tournament(&hetero_session(), &[], 1).unwrap_err();
+        assert!(err.to_string().contains("fifo|heft|rr"));
+    }
+}

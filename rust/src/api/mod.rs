@@ -70,6 +70,7 @@
 //! and read the cluster-wide aggregates from the report's `cluster`
 //! section.
 
+mod ablate;
 mod report;
 mod scenario;
 mod session;
@@ -78,9 +79,10 @@ mod soc;
 // through the same index-addressed worker pool as the sweep engine.
 pub(crate) mod sweep;
 
+pub use ablate::{policy_tournament, PolicyRow, PolicyTournament};
 pub use report::{
-    CameraSummary, FunctionalSummary, LatencyStats, QpsRow, QpsSweepSummary, Report,
-    SweepEngineSummary, SweepRow, REPORT_SCHEMA,
+    CameraSummary, FunctionalSummary, LatencyStats, PolicySummary, QpsRow, QpsSweepSummary,
+    Report, SweepEngineSummary, SweepRow, REPORT_SCHEMA,
 };
 pub use scenario::{Scenario, SweepAxis};
 pub use session::{quick_run, Session};

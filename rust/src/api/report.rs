@@ -5,6 +5,7 @@
 //! key set is identical across scenarios — tooling can rely on it.
 
 use crate::cluster::ClusterSummary;
+use crate::config::Policy;
 use crate::energy::EnergyAccount;
 use crate::mem::MemsysSnapshot;
 use crate::stats::{
@@ -44,6 +45,38 @@ impl LatencyStats {
             p99_ns: crate::stats::percentile(&sorted, 99.0),
             p999_ns: crate::stats::percentile(&sorted, 99.9),
             max_ns: sorted.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+/// Scheduler-policy section: which [`crate::sched::policy::SchedPolicy`]
+/// produced the schedule, plus its short ready-queue-ordering and
+/// placement descriptors. Always an object (never `null`); defaults to
+/// the `fifo` descriptors so pre-policy reports keep their meaning.
+#[derive(Debug, Clone)]
+pub struct PolicySummary {
+    /// Policy name as accepted by `--policy` (`fifo`, `heft`, `rr`).
+    pub name: String,
+    /// One-line descriptor of how the ready queue is ordered.
+    pub ready_order: String,
+    /// One-line descriptor of how tiles are placed onto accelerators.
+    pub placement: String,
+}
+
+impl Default for PolicySummary {
+    fn default() -> Self {
+        Self::of(Policy::Fifo)
+    }
+}
+
+impl PolicySummary {
+    /// Descriptor section for a [`Policy`].
+    pub fn of(p: Policy) -> Self {
+        let pol = crate::sched::policy::lookup(p);
+        Self {
+            name: pol.name().to_string(),
+            ready_order: pol.ready_order().to_string(),
+            placement: pol.placement().to_string(),
         }
     }
 }
@@ -174,6 +207,8 @@ pub struct Report {
     pub config: String,
     /// Accelerator-pool composition, one display name per instance.
     pub accel_pool: Vec<String>,
+    /// Scheduler policy that produced the schedule (always present).
+    pub policy: PolicySummary,
     /// Headline latency, ns: end-to-end forward-pass latency (inference /
     /// training / camera frame), serving makespan, or the sweep baseline.
     pub total_ns: f64,
@@ -305,6 +340,11 @@ impl Report {
             w.string(a);
         }
         w.end_array();
+        w.key("policy").begin_object();
+        w.key("name").string(&self.policy.name);
+        w.key("ready_order").string(&self.policy.ready_order);
+        w.key("placement").string(&self.policy.placement);
+        w.end_object();
         w.key("total_ns").number(self.total_ns);
         w.key("breakdown").begin_object();
         w.key("accel_ns").number(self.breakdown.accel_ns);
@@ -964,6 +1004,7 @@ mod tests {
             "\"network\"",
             "\"config\"",
             "\"accel_pool\"",
+            "\"policy\"",
             "\"total_ns\"",
             "\"breakdown\"",
             "\"traffic\"",
@@ -995,6 +1036,8 @@ mod tests {
     #[test]
     fn null_sections_render_as_null() {
         let j = Report::default().to_json();
+        // The policy section is always an object, defaulting to fifo.
+        assert!(j.contains("\"policy\":{\"name\":\"fifo\""), "{j}");
         assert!(j.contains("\"camera\":null"));
         assert!(j.contains("\"functional\":null"));
         assert!(j.contains("\"timeline\":null"));

@@ -9,7 +9,8 @@ use crate::cache::TimingCache;
 use crate::camera::{self, RawFrame};
 use crate::cluster::{self, ClusterConfig, Partition};
 use crate::config::{
-    AccelKind, ArrivalProcess, FunctionalMode, InterfaceKind, SimOptions, SocConfig, TenantSpec,
+    AccelKind, ArrivalProcess, FunctionalMode, InterfaceKind, Policy, SimOptions, SocConfig,
+    TenantSpec,
 };
 use crate::graph::{training_step, Graph};
 use crate::nets;
@@ -18,7 +19,8 @@ use crate::sim;
 use std::sync::Arc;
 
 use super::report::{
-    CameraSummary, FunctionalSummary, QpsRow, QpsSweepSummary, Report, SweepEngineSummary, SweepRow,
+    CameraSummary, FunctionalSummary, PolicySummary, QpsRow, QpsSweepSummary, Report,
+    SweepEngineSummary, SweepRow,
 };
 use super::scenario::{Scenario, SweepAxis};
 use super::soc::Soc;
@@ -57,6 +59,7 @@ pub struct Session {
     use_cache: bool,
     cluster: Option<ClusterConfig>,
     cluster_queries: Option<usize>,
+    policy: Policy,
 }
 
 impl Session {
@@ -83,6 +86,7 @@ impl Session {
             use_cache: true,
             cluster: None,
             cluster_queries: None,
+            policy: defaults.policy,
         }
     }
 
@@ -144,6 +148,15 @@ impl Session {
     /// [`crate::config::SimOptions::tile_pipeline`].
     pub fn tile_pipeline(mut self, on: bool) -> Self {
         self.tile_pipeline = on;
+        self
+    }
+
+    /// Scheduling policy for task selection and accelerator placement
+    /// (default: [`Policy::Fifo`], bit-identical to the pre-policy
+    /// scheduler). See [`crate::sched::policy`] for the trait contract
+    /// and the built-in `fifo` / `heft` / `rr` implementations.
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
         self
     }
 
@@ -245,6 +258,7 @@ impl Session {
             inter_accel_reduction: self.inter_accel_reduction,
             pipeline: self.pipeline.unwrap_or_else(|| self.scenario.default_pipeline()),
             tile_pipeline: self.tile_pipeline,
+            policy: self.policy,
         }
     }
 
@@ -264,7 +278,16 @@ impl Session {
     }
 
     /// Run the scenario and return the unified report.
-    pub fn run(mut self) -> Result<Report> {
+    pub fn run(self) -> Result<Report> {
+        let policy = self.policy;
+        let mut rep = self.run_inner()?;
+        // Stamp the policy section on every scenario's report at the one
+        // exit point, so no arm can forget it.
+        rep.policy = PolicySummary::of(policy);
+        Ok(rep)
+    }
+
+    fn run_inner(mut self) -> Result<Report> {
         // Pull out the moved parts; the scalar knobs stay on `self` for
         // `options()`. Scenario and Soc are cheap clones (scalars + small
         // vecs); the Graph is moved, never copied.

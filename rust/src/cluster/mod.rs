@@ -142,7 +142,10 @@ impl ClusterConfig {
     pub fn from_str_cfg(text: &str) -> Result<Self, String> {
         let mut c = ClusterConfig::default();
         for (no, line) in text.lines().enumerate() {
-            let line = line.split('#').next().unwrap().trim();
+            // `split` always yields one item, but config parsing should
+            // carry no unwrap at all: a panic here would eat the line
+            // number the user needs.
+            let line = line.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
                 continue;
             }

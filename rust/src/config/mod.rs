@@ -61,6 +61,36 @@ pub enum FunctionalMode {
     Native,
 }
 
+/// Which scheduling policy orders the ready queue and places work on the
+/// accelerator pool (see [`crate::sched::policy`]). `Fifo` reproduces the
+/// pre-policy scheduler bit-for-bit and is the default everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Arrival-order ready queue, reduce-group-modulo placement — the
+    /// original hard-coded schedule, pinned bit-for-bit as the default.
+    #[default]
+    Fifo,
+    /// HEFT-style: ready ties break toward the longest remaining critical
+    /// path, and reduce groups are packed greedily onto the slot that
+    /// minimizes its accumulated per-slot cost (uses the cached per-tile
+    /// cost tables, so heterogeneous pools route work toward the faster
+    /// accelerator).
+    Heft,
+    /// Round-robin: reduce-group placement is striped across the pool
+    /// with a per-op rotating offset; ready ordering matches `Fifo`.
+    Rr,
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Policy::Fifo => write!(f, "fifo"),
+            Policy::Heft => write!(f, "heft"),
+            Policy::Rr => write!(f, "rr"),
+        }
+    }
+}
+
 /// SoC microarchitectural parameters (paper Table II).
 #[derive(Debug, Clone)]
 pub struct SocConfig {
@@ -367,6 +397,10 @@ pub struct SimOptions {
     /// [`pipeline`]: SimOptions::pipeline
     /// [`inter_accel_reduction`]: SimOptions::inter_accel_reduction
     pub tile_pipeline: bool,
+    /// Scheduling policy: ready-queue ordering + accelerator placement
+    /// (see [`Policy`]). The default [`Policy::Fifo`] reproduces the
+    /// pre-policy scheduler bit-for-bit.
+    pub policy: Policy,
 }
 
 impl Default for SimOptions {
@@ -385,6 +419,7 @@ impl Default for SimOptions {
             inter_accel_reduction: false,
             pipeline: false,
             tile_pipeline: false,
+            policy: Policy::Fifo,
         }
     }
 }
@@ -616,6 +651,16 @@ impl SimOptions {
             other => Err(format!("unknown functional mode '{other}' (off|pjrt|native)")),
         }
     }
+
+    /// Parse a scheduling-policy CLI value.
+    pub fn parse_policy(s: &str) -> Result<Policy, String> {
+        match s {
+            "fifo" => Ok(Policy::Fifo),
+            "heft" => Ok(Policy::Heft),
+            "rr" => Ok(Policy::Rr),
+            other => Err(format!("unknown policy '{other}' (fifo|heft|rr)")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -649,6 +694,17 @@ mod tests {
             InterfaceKind::Acp
         );
         assert!(SimOptions::parse_functional("bogus").is_err());
+        assert_eq!(SimOptions::parse_policy("heft").unwrap(), Policy::Heft);
+        assert_eq!(SimOptions::parse_policy("rr").unwrap(), Policy::Rr);
+        let err = SimOptions::parse_policy("lifo").unwrap_err();
+        assert!(err.contains("fifo|heft|rr"), "{err}");
+    }
+
+    #[test]
+    fn default_policy_is_fifo() {
+        assert_eq!(SimOptions::default().policy, Policy::Fifo);
+        assert_eq!(Policy::default(), Policy::Fifo);
+        assert_eq!(Policy::Heft.to_string(), "heft");
     }
 
     #[test]

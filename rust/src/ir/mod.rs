@@ -127,8 +127,9 @@ pub enum TaskKind {
 pub struct ResourceClaim {
     /// Occupies the (exclusive) CPU thread pool.
     pub cpu: bool,
-    /// Pinned accelerator command queue (tile tasks; groups pin to
-    /// `reduce_group % pool size`).
+    /// Pinned accelerator command queue (tile tasks; each reduction
+    /// group is pinned to the slot the active scheduling policy placed
+    /// it on — `reduce_group % pool size` under the default FIFO).
     pub accel_slot: Option<usize>,
     /// DRAM bandwidth request: bytes this task streams (tile transfers,
     /// or read+write tiling-copy traffic for CPU phases).
@@ -402,6 +403,17 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                     });
                 }
                 let tile0 = tasks.len();
+                // Group→slot mapping under the active scheduling policy
+                // — the same pure derivation `begin_accel` makes, so the
+                // claimed queue always matches the one `exec_tile`
+                // charges. (Spread groups never reach this path:
+                // inter-accelerator reduction forces op granularity.)
+                let place = crate::sched::policy::placement_for(
+                    sched,
+                    oid,
+                    &cp.planned,
+                    cp.costs.as_deref(),
+                );
                 let mut last_of_group: HashMap<u32, usize> = HashMap::new();
                 for (i, it) in plan.items.iter().enumerate() {
                     let mut deps = vec![prep0 + (i % n_chunks)];
@@ -411,7 +423,7 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                         deps.push(prev);
                     }
                     last_of_group.insert(it.reduce_group, tile0 + i);
-                    let slot = (it.reduce_group as usize) % n_accels;
+                    let slot = place.slot(it.reduce_group, i, false, n_accels);
                     tasks.push(Task {
                         op_node: ni,
                         kind: TaskKind::Tile { item: i as u32 },

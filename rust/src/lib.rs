@@ -59,6 +59,17 @@
 //! unified report records the realized overlap fraction and
 //! per-resource occupancy.
 //!
+//! *Which* ready task the event executor commits next, and *which*
+//! accelerator slot a reduction group lands on, are pluggable: a
+//! [`config::Policy`] (selected via `Session::policy(..)` / `--policy`)
+//! resolves to a `SchedPolicy` implementation supplying ready-queue
+//! ranks and group placement. `fifo` (the default) is pinned
+//! bit-identical to the pre-policy scheduler; `heft` ranks ops by
+//! critical path and places by per-slot cost (it wins on heterogeneous
+//! pools); `rr` stripes round-robin. [`api::policy_tournament`] races
+//! policies head-to-head under work-conservation and
+//! never-lose-to-serial invariants (`tests/policy_invariants.rs`).
+//!
 //! ## Quick start
 //!
 //! Everything goes through one front door: compose a SoC, pick a

@@ -9,7 +9,7 @@
 //!           [--sampling N] [--soc file.cfg] [--functional off|native|pjrt]
 //!           [--dram-channels N] [--link-gbps F] [--bus-gbps F]
 //!           [--train] [--double-buffer] [--inter-accel-reduction]
-//!           [--pipeline] [--tile-pipeline]
+//!           [--pipeline] [--tile-pipeline] [--policy fifo|heft|rr]
 //!           [--report summary|ops|timeline|json|csv|trace-json]
 //! smaug serve --net resnet50 [--requests 64] [--arrival closed|poisson|bursty|trace]
 //!           [--qps F] [--burst N] [--trace file] [--interval-us F] [--seed N]
@@ -23,6 +23,8 @@
 //! smaug cluster --net vgg16 [--socs K] [--partition dp|pp|pp:N] [--stages N]
 //!           [--nic-gbps F] [--switch-gbps F] [--queries N] [--train]
 //!           [--workers N] [--tile-pipeline] [--report summary|json]
+//! smaug ablate --net vgg16 [--policies fifo,heft,rr] [--accels N|kinds]
+//!           [--workers N] [--bench-json PATH] [--report summary|json]
 //! smaug camera [--pe 8x8] [--threads 1] [--fps 30] [--report summary|json]
 //! smaug config
 //! smaug nets [--json]
@@ -33,10 +35,11 @@
 //! (`nvdla,systolic,nvdla`: a heterogeneous pool, one instance each).
 
 use anyhow::{bail, Context, Result};
-use smaug::api::{Report, Scenario, Session, Soc, SweepAxis};
+use smaug::api::{policy_tournament, Report, Scenario, Session, Soc, SweepAxis};
 use smaug::cluster::Partition;
 use smaug::config::{
-    AccelKind, ArrivalProcess, BatchPolicy, ServeOptions, SimOptions, SocConfig, TenantSpec,
+    AccelKind, ArrivalProcess, BatchPolicy, Policy, ServeOptions, SimOptions, SocConfig,
+    TenantSpec,
 };
 use smaug::nets;
 use smaug::util::{fmt_ns, JsonWriter};
@@ -55,6 +58,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("serve") => cmd_serve(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("cluster") => cmd_cluster(&args[1..]),
+        Some("ablate") => cmd_ablate(&args[1..]),
         Some("camera") => cmd_camera(&args[1..]),
         Some("config") => {
             println!("{}", SocConfig::default().table());
@@ -73,7 +77,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20          [--functional off|native|pjrt] [--report summary|ops|timeline|json|csv|trace-json]\n\
                  \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction]\n\
                  \x20          [--dram-channels N] [--link-gbps F] [--bus-gbps F]\n\
-                 \x20          [--pipeline] [--tile-pipeline]\n\
+                 \x20          [--pipeline] [--tile-pipeline] [--policy fifo|heft|rr]\n\
                  \x20 smaug serve --net <name> [--requests N] [--arrival closed|poisson|bursty|trace]\n\
                  \x20          [--qps F] [--burst N] [--trace file] [--interval-us F] [--seed N]\n\
                  \x20          [--slo-ms F | --slo-x F] [--max-batch N] [--max-delay-us F]\n\
@@ -85,6 +89,8 @@ fn dispatch(args: &[String]) -> Result<()> {
                  \x20 smaug cluster --net <name> [--socs K] [--partition dp|pp|pp:N] [--stages N]\n\
                  \x20          [--nic-gbps F] [--switch-gbps F] [--queries N] [--train]\n\
                  \x20          [--workers N] [--tile-pipeline] [--report summary|json]\n\
+                 \x20 smaug ablate --net <name> [--policies fifo,heft,rr] [--accels N|kinds]\n\
+                 \x20          [--workers N] [--bench-json PATH] [--report summary|json]\n\
                  \x20 smaug camera [--pe RxC] [--threads N] [--fps N] [--report summary|json]\n\
                  \x20 smaug config   smaug nets [--json]",
                 smaug::VERSION
@@ -193,6 +199,13 @@ fn build_session(args: &[String]) -> Result<Session> {
     }
     if has(args, "--tile-pipeline") {
         s = s.tile_pipeline(true);
+    }
+    if let Some(v) = flag(args, "--policy") {
+        s = s.policy(
+            SimOptions::parse_policy(v)
+                .map_err(anyhow::Error::msg)
+                .context("--policy")?,
+        );
     }
     Ok(s)
 }
@@ -576,6 +589,40 @@ fn cmd_cluster(args: &[String]) -> Result<()> {
     }
     let report = session.run()?;
     print_summary_or_json(&report, flag(args, "--report").unwrap_or("summary"))
+}
+
+/// `smaug ablate`: race scheduler policies on one workload (pipelined +
+/// serial per policy) and emit `BENCH_policy.json` for the CI bench gate.
+fn cmd_ablate(args: &[String]) -> Result<()> {
+    if flag(args, "--net").is_none() {
+        bail!("--net <name> is required (see `smaug nets`)");
+    }
+    let policies: Vec<Policy> = flag(args, "--policies")
+        .unwrap_or("fifo,heft,rr")
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            SimOptions::parse_policy(p)
+                .map_err(anyhow::Error::msg)
+                .context("--policies")
+        })
+        .collect::<Result<_>>()?;
+    let workers: usize = flag(args, "--workers")
+        .unwrap_or("4")
+        .parse()
+        .context("--workers")?;
+    let tournament = policy_tournament(&build_session(args)?, &policies, workers)?;
+    let path = flag(args, "--bench-json").unwrap_or("BENCH_policy.json");
+    std::fs::write(path, tournament.bench_json() + "\n")
+        .with_context(|| format!("writing {path}"))?;
+    eprintln!("wrote {path}");
+    match flag(args, "--report").unwrap_or("summary") {
+        "summary" => println!("{}", tournament.summary()),
+        "json" => println!("{}", tournament.bench_json()),
+        other => bail!("unknown report '{other}' (summary|json)"),
+    }
+    Ok(())
 }
 
 fn cmd_camera(args: &[String]) -> Result<()> {

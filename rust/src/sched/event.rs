@@ -116,6 +116,9 @@ fn release(nodes: &mut [NodeState], pending: &mut Vec<CpuTask>, from: usize, t: 
 /// node's accelerator phase dispatches all its tiles atomically.
 fn run_op_level(sched: &mut Scheduler, jobs: &[(f64, &Graph)], tg: &TaskGraph) -> Vec<JobOutcome> {
     let pipeline = sched.opts.pipeline || sched.opts.tile_pipeline;
+    // Optional policy dispatch priorities (e.g. HEFT upward ranks);
+    // `None` keeps the plain FIFO key bit-for-bit.
+    let ranks = super::policy::lookup(sched.opts.policy).op_ranks(sched, tg);
     let mut pool = AccelPool::new(sched.n_accels());
     let mut cpu = PoolGate::new();
 
@@ -187,10 +190,11 @@ fn run_op_level(sched: &mut Scheduler, jobs: &[(f64, &Graph)], tg: &TaskGraph) -
             .fold(f64::INFINITY, f64::min);
         let horizon = cpu.free_ns().max(min_ready);
         let mut best = usize::MAX;
-        let mut best_key = (u8::MAX, usize::MAX);
+        let mut best_key = (f64::INFINITY, u8::MAX, usize::MAX);
         for (i, t) in pending.iter().enumerate() {
             if t.ready_ns <= horizon {
-                let key = (t.class, t.node);
+                let prio = ranks.as_ref().map_or(0.0, |r| -r[t.node]);
+                let key = (prio, t.class, t.node);
                 if key < best_key {
                     best_key = key;
                     best = i;
@@ -311,6 +315,9 @@ fn run_tile_level(
 ) -> Vec<JobOutcome> {
     let n_tasks = tg.tasks.len();
     let dbuf = sched.opts.double_buffer;
+    // Optional policy dispatch priorities (e.g. HEFT upward ranks);
+    // `None` keeps the plain FIFO key bit-for-bit.
+    let ranks = super::policy::lookup(sched.opts.policy).op_ranks(sched, tg);
     let mut pool = AccelPool::new(sched.n_accels());
     let mut cpu = PoolGate::new();
     let mut remaining: Vec<usize> = tg.tasks.iter().map(|t| t.deps.len()).collect();
@@ -336,7 +343,7 @@ fn run_tile_level(
     while !runnable.is_empty() {
         // Pick the committable task with the earliest feasible start.
         let mut best_pos = usize::MAX;
-        let mut best_key = (f64::INFINITY, u8::MAX, usize::MAX);
+        let mut best_key = (f64::INFINITY, f64::INFINITY, u8::MAX, usize::MAX);
         for (pos, &t) in runnable.iter().enumerate() {
             let task = &tg.tasks[t];
             let (start, class) = match task.kind {
@@ -350,7 +357,8 @@ fn run_tile_level(
                 }
                 TaskKind::Finalize => (cpu.acquire(ready[t]), 3),
             };
-            let key = (start, class, t);
+            let prio = ranks.as_ref().map_or(0.0, |r| -r[task.op_node]);
+            let key = (start, prio, class, t);
             if key < best_key {
                 best_key = key;
                 best_pos = pos;
@@ -402,7 +410,12 @@ fn run_tile_level(
                     unreachable!("tile tasks only exist on accel nodes")
                 };
                 if opx[ni].accel.is_none() {
-                    opx[ni].accel = Some(sched.begin_accel(&cp.planned, 0.0));
+                    opx[ni].accel = Some(sched.begin_accel(
+                        onode.op_id,
+                        &cp.planned,
+                        cp.costs.as_deref(),
+                        0.0,
+                    ));
                 }
                 let st = opx[ni].accel.as_mut().expect("just opened");
                 sched.exec_tile(
@@ -422,10 +435,14 @@ fn run_tile_level(
                 // Every in-tree plan has >= 1 item, so the accel state is
                 // normally open; an (hypothetical) itemless plan still
                 // finalizes cleanly against an empty state.
-                let mut st = opx[ni]
-                    .accel
-                    .take()
-                    .unwrap_or_else(|| sched.begin_accel(&cp.planned, opx[ni].prep_end));
+                let mut st = opx[ni].accel.take().unwrap_or_else(|| {
+                    sched.begin_accel(
+                        onode.op_id,
+                        &cp.planned,
+                        cp.costs.as_deref(),
+                        opx[ni].prep_end,
+                    )
+                });
                 sched.merge_groups(op, &mut pool, &mut st);
                 let hw = Scheduler::hw_outcome(opx[ni].prep_end, &st);
                 let start = cpu.acquire(ready[tid]);

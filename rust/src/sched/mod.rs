@@ -53,6 +53,7 @@
 //! reference the event engine is validated against.
 
 mod event;
+pub(crate) mod policy;
 pub mod serve;
 
 use std::collections::BTreeMap;
@@ -60,7 +61,7 @@ use std::sync::Arc;
 
 use crate::accel::{build_pool, AccelModel, KernelClass};
 use crate::cache::{CostEntry, TimingCache};
-use crate::config::{AccelKind, InterfaceKind, ServeOptions, SimOptions, SocConfig};
+use crate::config::{AccelKind, InterfaceKind, Policy, ServeOptions, SimOptions, SocConfig};
 use crate::cpu::CpuModel;
 use crate::energy::EnergyAccount;
 use crate::graph::{Graph, Op, OpKind};
@@ -230,6 +231,10 @@ pub(crate) struct OpAccelState {
     first_start: f64,
     groups: BTreeMap<u32, GroupAcc>,
     group_sizes: BTreeMap<u32, u32>,
+    /// Group→slot mapping resolved by the active scheduling policy at
+    /// phase open; [`Scheduler::exec_tile`] reads it per item. The IR
+    /// lowering derives the identical mapping for tile resource claims.
+    place: policy::GroupPlacement,
 }
 
 impl Scheduler {
@@ -364,10 +369,12 @@ impl Scheduler {
         }
     }
 
-    /// Human-readable configuration string.
+    /// Human-readable configuration string. The scheduling-policy tag
+    /// only appears for non-default policies, so `fifo` configs render
+    /// bit-identically to pre-policy reports.
     pub fn config_string(&self) -> String {
         format!(
-            "{} / {} / {} sw thread(s){}{}",
+            "{} / {} / {} sw thread(s){}{}{}",
             self.pool_desc(),
             self.opts.interface,
             self.opts.sw_threads,
@@ -382,6 +389,11 @@ impl Scheduler {
                 " / pipelined"
             } else {
                 ""
+            },
+            if self.opts.policy != Policy::Fifo {
+                format!(" / policy {}", self.opts.policy)
+            } else {
+                String::new()
             }
         )
     }
@@ -449,7 +461,8 @@ impl Scheduler {
                 }
                 OpWork::Accel(cp) => {
                     let prep = self.prep_phase(op, &cp.planned.plan, now);
-                    let mut st = self.begin_accel(&cp.planned, prep.end_ns);
+                    let mut st =
+                        self.begin_accel(op.id, &cp.planned, cp.costs.as_deref(), prep.end_ns);
                     for idx in 0..cp.planned.plan.items.len() {
                         self.exec_tile(
                             op,
@@ -688,7 +701,7 @@ impl Scheduler {
         prep_end: f64,
         pool: &mut AccelPool,
     ) -> HwOutcome {
-        let mut st = self.begin_accel(planned, prep_end);
+        let mut st = self.begin_accel(op.id, planned, slot_costs, prep_end);
         for idx in 0..planned.plan.items.len() {
             self.exec_tile(op, planned, slot_costs, idx, prep_end, pool, &mut st);
         }
@@ -700,8 +713,16 @@ impl Scheduler {
     /// executors thread through [`Scheduler::exec_tile`]. `base` is the
     /// op's earliest possible start (its prep end for the serial
     /// executor; 0 for the tile-level executor, whose tiles carry their
-    /// own readiness).
-    pub(crate) fn begin_accel(&self, planned: &PlannedOp, base: f64) -> OpAccelState {
+    /// own readiness). `op_seq` is the op's graph id and `slot_costs`
+    /// its memoized per-slot cost table (if any) — the inputs the
+    /// active scheduling policy places reduction groups from.
+    pub(crate) fn begin_accel(
+        &self,
+        op_seq: usize,
+        planned: &PlannedOp,
+        slot_costs: Option<&[Arc<CostEntry>]>,
+        base: f64,
+    ) -> OpAccelState {
         let plan = &planned.plan;
         // Working set for LLC-residency heuristics (ACP): activations in
         // flight for this op.
@@ -728,6 +749,7 @@ impl Scheduler {
             first_start: f64::INFINITY,
             groups: BTreeMap::new(),
             group_sizes,
+            place: policy::placement_for(self, op_seq, planned, slot_costs),
         }
     }
 
@@ -753,11 +775,7 @@ impl Scheduler {
         debug_assert_eq!(pool.busy.len(), n_accels);
         let accel_cycle = self.soc.accel_cycle_ns();
         let spread = st.inter && st.group_sizes[&item.reduce_group] > 1;
-        let a = if spread {
-            idx % n_accels
-        } else {
-            (item.reduce_group as usize) % n_accels
-        };
+        let a = st.place.slot(item.reduce_group, idx, spread, n_accels);
         // With double buffering the transfer engine and the datapath
         // are tracked separately so tile n+1's transfer overlaps tile
         // n's compute; otherwise both advance in lockstep. Work for
@@ -854,13 +872,11 @@ impl Scheduler {
     /// vector-add them). A no-op unless inter-accelerator reduction
     /// spread any group.
     pub(crate) fn merge_groups(&mut self, op: &Op, pool: &mut AccelPool, st: &mut OpAccelState) {
-        let n_accels = self.models.len();
+        let pol = policy::lookup(self.opts.policy);
         let accel_cycle = self.soc.accel_cycle_ns();
         let groups = std::mem::take(&mut st.groups);
         for (_gid, g) in groups.iter().filter(|(_, g)| g.blocks > 1) {
-            let a = (0..n_accels)
-                .min_by(|&x, &y| pool.busy[x].total_cmp(&pool.busy[y]))
-                .unwrap();
+            let a = pol.merge_slot(&pool.busy);
             let merge_bytes = ((g.blocks - 1) as usize * g.mn * self.soc.elem_bytes) as u64;
             let rin = self.mem.transfer(TransferReq {
                 bytes: merge_bytes,

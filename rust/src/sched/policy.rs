@@ -1,0 +1,427 @@
+//! Pluggable scheduling policies over the task-graph IR.
+//!
+//! The scheduler used to hard-code one greedy policy (FIFO ready order,
+//! `group % pool` placement, least-busy merge slot). This module factors
+//! every policy decision into one trait, [`SchedPolicy`], consulted at
+//! the three points where the executors choose *where* or *in what
+//! order* work runs:
+//!
+//! * **Ready-queue ordering** — [`SchedPolicy::op_ranks`] yields an
+//!   optional per-op priority; both event executors fold it into their
+//!   deterministic selection key (higher rank dispatches first, ties
+//!   fall back to the FIFO key, so ordering stays total and
+//!   reproducible).
+//! * **Accelerator placement** — [`SchedPolicy::place_groups`] maps each
+//!   reduction group of an op to a pool slot ([`GroupPlacement`]). The
+//!   IR lowering stamps the same placement into tile resource claims,
+//!   so the event executor's queueing and the model's cost attribution
+//!   always agree.
+//! * **Merge-slot pick** — [`SchedPolicy::merge_slot`] chooses the
+//!   accelerator that merges a spread reduction group's partial sums.
+//!
+//! Three built-in policies race in the `smaug ablate` tournament:
+//!
+//! * `fifo` — the default; bit-for-bit today's behavior (pinned by the
+//!   sched/taskgraph/memsys/cluster invariant suites).
+//! * `heft` — HEFT-style: ops are ranked by critical-path length
+//!   (upward rank over the op DAG, costed from the cached per-tile
+//!   cycles), and each op's reduction groups are placed
+//!   longest-processing-time-first onto the slot minimizing its finish
+//!   load. On heterogeneous pools this routes big groups to the slots
+//!   that run them fastest instead of striping blindly.
+//! * `rr` — round-robin: placement is the FIFO stripe rotated by the op
+//!   id, spreading successive ops across the pool.
+//!
+//! Every policy is a stateless singleton; all decisions are pure
+//! functions of the IR and the pool, so runs stay deterministic and
+//! worker-count-invariant.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::{CachedPlan, PlannedOp, Scheduler};
+use crate::cache::CostEntry;
+use crate::config::Policy;
+use crate::ir::{OpWork, TaskGraph};
+
+/// Summed datapath cycles of one reduction group on each pool slot.
+pub(crate) struct GroupCost {
+    /// The reduction-group id.
+    pub group: u32,
+    /// Total cycles of the group's items per pool slot.
+    pub per_slot: Vec<f64>,
+}
+
+/// A resolved group→slot mapping for one op. Compact encodings keep the
+/// common policies allocation-free; [`GroupPlacement::slot`] is the one
+/// accessor both the IR lowering and `exec_tile` use, so claims and
+/// execution can never disagree.
+#[derive(Debug, Clone)]
+pub(crate) enum GroupPlacement {
+    /// FIFO: `group % pool` (spread groups stripe by item index).
+    Modulo,
+    /// Round-robin: the FIFO stripe rotated by a per-op offset.
+    Offset(usize),
+    /// Explicit map (HEFT); unmapped groups fall back to `Modulo`.
+    Table(BTreeMap<u32, usize>),
+}
+
+impl GroupPlacement {
+    /// The pool slot item `idx` of reduction group `group` runs on.
+    /// `spread` is true when inter-accelerator reduction fans this
+    /// group's blocks across the pool (op granularity only).
+    pub(crate) fn slot(&self, group: u32, idx: usize, spread: bool, n_accels: usize) -> usize {
+        let n = n_accels.max(1);
+        match self {
+            GroupPlacement::Modulo => {
+                if spread {
+                    idx % n
+                } else {
+                    group as usize % n
+                }
+            }
+            GroupPlacement::Offset(off) => {
+                if spread {
+                    (idx + off) % n
+                } else {
+                    (group as usize + off) % n
+                }
+            }
+            GroupPlacement::Table(map) => {
+                if spread {
+                    idx % n
+                } else {
+                    map.get(&group).copied().unwrap_or(group as usize % n)
+                }
+            }
+        }
+    }
+}
+
+/// One scheduling policy: every decision point the executors consult.
+/// Implementations must be pure (no interior state) so schedules stay
+/// deterministic and sweep-worker-invariant.
+pub(crate) trait SchedPolicy: Sync {
+    /// Stable identifier (`fifo`, `heft`, `rr`) — stamped into reports.
+    fn name(&self) -> &'static str;
+    /// One-line description of the ready-queue ordering, for reports.
+    fn ready_order(&self) -> &'static str;
+    /// One-line description of the placement rule, for reports.
+    fn placement(&self) -> &'static str;
+    /// Whether [`SchedPolicy::place_groups`] wants the per-slot group
+    /// cost matrix (building it queries every model once per item).
+    fn needs_costs(&self) -> bool {
+        false
+    }
+    /// Map an op's reduction groups to pool slots. `costs` is present
+    /// iff [`SchedPolicy::needs_costs`] and the pool has >1 slot.
+    fn place_groups(
+        &self,
+        op_seq: usize,
+        costs: Option<&[GroupCost]>,
+        n_accels: usize,
+    ) -> GroupPlacement;
+    /// The slot that merges a spread reduction group's partial sums.
+    /// Default: the least-busy queue (today's behavior for all three
+    /// built-ins).
+    fn merge_slot(&self, busy: &[f64]) -> usize {
+        (0..busy.len())
+            .min_by(|&x, &y| busy[x].total_cmp(&busy[y]))
+            .unwrap_or(0)
+    }
+    /// Optional per-op-node dispatch priority (higher runs first).
+    /// `None` keeps the executors' plain FIFO key — the default is
+    /// deliberately rank-free so FIFO stays bit-identical.
+    fn op_ranks(&self, _sched: &Scheduler, _tg: &TaskGraph) -> Option<Vec<f64>> {
+        None
+    }
+}
+
+/// FIFO: submission order, `group % pool` placement — the pinned
+/// default the invariant suites assert bit-for-bit.
+struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn ready_order(&self) -> &'static str {
+        "submission order (phase class, then node id)"
+    }
+    fn placement(&self) -> &'static str {
+        "reduce group modulo pool size"
+    }
+    fn place_groups(
+        &self,
+        _op_seq: usize,
+        _costs: Option<&[GroupCost]>,
+        _n_accels: usize,
+    ) -> GroupPlacement {
+        GroupPlacement::Modulo
+    }
+}
+
+/// Round-robin: the FIFO stripe rotated by the op id, so successive
+/// single-group ops land on successive slots instead of all on slot 0.
+struct RoundRobin;
+
+impl SchedPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+    fn ready_order(&self) -> &'static str {
+        "submission order (phase class, then node id)"
+    }
+    fn placement(&self) -> &'static str {
+        "round-robin stripe rotated by op id"
+    }
+    fn place_groups(
+        &self,
+        op_seq: usize,
+        _costs: Option<&[GroupCost]>,
+        n_accels: usize,
+    ) -> GroupPlacement {
+        GroupPlacement::Offset(op_seq % n_accels.max(1))
+    }
+}
+
+/// HEFT-style: critical-path (upward-rank) dispatch order plus
+/// longest-processing-time-first placement onto the slot that finishes
+/// each group earliest, using the cached per-tile cycle costs.
+struct Heft;
+
+impl SchedPolicy for Heft {
+    fn name(&self) -> &'static str {
+        "heft"
+    }
+    fn ready_order(&self) -> &'static str {
+        "upward rank (critical-path cycles), ties submission order"
+    }
+    fn placement(&self) -> &'static str {
+        "LPT group onto min-load slot by modeled cycles"
+    }
+    fn needs_costs(&self) -> bool {
+        true
+    }
+    fn place_groups(
+        &self,
+        _op_seq: usize,
+        costs: Option<&[GroupCost]>,
+        n_accels: usize,
+    ) -> GroupPlacement {
+        let n = n_accels.max(1);
+        let Some(costs) = costs else {
+            return GroupPlacement::Modulo;
+        };
+        if n <= 1 || costs.len() <= 1 {
+            return GroupPlacement::Modulo;
+        }
+        // Largest group first (tie: group id), each onto the slot where
+        // it would finish earliest given the load placed so far. All
+        // comparisons are total (`total_cmp`), so placement is
+        // deterministic.
+        let mut order: Vec<usize> = (0..costs.len()).collect();
+        order.sort_by(|&x, &y| {
+            let cx = costs[x].per_slot.iter().cloned().fold(0.0, f64::max);
+            let cy = costs[y].per_slot.iter().cloned().fold(0.0, f64::max);
+            cy.total_cmp(&cx).then(costs[x].group.cmp(&costs[y].group))
+        });
+        let mut load = vec![0.0f64; n];
+        let mut table = BTreeMap::new();
+        for &gi in &order {
+            let gc = &costs[gi];
+            let a = (0..n)
+                .min_by(|&x, &y| {
+                    (load[x] + gc.per_slot[x]).total_cmp(&(load[y] + gc.per_slot[y]))
+                })
+                .unwrap_or(0);
+            load[a] += gc.per_slot[a];
+            table.insert(gc.group, a);
+        }
+        GroupPlacement::Table(table)
+    }
+    fn op_ranks(&self, sched: &Scheduler, tg: &TaskGraph) -> Option<Vec<f64>> {
+        // Upward rank: an op's best-case cycles plus the longest ranked
+        // path through its consumers. Op nodes are in (job, topo) order
+        // and consumer indices always point forward, so one reverse
+        // pass suffices.
+        let n = tg.ops.len();
+        let mut rank = vec![0.0f64; n];
+        for i in (0..n).rev() {
+            let node = &tg.ops[i];
+            let own = match &node.work {
+                OpWork::Accel(cp) => min_op_cycles(sched, cp),
+                _ => 0.0,
+            };
+            let down = node
+                .op_consumers
+                .iter()
+                .map(|&c| rank[c])
+                .fold(0.0, f64::max);
+            rank[i] = own + down;
+        }
+        Some(rank)
+    }
+}
+
+static FIFO: Fifo = Fifo;
+static HEFT: Heft = Heft;
+static RR: RoundRobin = RoundRobin;
+
+/// The singleton implementing a [`Policy`] selector.
+pub(crate) fn lookup(p: Policy) -> &'static dyn SchedPolicy {
+    match p {
+        Policy::Fifo => &FIFO,
+        Policy::Heft => &HEFT,
+        Policy::Rr => &RR,
+    }
+}
+
+/// An op's best-case datapath cycles: each item costed on its cheapest
+/// slot (cached table when attached, model query otherwise).
+fn min_op_cycles(sched: &Scheduler, cp: &CachedPlan) -> f64 {
+    let items = &cp.planned.plan.items;
+    match &cp.costs {
+        Some(v) => (0..items.len())
+            .map(|i| {
+                v.iter()
+                    .map(|e| e.costs[i].cycles)
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum(),
+        None => items
+            .iter()
+            .map(|it| {
+                sched
+                    .models
+                    .iter()
+                    .map(|m| {
+                        m.tile_cost(cp.planned.class, it, sched.opts.sampling_factor)
+                            .cycles
+                    })
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum(),
+    }
+}
+
+/// Per-slot total cycles of every reduction group of `planned` — the
+/// matrix cost-aware policies place from.
+fn group_costs(
+    sched: &Scheduler,
+    planned: &PlannedOp,
+    slot_costs: Option<&[Arc<CostEntry>]>,
+) -> Vec<GroupCost> {
+    let n = sched.models.len();
+    let mut map: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+    for (idx, item) in planned.plan.items.iter().enumerate() {
+        let per = map
+            .entry(item.reduce_group)
+            .or_insert_with(|| vec![0.0f64; n]);
+        for (a, acc) in per.iter_mut().enumerate() {
+            *acc += match slot_costs {
+                Some(v) => v[a].costs[idx].cycles,
+                None => {
+                    sched.models[a]
+                        .tile_cost(planned.class, item, sched.opts.sampling_factor)
+                        .cycles
+                }
+            };
+        }
+    }
+    map.into_iter()
+        .map(|(group, per_slot)| GroupCost { group, per_slot })
+        .collect()
+}
+
+/// Resolve one op's group→slot placement under the scheduler's active
+/// policy. Pure in its inputs, so the IR lowering and the executors
+/// (which call it independently) always derive the same mapping.
+pub(crate) fn placement_for(
+    sched: &Scheduler,
+    op_seq: usize,
+    planned: &PlannedOp,
+    slot_costs: Option<&[Arc<CostEntry>]>,
+) -> GroupPlacement {
+    let pol = lookup(sched.opts.policy);
+    if pol.needs_costs() && sched.models.len() > 1 {
+        let costs = group_costs(sched, planned, slot_costs);
+        pol.place_groups(op_seq, Some(&costs), sched.models.len())
+    } else {
+        pol.place_groups(op_seq, None, sched.models.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_placement_matches_the_legacy_formula() {
+        let p = GroupPlacement::Modulo;
+        for g in 0u32..8 {
+            for idx in 0..8 {
+                assert_eq!(p.slot(g, idx, false, 3), g as usize % 3);
+                assert_eq!(p.slot(g, idx, true, 3), idx % 3);
+            }
+        }
+        // Degenerate pool size never divides by zero.
+        assert_eq!(p.slot(5, 7, false, 0), 0);
+    }
+
+    #[test]
+    fn rr_rotates_the_stripe_per_op() {
+        let pol = lookup(Policy::Rr);
+        let p0 = pol.place_groups(0, None, 4);
+        let p1 = pol.place_groups(1, None, 4);
+        assert_eq!(p0.slot(0, 0, false, 4), 0);
+        assert_eq!(p1.slot(0, 0, false, 4), 1);
+        assert_eq!(p1.slot(3, 0, false, 4), 0);
+    }
+
+    #[test]
+    fn heft_balances_by_cost_and_is_deterministic() {
+        let pol = lookup(Policy::Heft);
+        // Slot 1 runs everything 2x faster: both groups should land
+        // there only if the load balance still wins; the big group goes
+        // to the fast slot first.
+        let costs = vec![
+            GroupCost {
+                group: 0,
+                per_slot: vec![100.0, 50.0],
+            },
+            GroupCost {
+                group: 1,
+                per_slot: vec![10.0, 5.0],
+            },
+        ];
+        let p = pol.place_groups(0, Some(&costs), 2);
+        assert_eq!(p.slot(0, 0, false, 2), 1, "big group takes the fast slot");
+        // Small group: fast slot now has load 50, so 10 vs 55 favors
+        // slot 0.
+        assert_eq!(p.slot(1, 0, false, 2), 0);
+        // Same inputs, same mapping.
+        let q = pol.place_groups(0, Some(&costs), 2);
+        for g in 0..2u32 {
+            assert_eq!(p.slot(g, 0, false, 2), q.slot(g, 0, false, 2));
+        }
+    }
+
+    #[test]
+    fn heft_without_costs_falls_back_to_fifo() {
+        let pol = lookup(Policy::Heft);
+        let p = pol.place_groups(3, None, 4);
+        for g in 0..8u32 {
+            assert_eq!(p.slot(g, 0, false, 4), g as usize % 4);
+        }
+    }
+
+    #[test]
+    fn merge_slot_is_least_busy_for_all_policies() {
+        for p in [Policy::Fifo, Policy::Heft, Policy::Rr] {
+            let pol = lookup(p);
+            assert_eq!(pol.merge_slot(&[5.0, 1.0, 3.0]), 1);
+            assert_eq!(pol.merge_slot(&[]), 0);
+        }
+    }
+}

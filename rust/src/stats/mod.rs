@@ -477,29 +477,46 @@ impl ServingStats {
         } else {
             requests.iter().map(RequestRecord::queue_ns).sum::<f64>() / requests.len() as f64
         };
+        // Single-pass per-tenant bucketing: index tenants by name once and
+        // route each request to its bucket, instead of re-scanning the
+        // whole request list per tenant (O(tenants x requests) on large
+        // multi-tenant runs). Requests naming an unknown tenant are
+        // dropped, exactly as the per-tenant filters they replace did.
+        let index: std::collections::HashMap<&str, usize> = tenant_order
+            .iter()
+            .enumerate()
+            .map(|(i, (name, _))| (name.as_str(), i))
+            .collect();
+        let mut lat_buckets: Vec<Vec<f64>> = vec![Vec::new(); tenant_order.len()];
+        let mut queue_sums = vec![0.0f64; tenant_order.len()];
+        let mut met_counts = vec![0usize; tenant_order.len()];
+        for r in requests {
+            if let Some(&i) = index.get(r.tenant.as_str()) {
+                lat_buckets[i].push(r.latency_ns());
+                queue_sums[i] += r.queue_ns();
+                if met(r) {
+                    met_counts[i] += 1;
+                }
+            }
+        }
         let tenants = tenant_order
             .iter()
-            .map(|(name, priority)| {
-                let rs: Vec<&RequestRecord> =
-                    requests.iter().filter(|r| &r.tenant == name).collect();
-                let mut lat: Vec<f64> = rs.iter().map(|r| r.latency_ns()).collect();
+            .zip(lat_buckets.iter_mut())
+            .enumerate()
+            .map(|(i, ((name, priority), lat))| {
                 lat.sort_by(f64::total_cmp);
-                let n = rs.len();
+                let n = lat.len();
                 TenantStat {
                     name: name.clone(),
                     priority: *priority,
                     requests: n,
-                    slo_met: rs.iter().filter(|r| met(r)).count(),
+                    slo_met: met_counts[i],
                     mean_ns: if n > 0 { lat.iter().sum::<f64>() / n as f64 } else { 0.0 },
-                    p50_ns: percentile(&lat, 50.0),
-                    p99_ns: percentile(&lat, 99.0),
-                    p999_ns: percentile(&lat, 99.9),
+                    p50_ns: percentile(lat, 50.0),
+                    p99_ns: percentile(lat, 99.0),
+                    p999_ns: percentile(lat, 99.9),
                     max_ns: lat.last().copied().unwrap_or(0.0),
-                    mean_queue_ns: if n > 0 {
-                        rs.iter().map(|r| r.queue_ns()).sum::<f64>() / n as f64
-                    } else {
-                        0.0
-                    },
+                    mean_queue_ns: if n > 0 { queue_sums[i] / n as f64 } else { 0.0 },
                 }
             })
             .collect();
@@ -594,6 +611,10 @@ impl ServeReport {
 
     /// Multi-line human-readable summary.
     pub fn summary(&self) -> String {
+        // One sort serves every percentile read below; the per-call
+        // `latency_percentile` helper re-sorts the whole request list
+        // each time (4 extra O(n log n) sorts per summary).
+        let sorted = self.latencies_sorted();
         let mut s = format!(
             "network    : {}\nconfig     : {}\nrequests   : {}\nmakespan   : {}\nthroughput : {:.1} req/s\nlatency    : mean {}  p50 {}  p90 {}  p99 {}  p99.9 {}\n",
             self.network,
@@ -602,10 +623,10 @@ impl ServeReport {
             fmt_ns(self.makespan_ns),
             self.throughput_rps(),
             fmt_ns(self.mean_latency_ns()),
-            fmt_ns(self.latency_percentile(50.0)),
-            fmt_ns(self.latency_percentile(90.0)),
-            fmt_ns(self.latency_percentile(99.0)),
-            fmt_ns(self.latency_percentile(99.9)),
+            fmt_ns(percentile(&sorted, 50.0)),
+            fmt_ns(percentile(&sorted, 90.0)),
+            fmt_ns(percentile(&sorted, 99.0)),
+            fmt_ns(percentile(&sorted, 99.9)),
         );
         let sv = &self.serving;
         s.push_str(&format!(
@@ -636,6 +657,8 @@ impl ServeReport {
 
     /// Machine-readable JSON of the serving report.
     pub fn to_json(&self) -> String {
+        // As in `summary`: sort the latencies once for all percentiles.
+        let sorted = self.latencies_sorted();
         let mut w = crate::util::JsonWriter::new();
         w.begin_object();
         w.key("network").string(&self.network);
@@ -644,10 +667,10 @@ impl ServeReport {
         w.key("throughput_rps").number(self.throughput_rps());
         w.key("latency_ns").begin_object();
         w.key("mean").number(self.mean_latency_ns());
-        w.key("p50").number(self.latency_percentile(50.0));
-        w.key("p90").number(self.latency_percentile(90.0));
-        w.key("p99").number(self.latency_percentile(99.0));
-        w.key("p99_9").number(self.latency_percentile(99.9));
+        w.key("p50").number(percentile(&sorted, 50.0));
+        w.key("p90").number(percentile(&sorted, 90.0));
+        w.key("p99").number(percentile(&sorted, 99.0));
+        w.key("p99_9").number(percentile(&sorted, 99.9));
         w.end_object();
         w.key("goodput_rps").number(self.serving.goodput_rps);
         w.key("slo_attainment").number(self.serving.slo_attainment);

@@ -53,6 +53,7 @@ const V1_KEYS: &[&str] = &[
     "network",
     "config",
     "accel_pool",
+    "policy",
     "total_ns",
     "breakdown",
     "traffic",

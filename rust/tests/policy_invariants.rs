@@ -1,0 +1,205 @@
+//! Scheduler-policy invariants (the pluggable `SchedPolicy` contract):
+//!
+//! 1. `--policy fifo` is **bit-identical** to the pre-policy default
+//!    across the scenario zoo — serial, op-pipelined, tile-pipelined,
+//!    serving, and single-SoC cluster runs;
+//! 2. heft and rr **conserve work**: they reorder and re-place tiles but
+//!    move exactly the serial schedule's DRAM/LLC traffic;
+//! 3. every policy is **deterministic**: identical sessions produce
+//!    bit-identical reports;
+//! 4. **dominance**: no policy's pipelined schedule loses to the serial
+//!    reference schedule;
+//! 5. heft's cost-balanced placement strictly beats fifo's modulo
+//!    striping on a heterogeneous pool, where slot costs actually differ;
+//! 6. no policy double-books an exclusively owned resource.
+
+use smaug::api::{Report, Scenario, Session, Soc};
+use smaug::config::{AccelKind, Policy, ServeOptions, SimOptions, SocConfig};
+use smaug::trace::{EventKind, Lane};
+
+fn hetero() -> Soc {
+    Soc::builder()
+        .accel(AccelKind::Nvdla)
+        .accel(AccelKind::Systolic)
+        .build()
+}
+
+fn homo(n: usize) -> Soc {
+    Soc::builder().accels(AccelKind::Nvdla, n).build()
+}
+
+/// The serialized report minus the wall-clock tail, which legitimately
+/// differs between runs (`sim_wallclock_ns` is last in the schema).
+fn stable_json(r: &Report) -> String {
+    let j = r.to_json();
+    let cut = j.find("\"sim_wallclock_ns\"").expect("schema has wallclock");
+    j[..cut].to_string()
+}
+
+fn assert_fifo_identical(label: &str, mk: impl Fn() -> Session) {
+    let default = mk().run().unwrap();
+    let fifo = mk().policy(Policy::Fifo).run().unwrap();
+    assert_eq!(
+        default.total_ns.to_bits(),
+        fifo.total_ns.to_bits(),
+        "{label}: --policy fifo drifted from the default makespan"
+    );
+    assert_eq!(
+        stable_json(&default),
+        stable_json(&fifo),
+        "{label}: --policy fifo report drifted from the default"
+    );
+}
+
+/// Invariant 1: explicitly selecting fifo reproduces the default
+/// scheduler bit-for-bit on every scenario the zoo covers.
+#[test]
+fn explicit_fifo_is_bit_identical_to_the_default() {
+    assert_fifo_identical("serial", || Session::on(hetero()).network("cnn10"));
+    assert_fifo_identical("op-pipeline", || {
+        Session::on(homo(2)).network("cnn10").pipeline(true)
+    });
+    assert_fifo_identical("tile-pipeline", || {
+        Session::on(hetero()).network("vgg16").tile_pipeline(true)
+    });
+    assert_fifo_identical("serving", || {
+        Session::on(homo(2))
+            .network("lenet5")
+            .threads(2)
+            .scenario(Scenario::Serving(ServeOptions::poisson(12, 20_000.0)))
+    });
+    assert_fifo_identical("cluster-k1", || {
+        Session::on(Soc::default()).network("cnn10").cluster(1).queries(2)
+    });
+}
+
+/// Invariants 2 + 3: heft and rr move exactly the serial schedule's
+/// traffic (placement changes *where*, never *how much*) and identical
+/// sessions produce bit-identical reports.
+#[test]
+fn heft_and_rr_conserve_work_and_are_deterministic() {
+    let serial = Session::on(hetero()).network("vgg16").run().unwrap();
+    for policy in [Policy::Heft, Policy::Rr] {
+        let mk = || {
+            Session::on(hetero())
+                .network("vgg16")
+                .tile_pipeline(true)
+                .policy(policy)
+        };
+        let a = mk().run().unwrap();
+        let b = mk().run().unwrap();
+        assert_eq!(stable_json(&a), stable_json(&b), "{policy}: nondeterministic");
+        assert_eq!(a.dram_bytes, serial.dram_bytes, "{policy}: DRAM traffic drifted");
+        assert_eq!(a.llc_bytes, serial.llc_bytes, "{policy}: LLC traffic drifted");
+        assert_eq!(a.ops.len(), serial.ops.len(), "{policy}: op records drifted");
+    }
+    // On a homogeneous pool every slot costs the same, so reordering and
+    // re-placing must conserve compute time and energy too.
+    let serial = Session::on(homo(2)).network("cnn10").run().unwrap();
+    for policy in [Policy::Heft, Policy::Rr] {
+        let piped = Session::on(homo(2))
+            .network("cnn10")
+            .tile_pipeline(true)
+            .policy(policy)
+            .run()
+            .unwrap();
+        assert_eq!(piped.dram_bytes, serial.dram_bytes, "{policy}");
+        let (e0, e1) = (serial.energy.total_pj(), piped.energy.total_pj());
+        assert!(
+            (e0 - e1).abs() <= 1e-6 * e0.max(1.0),
+            "{policy}: energy drifted ({e0} vs {e1})"
+        );
+        let (a0, a1) = (serial.breakdown.accel_ns, piped.breakdown.accel_ns);
+        assert!(
+            (a0 - a1).abs() <= 1e-6 * a0.max(1.0),
+            "{policy}: accel compute drifted ({a0} vs {a1})"
+        );
+    }
+}
+
+/// Invariant 4: a scheduling policy that is slower than not scheduling at
+/// all is a bug — every policy's pipelined makespan must not lose to its
+/// own serial reference schedule (1% + 1 ns float-accumulation slop).
+#[test]
+fn no_policy_loses_to_the_serial_schedule() {
+    for policy in [Policy::Fifo, Policy::Heft, Policy::Rr] {
+        for (label, soc) in [("homo", homo(2)), ("hetero", hetero())] {
+            let serial = Session::on(soc.clone())
+                .network("cnn10")
+                .policy(policy)
+                .run()
+                .unwrap();
+            let piped = Session::on(soc)
+                .network("cnn10")
+                .tile_pipeline(true)
+                .policy(policy)
+                .run()
+                .unwrap();
+            assert!(
+                piped.total_ns <= serial.total_ns * 1.01 + 1.0,
+                "{policy} on {label}: pipelined {} lost to serial {}",
+                piped.total_ns,
+                serial.total_ns
+            );
+        }
+    }
+}
+
+/// Invariant 5: on a heterogeneous pool (where per-slot tile costs
+/// actually differ) heft's cost-balanced placement strictly beats fifo's
+/// cost-blind modulo striping; and the report stamps who produced it.
+#[test]
+fn heft_strictly_beats_fifo_on_a_heterogeneous_pool() {
+    let mk = |p: Policy| {
+        Session::on(hetero())
+            .network("vgg16")
+            .tile_pipeline(true)
+            .policy(p)
+            .run()
+            .unwrap()
+    };
+    let fifo = mk(Policy::Fifo);
+    let heft = mk(Policy::Heft);
+    assert!(
+        heft.total_ns < fifo.total_ns,
+        "heft ({} ns) should strictly beat fifo ({} ns) on nvdla+systolic vgg16",
+        heft.total_ns,
+        fifo.total_ns
+    );
+    // The policy section names the producer; the config string tags only
+    // non-default policies (fifo configs stay bit-identical to pre-policy
+    // output).
+    assert_eq!(heft.policy.name, "heft");
+    assert!(heft.config.contains("policy heft"), "{}", heft.config);
+    assert_eq!(fifo.policy.name, "fifo");
+    assert!(!fifo.config.contains("policy"), "{}", fifo.config);
+}
+
+/// Invariant 6: no policy double-books an exclusively owned resource —
+/// accelerator datapaths and the CPU pool keep non-overlapping busy
+/// intervals under every ready-order/placement combination.
+#[test]
+fn policies_respect_resource_exclusivity() {
+    for policy in [Policy::Fifo, Policy::Heft, Policy::Rr] {
+        let opts = SimOptions {
+            num_accels: 2,
+            accel_pool: vec![AccelKind::Nvdla, AccelKind::Systolic],
+            pipeline: true,
+            tile_pipeline: true,
+            capture_timeline: true,
+            policy,
+            ..SimOptions::default()
+        };
+        let g = smaug::nets::build_network("cnn10").unwrap();
+        let mut sched = smaug::sched::Scheduler::new(SocConfig::default(), opts);
+        sched.run(&g);
+        for a in 0..2 {
+            let ov = sched
+                .timeline
+                .lane_overlap_ns(Lane::Accel(a), Some(EventKind::Compute));
+            assert!(ov <= 1e-6, "{policy}: accel {a} double-booked by {ov} ns");
+        }
+        let cpu_ov = sched.timeline.lane_overlap_ns(Lane::Cpu, None);
+        assert!(cpu_ov <= 1e-6, "{policy}: CPU pool double-booked by {cpu_ov} ns");
+    }
+}

@@ -14,6 +14,7 @@ TOP_KEYS = [
     "network",
     "config",
     "accel_pool",
+    "policy",
     "total_ns",
     "breakdown",
     "traffic",
@@ -35,6 +36,8 @@ TOP_KEYS = [
     "timeline",
     "sim_wallclock_ns",
 ]
+POLICY_KEYS = ["name", "ready_order", "placement"]
+POLICY_NAMES = ("fifo", "heft", "rr")
 BREAKDOWN_KEYS = ["accel_ns", "transfer_ns", "prep_ns", "finalize_ns", "other_ns"]
 TRAFFIC_KEYS = [
     "dram_bytes",
@@ -136,6 +139,17 @@ def main() -> None:
         fail(f"unexpected schema id {r.get('schema')!r}")
     if list(r.keys()) != TOP_KEYS:
         fail(f"top-level keys drifted: {list(r.keys())}")
+    pol = r["policy"]
+    if pol is None:
+        fail("policy section must always be an object (fifo by default)")
+    for key in POLICY_KEYS:
+        if key not in pol:
+            fail(f"policy missing {key}")
+    if pol["name"] not in POLICY_NAMES:
+        fail(f"unknown policy name {pol['name']!r} (expected one of {POLICY_NAMES})")
+    for key in POLICY_KEYS:
+        if not (isinstance(pol[key], str) and pol[key]):
+            fail(f"policy.{key} must be a non-empty string (got {pol[key]!r})")
     for key in BREAKDOWN_KEYS:
         if key not in r["breakdown"]:
             fail(f"breakdown missing {key}")
