@@ -1,0 +1,120 @@
+//! Event-throughput bench: how many scheduler events per host second
+//! the event-driven executor retires, at both granularities plus a
+//! serving workload. Emits `BENCH_events.json` at the repository root
+//! for the CI bench gate (`scripts/compare_bench.py` vs
+//! `bench_baselines/events.json`).
+//!
+//! An "event" is one unit the executor's ready queue dispatches:
+//!
+//! * op granularity — accelerator ops cost two events (CPU dispatch +
+//!   hardware completion), CPU-only and source ops one;
+//! * tile granularity — every task in the lowered task graph is one
+//!   event (source / prep chunk / tile / finalize).
+//!
+//! The measured loop is `Scheduler::run` / `serve_workload` directly
+//! (no Session front door), matching `perf_hotpath`'s methodology so
+//! graph construction and report assembly stay out of the numbers.
+
+use smaug::config::{SimOptions, SocConfig};
+use smaug::graph::Graph;
+use smaug::ir::OpWork;
+use smaug::nets;
+use smaug::sched::Scheduler;
+use smaug::util::JsonWriter;
+use std::path::Path;
+use std::time::Instant;
+
+/// Events the op-granularity executor dispatches for `jobs`.
+fn op_events(jobs: &[(f64, &Graph)]) -> u64 {
+    let sched = Scheduler::new(SocConfig::default(), SimOptions::default());
+    let tg = sched.lower_workload(jobs);
+    tg.ops
+        .iter()
+        .map(|n| match n.work {
+            OpWork::Accel(_) => 2u64,
+            _ => 1u64,
+        })
+        .sum()
+}
+
+/// Events the tile-granularity executor dispatches for `jobs`.
+fn tile_events(jobs: &[(f64, &Graph)]) -> u64 {
+    let sched = Scheduler::new(SocConfig::default(), SimOptions::default());
+    sched.lower_workload(jobs).tasks.len() as u64
+}
+
+/// Time `f` over `iters` runs (after one warmup) and return events/sec.
+fn throughput<F: FnMut()>(events: u64, iters: u32, mut f: F) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    (events as f64 * iters as f64) / t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("events_per_sec — event-executor throughput (events/host-second)");
+    let soc = SocConfig::default();
+    let vgg = nets::build_network("vgg16")?;
+    let lenet = nets::build_network("lenet5")?;
+
+    // Op granularity: VGG16 through the op-pipelined executor.
+    let op_opts = SimOptions {
+        pipeline: true,
+        ..SimOptions::default()
+    };
+    let n_op = op_events(&[(0.0, &vgg)]);
+    let eps_op = throughput(n_op, 10, || {
+        let mut sched = Scheduler::new(soc.clone(), op_opts.clone());
+        std::hint::black_box(sched.run(&vgg));
+    });
+
+    // Tile granularity: the same network, per-tile frontier.
+    let tile_opts = SimOptions {
+        tile_pipeline: true,
+        ..SimOptions::default()
+    };
+    let n_tile = tile_events(&[(0.0, &vgg)]);
+    let eps_tile = throughput(n_tile, 5, || {
+        let mut sched = Scheduler::new(soc.clone(), tile_opts.clone());
+        std::hint::black_box(sched.run(&vgg));
+    });
+
+    // Serving: 64 staggered lenet5 requests through the op-level
+    // executor — the multi-job frontier the ready queues were built for.
+    let serve_jobs: Vec<(f64, &Graph)> =
+        (0..64).map(|i| (i as f64 * 20_000.0, &lenet)).collect();
+    let n_serve = op_events(&serve_jobs);
+    let eps_serve = throughput(n_serve, 5, || {
+        let mut sched = Scheduler::new(soc.clone(), op_opts.clone());
+        std::hint::black_box(sched.serve_workload(&serve_jobs));
+    });
+
+    println!("{:<28} {:>10} {:>16}", "workload", "events", "events/sec");
+    for (name, n, eps) in [
+        ("vgg16 op-granularity", n_op, eps_op),
+        ("vgg16 tile-granularity", n_tile, eps_tile),
+        ("lenet5 serve x64 (op)", n_serve, eps_serve),
+    ] {
+        println!("{name:<28} {n:>10} {eps:>16.0}");
+    }
+
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("events_per_sec");
+    w.key("events_op_vgg16").uint(n_op);
+    w.key("events_tile_vgg16").uint(n_tile);
+    w.key("events_serve64").uint(n_serve);
+    w.key("events_per_sec_op_vgg16").number(eps_op);
+    w.key("events_per_sec_tile_vgg16").number(eps_tile);
+    w.key("events_per_sec_serve64").number(eps_serve);
+    w.end_object();
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_events.json");
+    std::fs::write(&out, w.finish())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

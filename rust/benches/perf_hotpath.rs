@@ -73,4 +73,16 @@ fn main() {
         let mut sched = Scheduler::new(SocConfig::default(), hetero.clone());
         std::hint::black_box(sched.run(&g));
     });
+
+    // IR lowering throughput: with job templates, replicating a job is
+    // a flat stamp (CSR copy + id offsets), not a re-derivation — the
+    // 16-job lowering should cost far less than 16x the 1-job one.
+    let sched = Scheduler::new(SocConfig::default(), SimOptions::default());
+    bench("lower vgg16 x1 job (tile tasks)", 20, || {
+        std::hint::black_box(sched.lower_workload(&[(0.0, &g)]));
+    });
+    let jobs: Vec<_> = (0..16).map(|i| (i as f64 * 1_000.0, &g)).collect();
+    bench("lower vgg16 x16 jobs (templated)", 20, || {
+        std::hint::black_box(sched.lower_workload(&jobs));
+    });
 }

@@ -81,6 +81,28 @@ impl PolicySummary {
     }
 }
 
+/// Simulation-fidelity section: which [`crate::config::Fidelity`] mode
+/// the run used and the effective loop-sampling factor. Always an object
+/// (never `null`); defaults to exact/1 so pre-fidelity reports keep
+/// their meaning. Invariant (pinned by `check_report_schema.py`):
+/// `mode == "exact"` implies `k == 1`.
+#[derive(Debug, Clone)]
+pub struct FidelitySummary {
+    /// `"exact"` or `"sampled"`.
+    pub mode: String,
+    /// Effective sampling factor the accelerator phases ran at (>= 1).
+    pub k: u64,
+}
+
+impl Default for FidelitySummary {
+    fn default() -> Self {
+        Self {
+            mode: "exact".to_string(),
+            k: 1,
+        }
+    }
+}
+
 /// One point of a [`crate::api::Scenario::Sweep`].
 #[derive(Debug, Clone, Default)]
 pub struct SweepRow {
@@ -118,6 +140,11 @@ pub struct SweepEngineSummary {
     pub cost_hits: u64,
     /// Tile-cost cache misses (layers costed).
     pub cost_misses: u64,
+    /// Job-template (lowering) cache hits — sweep points that reused a
+    /// previously lowered schedule prefix instead of re-lowering.
+    pub lower_hits: u64,
+    /// Job-template (lowering) cache misses (graphs lowered).
+    pub lower_misses: u64,
     /// Host wall-clock for the whole sweep grid, ns.
     pub wall_ns: f64,
 }
@@ -209,6 +236,9 @@ pub struct Report {
     pub accel_pool: Vec<String>,
     /// Scheduler policy that produced the schedule (always present).
     pub policy: PolicySummary,
+    /// Simulation fidelity the run used (always present; exact/1 by
+    /// default).
+    pub fidelity: FidelitySummary,
     /// Headline latency, ns: end-to-end forward-pass latency (inference /
     /// training / camera frame), serving makespan, or the sweep baseline.
     pub total_ns: f64,
@@ -344,6 +374,10 @@ impl Report {
         w.key("name").string(&self.policy.name);
         w.key("ready_order").string(&self.policy.ready_order);
         w.key("placement").string(&self.policy.placement);
+        w.end_object();
+        w.key("fidelity").begin_object();
+        w.key("mode").string(&self.fidelity.mode);
+        w.key("k").uint(self.fidelity.k);
         w.end_object();
         w.key("total_ns").number(self.total_ns);
         w.key("breakdown").begin_object();
@@ -491,6 +525,8 @@ impl Report {
                 w.key("plan_misses").uint(e.plan_misses);
                 w.key("cost_hits").uint(e.cost_hits);
                 w.key("cost_misses").uint(e.cost_misses);
+                w.key("lower_hits").uint(e.lower_hits);
+                w.key("lower_misses").uint(e.lower_misses);
                 w.key("wall_ns").number(e.wall_ns);
                 w.end_object()
             }
@@ -761,13 +797,15 @@ impl Report {
                 }
                 if let Some(e) = &self.sweep_engine {
                     s.push_str(&format!(
-                        "engine    : {} worker(s), cache {} (plans {}/{} hit, costs {}/{} hit), wall {}\n",
+                        "engine    : {} worker(s), cache {} (plans {}/{} hit, costs {}/{} hit, lowerings {}/{} hit), wall {}\n",
                         e.workers,
                         if e.cache_enabled { "on" } else { "off" },
                         e.plan_hits,
                         e.plan_hits + e.plan_misses,
                         e.cost_hits,
                         e.cost_hits + e.cost_misses,
+                        e.lower_hits,
+                        e.lower_hits + e.lower_misses,
                         fmt_ns(e.wall_ns),
                     ));
                 }
@@ -1005,6 +1043,7 @@ mod tests {
             "\"config\"",
             "\"accel_pool\"",
             "\"policy\"",
+            "\"fidelity\"",
             "\"total_ns\"",
             "\"breakdown\"",
             "\"traffic\"",
@@ -1038,6 +1077,8 @@ mod tests {
         let j = Report::default().to_json();
         // The policy section is always an object, defaulting to fifo.
         assert!(j.contains("\"policy\":{\"name\":\"fifo\""), "{j}");
+        // Fidelity likewise always serializes, defaulting to exact.
+        assert!(j.contains("\"fidelity\":{\"mode\":\"exact\",\"k\":1}"), "{j}");
         assert!(j.contains("\"camera\":null"));
         assert!(j.contains("\"functional\":null"));
         assert!(j.contains("\"timeline\":null"));
@@ -1174,6 +1215,8 @@ mod tests {
                 plan_misses: 10,
                 cost_hits: 28,
                 cost_misses: 12,
+                lower_hits: 5,
+                lower_misses: 3,
                 wall_ns: 1.5e6,
             }),
             ..Report::default()
@@ -1182,6 +1225,8 @@ mod tests {
         assert!(j.contains("\"sweep_engine\":{\"workers\":4,\"cache_enabled\":true"));
         assert!(j.contains("\"plan_hits\":30"));
         assert!(j.contains("\"cost_misses\":12"));
+        assert!(j.contains("\"lower_hits\":5"));
+        assert!(j.contains("\"lower_misses\":3"));
         assert!(j.contains("\"wall_ns\":"));
         assert!(rep.summary().contains("4 worker(s)"));
         assert!(rep.summary().contains("cache on"));

@@ -9,8 +9,8 @@ use crate::cache::TimingCache;
 use crate::camera::{self, RawFrame};
 use crate::cluster::{self, ClusterConfig, Partition};
 use crate::config::{
-    AccelKind, ArrivalProcess, FunctionalMode, InterfaceKind, Policy, SimOptions, SocConfig,
-    TenantSpec,
+    AccelKind, ArrivalProcess, Fidelity, FunctionalMode, InterfaceKind, Policy, SimOptions,
+    SocConfig, TenantSpec,
 };
 use crate::graph::{training_step, Graph};
 use crate::nets;
@@ -19,8 +19,8 @@ use crate::sim;
 use std::sync::Arc;
 
 use super::report::{
-    CameraSummary, FunctionalSummary, PolicySummary, QpsRow, QpsSweepSummary, Report,
-    SweepEngineSummary, SweepRow,
+    CameraSummary, FidelitySummary, FunctionalSummary, PolicySummary, QpsRow, QpsSweepSummary,
+    Report, SweepEngineSummary, SweepRow,
 };
 use super::scenario::{Scenario, SweepAxis};
 use super::soc::Soc;
@@ -60,6 +60,7 @@ pub struct Session {
     cluster: Option<ClusterConfig>,
     cluster_queries: Option<usize>,
     policy: Policy,
+    fidelity: Fidelity,
 }
 
 impl Session {
@@ -87,6 +88,7 @@ impl Session {
             cluster: None,
             cluster_queries: None,
             policy: defaults.policy,
+            fidelity: Fidelity::default(),
         }
     }
 
@@ -120,9 +122,23 @@ impl Session {
         self
     }
 
-    /// Aladdin-style loop-sampling factor (default: 1 = exact).
+    /// Aladdin-style loop-sampling factor (default: 1 = exact). Prefer
+    /// [`Session::fidelity`] — the first-class mode this raw knob feeds;
+    /// when both are set the larger factor wins.
     pub fn sampling(mut self, factor: usize) -> Self {
         self.sampling_factor = factor.max(1);
+        self
+    }
+
+    /// Simulation fidelity (default: [`Fidelity::Exact`]).
+    /// [`Fidelity::Sampled`] promotes the paper's fig-08 loop sampling to
+    /// a mode: every accelerator phase costs only every k-th tile inner
+    /// iteration and scales, trading a documented < 10% latency/energy
+    /// error (`tests/fidelity.rs`) for roughly k-fold cheaper tile
+    /// costing. `Sampled { k: 1 }` is bit-identical to exact; the chosen
+    /// mode is stamped into the report's `fidelity` section.
+    pub fn fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.fidelity = fidelity;
         self
     }
 
@@ -250,7 +266,12 @@ impl Session {
             accel_pool: pool,
             interface: self.interface,
             sw_threads: self.sw_threads,
-            sampling_factor: self.sampling_factor,
+            // The fidelity mode and the raw sampling knob feed the same
+            // factor; the larger wins, and Exact/Sampled{1} map to 1 so
+            // the default config string stays byte-stable.
+            sampling_factor: self
+                .sampling_factor
+                .max(self.fidelity.sampling_factor()),
             functional: self.functional,
             capture_timeline: self.capture_timeline,
             seed: self.seed,
@@ -280,10 +301,18 @@ impl Session {
     /// Run the scenario and return the unified report.
     pub fn run(self) -> Result<Report> {
         let policy = self.policy;
+        // The effective sampling factor (fidelity mode and the raw
+        // sampling knob feed the same factor; the larger wins) — what
+        // the simulation actually ran at, stamped into the report.
+        let factor = self.sampling_factor.max(self.fidelity.sampling_factor());
         let mut rep = self.run_inner()?;
-        // Stamp the policy section on every scenario's report at the one
-        // exit point, so no arm can forget it.
+        // Stamp the policy + fidelity sections on every scenario's report
+        // at the one exit point, so no arm can forget them.
         rep.policy = PolicySummary::of(policy);
+        rep.fidelity = FidelitySummary {
+            mode: if factor > 1 { "sampled" } else { "exact" }.to_string(),
+            k: factor as u64,
+        };
         Ok(rep)
     }
 
@@ -627,6 +656,8 @@ impl Session {
                     plan_misses: cache_stats.map_or(0, |s| s.plan_misses),
                     cost_hits: cache_stats.map_or(0, |s| s.cost_hits),
                     cost_misses: cache_stats.map_or(0, |s| s.cost_misses),
+                    lower_hits: cache_stats.map_or(0, |s| s.lower_hits),
+                    lower_misses: cache_stats.map_or(0, |s| s.lower_misses),
                     wall_ns,
                 });
                 Ok(rep)

@@ -14,6 +14,14 @@
 //!   keyed by (layer signature, accelerator kind, sampling factor),
 //!   summarized into a per-layer latency/energy/traffic triple
 //!   ([`LayerTiming`]).
+//! * **Job templates** — the full single-job lowering
+//!   (`crate::ir::JobTemplate`: topo order, producer wiring, tile tasks,
+//!   CSR edges), keyed by the graph fingerprint plus a digest of every
+//!   lowering-relevant option (granularity, pool, policy, sampling,
+//!   reduction mode — see `ir::lowering_key`). This is the
+//!   schedule-prefix reuse for sweeps: adjacent grid points differing
+//!   only in a late-binding parameter (worker threads, pipeline flags,
+//!   `sw_threads`) share one lowered template and re-stamp it per job.
 //!
 //! What is *not* cached: anything schedule-dependent — DRAM-bandwidth
 //! contention, command-queue waits, CPU-pool arbitration. Those are
@@ -113,6 +121,10 @@ pub struct CacheStats {
     pub cost_hits: u64,
     /// Tile-cost lookups that costed from scratch.
     pub cost_misses: u64,
+    /// Job-template (lowering) lookups served from the cache.
+    pub lower_hits: u64,
+    /// Job-template (lowering) lookups that lowered from scratch.
+    pub lower_misses: u64,
 }
 
 /// Thread-safe memoization of tiling plans and tile costs for one
@@ -128,10 +140,15 @@ pub struct TimingCache {
     /// layer was costed under. Nested (map-of-small-vecs) rather than a
     /// flat tuple-keyed map so a hit needs no `String` key allocation.
     costs: RwLock<HashMap<String, Vec<((AccelKind, usize), Arc<CostEntry>)>>>,
+    /// Memoized single-job lowerings, keyed by graph fingerprint +
+    /// lowering-option digest (see `crate::ir::lowering_key`).
+    lowerings: RwLock<HashMap<String, Arc<crate::ir::JobTemplate>>>,
     plan_hits: AtomicU64,
     plan_misses: AtomicU64,
     cost_hits: AtomicU64,
     cost_misses: AtomicU64,
+    lower_hits: AtomicU64,
+    lower_misses: AtomicU64,
 }
 
 impl fmt::Debug for TimingCache {
@@ -139,6 +156,7 @@ impl fmt::Debug for TimingCache {
         f.debug_struct("TimingCache")
             .field("plans", &self.plans.read().unwrap().len())
             .field("costs", &self.costs.read().unwrap().len())
+            .field("lowerings", &self.lowerings.read().unwrap().len())
             .field("stats", &self.stats())
             .finish()
     }
@@ -152,10 +170,13 @@ impl TimingCache {
             soc_sig: soc.to_cfg(),
             plans: RwLock::new(HashMap::new()),
             costs: RwLock::new(HashMap::new()),
+            lowerings: RwLock::new(HashMap::new()),
             plan_hits: AtomicU64::new(0),
             plan_misses: AtomicU64::new(0),
             cost_hits: AtomicU64::new(0),
             cost_misses: AtomicU64::new(0),
+            lower_hits: AtomicU64::new(0),
+            lower_misses: AtomicU64::new(0),
         }
     }
 
@@ -210,6 +231,29 @@ impl TimingCache {
         built
     }
 
+    /// Get-or-build the memoized single-job lowering for a (graph,
+    /// lowering options) key. Same discipline as [`TimingCache::plan`]:
+    /// build outside the write lock, racing builders produce identical
+    /// templates, first insertion wins.
+    pub(crate) fn lowering(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> crate::ir::JobTemplate,
+    ) -> Arc<crate::ir::JobTemplate> {
+        if let Some(t) = self.lowerings.read().unwrap().get(key) {
+            self.lower_hits.fetch_add(1, Ordering::Relaxed);
+            return t.clone();
+        }
+        self.lower_misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(build());
+        self.lowerings
+            .write()
+            .unwrap()
+            .entry(key.to_string())
+            .or_insert(built)
+            .clone()
+    }
+
     /// Current hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
@@ -217,6 +261,8 @@ impl TimingCache {
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
             cost_hits: self.cost_hits.load(Ordering::Relaxed),
             cost_misses: self.cost_misses.load(Ordering::Relaxed),
+            lower_hits: self.lower_hits.load(Ordering::Relaxed),
+            lower_misses: self.lower_misses.load(Ordering::Relaxed),
         }
     }
 

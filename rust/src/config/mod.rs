@@ -91,6 +91,53 @@ impl fmt::Display for Policy {
     }
 }
 
+/// Simulation fidelity: how much of every accelerator phase is actually
+/// simulated. The paper's fig-08 loop-sampling trick (simulate every
+/// k-th tile iteration, unsample the rest), promoted from a raw
+/// [`SimOptions::sampling_factor`] knob to a first-class mode with a
+/// documented error bound (`tests/fidelity.rs` measures it: < 10%
+/// relative error on total latency and energy across the zoo).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Fidelity {
+    /// Simulate every tile iteration exactly (the default).
+    #[default]
+    Exact,
+    /// Aladdin-style sampled simulation: cost every k-th inner loop
+    /// iteration and scale. `Sampled { k: 1 }` is bit-identical to
+    /// [`Fidelity::Exact`] by construction.
+    Sampled {
+        /// Sampling factor (>= 1).
+        k: usize,
+    },
+}
+
+impl Fidelity {
+    /// The effective loop-sampling factor this fidelity maps to.
+    pub fn sampling_factor(self) -> usize {
+        match self {
+            Fidelity::Exact => 1,
+            Fidelity::Sampled { k } => k.max(1),
+        }
+    }
+
+    /// The report-schema mode string (`fidelity.mode`).
+    pub fn mode(self) -> &'static str {
+        match self {
+            Fidelity::Exact => "exact",
+            Fidelity::Sampled { .. } => "sampled",
+        }
+    }
+}
+
+impl fmt::Display for Fidelity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fidelity::Exact => write!(f, "exact"),
+            Fidelity::Sampled { k } => write!(f, "sampled:{k}"),
+        }
+    }
+}
+
 /// SoC microarchitectural parameters (paper Table II).
 #[derive(Debug, Clone)]
 pub struct SocConfig {
@@ -661,6 +708,26 @@ impl SimOptions {
             other => Err(format!("unknown policy '{other}' (fifo|heft|rr)")),
         }
     }
+
+    /// Parse a `--fidelity` CLI value: `exact`, `sampled` (k = 8), or
+    /// `sampled:<k>` with k >= 1.
+    pub fn parse_fidelity(s: &str) -> Result<Fidelity, String> {
+        match s {
+            "exact" => Ok(Fidelity::Exact),
+            "sampled" => Ok(Fidelity::Sampled { k: 8 }),
+            other => match other.strip_prefix("sampled:") {
+                Some(k) => match k.parse::<usize>() {
+                    Ok(k) if k >= 1 => Ok(Fidelity::Sampled { k }),
+                    _ => Err(format!(
+                        "invalid sampling factor '{k}' (expected an integer >= 1)"
+                    )),
+                },
+                None => Err(format!(
+                    "unknown fidelity '{other}' (exact|sampled|sampled:<k>)"
+                )),
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -758,6 +825,33 @@ mod tests {
         let t = c.table();
         assert!(t.contains("4 channel(s)"), "{t}");
         assert!(t.contains("16.0 GB/s"), "{t}");
+    }
+
+    #[test]
+    fn fidelity_parses_maps_and_displays() {
+        assert_eq!(SimOptions::parse_fidelity("exact").unwrap(), Fidelity::Exact);
+        assert_eq!(
+            SimOptions::parse_fidelity("sampled").unwrap(),
+            Fidelity::Sampled { k: 8 }
+        );
+        assert_eq!(
+            SimOptions::parse_fidelity("sampled:4").unwrap(),
+            Fidelity::Sampled { k: 4 }
+        );
+        let e = SimOptions::parse_fidelity("approximate").unwrap_err();
+        assert!(e.contains("exact|sampled|sampled:<k>"), "{e}");
+        assert!(SimOptions::parse_fidelity("sampled:0").is_err());
+        assert!(SimOptions::parse_fidelity("sampled:x").is_err());
+        // Mode mapping: Exact and Sampled{1} both sample at factor 1 —
+        // the k = 1 bit-identity guarantee rests on this.
+        assert_eq!(Fidelity::default(), Fidelity::Exact);
+        assert_eq!(Fidelity::Exact.sampling_factor(), 1);
+        assert_eq!(Fidelity::Sampled { k: 1 }.sampling_factor(), 1);
+        assert_eq!(Fidelity::Sampled { k: 8 }.sampling_factor(), 8);
+        assert_eq!(Fidelity::Exact.mode(), "exact");
+        assert_eq!(Fidelity::Sampled { k: 4 }.mode(), "sampled");
+        assert_eq!(Fidelity::Sampled { k: 4 }.to_string(), "sampled:4");
+        assert_eq!(Fidelity::Exact.to_string(), "exact");
     }
 
     #[test]

@@ -41,6 +41,26 @@
 //! construction — pinned by `tests/taskgraph_invariants.rs` along with
 //! "every plan work item appears as exactly one tile task".
 //!
+//! **Storage layout (hot-path)**: tasks are struct-of-arrays-friendly —
+//! [`Task`] is a small `Copy` record, and the dependency/consumer edges
+//! live in flat CSR adjacency arrays on the [`TaskGraph`] (`u32` id
+//! space, offsets + one shared edge pool) instead of per-task `Vec`s.
+//! Accessors: [`TaskGraph::task_deps`] / [`TaskGraph::task_consumers`].
+//!
+//! **Template memoization**: serving batches and cluster workloads lower
+//! the *same* graph hundreds of times. [`lower`] builds one
+//! [`JobTemplate`] per distinct graph — the single-job lowering at
+//! arrival 0, including its topological order, producer map, tiling
+//! plans, tile tasks, and CSR edges — and *stamps* it once per job
+//! (offset ids, set arrival, resolve thread-count-dependent prep-chunk
+//! durations). With a [`crate::cache::TimingCache`] attached, templates
+//! are additionally shared **across runs** (sweep points, qps grid
+//! points) keyed by the graph fingerprint plus every lowering-relevant
+//! option; `sw_threads` is deliberately *late-binding* — prep-chunk
+//! durations are recomputed at stamp time from the stored per-chunk copy
+//! weights — so a threads-axis sweep shares one template across all its
+//! points.
+//!
 //! **When is cross-op tile pipelining legal?** A consumer tile may start
 //! when (1) its input data exists — its prep chunk ran, which itself
 //! waited for every producer tile overlapping that chunk's input region
@@ -64,6 +84,8 @@
 //! deliberately not done.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
 
 use crate::cpu::PhaseTime;
 use crate::graph::{Graph, OpKind};
@@ -72,6 +94,7 @@ use crate::sched::{CachedPlan, Scheduler};
 use crate::tiling::Region;
 
 /// What one lowered operator executes as.
+#[derive(Clone)]
 pub enum OpWork {
     /// Accelerated operator with its (possibly cache-shared) tiling plan.
     Accel(CachedPlan),
@@ -142,7 +165,10 @@ pub struct ResourceClaim {
     pub route: Route,
 }
 
-/// One schedulable unit of the lowered workload.
+/// One schedulable unit of the lowered workload — a small `Copy` record;
+/// its dependency/consumer edges live in the [`TaskGraph`]'s flat CSR
+/// arrays ([`TaskGraph::task_deps`] / [`TaskGraph::task_consumers`]).
+#[derive(Debug, Clone, Copy)]
 pub struct Task {
     /// The op node this task belongs to.
     pub op_node: usize,
@@ -156,14 +182,10 @@ pub struct Task {
     /// serial executor charges. 0 for every other kind (those durations
     /// are resolved at execution time).
     pub prep_dur_ns: f64,
-    /// Task ids that must complete before this task may start.
-    pub deps: Vec<usize>,
-    /// Mirror of `deps`: task ids released when this task completes.
-    pub consumers: Vec<usize>,
 }
 
 /// The lowered workload: op nodes in (job, topological) order plus —
-/// after tile-level expansion — the flat task list.
+/// after tile-level expansion — the flat task list and its CSR edges.
 pub struct TaskGraph {
     /// One node per (job, operator), in (job, topological) order.
     pub ops: Vec<OpNode>,
@@ -171,9 +193,45 @@ pub struct TaskGraph {
     pub tasks: Vec<Task>,
     /// Op-node index range `[start, end)` per job.
     pub job_ranges: Vec<(usize, usize)>,
+    /// CSR offsets into `dep_edges`, length `tasks.len() + 1`.
+    dep_offsets: Vec<u32>,
+    /// Edge pool: task ids that must complete before the owning task.
+    dep_edges: Vec<u32>,
+    /// CSR offsets into `cons_edges`, length `tasks.len() + 1`.
+    cons_offsets: Vec<u32>,
+    /// Edge pool: mirror of `dep_edges` — task ids released on completion.
+    cons_edges: Vec<u32>,
 }
 
 impl TaskGraph {
+    fn empty() -> Self {
+        Self {
+            ops: Vec::new(),
+            tasks: Vec::new(),
+            job_ranges: Vec::new(),
+            dep_offsets: vec![0],
+            dep_edges: Vec::new(),
+            cons_offsets: vec![0],
+            cons_edges: Vec::new(),
+        }
+    }
+
+    /// Task ids that must complete before task `id` may start.
+    pub fn task_deps(&self, id: usize) -> &[u32] {
+        &self.dep_edges[self.dep_offsets[id] as usize..self.dep_offsets[id + 1] as usize]
+    }
+
+    /// Mirror of [`TaskGraph::task_deps`]: task ids released when `id`
+    /// completes.
+    pub fn task_consumers(&self, id: usize) -> &[u32] {
+        &self.cons_edges[self.cons_offsets[id] as usize..self.cons_offsets[id + 1] as usize]
+    }
+
+    /// Total dependency-edge count (the consumer pool mirrors it 1:1).
+    pub fn n_task_edges(&self) -> usize {
+        self.dep_edges.len()
+    }
+
     /// The tile-task ids of an accelerated op node, as a (first tile
     /// task id, item count) pair. Layout per node: prep chunks, then one
     /// task per plan item, then finalize.
@@ -188,21 +246,42 @@ impl TaskGraph {
     }
 }
 
-/// Lower a workload to the task-graph IR. Op nodes (with their cached
-/// plans and data edges) are always built; `tile_level` additionally
-/// expands every op into its prep-chunk / tile / finalize tasks with
-/// cross-operator tile edges. Both executors consume this one lowering —
-/// the operator-granularity view is exactly the task expansion collapsed
-/// per op.
-pub(crate) fn lower(sched: &Scheduler, jobs: &[(f64, &Graph)], tile_level: bool) -> TaskGraph {
-    let mut ops: Vec<OpNode> = Vec::new();
-    let mut job_ranges: Vec<(usize, usize)> = Vec::with_capacity(jobs.len());
-    for (j, &(arrival, graph)) in jobs.iter().enumerate() {
-        let base = ops.len();
+/// Thread-count-dependent prep-split recompute info for one accelerated
+/// op of a [`JobTemplate`]: everything needed to turn the op's monolithic
+/// prep span (a function of `sw_threads`) back into per-chunk durations
+/// at stamp time.
+struct PrepSplit {
+    /// Op-node index (template-local) owning the prep chunks.
+    node: usize,
+    /// First prep-task id (template-local).
+    first: usize,
+    /// Per-chunk single-thread copy costs; empty = one monolithic chunk.
+    weights: Vec<f64>,
+}
+
+/// The memoized single-job lowering of one graph at arrival 0: op nodes
+/// (with cached plans and data edges), tile tasks, CSR edges, and the
+/// prep-split info needed to resolve `sw_threads`-dependent durations at
+/// stamp time. Built once per distinct graph per [`lower`] call, and —
+/// with a timing cache attached — shared across runs and sweep points
+/// (see the module docs).
+pub(crate) struct JobTemplate {
+    /// The single-job lowering (job 0, arrival 0, ids local).
+    tg: TaskGraph,
+    /// One entry per accelerated op with prep chunks.
+    prep: Vec<PrepSplit>,
+}
+
+impl JobTemplate {
+    /// Lower one graph at arrival 0 / job 0. This is where the per-graph
+    /// work lives — `topo_order`, the producer map, `plan_cached`, task
+    /// expansion — all hoisted out of the per-job loop.
+    fn build(sched: &Scheduler, graph: &Graph, tile_level: bool) -> Self {
+        let mut ops: Vec<OpNode> = Vec::new();
         let order = graph.topo_order();
         let mut node_of_op = vec![usize::MAX; graph.ops.len()];
         for (pos, &oid) in order.iter().enumerate() {
-            node_of_op[oid] = base + pos;
+            node_of_op[oid] = pos;
         }
         for &oid in &order {
             let op = &graph.ops[oid];
@@ -212,9 +291,9 @@ pub(crate) fn lower(sched: &Scheduler, jobs: &[(f64, &Graph)], tile_level: bool)
                 None => OpWork::Source,
             };
             ops.push(OpNode {
-                job: j,
+                job: 0,
                 op_id: oid,
-                arrival_ns: arrival,
+                arrival_ns: 0.0,
                 work,
                 tasks: (0, 0),
                 op_deps: Vec::new(),
@@ -233,15 +312,154 @@ pub(crate) fn lower(sched: &Scheduler, jobs: &[(f64, &Graph)], tile_level: bool)
                 }
             }
         }
-        job_ranges.push((base, ops.len()));
+        let n_ops = ops.len();
+        let mut tg = TaskGraph {
+            ops,
+            tasks: Vec::new(),
+            job_ranges: vec![(0, n_ops)],
+            dep_offsets: vec![0],
+            dep_edges: Vec::new(),
+            cons_offsets: vec![0],
+            cons_edges: Vec::new(),
+        };
+        let mut prep = Vec::new();
+        if tile_level {
+            expand_tasks(sched, &mut tg, &mut prep);
+        }
+        Self { tg, prep }
     }
-    let mut tg = TaskGraph {
-        ops,
-        tasks: Vec::new(),
-        job_ranges,
-    };
-    if tile_level {
-        expand_tasks(sched, &mut tg);
+
+    /// Resolve per-task prep durations for the scheduler's *current*
+    /// `sw_threads` — the late-binding half of the template. Returns one
+    /// duration per template task (0 for non-prep kinds), bit-identical
+    /// to what a from-scratch lowering computes.
+    fn resolve_prep_durs(&self, sched: &Scheduler) -> Vec<f64> {
+        let threads = sched.options().sw_threads;
+        let mut durs = vec![0.0f64; self.tg.tasks.len()];
+        for ps in &self.prep {
+            let OpWork::Accel(cp) = &self.tg.ops[ps.node].work else {
+                continue;
+            };
+            let phase = sched.cpu_model().tiling_phase(&cp.planned.plan.prep_tasks, threads);
+            if ps.weights.is_empty() {
+                durs[ps.first] = phase.span_ns;
+            } else {
+                for (j, d) in split_prep(&phase, &ps.weights).into_iter().enumerate() {
+                    durs[ps.first + j] = d;
+                }
+            }
+        }
+        durs
+    }
+}
+
+/// Fingerprint + lowering-relevant options: the cross-run template cache
+/// key. Includes everything the template bakes in — graph structure and
+/// geometry (via [`crate::cache::layer_signature`], the same sufficiency
+/// assumption the plan cache makes), granularity, pool composition,
+/// policy (slot placement is baked into tile claims), sampling factor,
+/// and the inter-accel-reduction flag. Deliberately *excludes*
+/// `sw_threads` (late-binding, see [`JobTemplate::resolve_prep_durs`])
+/// and execution-only options (pipeline flags, double buffering,
+/// interface); the SoC is pinned by the cache's `for_soc` binding.
+fn lowering_key(sched: &Scheduler, graph: &Graph, tile_level: bool) -> String {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    graph.ops.len().hash(&mut h);
+    graph.tensors.len().hash(&mut h);
+    for op in &graph.ops {
+        op.id.hash(&mut h);
+        std::mem::discriminant(&op.kind).hash(&mut h);
+        crate::cache::layer_signature(op, graph).hash(&mut h);
+        op.inputs.hash(&mut h);
+        op.output.hash(&mut h);
+    }
+    let opts = sched.options();
+    format!(
+        "{}|{:016x}|tile{}|{:?}|{}|s{}|iar{}",
+        graph.name,
+        h.finish(),
+        u8::from(tile_level),
+        opts.resolved_pool(),
+        opts.policy,
+        opts.sampling_factor,
+        u8::from(opts.inter_accel_reduction),
+    )
+}
+
+/// Get-or-build the template for one graph: through the scheduler's
+/// timing cache when attached (cross-run reuse), else built fresh.
+fn template_for(sched: &Scheduler, graph: &Graph, tile_level: bool) -> Arc<JobTemplate> {
+    match sched.cache() {
+        Some(cache) => {
+            let key = lowering_key(sched, graph, tile_level);
+            cache.lowering(&key, || JobTemplate::build(sched, graph, tile_level))
+        }
+        None => Arc::new(JobTemplate::build(sched, graph, tile_level)),
+    }
+}
+
+/// Stamp one job out of a template: offset op/task ids, set the job
+/// index and arrival, and write the resolved prep durations.
+fn stamp_job(tg: &mut TaskGraph, job: usize, arrival_ns: f64, tpl: &JobTemplate, durs: &[f64]) {
+    let base_op = tg.ops.len();
+    let base_task = tg.tasks.len();
+    for o in &tpl.tg.ops {
+        tg.ops.push(OpNode {
+            job,
+            op_id: o.op_id,
+            arrival_ns,
+            work: o.work.clone(),
+            tasks: (o.tasks.0 + base_task, o.tasks.1 + base_task),
+            op_deps: o.op_deps.iter().map(|&d| d + base_op).collect(),
+            op_consumers: o.op_consumers.iter().map(|&c| c + base_op).collect(),
+        });
+    }
+    tg.job_ranges.push((base_op, tg.ops.len()));
+    for (t, &dur) in tpl.tg.tasks.iter().zip(durs) {
+        tg.tasks.push(Task {
+            op_node: t.op_node + base_op,
+            kind: t.kind,
+            claim: t.claim,
+            prep_dur_ns: dur,
+        });
+    }
+    let tb = base_task as u32;
+    let eb = tg.dep_edges.len() as u32;
+    tg.dep_edges.extend(tpl.tg.dep_edges.iter().map(|&d| d + tb));
+    tg.dep_offsets.extend(tpl.tg.dep_offsets[1..].iter().map(|&o| o + eb));
+    let eb = tg.cons_edges.len() as u32;
+    tg.cons_edges.extend(tpl.tg.cons_edges.iter().map(|&c| c + tb));
+    tg.cons_offsets.extend(tpl.tg.cons_offsets[1..].iter().map(|&o| o + eb));
+}
+
+/// Lower a workload to the task-graph IR. Op nodes (with their cached
+/// plans and data edges) are always built; `tile_level` additionally
+/// expands every op into its prep-chunk / tile / finalize tasks with
+/// cross-operator tile edges. Both executors consume this one lowering —
+/// the operator-granularity view is exactly the task expansion collapsed
+/// per op.
+///
+/// Jobs sharing one `&Graph` (serving batches, cluster shards) share one
+/// [`JobTemplate`]: the per-graph work — topological order, producer
+/// map, plan lookups, task expansion — runs once, and each job is a
+/// cheap id-offset stamp of the template.
+pub(crate) fn lower(sched: &Scheduler, jobs: &[(f64, &Graph)], tile_level: bool) -> TaskGraph {
+    let mut tg = TaskGraph::empty();
+    // Distinct graphs per call are few (tenant networks, cluster
+    // stages); a linear pointer scan beats hashing here.
+    let mut memo: Vec<(*const Graph, Arc<JobTemplate>, Vec<f64>)> = Vec::new();
+    for (j, &(arrival, graph)) in jobs.iter().enumerate() {
+        let idx = match memo.iter().position(|(p, _, _)| std::ptr::eq(*p, graph)) {
+            Some(i) => i,
+            None => {
+                let tpl = template_for(sched, graph, tile_level);
+                let durs = tpl.resolve_prep_durs(sched);
+                memo.push((graph as *const Graph, tpl, durs));
+                memo.len() - 1
+            }
+        };
+        let (_, tpl, durs) = &memo[idx];
+        stamp_job(&mut tg, j, arrival, tpl, durs);
     }
     tg
 }
@@ -306,12 +524,24 @@ fn split_prep(phase: &PhaseTime, weights: &[f64]) -> Vec<f64> {
     durs
 }
 
+/// Append one task's dependency list to the CSR edge pool.
+fn push_edges(offsets: &mut Vec<u32>, edges: &mut Vec<u32>, deps: &[usize]) {
+    edges.extend(deps.iter().map(|&d| d as u32));
+    offsets.push(edges.len() as u32);
+}
+
 /// Expand every op node into its tile-level tasks (see the module docs
-/// for the per-op layout and edge rules).
-fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
-    let threads = sched.options().sw_threads;
+/// for the per-op layout and edge rules). Dependency edges are emitted
+/// straight into the CSR pool (tasks are created in topological id
+/// order, deps known at creation); the consumer mirror is a counting
+/// pass at the end. Prep durations are *not* resolved here — the
+/// template stores per-chunk weights and [`JobTemplate::resolve_prep_durs`]
+/// turns them into durations per stamped job.
+fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph, prep_splits: &mut Vec<PrepSplit>) {
     let n_accels = sched.n_accels();
     let mut tasks: Vec<Task> = Vec::new();
+    let mut dep_offsets: Vec<u32> = vec![0];
+    let mut dep_edges: Vec<u32> = Vec::new();
     let no_claim = ResourceClaim {
         cpu: false,
         accel_slot: None,
@@ -328,14 +558,15 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
         let start = tasks.len();
         let oid = tg.ops[ni].op_id;
         match &tg.ops[ni].work {
-            OpWork::Source => tasks.push(Task {
-                op_node: ni,
-                kind: TaskKind::Source,
-                claim: no_claim,
-                prep_dur_ns: 0.0,
-                deps: Vec::new(),
-                consumers: Vec::new(),
-            }),
+            OpWork::Source => {
+                tasks.push(Task {
+                    op_node: ni,
+                    kind: TaskKind::Source,
+                    claim: no_claim,
+                    prep_dur_ns: 0.0,
+                });
+                push_edges(&mut dep_offsets, &mut dep_edges, &[]);
+            }
             OpWork::CpuOnly => {
                 let deps = producer_task_deps(tg, ni, None);
                 tasks.push(Task {
@@ -343,9 +574,8 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                     kind: TaskKind::CpuOnly,
                     claim: cpu_claim(0, oid as u32),
                     prep_dur_ns: 0.0,
-                    deps,
-                    consumers: Vec::new(),
                 });
+                push_edges(&mut dep_offsets, &mut dep_edges, &deps);
             }
             OpWork::Accel(cp) => {
                 let plan = &cp.planned.plan;
@@ -369,21 +599,29 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                         .enumerate()
                         .all(|(i, it)| it.in_region == plan.items[i % n_prep].in_region);
                 let n_chunks = if chunkable { n_prep } else { 1 };
-                let phase = sched.cpu_model().tiling_phase(&plan.prep_tasks, threads);
-                let (durs, bytes): (Vec<f64>, Vec<u64>) = if n_chunks == 1 {
-                    (vec![phase.span_ns], vec![phase.traffic_bytes])
+                // Byte claims are thread-independent (read + write both
+                // stream, exactly the monolithic phase's traffic);
+                // durations are thread-dependent and resolved at stamp
+                // time from the weights recorded below.
+                let (weights, bytes): (Vec<f64>, Vec<u64>) = if n_chunks == 1 {
+                    let total: u64 = plan.prep_tasks.iter().map(|s| s.bytes).sum();
+                    (Vec::new(), vec![2 * total])
                 } else {
                     let w: Vec<f64> = plan
                         .prep_tasks
                         .iter()
                         .map(|s| sched.cpu_model().memcpy_task_ns(*s))
                         .collect();
-                    // Read + write both stream, as in the monolithic phase.
                     let b: Vec<u64> = plan.prep_tasks.iter().map(|s| 2 * s.bytes).collect();
-                    (split_prep(&phase, &w), b)
+                    (w, b)
                 };
                 let prep0 = tasks.len();
-                for (j, (&dur, &byt)) in durs.iter().zip(&bytes).enumerate() {
+                prep_splits.push(PrepSplit {
+                    node: ni,
+                    first: prep0,
+                    weights,
+                });
+                for (j, &byt) in bytes.iter().enumerate() {
                     // Chunk j prepares the same input region as plan item
                     // j (the planners emit prep tasks in the order their
                     // first item cycle consumes them).
@@ -397,10 +635,9 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                         op_node: ni,
                         kind: TaskKind::Prep { chunk: j as u32 },
                         claim: cpu_claim(byt, oid as u32),
-                        prep_dur_ns: dur,
-                        deps,
-                        consumers: Vec::new(),
+                        prep_dur_ns: 0.0,
                     });
+                    push_edges(&mut dep_offsets, &mut dep_edges, &deps);
                 }
                 let tile0 = tasks.len();
                 // Group→slot mapping under the active scheduling policy
@@ -434,35 +671,52 @@ fn expand_tasks(sched: &Scheduler, tg: &mut TaskGraph) {
                             route: Route::for_tile(oid, i, slot),
                         },
                         prep_dur_ns: 0.0,
-                        deps,
-                        consumers: Vec::new(),
                     });
+                    push_edges(&mut dep_offsets, &mut dep_edges, &deps);
                 }
+                let fin_deps: Vec<usize> = (tile0..tile0 + n_items).collect();
                 tasks.push(Task {
                     op_node: ni,
                     kind: TaskKind::Finalize,
                     claim: cpu_claim(2 * plan.finalize.bytes, oid as u32),
                     prep_dur_ns: 0.0,
-                    deps: (tile0..tile0 + n_items).collect(),
-                    consumers: Vec::new(),
                 });
+                push_edges(&mut dep_offsets, &mut dep_edges, &fin_deps);
             }
         }
         tg.ops[ni].tasks = (start, tasks.len());
     }
-    // Mirror deps into consumer lists.
-    for id in 0..tasks.len() {
-        for di in 0..tasks[id].deps.len() {
-            let d = tasks[id].deps[di];
-            tasks[d].consumers.push(id);
+    // Mirror the dep edges into the consumer CSR (counting pass). Fill
+    // order — ascending consumer id, deps in list order — reproduces the
+    // old per-task Vec mirror exactly.
+    let n_tasks = tasks.len();
+    let mut counts = vec![0u32; n_tasks];
+    for &d in &dep_edges {
+        counts[d as usize] += 1;
+    }
+    let mut cons_offsets = vec![0u32; n_tasks + 1];
+    for i in 0..n_tasks {
+        cons_offsets[i + 1] = cons_offsets[i] + counts[i];
+    }
+    let mut fill: Vec<u32> = cons_offsets[..n_tasks].to_vec();
+    let mut cons_edges = vec![0u32; dep_edges.len()];
+    for id in 0..n_tasks {
+        for &d in &dep_edges[dep_offsets[id] as usize..dep_offsets[id + 1] as usize] {
+            cons_edges[fill[d as usize] as usize] = id as u32;
+            fill[d as usize] += 1;
         }
     }
     tg.tasks = tasks;
+    tg.dep_offsets = dep_offsets;
+    tg.dep_edges = dep_edges;
+    tg.cons_offsets = cons_offsets;
+    tg.cons_edges = cons_edges;
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::TimingCache;
     use crate::config::{SimOptions, SocConfig};
     use crate::nets;
 
@@ -490,14 +744,34 @@ mod tests {
     fn tasks_are_topological_by_id() {
         let (tg, _) = lower_net("cnn10");
         assert!(!tg.tasks.is_empty());
-        for (id, t) in tg.tasks.iter().enumerate() {
-            for &d in &t.deps {
-                assert!(d < id, "edge {d} -> {id} not forward");
+        for id in 0..tg.tasks.len() {
+            for &d in tg.task_deps(id) {
+                assert!((d as usize) < id, "edge {d} -> {id} not forward");
             }
-            for &c in &t.consumers {
-                assert!(c > id, "consumer {c} of {id} not forward");
+            for &c in tg.task_consumers(id) {
+                assert!((c as usize) > id, "consumer {c} of {id} not forward");
             }
         }
+    }
+
+    #[test]
+    fn csr_consumer_edges_mirror_deps() {
+        let (tg, _) = lower_net("cnn10");
+        let mut mirrored = 0usize;
+        for id in 0..tg.tasks.len() {
+            for &d in tg.task_deps(id) {
+                assert!(
+                    tg.task_consumers(d as usize).contains(&(id as u32)),
+                    "dep edge {d} -> {id} missing from the consumer pool"
+                );
+                mirrored += 1;
+            }
+        }
+        assert_eq!(mirrored, tg.n_task_edges());
+        let consumer_edges: usize = (0..tg.tasks.len())
+            .map(|id| tg.task_consumers(id).len())
+            .sum();
+        assert_eq!(consumer_edges, tg.n_task_edges());
     }
 
     #[test]
@@ -571,5 +845,76 @@ mod tests {
                 phase.span_ns
             );
         }
+    }
+
+    #[test]
+    fn replicated_jobs_are_template_stamps_of_the_single_job_lowering() {
+        // Serving lowers one graph many times: every job's slice must be
+        // an exact id-offset copy of the single-job lowering.
+        let g = nets::build_network("lenet5").unwrap();
+        let sched = Scheduler::new(SocConfig::default(), SimOptions::default());
+        let one = sched.lower_workload(&[(0.0, &g)]);
+        let jobs: Vec<(f64, &Graph)> = (0..3).map(|j| (j as f64 * 1000.0, &g)).collect();
+        let many = sched.lower_workload(&jobs);
+        assert_eq!(many.ops.len(), 3 * one.ops.len());
+        assert_eq!(many.tasks.len(), 3 * one.tasks.len());
+        assert_eq!(many.n_task_edges(), 3 * one.n_task_edges());
+        let (n_ops, n_tasks) = (one.ops.len(), one.tasks.len());
+        for j in 0..3 {
+            assert_eq!(many.job_ranges[j], (j * n_ops, (j + 1) * n_ops));
+            for i in 0..n_ops {
+                let (a, b) = (&one.ops[i], &many.ops[j * n_ops + i]);
+                assert_eq!(b.job, j);
+                assert_eq!(b.op_id, a.op_id);
+                assert_eq!(b.arrival_ns, j as f64 * 1000.0);
+                assert_eq!(b.tasks, (a.tasks.0 + j * n_tasks, a.tasks.1 + j * n_tasks));
+            }
+            for t in 0..n_tasks {
+                let (a, b) = (&one.tasks[t], &many.tasks[j * n_tasks + t]);
+                assert_eq!(b.op_node, a.op_node + j * n_ops);
+                assert_eq!(b.kind, a.kind);
+                assert_eq!(b.claim, a.claim);
+                assert_eq!(b.prep_dur_ns.to_bits(), a.prep_dur_ns.to_bits());
+                let want: Vec<u32> = one
+                    .task_deps(t)
+                    .iter()
+                    .map(|&d| d + (j * n_tasks) as u32)
+                    .collect();
+                assert_eq!(many.task_deps(j * n_tasks + t), want.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn attached_cache_memoizes_the_lowering_across_runs() {
+        let g = nets::build_network("lenet5").unwrap();
+        let soc = SocConfig::default();
+        let cache = std::sync::Arc::new(TimingCache::for_soc(&soc));
+        let mk = || {
+            Scheduler::new(soc.clone(), SimOptions::default()).with_cache(cache.clone())
+        };
+        let a = mk().lower_workload(&[(0.0, &g)]);
+        assert_eq!(cache.stats().lower_misses, 1);
+        assert_eq!(cache.stats().lower_hits, 0);
+        let b = mk().lower_workload(&[(0.0, &g), (500.0, &g)]);
+        let s = cache.stats();
+        assert_eq!(s.lower_misses, 1, "template must be reused: {s:?}");
+        assert_eq!(s.lower_hits, 1, "{s:?}");
+        // The reused template stamps the identical structure.
+        assert_eq!(b.tasks.len(), 2 * a.tasks.len());
+        for t in 0..a.tasks.len() {
+            assert_eq!(b.tasks[t].kind, a.tasks[t].kind);
+            assert_eq!(b.tasks[t].claim, a.tasks[t].claim);
+            assert_eq!(b.task_deps(t), a.task_deps(t));
+        }
+        // A lowering-relevant option change (pool size) must re-key.
+        let opts2 = SimOptions {
+            num_accels: 2,
+            ..SimOptions::default()
+        };
+        Scheduler::new(soc.clone(), opts2)
+            .with_cache(cache.clone())
+            .lower_workload(&[(0.0, &g)]);
+        assert_eq!(cache.stats().lower_misses, 2);
     }
 }

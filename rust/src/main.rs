@@ -6,7 +6,8 @@
 //! ```text
 //! smaug run --net vgg16 [--accels 8 | --accels nvdla,systolic,nvdla]
 //!           [--interface acp] [--threads 8] [--accel nvdla|systolic]
-//!           [--sampling N] [--soc file.cfg] [--functional off|native|pjrt]
+//!           [--sampling N] [--fidelity exact|sampled[:k]] [--soc file.cfg]
+//!           [--functional off|native|pjrt]
 //!           [--dram-channels N] [--link-gbps F] [--bus-gbps F]
 //!           [--train] [--double-buffer] [--inter-accel-reduction]
 //!           [--pipeline] [--tile-pipeline] [--policy fifo|heft|rr]
@@ -74,6 +75,7 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "smaug {} — full-stack DNN SoC simulator (SMAUG reproduction)\n\n\
                  usage:\n  smaug run --net <name> [--accels N|kind,kind,...] [--interface dma|acp]\n\
                  \x20          [--threads N] [--accel nvdla|systolic] [--sampling N]\n\
+                 \x20          [--fidelity exact|sampled[:k]]\n\
                  \x20          [--functional off|native|pjrt] [--report summary|ops|timeline|json|csv|trace-json]\n\
                  \x20          [--train] [--soc file.cfg] [--double-buffer] [--inter-accel-reduction]\n\
                  \x20          [--dram-channels N] [--link-gbps F] [--bus-gbps F]\n\
@@ -178,6 +180,13 @@ fn build_session(args: &[String]) -> Result<Session> {
     }
     if let Some(v) = flag(args, "--sampling") {
         s = s.sampling(v.parse().context("--sampling")?);
+    }
+    if let Some(v) = flag(args, "--fidelity") {
+        s = s.fidelity(
+            SimOptions::parse_fidelity(v)
+                .map_err(anyhow::Error::msg)
+                .context("--fidelity")?,
+        );
     }
     if let Some(v) = flag(args, "--functional") {
         s = s.functional(SimOptions::parse_functional(v).map_err(anyhow::Error::msg)?);

@@ -35,7 +35,17 @@
 //! finalizations (dispatching new accelerator work hides more latency),
 //! ties broken by task position — fully deterministic.
 //!
+//! **Ready queues**: both loops drain index-keyed binary min-heaps
+//! ([`QKey`]) instead of rescanning a linear ready list. The heap key
+//! reproduces the historical linear-scan selection *bit-for-bit* — see
+//! [`QKey`]'s ordering contract and the per-queue notes on
+//! [`OpReadyQueue`] / [`TileReadyQueues`]; `fifo` output is unchanged by
+//! construction, pinned by `tests/hotpath_identity.rs`.
+//!
 //! [`SimOptions::tile_pipeline`]: crate::config::SimOptions::tile_pipeline
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
 
 use super::{AccelPool, HwOutcome, OpAccelState, PrepOutcome, Scheduler};
 use crate::cpu::PoolGate;
@@ -66,6 +76,133 @@ pub(crate) fn run_jobs(sched: &mut Scheduler, jobs: &[(f64, &Graph)]) -> Vec<Job
 }
 
 // ---------------------------------------------------------------------
+// Ready queues
+// ---------------------------------------------------------------------
+
+/// Heap entry for both executors' ready queues.
+///
+/// Ordering contract (**load-bearing**, do not reorder): lexicographic
+/// `(a, b, class, idx)` via `f64::total_cmp`. The fields are
+/// queue-specific (see [`OpReadyQueue`] / [`TileReadyQueues`]), but the
+/// contract is always "historical linear-scan tuple order": policy
+/// priority before phase class before submission index, exactly the
+/// `(start, prio, class, id)` / `(prio, class, node)` strict-min keys
+/// the scans used. `total_cmp` agrees with the old tuple `<` on every
+/// reachable value: all times are finite and non-negative, and policy
+/// priorities are sign-uniform (all `+0.0` under fifo; negated
+/// non-negative ranks otherwise), so the `-0.0 < +0.0` distinction never
+/// decides an ordering the old float `<` saw as a tie-then-next-field.
+/// `ready` rides along as payload and never participates in ordering.
+#[derive(Clone, Copy)]
+struct QKey {
+    a: f64,
+    b: f64,
+    class: u8,
+    idx: usize,
+    /// Payload: the task's dependency-ready time (not compared).
+    ready: f64,
+}
+
+impl Ord for QKey {
+    fn cmp(&self, o: &Self) -> Ordering {
+        self.a
+            .total_cmp(&o.a)
+            .then(self.b.total_cmp(&o.b))
+            .then(self.class.cmp(&o.class))
+            .then(self.idx.cmp(&o.idx))
+    }
+}
+
+impl PartialOrd for QKey {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl PartialEq for QKey {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+
+impl Eq for QKey {}
+
+/// Policy dispatch priority of an op node: negated rank so higher-ranked
+/// ops sort first; exactly `0.0` when the policy publishes no ranks
+/// (fifo), keeping the key bit-identical to the pre-rank scheduler.
+fn prio_of(ranks: Option<&[f64]>, node: usize) -> f64 {
+    ranks.map_or(0.0, |r| -r[node])
+}
+
+/// Min-heap ready queue for the operator-granularity loop, replacing the
+/// historical O(n) rescans of a pending `Vec`.
+///
+/// Two heaps split the old two-phase selection (`horizon =
+/// max(cpu_free, min_ready)`, then strict min of `(prio, class, node)`
+/// among tasks with `ready <= horizon`):
+///
+/// * `timed` holds tasks not yet known-eligible, keyed
+///   `(ready, prio, class, node)`;
+/// * `eligible` holds tasks whose `ready` has passed some earlier
+///   `cpu_free` observation, keyed `(prio, 0, class, node)`.
+///
+/// [`OpReadyQueue::pop`] first migrates every timed task with
+/// `ready <= cpu_free` into `eligible`. If `eligible` is then non-empty,
+/// the horizon was `cpu_free` and the migrated set *is* the old
+/// eligible set, ordered by `(prio, class, node)` — pop it. Otherwise
+/// every pending `ready` exceeds `cpu_free`, the horizon was
+/// `min_ready`, the old eligible set was exactly the tasks tying that
+/// minimum, and `timed`'s `(ready, prio, class, node)` top is their
+/// `(prio, class, node)` winner — pop that. Leftover eligible entries
+/// from earlier pops stay valid because the CPU gate's free time is
+/// monotone non-decreasing.
+struct OpReadyQueue {
+    timed: BinaryHeap<Reverse<QKey>>,
+    eligible: BinaryHeap<Reverse<QKey>>,
+}
+
+impl OpReadyQueue {
+    fn new() -> Self {
+        Self {
+            timed: BinaryHeap::new(),
+            eligible: BinaryHeap::new(),
+        }
+    }
+
+    fn push(&mut self, ready_ns: f64, prio: f64, class: u8, node: usize) {
+        self.timed.push(Reverse(QKey {
+            a: ready_ns,
+            b: prio,
+            class,
+            idx: node,
+            ready: ready_ns,
+        }));
+    }
+
+    /// Pop the next task as `(ready_ns, class, node)` given the CPU
+    /// pool's current free time; `None` when the queue is drained.
+    fn pop(&mut self, cpu_free_ns: f64) -> Option<(f64, u8, usize)> {
+        while let Some(&Reverse(k)) = self.timed.peek() {
+            if k.a > cpu_free_ns {
+                break;
+            }
+            self.timed.pop();
+            self.eligible.push(Reverse(QKey {
+                a: k.b,
+                b: 0.0,
+                class: k.class,
+                idx: k.idx,
+                ready: k.ready,
+            }));
+        }
+        if let Some(Reverse(k)) = self.eligible.pop() {
+            return Some((k.ready, k.class, k.idx));
+        }
+        self.timed.pop().map(|Reverse(k)| (k.ready, k.class, k.idx))
+    }
+}
+
+// ---------------------------------------------------------------------
 // Operator-granularity executor
 // ---------------------------------------------------------------------
 
@@ -84,17 +221,15 @@ struct NodeState {
     rec: Option<OpRecord>,
 }
 
-#[derive(Clone, Copy)]
-struct CpuTask {
-    ready_ns: f64,
-    /// 0 = preparation (or CPU-only op), 1 = finalization.
-    class: u8,
-    node: usize,
-}
-
 /// Resolve one dependency of each consumer of `from` at time `t`,
 /// queueing consumers that become runnable.
-fn release(nodes: &mut [NodeState], pending: &mut Vec<CpuTask>, from: usize, t: f64) {
+fn release(
+    nodes: &mut [NodeState],
+    queue: &mut OpReadyQueue,
+    ranks: Option<&[f64]>,
+    from: usize,
+    t: f64,
+) {
     let consumers = std::mem::take(&mut nodes[from].consumers);
     for &c in &consumers {
         let n = &mut nodes[c];
@@ -102,11 +237,7 @@ fn release(nodes: &mut [NodeState], pending: &mut Vec<CpuTask>, from: usize, t: 
         n.deps -= 1;
         if n.deps == 0 && !n.queued {
             n.queued = true;
-            pending.push(CpuTask {
-                ready_ns: n.ready_ns,
-                class: 0,
-                node: c,
-            });
+            queue.push(n.ready_ns, prio_of(ranks, c), 0, c);
         }
     }
     nodes[from].consumers = consumers;
@@ -119,6 +250,7 @@ fn run_op_level(sched: &mut Scheduler, jobs: &[(f64, &Graph)], tg: &TaskGraph) -
     // Optional policy dispatch priorities (e.g. HEFT upward ranks);
     // `None` keeps the plain FIFO key bit-for-bit.
     let ranks = super::policy::lookup(sched.opts.policy).op_ranks(sched, tg);
+    let ranks = ranks.as_deref();
     let mut pool = AccelPool::new(sched.n_accels());
     let mut cpu = PoolGate::new();
 
@@ -161,61 +293,36 @@ fn run_op_level(sched: &mut Scheduler, jobs: &[(f64, &Graph)], tg: &TaskGraph) -
 
     // ---- Seed the task queue: sources complete at arrival, dep-free
     // schedulable nodes become runnable.
-    let mut pending: Vec<CpuTask> = Vec::new();
+    let mut queue = OpReadyQueue::new();
     for i in 0..nodes.len() {
         if matches!(tg.ops[i].work, OpWork::Source) {
             let t = nodes[i].ready_ns;
             nodes[i].done_ns = t;
-            release(&mut nodes, &mut pending, i, t);
+            release(&mut nodes, &mut queue, ranks, i, t);
         }
     }
     for (i, n) in nodes.iter_mut().enumerate() {
         if n.deps == 0 && !n.queued && !matches!(tg.ops[i].work, OpWork::Source) {
             n.queued = true;
-            pending.push(CpuTask {
-                ready_ns: n.ready_ns,
-                class: 0,
-                node: i,
-            });
+            queue.push(n.ready_ns, prio_of(ranks, i), 0, i);
         }
     }
 
     // ---- Event loop: one CPU phase at a time.
-    while !pending.is_empty() {
-        // The next decision instant: the CPU is free and at least one
-        // task has become ready.
-        let min_ready = pending
-            .iter()
-            .map(|t| t.ready_ns)
-            .fold(f64::INFINITY, f64::min);
-        let horizon = cpu.free_ns().max(min_ready);
-        let mut best = usize::MAX;
-        let mut best_key = (f64::INFINITY, u8::MAX, usize::MAX);
-        for (i, t) in pending.iter().enumerate() {
-            if t.ready_ns <= horizon {
-                let prio = ranks.as_ref().map_or(0.0, |r| -r[t.node]);
-                let key = (prio, t.class, t.node);
-                if key < best_key {
-                    best_key = key;
-                    best = i;
-                }
-            }
-        }
-        let task = pending.swap_remove(best);
-        let node_idx = task.node;
-        let start = cpu.acquire(task.ready_ns);
+    while let Some((ready_ns, class, node_idx)) = queue.pop(cpu.free_ns()) {
+        let start = cpu.acquire(ready_ns);
         let onode = &tg.ops[node_idx];
         let op = &jobs[onode.job].1.ops[onode.op_id];
         let cpu_only = matches!(onode.work, OpWork::CpuOnly);
-        if task.class == 0 && cpu_only {
+        if class == 0 && cpu_only {
             let rec = sched.flatten_op(op, start);
             let end = rec.end_ns;
             cpu.release(end);
             nodes[node_idx].start_ns = start;
             nodes[node_idx].done_ns = end;
             nodes[node_idx].rec = Some(rec);
-            release(&mut nodes, &mut pending, node_idx, end);
-        } else if task.class == 0 {
+            release(&mut nodes, &mut queue, ranks, node_idx, end);
+        } else if class == 0 {
             let (prep, hw) = {
                 let OpWork::Accel(cp) = &onode.work else {
                     unreachable!("sources never queue tasks")
@@ -235,15 +342,11 @@ fn run_op_level(sched: &mut Scheduler, jobs: &[(f64, &Graph)], tg: &TaskGraph) -
             nodes[node_idx].start_ns = start;
             nodes[node_idx].prep = Some(prep);
             nodes[node_idx].hw = Some(hw);
-            pending.push(CpuTask {
-                ready_ns: hw_end,
-                class: 1,
-                node: node_idx,
-            });
+            queue.push(hw_end, prio_of(ranks, node_idx), 1, node_idx);
             if pipeline {
                 // Output tiles are written back: consumers may start
                 // their preparation while this op finalizes.
-                release(&mut nodes, &mut pending, node_idx, hw_end);
+                release(&mut nodes, &mut queue, ranks, node_idx, hw_end);
             }
         } else {
             let (end, rec) = {
@@ -265,7 +368,7 @@ fn run_op_level(sched: &mut Scheduler, jobs: &[(f64, &Graph)], tg: &TaskGraph) -
             nodes[node_idx].done_ns = end;
             nodes[node_idx].rec = Some(rec);
             if !pipeline {
-                release(&mut nodes, &mut pending, node_idx, end);
+                release(&mut nodes, &mut queue, ranks, node_idx, end);
             }
         }
     }
@@ -295,15 +398,146 @@ struct OpExec {
     rec: Option<OpRecord>,
 }
 
+/// One timed/eligible heap pair per schedulable resource (see
+/// [`TileReadyQueues`]).
+struct ResQ {
+    timed: BinaryHeap<Reverse<QKey>>,
+    eligible: BinaryHeap<Reverse<QKey>>,
+}
+
+/// Per-resource min-heap ready queues for the tile-granularity loop,
+/// replacing the historical O(frontier) rescans.
+///
+/// A task's feasible start is `max(resource_free, ready)` where its
+/// resource is fixed at lowering time: resource 0 = sources (free at
+/// `-inf` — a source starts at its `ready`, so sources never migrate and
+/// their timed key *is* their start key), resource 1 = the CPU pool,
+/// resource `2 + a` = accelerator slot `a` (whose free time is
+/// `xfer_free` under double buffering, else `busy` — the same quantity
+/// the old scan read). Within a resource, every eligible task
+/// (`ready <= free`) starts at exactly `free`, so the old global strict
+/// min of `(start, prio, class, id)` decomposes into at most one
+/// candidate per resource: the eligible heap's `(prio, 0, class, id)`
+/// top (start = `free`) if non-empty — it strictly beats every timed
+/// entry of the same resource, whose starts exceed `free` — else the
+/// timed heap's `(ready, prio, class, id)` top (start = `ready`).
+/// [`TileReadyQueues::pop`] takes the strict minimum across those
+/// candidates, which is unique because task ids are. Migration is safe
+/// against stale frees because every resource's free time is monotone
+/// non-decreasing (CPU gate max-accumulates; slot `busy`/`xfer_free`
+/// only move forward).
+struct TileReadyQueues {
+    res: Vec<ResQ>,
+    len: usize,
+}
+
+impl TileReadyQueues {
+    fn new(n_res: usize) -> Self {
+        Self {
+            res: (0..n_res)
+                .map(|_| ResQ {
+                    timed: BinaryHeap::new(),
+                    eligible: BinaryHeap::new(),
+                })
+                .collect(),
+            len: 0,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push(&mut self, res: usize, ready: f64, prio: f64, class: u8, t: usize) {
+        self.res[res].timed.push(Reverse(QKey {
+            a: ready,
+            b: prio,
+            class,
+            idx: t,
+            ready,
+        }));
+        self.len += 1;
+    }
+
+    /// Pop the globally next task id given each resource's current free
+    /// time (`frees[res]`; `-inf` for the source pseudo-resource).
+    fn pop(&mut self, frees: &[f64]) -> Option<usize> {
+        // Migrate newly eligible tasks, then collect one candidate per
+        // resource as its would-be global key `(start, prio, class, id)`.
+        let mut best: Option<(QKey, usize, bool)> = None;
+        for (r, q) in self.res.iter_mut().enumerate() {
+            let free = frees[r];
+            if free > f64::NEG_INFINITY {
+                while let Some(&Reverse(k)) = q.timed.peek() {
+                    if k.a > free {
+                        break;
+                    }
+                    q.timed.pop();
+                    q.eligible.push(Reverse(QKey {
+                        a: k.b,
+                        b: 0.0,
+                        class: k.class,
+                        idx: k.idx,
+                        ready: k.ready,
+                    }));
+                }
+            }
+            let cand = if let Some(&Reverse(k)) = q.eligible.peek() {
+                Some((
+                    QKey {
+                        a: free,
+                        b: k.a,
+                        class: k.class,
+                        idx: k.idx,
+                        ready: k.ready,
+                    },
+                    r,
+                    true,
+                ))
+            } else {
+                q.timed.peek().map(|&Reverse(k)| (k, r, false))
+            };
+            if let Some(c) = cand {
+                if best.map_or(true, |b| c.0 < b.0) {
+                    best = Some(c);
+                }
+            }
+        }
+        let (_, r, from_eligible) = best?;
+        let q = &mut self.res[r];
+        let popped = if from_eligible {
+            q.eligible.pop()
+        } else {
+            q.timed.pop()
+        };
+        self.len -= 1;
+        popped.map(|Reverse(k)| k.idx)
+    }
+}
+
+/// The resource index and phase class of a task under the tile-level
+/// queue layout (see [`TileReadyQueues`]).
+fn task_slot(tg: &TaskGraph, t: usize) -> (usize, u8) {
+    let task = &tg.tasks[t];
+    match task.kind {
+        TaskKind::Source => (0, 0),
+        TaskKind::Prep { .. } | TaskKind::CpuOnly => (1, 1),
+        TaskKind::Tile { .. } => (
+            2 + task.claim.accel_slot.expect("tiles are slot-pinned"),
+            2,
+        ),
+        TaskKind::Finalize => (1, 3),
+    }
+}
+
 /// The tile-granularity event loop: commits individual IR tasks in
 /// earliest-start order (ties: prep < tile < finalize, then task id) so
 /// bandwidth reservations stay chronological and fully deterministic.
 ///
-/// Complexity: each commit rescans the runnable frontier, O(tasks x
-/// frontier) overall — fine for single-net runs and modest serving
-/// batches (the frontier stays narrow); per-resource ready queues are
-/// the upgrade path if tile-level serving sweeps ever dominate
-/// simulation wall-clock.
+/// Complexity: O(tasks · log frontier) — each commit costs a handful of
+/// per-resource heap operations ([`TileReadyQueues`]) instead of the
+/// historical full-frontier rescan, which mattered exactly where the
+/// frontier is widest (tile-level serving batches and sweeps).
 ///
 /// Modeling note: a foreign tile may interleave between two chained
 /// members of an open reduction group on the same slot, costlessly —
@@ -314,13 +548,15 @@ fn run_tile_level(
     tg: &TaskGraph,
 ) -> Vec<JobOutcome> {
     let n_tasks = tg.tasks.len();
+    let n_accels = sched.n_accels();
     let dbuf = sched.opts.double_buffer;
     // Optional policy dispatch priorities (e.g. HEFT upward ranks);
     // `None` keeps the plain FIFO key bit-for-bit.
     let ranks = super::policy::lookup(sched.opts.policy).op_ranks(sched, tg);
-    let mut pool = AccelPool::new(sched.n_accels());
+    let ranks = ranks.as_deref();
+    let mut pool = AccelPool::new(n_accels);
     let mut cpu = PoolGate::new();
-    let mut remaining: Vec<usize> = tg.tasks.iter().map(|t| t.deps.len()).collect();
+    let mut remaining: Vec<usize> = (0..n_tasks).map(|i| tg.task_deps(i).len()).collect();
     let mut ready: Vec<f64> = tg
         .tasks
         .iter()
@@ -338,33 +574,23 @@ fn run_tile_level(
             rec: None,
         })
         .collect();
-    let mut runnable: Vec<usize> = (0..n_tasks).filter(|&i| remaining[i] == 0).collect();
-    let mut committed = 0usize;
-    while !runnable.is_empty() {
-        // Pick the committable task with the earliest feasible start.
-        let mut best_pos = usize::MAX;
-        let mut best_key = (f64::INFINITY, f64::INFINITY, u8::MAX, usize::MAX);
-        for (pos, &t) in runnable.iter().enumerate() {
-            let task = &tg.tasks[t];
-            let (start, class) = match task.kind {
-                TaskKind::Source => (ready[t], 0u8),
-                TaskKind::Prep { .. } => (cpu.acquire(ready[t]), 1),
-                TaskKind::CpuOnly => (cpu.acquire(ready[t]), 1),
-                TaskKind::Tile { .. } => {
-                    let a = task.claim.accel_slot.expect("tiles are slot-pinned");
-                    let free = if dbuf { pool.xfer_free[a] } else { pool.busy[a] };
-                    (free.max(ready[t]), 2)
-                }
-                TaskKind::Finalize => (cpu.acquire(ready[t]), 3),
-            };
-            let prio = ranks.as_ref().map_or(0.0, |r| -r[task.op_node]);
-            let key = (start, prio, class, t);
-            if key < best_key {
-                best_key = key;
-                best_pos = pos;
-            }
+    let mut queues = TileReadyQueues::new(2 + n_accels);
+    for t in 0..n_tasks {
+        if remaining[t] == 0 {
+            let (res, class) = task_slot(tg, t);
+            queues.push(res, ready[t], prio_of(ranks, tg.tasks[t].op_node), class, t);
         }
-        let tid = runnable.swap_remove(best_pos);
+    }
+    // Per-resource free times, refreshed before every pop. The source
+    // pseudo-resource stays at -inf: sources start at their ready time.
+    let mut frees = vec![f64::NEG_INFINITY; 2 + n_accels];
+    let mut committed = 0usize;
+    while !queues.is_empty() {
+        frees[1] = cpu.free_ns();
+        for a in 0..n_accels {
+            frees[2 + a] = if dbuf { pool.xfer_free[a] } else { pool.busy[a] };
+        }
+        let tid = queues.pop(&frees).expect("queue is non-empty");
         let task = &tg.tasks[tid];
         let ni = task.op_node;
         let onode = &tg.ops[ni];
@@ -459,11 +685,13 @@ fn run_tile_level(
             }
         };
         committed += 1;
-        for &c in &tg.tasks[tid].consumers {
+        for &c in tg.task_consumers(tid) {
+            let c = c as usize;
             ready[c] = ready[c].max(end);
             remaining[c] -= 1;
             if remaining[c] == 0 {
-                runnable.push(c);
+                let (res, class) = task_slot(tg, c);
+                queues.push(res, ready[c], prio_of(ranks, tg.tasks[c].op_node), class, c);
             }
         }
     }

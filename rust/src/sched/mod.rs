@@ -117,7 +117,10 @@ pub struct PlannedOp {
 /// (`None` when no timing cache is attached). Costs are resolved once
 /// here, at plan time, so the per-item hot loop never touches the cache.
 /// Carried by the task-graph IR ([`crate::ir::OpWork::Accel`]) so both
-/// executors consume the same lowering.
+/// executors consume the same lowering. `Clone` is cheap (two `Arc`
+/// bumps plus one small `Vec` of `Arc`s) — job templates clone it per
+/// stamped job.
+#[derive(Clone)]
 pub struct CachedPlan {
     /// The (possibly cache-shared) tiling plan + kernel class.
     pub planned: Arc<PlannedOp>,
@@ -270,6 +273,12 @@ impl Scheduler {
     /// to pre-split data-preparation phases into per-tile chunks).
     pub(crate) fn cpu_model(&self) -> &CpuModel {
         &self.cpu
+    }
+
+    /// The attached layer-timing cache, if any (used by the IR lowering
+    /// to memoize job templates across runs and sweep points).
+    pub(crate) fn cache(&self) -> Option<&Arc<TimingCache>> {
+        self.cache.as_ref()
     }
 
     /// Lower a workload to the tile-level task-graph IR: per-tile

@@ -11,6 +11,18 @@
 //!   deterministic selection key (higher rank dispatches first, ties
 //!   fall back to the FIFO key, so ordering stays total and
 //!   reproducible).
+//!
+//!   **The selection key is load-bearing.** The event executors keep
+//!   their frontiers in binary heaps ordered by
+//!   `(start/ready time, negated rank, phase class, node/task id)` —
+//!   see `QKey` in `sched::event`. That exact component order is what
+//!   makes the heap pop bit-identical to the historical linear scan
+//!   the invariant suites pin: negating a rank turns "higher rank
+//!   first" into an ascending min-heap field, and the trailing
+//!   submission-order id makes every key unique so ties can never
+//!   depend on heap internals. Changing a rank's sign convention, or
+//!   reordering the key, silently reshuffles schedules for every
+//!   policy — `tests/hotpath_identity.rs` exists to catch that.
 //! * **Accelerator placement** — [`SchedPolicy::place_groups`] maps each
 //!   reduction group of an op to a pool slot ([`GroupPlacement`]). The
 //!   IR lowering stamps the same placement into tile resource claims,

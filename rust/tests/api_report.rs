@@ -54,6 +54,7 @@ const V1_KEYS: &[&str] = &[
     "config",
     "accel_pool",
     "policy",
+    "fidelity",
     "total_ns",
     "breakdown",
     "traffic",
@@ -106,6 +107,8 @@ fn inference_json_matches_v1_snapshot() {
     for key in ["total", "soc", "dram", "llc", "macc", "spad", "cpu"] {
         assert!(json.contains(&format!("\"{key}\":")), "energy_pj.{key}");
     }
+    // Default-fidelity runs pin the exact-mode stamp.
+    assert!(json.contains("\"fidelity\":{\"mode\":\"exact\",\"k\":1}"), "{json}");
     // Non-serving scenarios carry the sections as nulls, not omissions.
     assert!(json.contains("\"throughput_rps\":null"));
     assert!(json.contains("\"latency_ns\":null"));
@@ -232,6 +235,8 @@ fn sweep_and_camera_share_the_same_key_set() {
         "plan_misses",
         "cost_hits",
         "cost_misses",
+        "lower_hits",
+        "lower_misses",
         "wall_ns",
     ] {
         assert!(sweep.contains(&format!("\"{key}\":")), "sweep_engine.{key}");

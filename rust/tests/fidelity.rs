@@ -1,0 +1,101 @@
+//! Sampled-fidelity contract: `Session::fidelity(Fidelity::Sampled{k})`
+//! trades a *documented* accuracy bound for roughly k-fold cheaper tile
+//! costing (the paper's Fig 7/8 Aladdin-style loop sampling, promoted to
+//! a first-class mode).
+//!
+//! Pinned here:
+//!
+//! 1. the relative latency and energy error of `sampled:4` vs exact is
+//!    within the documented 10% bound on three zoo networks (the
+//!    tighter 6% bound at extreme factors lives in `sim_invariants`);
+//! 2. `Sampled { k: 1 }` is bit-identical to exact — sampling with
+//!    stride 1 visits every iteration, so it must not perturb anything;
+//! 3. the report's `fidelity` section stamps the mode that actually ran.
+
+use smaug::api::{Report, Session, Soc};
+use smaug::config::Fidelity;
+
+/// The documented sampled-mode error bound (also quoted in README and
+/// the `Session::fidelity` docs — keep the three in sync).
+const ERROR_BOUND: f64 = 0.10;
+
+/// The serialized report minus the wall-clock tail, which legitimately
+/// differs between runs (`sim_wallclock_ns` is last in the schema).
+fn stable_json(r: &Report) -> String {
+    let j = r.to_json();
+    let cut = j.find("\"sim_wallclock_ns\"").expect("schema has wallclock");
+    j[..cut].to_string()
+}
+
+#[test]
+fn sampled_error_is_within_the_documented_bound() {
+    for net in ["lenet5", "cnn10", "vgg16"] {
+        let exact = Session::on(Soc::default()).network(net).run().unwrap();
+        let sampled = Session::on(Soc::default())
+            .network(net)
+            .fidelity(Fidelity::Sampled { k: 4 })
+            .run()
+            .unwrap();
+        let lat_err = (sampled.total_ns - exact.total_ns).abs() / exact.total_ns;
+        assert!(
+            lat_err <= ERROR_BOUND,
+            "{net}: sampled:4 latency error {lat_err:.4} exceeds {ERROR_BOUND}"
+        );
+        let (e0, e1) = (exact.energy.total_pj(), sampled.energy.total_pj());
+        let energy_err = (e1 - e0).abs() / e0.max(1.0);
+        assert!(
+            energy_err <= ERROR_BOUND,
+            "{net}: sampled:4 energy error {energy_err:.4} exceeds {ERROR_BOUND}"
+        );
+        // The report stamps what ran.
+        assert_eq!(sampled.fidelity.mode, "sampled", "{net}");
+        assert_eq!(sampled.fidelity.k, 4, "{net}");
+        assert_eq!(exact.fidelity.mode, "exact", "{net}");
+        assert_eq!(exact.fidelity.k, 1, "{net}");
+    }
+}
+
+#[test]
+fn sampled_k1_is_bit_identical_to_exact() {
+    for net in ["cnn10", "vgg16"] {
+        let exact = Session::on(Soc::default()).network(net).run().unwrap();
+        let k1 = Session::on(Soc::default())
+            .network(net)
+            .fidelity(Fidelity::Sampled { k: 1 })
+            .run()
+            .unwrap();
+        assert_eq!(
+            exact.total_ns.to_bits(),
+            k1.total_ns.to_bits(),
+            "{net}: sampled:1 makespan drifted from exact"
+        );
+        // Stride-1 sampling degenerates to exact, and the report says so
+        // (mode reflects the effective factor, not the builder input).
+        assert_eq!(
+            stable_json(&exact),
+            stable_json(&k1),
+            "{net}: sampled:1 report drifted from exact"
+        );
+    }
+}
+
+#[test]
+fn fidelity_composes_with_the_raw_sampling_knob() {
+    // When both the legacy `.sampling(n)` knob and `.fidelity(..)` are
+    // set, the larger factor wins (documented on both builders).
+    let r = Session::on(Soc::default())
+        .network("lenet5")
+        .sampling(2)
+        .fidelity(Fidelity::Sampled { k: 8 })
+        .run()
+        .unwrap();
+    assert_eq!(r.fidelity.mode, "sampled");
+    assert_eq!(r.fidelity.k, 8);
+    let r = Session::on(Soc::default())
+        .network("lenet5")
+        .sampling(8)
+        .fidelity(Fidelity::Sampled { k: 2 })
+        .run()
+        .unwrap();
+    assert_eq!(r.fidelity.k, 8);
+}

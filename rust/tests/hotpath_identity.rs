@@ -1,0 +1,146 @@
+//! Hot-path identity suite: the SoA/CSR task storage, the heap-based
+//! ready queues, and the memoized job templates are pure storage /
+//! data-structure changes — every schedule they produce must be
+//! bit-identical to the linear-scan reference behavior the rest of the
+//! test suite pins, and bit-reproducible run to run.
+//!
+//! Two contracts:
+//!
+//! 1. **Determinism over the scenario zoo** — serial, op-pipelined,
+//!    tile-pipelined, serving, single-SoC cluster, and the heft/rr
+//!    policies: identical sessions produce bit-identical reports
+//!    (wallclock stripped). The heap selection key (`QKey` in
+//!    `sched::event`) is engineered to reproduce the historical linear
+//!    scan's tie-breaks exactly; any drift in that key shows up here
+//!    and in the policy/taskgraph invariant suites.
+//! 2. **Template reuse is invisible** — a cache-attached sweep (which
+//!    memoizes and re-stamps job lowerings across points and runs)
+//!    produces exactly the rows of a cold, cache-free sweep, at any
+//!    worker count.
+
+use smaug::api::{Report, Scenario, Session, Soc, SweepAxis};
+use smaug::config::{AccelKind, Policy, ServeOptions};
+
+fn hetero() -> Soc {
+    Soc::builder()
+        .accel(AccelKind::Nvdla)
+        .accel(AccelKind::Systolic)
+        .build()
+}
+
+fn homo(n: usize) -> Soc {
+    Soc::builder().accels(AccelKind::Nvdla, n).build()
+}
+
+/// The serialized report minus the wall-clock tail, which legitimately
+/// differs between runs (`sim_wallclock_ns` is last in the schema).
+fn stable_json(r: &Report) -> String {
+    let j = r.to_json();
+    let cut = j.find("\"sim_wallclock_ns\"").expect("schema has wallclock");
+    j[..cut].to_string()
+}
+
+fn assert_reproducible(label: &str, mk: impl Fn() -> Session) {
+    let a = mk().run().unwrap();
+    let b = mk().run().unwrap();
+    assert_eq!(
+        a.total_ns.to_bits(),
+        b.total_ns.to_bits(),
+        "{label}: makespan not bit-reproducible"
+    );
+    assert_eq!(
+        stable_json(&a),
+        stable_json(&b),
+        "{label}: report not bit-reproducible"
+    );
+}
+
+/// Contract 1: the heap-based ready queues schedule every zoo scenario
+/// bit-reproducibly (ties never depend on heap internals — the QKey's
+/// trailing submission-order id makes every key unique).
+#[test]
+fn zoo_reports_are_bit_reproducible() {
+    assert_reproducible("serial", || Session::on(hetero()).network("cnn10"));
+    assert_reproducible("op-pipeline", || {
+        Session::on(homo(2)).network("cnn10").pipeline(true)
+    });
+    assert_reproducible("tile-pipeline", || {
+        Session::on(hetero()).network("vgg16").tile_pipeline(true)
+    });
+    assert_reproducible("serving", || {
+        Session::on(homo(2))
+            .network("lenet5")
+            .threads(2)
+            .scenario(Scenario::Serving(ServeOptions::poisson(12, 20_000.0)))
+    });
+    assert_reproducible("cluster-k1", || {
+        Session::on(Soc::default()).network("cnn10").cluster(1).queries(2)
+    });
+    for policy in [Policy::Heft, Policy::Rr] {
+        assert_reproducible(&format!("{policy}"), || {
+            Session::on(hetero())
+                .network("cnn10")
+                .tile_pipeline(true)
+                .policy(policy)
+        });
+    }
+}
+
+/// The sweep rows, stripped of engine counters and wall-clock (which
+/// legitimately differ between cached and cold runs).
+fn sweep_rows(r: &Report) -> String {
+    r.sweep
+        .iter()
+        .map(|row| format!("{row:?}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Contract 2: schedule-prefix (template) reuse changes how fast sweep
+/// points simulate, never what they produce — cache-attached rows are
+/// byte-identical to cold rows at every worker count, on both axes.
+#[test]
+fn template_reuse_rows_match_cold_runs_at_any_worker_count() {
+    for (axis, values) in [
+        // Threads axis: every point shares one lowering template (the
+        // lowering key excludes the late-bound thread count), so this is
+        // the maximal-reuse case.
+        (SweepAxis::Threads, vec![1usize, 2, 4, 8]),
+        // Accels axis: every point re-keys (the pool is part of the
+        // template identity), the minimal-reuse case.
+        (SweepAxis::Accels, vec![1usize, 2, 4]),
+    ] {
+        let run = |workers: usize, cache: bool| {
+            Session::on(Soc::default())
+                .network("cnn10")
+                .scenario(Scenario::Sweep {
+                    axis,
+                    values: values.clone(),
+                })
+                .workers(workers)
+                .cache(cache)
+                .run()
+                .unwrap()
+        };
+        let reference = sweep_rows(&run(1, false));
+        for workers in [1usize, 2, 8] {
+            let cold = run(workers, false);
+            let warm = run(workers, true);
+            assert_eq!(
+                sweep_rows(&cold),
+                reference,
+                "{axis:?} workers={workers}: cold rows drifted from serial"
+            );
+            assert_eq!(
+                sweep_rows(&warm),
+                reference,
+                "{axis:?} workers={workers}: cached rows drifted from cold"
+            );
+            let eng = warm.sweep_engine.expect("sweep reports engine section");
+            assert!(
+                eng.lower_hits + eng.lower_misses > 0,
+                "{axis:?} workers={workers}: cache attached but no lowering lookups"
+            );
+        }
+    }
+}

@@ -167,9 +167,13 @@ fn attached_cache_does_not_change_a_single_run() {
         }
         let stats = cache.stats();
         assert!(stats.cost_misses > 0);
+        // The warm pass reuses the memoized lowering template outright,
+        // so it performs no fresh plan/cost lookups — its reuse shows up
+        // as a lowering hit instead.
+        assert_eq!(stats.lower_misses, 1, "{net}: one template build: {stats:?}");
         assert!(
-            stats.cost_hits >= stats.cost_misses,
-            "second pass must hit: {stats:?}"
+            stats.lower_hits >= 1,
+            "{net}: second pass must hit the lowering cache: {stats:?}"
         );
     }
 }

@@ -49,25 +49,31 @@ fn rel(a: f64, b: f64) -> f64 {
 /// deps/consumers asymmetry.
 fn assert_topologically_valid(tg: &TaskGraph) {
     let n = tg.tasks.len();
-    let mut indeg: Vec<usize> = tg.tasks.iter().map(|t| t.deps.len()).collect();
-    for (id, t) in tg.tasks.iter().enumerate() {
-        for &d in &t.deps {
+    let mut indeg: Vec<usize> = (0..n).map(|i| tg.task_deps(i).len()).collect();
+    for id in 0..n {
+        for &d in tg.task_deps(id) {
+            let d = d as usize;
             assert!(d < id, "edge {d} -> {id} is not forward");
             assert!(
-                tg.tasks[d].consumers.contains(&id),
+                tg.task_consumers(d).contains(&(id as u32)),
                 "dep {d} of {id} lacks the mirror consumer edge"
             );
         }
-        for &c in &t.consumers {
+        for &c in tg.task_consumers(id) {
+            let c = c as usize;
             assert!(c > id, "consumer {c} of {id} is not forward");
-            assert!(tg.tasks[c].deps.contains(&id), "asymmetric consumer edge");
+            assert!(
+                tg.task_deps(c).contains(&(id as u32)),
+                "asymmetric consumer edge"
+            );
         }
     }
     let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
     let mut visited = 0usize;
     while let Some(i) = queue.pop() {
         visited += 1;
-        for &c in &tg.tasks[i].consumers {
+        for &c in tg.task_consumers(i) {
+            let c = c as usize;
             indeg[c] -= 1;
             if indeg[c] == 0 {
                 queue.push(c);
@@ -120,12 +126,12 @@ fn lowering_is_acyclic_and_covers_every_tile_once() {
                 "{net}: tile claims account for the plan's interface traffic"
             );
             // Cross-op prep edges only target producer write-back tiles.
-            for t in &tg.tasks[node.tasks.0..node.tasks.1] {
-                if !matches!(t.kind, TaskKind::Prep { .. }) {
+            for tid in node.tasks.0..node.tasks.1 {
+                if !matches!(tg.tasks[tid].kind, TaskKind::Prep { .. }) {
                     continue;
                 }
-                for &d in &t.deps {
-                    let dep = &tg.tasks[d];
+                for &d in tg.task_deps(tid) {
+                    let dep = &tg.tasks[d as usize];
                     if let TaskKind::Tile { item } = dep.kind {
                         let OpWork::Accel(pcp) = &tg.ops[dep.op_node].work else {
                             panic!("tile task on non-accel node");

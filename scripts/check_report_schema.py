@@ -15,6 +15,7 @@ TOP_KEYS = [
     "config",
     "accel_pool",
     "policy",
+    "fidelity",
     "total_ns",
     "breakdown",
     "traffic",
@@ -38,6 +39,8 @@ TOP_KEYS = [
 ]
 POLICY_KEYS = ["name", "ready_order", "placement"]
 POLICY_NAMES = ("fifo", "heft", "rr")
+FIDELITY_KEYS = ["mode", "k"]
+FIDELITY_MODES = ("exact", "sampled")
 BREAKDOWN_KEYS = ["accel_ns", "transfer_ns", "prep_ns", "finalize_ns", "other_ns"]
 TRAFFIC_KEYS = [
     "dram_bytes",
@@ -91,6 +94,8 @@ SWEEP_ENGINE_KEYS = [
     "plan_misses",
     "cost_hits",
     "cost_misses",
+    "lower_hits",
+    "lower_misses",
     "wall_ns",
 ]
 PIPELINE_KEYS = [
@@ -150,6 +155,20 @@ def main() -> None:
     for key in POLICY_KEYS:
         if not (isinstance(pol[key], str) and pol[key]):
             fail(f"policy.{key} must be a non-empty string (got {pol[key]!r})")
+    fid = r["fidelity"]
+    if fid is None:
+        fail("fidelity section must always be an object (exact by default)")
+    for key in FIDELITY_KEYS:
+        if key not in fid:
+            fail(f"fidelity missing {key}")
+    if fid["mode"] not in FIDELITY_MODES:
+        fail(f"unknown fidelity mode {fid['mode']!r} (expected one of {FIDELITY_MODES})")
+    if not (isinstance(fid["k"], int) and fid["k"] >= 1):
+        fail(f"fidelity.k must be an integer >= 1 (got {fid['k']!r})")
+    if fid["mode"] == "exact" and fid["k"] != 1:
+        fail(f"exact fidelity must have k == 1 (got {fid['k']})")
+    if fid["mode"] == "sampled" and fid["k"] < 2:
+        fail(f"sampled fidelity must have k >= 2 (got {fid['k']})")
     for key in BREAKDOWN_KEYS:
         if key not in r["breakdown"]:
             fail(f"breakdown missing {key}")
