@@ -1,0 +1,80 @@
+//! Transformer-workload bench: simulated latency of the `bert-tiny`
+//! encoder and one `decode` KV-cache step, plus the decode bandwidth
+//! signature — how much a DRAM 1 -> 4 channel widening buys decode
+//! versus vgg16. Emits `BENCH_transformer.json` at the repository root
+//! for the CI bench gate (`scripts/compare_bench.py` vs
+//! `bench_baselines/transformer.json`).
+//!
+//! All four metrics are simulated-time and bit-deterministic, so the
+//! gate is immune to CI-runner noise. The bench also hard-fails inline
+//! if the bandwidth leverage ever drops to <= 1.0 — decode losing its
+//! memory-bound character is a modeling bug, not a perf regression.
+
+use smaug::config::{SimOptions, SocConfig};
+use smaug::nets;
+use smaug::sched::Scheduler;
+use smaug::util::JsonWriter;
+use std::path::Path;
+
+/// Simulated latency (ns) of `net` on a SoC with `channels` DRAM
+/// channels, default options.
+fn latency_ns(net: &str, channels: usize) -> anyhow::Result<f64> {
+    let g = nets::build_network(net)?;
+    let soc = SocConfig {
+        dram_channels: channels,
+        ..SocConfig::default()
+    };
+    let mut sched = Scheduler::new(soc, SimOptions::default());
+    Ok(sched.run(&g).total_ns)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("transformer_inference — simulated transformer latencies");
+
+    let bert_us = latency_ns("bert-tiny", 1)? / 1e3;
+    let decode_us = latency_ns("decode", 1)? / 1e3;
+
+    // Bandwidth signature: decode streams its KV cache and weights once
+    // per step, so extra DRAM channels move it; vgg16 re-uses operands
+    // heavily and barely notices.
+    let decode_speedup = latency_ns("decode", 1)? / latency_ns("decode", 4)?;
+    let vgg_speedup = latency_ns("vgg16", 1)? / latency_ns("vgg16", 4)?;
+    let leverage = decode_speedup / vgg_speedup;
+
+    println!("{:<34} {:>12}", "metric", "value");
+    for (name, v) in [
+        ("bert-tiny latency (us)", bert_us),
+        ("decode step latency (us)", decode_us),
+        ("decode speedup 1->4 channels", decode_speedup),
+        ("leverage vs vgg16", leverage),
+    ] {
+        println!("{name:<34} {v:>12.3}");
+    }
+
+    // Hard floors (modeling invariants, not perf): more bandwidth must
+    // help decode at all, and must help it strictly more than vgg16.
+    assert!(
+        decode_speedup > 1.0,
+        "decode must improve with DRAM channels ({decode_speedup:.3}x)"
+    );
+    assert!(
+        leverage > 1.0,
+        "decode bandwidth leverage {leverage:.3}x must exceed vgg16's"
+    );
+
+    let mut w = JsonWriter::new();
+    w.begin_object();
+    w.key("bench").string("transformer_inference");
+    w.key("bert_tiny_us").number(bert_us);
+    w.key("decode_step_us").number(decode_us);
+    w.key("decode_bandwidth_speedup_4ch").number(decode_speedup);
+    w.key("bandwidth_leverage_vs_vgg16").number(leverage);
+    w.end_object();
+    let out = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package dir has a parent")
+        .join("BENCH_transformer.json");
+    std::fs::write(&out, w.finish())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -23,6 +23,9 @@ pub enum KernelClass {
     ConvGemm,
     /// Inner product (GEMM with m = 1).
     FcGemm,
+    /// Batched/tall GEMM (transformer linear layers and per-head
+    /// attention score/context products; m = token or query rows).
+    BatchGemm,
     /// Pooling (vector datapath, window reduction).
     Pool,
     /// Element-wise op; `ops` = arithmetic ops per element (BN = 2, add = 1).

@@ -82,7 +82,7 @@ impl AccelModel for NvdlaEngine {
     fn tile_cost(&self, class: KernelClass, item: &WorkItem, sampling_factor: usize) -> TileCost {
         let g = item.gemm;
         match class {
-            KernelClass::ConvGemm | KernelClass::FcGemm => {
+            KernelClass::ConvGemm | KernelClass::FcGemm | KernelClass::BatchGemm => {
                 let cycles = self.gemm_cycles(g.m, g.k, g.n, sampling_factor);
                 let pe_groups = ceil_div(g.n, self.pes) as u64;
                 TileCost {

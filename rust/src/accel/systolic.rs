@@ -78,7 +78,7 @@ impl AccelModel for SystolicArray {
     fn tile_cost(&self, class: KernelClass, item: &WorkItem, sampling_factor: usize) -> TileCost {
         let g = item.gemm;
         match class {
-            KernelClass::ConvGemm | KernelClass::FcGemm => {
+            KernelClass::ConvGemm | KernelClass::FcGemm | KernelClass::BatchGemm => {
                 let cycles = self.gemm_cycles(g.m, g.k, g.n, sampling_factor);
                 let blocks = (ceil_div(g.m, self.rows) * ceil_div(g.n, self.cols)) as u64;
                 TileCost {

@@ -324,6 +324,27 @@ pub fn layer_signature(op: &Op, graph: &Graph) -> Option<String> {
             "A:e{}",
             graph.tensors[op.inputs[0]].shape.elems()
         )),
+        OpKind::Linear { params: p, .. } => {
+            Some(format!("M:m{}k{}n{}", p.m, p.k, p.n))
+        }
+        OpKind::AttnScores { params: p } => Some(format!(
+            "Q:h{}q{}kv{}d{}",
+            p.heads, p.seq_q, p.seq_kv, p.d_head
+        )),
+        OpKind::AttnContext { params: p } => Some(format!(
+            "X:h{}q{}kv{}d{}",
+            p.heads, p.seq_q, p.seq_kv, p.d_head
+        )),
+        // Softmax and LayerNorm plan and cost identically (same eltwise
+        // plan, same ops/element) but keep distinct prefixes for clarity.
+        OpKind::Softmax { rows, cols } => Some(format!("S:r{rows}c{cols}")),
+        OpKind::LayerNorm { rows, cols } => Some(format!("N:r{rows}c{cols}")),
+        // Vocab size is absent on purpose: the plan gathers `tokens`
+        // rows of `dim` regardless of table height.
+        OpKind::Embedding { dim, tokens, .. } => {
+            Some(format!("V:d{dim}t{tokens}"))
+        }
+        OpKind::KvAppend { elems } => Some(format!("K:e{elems}")),
         OpKind::Input | OpKind::Flatten => None,
     }
 }
@@ -345,7 +366,7 @@ mod tests {
     #[test]
     fn signatures_cover_plannable_ops_exactly() {
         let soc = SocConfig::default();
-        for net in ["lenet5", "cnn10", "minerva"] {
+        for net in ["lenet5", "cnn10", "minerva", "bert-tiny", "decode"] {
             let g = nets::build_network(net).unwrap();
             for op in &g.ops {
                 assert_eq!(

@@ -13,7 +13,7 @@
 
 use super::{Activation, Graph, Op, OpKind, TensorId};
 use crate::tensor::TensorDesc;
-use crate::tiling::{ConvParams, FcParams, PoolParams};
+use crate::tiling::{AttnParams, ConvParams, FcParams, GemmDims, PoolParams};
 
 /// Convolution padding mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -212,6 +212,162 @@ impl GraphBuilder {
         let xs = self.tensors[x].shape.clone();
         let out = self.push_tensor(TensorDesc::nc16(xs.dim(0), xs.elems() / xs.dim(0)));
         self.push_op(name, OpKind::Flatten, vec![x], out, 0)
+    }
+
+    /// Rank-2 network input `[rows, cols]` (token ids, embedded
+    /// sequences, KV-cache tensors).
+    pub fn input_nc(&mut self, name: &str, rows: usize, cols: usize) -> TensorId {
+        let t = self.push_tensor(TensorDesc::nc16(rows, cols));
+        self.push_op(name, OpKind::Input, vec![], t, 0)
+    }
+
+    /// Weighted GEMM `[m, k] @ [k, n_out] + bias` over rank-2 activations
+    /// (transformer QKV / output / FFN projections).
+    pub fn linear(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        n_out: usize,
+        activation: Option<Activation>,
+    ) -> TensorId {
+        let xs = &self.tensors[x].shape;
+        assert_eq!(xs.rank(), 2, "linear input must be rank-2 [tokens, features]");
+        let (m, k) = (xs.dim(0), xs.dim(1));
+        let out = self.push_tensor(TensorDesc::nc16(m, n_out));
+        self.push_op(
+            name,
+            OpKind::Linear {
+                params: GemmDims { m, k, n: n_out },
+                activation,
+            },
+            vec![x],
+            out,
+            k * n_out + n_out,
+        )
+    }
+
+    /// Row-wise softmax over a rank-2 tensor.
+    pub fn softmax(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = &self.tensors[x].shape;
+        assert_eq!(xs.rank(), 2, "softmax input must be rank-2");
+        let (rows, cols) = (xs.dim(0), xs.dim(1));
+        let out = self.push_tensor(self.tensors[x].clone());
+        self.push_op(name, OpKind::Softmax { rows, cols }, vec![x], out, 0)
+    }
+
+    /// Layer normalization over the last dim of a rank-2 tensor, with
+    /// learned gamma/beta (`2 * cols` parameters).
+    pub fn layer_norm(&mut self, name: &str, x: TensorId) -> TensorId {
+        let xs = &self.tensors[x].shape;
+        assert_eq!(xs.rank(), 2, "layer_norm input must be rank-2");
+        let (rows, cols) = (xs.dim(0), xs.dim(1));
+        let out = self.push_tensor(self.tensors[x].clone());
+        self.push_op(name, OpKind::LayerNorm { rows, cols }, vec![x], out, 2 * cols)
+    }
+
+    /// Standalone GELU (usually fused by [`Graph::fuse`]).
+    pub fn gelu(&mut self, name: &str, x: TensorId) -> TensorId {
+        let d = self.tensors[x].clone();
+        let out = self.push_tensor(d);
+        self.push_op(name, OpKind::Act(Activation::Gelu), vec![x], out, 0)
+    }
+
+    /// Embedding lookup: gather one `dim`-wide row per token id out of a
+    /// `[vocab, dim]` parameter table. `ids` is a rank-2 `[tokens, 1]`
+    /// tensor of token ids.
+    pub fn embedding(&mut self, name: &str, ids: TensorId, vocab: usize, dim: usize) -> TensorId {
+        let xs = &self.tensors[ids].shape;
+        assert_eq!(xs.rank(), 2, "embedding ids must be rank-2 [tokens, 1]");
+        assert_eq!(xs.dim(1), 1, "embedding ids must have one column");
+        let tokens = xs.dim(0);
+        let out = self.push_tensor(TensorDesc::nc16(tokens, dim));
+        self.push_op(
+            name,
+            OpKind::Embedding { vocab, dim, tokens },
+            vec![ids],
+            out,
+            vocab * dim,
+        )
+    }
+
+    /// Multi-head attention scores `softmax-input[h] = Q[h] @ K[h]^T /
+    /// sqrt(d_head)` as one batched GEMM per head. `q` is
+    /// `[seq_q, heads * d_head]`, `k` is `[seq_kv, heads * d_head]`;
+    /// the output folds heads into rows: `[heads * seq_q, seq_kv]`.
+    pub fn attn_scores(
+        &mut self,
+        name: &str,
+        q: TensorId,
+        k: TensorId,
+        heads: usize,
+        d_head: usize,
+    ) -> TensorId {
+        let qs = &self.tensors[q].shape;
+        let ks = &self.tensors[k].shape;
+        assert_eq!(qs.rank(), 2, "attention Q must be rank-2");
+        assert_eq!(ks.rank(), 2, "attention K must be rank-2");
+        assert_eq!(qs.dim(1), heads * d_head, "Q features != heads * d_head");
+        assert_eq!(ks.dim(1), heads * d_head, "K features != heads * d_head");
+        let params = AttnParams {
+            heads,
+            seq_q: qs.dim(0),
+            seq_kv: ks.dim(0),
+            d_head,
+        };
+        let out = self.push_tensor(TensorDesc::nc16(heads * params.seq_q, params.seq_kv));
+        self.push_op(name, OpKind::AttnScores { params }, vec![q, k], out, 0)
+    }
+
+    /// Multi-head attention context `out[h] = P[h] @ V[h]` as one batched
+    /// GEMM per head. `probs` is `[heads * seq_q, seq_kv]` (the softmaxed
+    /// scores), `v` is `[seq_kv, heads * d_head]`; output is
+    /// `[seq_q, heads * d_head]` with heads concatenated along features.
+    pub fn attn_context(
+        &mut self,
+        name: &str,
+        probs: TensorId,
+        v: TensorId,
+        heads: usize,
+        d_head: usize,
+    ) -> TensorId {
+        let ps = &self.tensors[probs].shape;
+        let vs = &self.tensors[v].shape;
+        assert_eq!(ps.rank(), 2, "attention probs must be rank-2");
+        assert_eq!(vs.rank(), 2, "attention V must be rank-2");
+        assert_eq!(vs.dim(1), heads * d_head, "V features != heads * d_head");
+        assert_eq!(
+            ps.dim(0) % heads,
+            0,
+            "probs rows must fold heads * seq_q"
+        );
+        let params = AttnParams {
+            heads,
+            seq_q: ps.dim(0) / heads,
+            seq_kv: vs.dim(0),
+            d_head,
+        };
+        assert_eq!(ps.dim(1), params.seq_kv, "probs cols != V rows (seq_kv)");
+        let out = self.push_tensor(TensorDesc::nc16(params.seq_q, heads * d_head));
+        self.push_op(name, OpKind::AttnContext { params }, vec![probs, v], out, 0)
+    }
+
+    /// KV-cache append: stream this step's K and V projections back to
+    /// DRAM (the decode workload's per-step cache *write* traffic). A
+    /// sink op — its output is a bookkeeping tensor nothing consumes.
+    pub fn kv_append(&mut self, name: &str, k_new: TensorId, v_new: TensorId) -> TensorId {
+        assert_eq!(
+            self.tensors[k_new].shape, self.tensors[v_new].shape,
+            "kv_append K/V shape mismatch"
+        );
+        let elems = self.tensors[k_new].shape.elems();
+        let out = self.push_tensor(TensorDesc::nc16(1, 2 * elems));
+        self.push_op(
+            name,
+            OpKind::KvAppend { elems },
+            vec![k_new, v_new],
+            out,
+            0,
+        )
     }
 
     /// Finish and return the graph.

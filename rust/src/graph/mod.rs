@@ -13,7 +13,7 @@ pub use builder::{GraphBuilder, Padding};
 pub use training::training_step;
 
 use crate::tensor::TensorDesc;
-use crate::tiling::{ConvParams, FcParams, PoolParams};
+use crate::tiling::{AttnParams, ConvParams, FcParams, GemmDims, PoolParams};
 use std::collections::HashMap;
 
 /// Fused activation function.
@@ -23,6 +23,8 @@ pub enum Activation {
     Relu,
     /// Exponential linear unit (ELU nets).
     Elu,
+    /// Gaussian error linear unit (tanh approximation; transformer FFNs).
+    Gelu,
 }
 
 /// Operator kind with its parameters.
@@ -60,6 +62,64 @@ pub enum OpKind {
     /// Flatten NHWC -> NC for the classifier head (a layout transform:
     /// pure software data movement).
     Flatten,
+    /// Weighted GEMM over rank-2 activations: `[m, k] @ [k, n] + bias[n]`
+    /// (transformer QKV/output/FFN projections; `m` is the token count,
+    /// unlike [`OpKind::InnerProduct`] whose batch dim is 1).
+    Linear {
+        /// GEMM geometry (m = rows/tokens, k = input features, n = output).
+        params: GemmDims,
+        /// Fused activation, if any.
+        activation: Option<Activation>,
+    },
+    /// Attention score GEMMs, `scores[h] = Q[h] @ K[h]^T`, one batched
+    /// GEMM per head. Inputs: `[q, k]`, both `[seq, heads * d_head]`;
+    /// output `[heads * seq_q, seq_kv]` with heads folded into rows.
+    /// The `1/sqrt(d_head)` scale is part of the operator's semantics.
+    AttnScores {
+        /// Attention geometry (heads / seq lengths / head dim).
+        params: AttnParams,
+    },
+    /// Attention context GEMMs, `out[h] = P[h] @ V[h]`, one batched GEMM
+    /// per head. Inputs: `[probs, v]`; output `[seq_q, heads * d_head]`.
+    AttnContext {
+        /// Attention geometry (heads / seq lengths / head dim).
+        params: AttnParams,
+    },
+    /// Row-wise softmax over a rank-2 `[rows, cols]` tensor.
+    Softmax {
+        /// Independent softmax rows.
+        rows: usize,
+        /// Elements per row.
+        cols: usize,
+    },
+    /// Layer normalization over the last dimension of `[rows, cols]`,
+    /// with learned per-feature gamma/beta (`2 * cols` parameters).
+    LayerNorm {
+        /// Independent normalization rows (tokens).
+        rows: usize,
+        /// Features normalized over.
+        cols: usize,
+    },
+    /// Embedding-table lookup: gather `tokens` rows of `dim` features out
+    /// of a `[vocab, dim]` parameter table. The gathered rows are the
+    /// op's weight traffic — a sparse, memory-bound read pattern.
+    Embedding {
+        /// Vocabulary size (table rows).
+        vocab: usize,
+        /// Embedding dimension (table cols).
+        dim: usize,
+        /// Number of token lookups.
+        tokens: usize,
+    },
+    /// KV-cache append for autoregressive decode: stream the current
+    /// step's K and V projections (`elems` each) back to DRAM. Pure data
+    /// movement — this is the per-step KV *write* traffic; the cache
+    /// *read* traffic is the K/V operands of [`OpKind::AttnScores`] /
+    /// [`OpKind::AttnContext`].
+    KvAppend {
+        /// Elements per appended tensor (K and V each).
+        elems: usize,
+    },
 }
 
 impl OpKind {
@@ -74,6 +134,13 @@ impl OpKind {
             OpKind::EltwiseAdd { .. } => "E",
             OpKind::Act(_) => "A",
             OpKind::Flatten => "R",
+            OpKind::Linear { .. } => "M",
+            OpKind::AttnScores { .. } => "Q",
+            OpKind::AttnContext { .. } => "X",
+            OpKind::Softmax { .. } => "S",
+            OpKind::LayerNorm { .. } => "N",
+            OpKind::Embedding { .. } => "V",
+            OpKind::KvAppend { .. } => "K",
         }
     }
 
@@ -200,6 +267,7 @@ impl Graph {
                         OpKind::Conv { activation: None, .. }
                             | OpKind::InnerProduct { activation: None, .. }
                             | OpKind::EltwiseAdd { activation: None }
+                            | OpKind::Linear { activation: None, .. }
                     );
                     if fusable {
                         target = Some((prod.id, op.id, a));
@@ -213,7 +281,8 @@ impl Graph {
             match &mut self.ops[pid].kind {
                 OpKind::Conv { activation, .. }
                 | OpKind::InnerProduct { activation, .. }
-                | OpKind::EltwiseAdd { activation } => *activation = Some(act),
+                | OpKind::EltwiseAdd { activation }
+                | OpKind::Linear { activation, .. } => *activation = Some(act),
                 _ => unreachable!(),
             }
             self.ops[pid].output = act_out;

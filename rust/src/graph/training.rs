@@ -80,11 +80,60 @@ pub fn training_step(fwd: &Graph) -> Graph {
                 );
                 push_update(&mut g, op);
             }
+            OpKind::Linear { params, .. } => {
+                // dX = dY @ W^T, dW = X^T @ dY: each the forward MACs.
+                use crate::tiling::GemmDims;
+                let dx = GemmDims { m: params.m, k: params.n, n: params.k };
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd_dx", op.name),
+                    OpKind::Linear { params: dx, activation: None },
+                    TensorDesc::nc16(params.m, params.k),
+                    0,
+                );
+                let dw = GemmDims { m: params.k, k: params.m, n: params.n };
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd_dw", op.name),
+                    OpKind::Linear { params: dw, activation: None },
+                    TensorDesc::nc16(params.k, params.n),
+                    0,
+                );
+                push_update(&mut g, op);
+            }
+            OpKind::AttnScores { params } => {
+                // dQ and dK are each another score-shaped batched GEMM.
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd", op.name),
+                    OpKind::AttnScores { params: *params },
+                    fwd.tensors[op.output].clone(),
+                    0,
+                );
+            }
+            OpKind::AttnContext { params } => {
+                // dP and dV are each another context-shaped batched GEMM.
+                push_clone(
+                    &mut g,
+                    op,
+                    &format!("{}_bwd", op.name),
+                    OpKind::AttnContext { params: *params },
+                    fwd.tensors[op.output].clone(),
+                    0,
+                );
+            }
             OpKind::MaxPool(_)
             | OpKind::AvgPool(_)
             | OpKind::BatchNorm
             | OpKind::EltwiseAdd { .. }
-            | OpKind::Act(_) => {
+            | OpKind::Act(_)
+            | OpKind::Softmax { .. }
+            | OpKind::LayerNorm { .. }
+            | OpKind::Embedding { .. }
+            | OpKind::KvAppend { .. } => {
                 // Backward of these is an element-wise sweep over the
                 // op's input-sized gradient.
                 let desc = fwd.tensors[op.inputs[0]].clone();

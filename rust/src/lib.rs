@@ -123,6 +123,41 @@
 //! [`sim`] now only hosts the functional-execution machinery `Session`
 //! drives.)
 //!
+//! ## Transformer workloads
+//!
+//! The network zoo ([`nets`]) includes a transformer family built from
+//! the non-conv operator set (embedding gather, LayerNorm, batched
+//! GEMM via [`graph::OpKind::Linear`], per-head attention
+//! ([`graph::OpKind::AttnScores`] / [`graph::OpKind::AttnContext`]),
+//! softmax, GELU): **`bert-tiny`**, a BERT-class pre-LN encoder
+//! ([`nets::bert_encoder`] is fully configurable), and **`decode`**,
+//! one autoregressive step against a DRAM-resident KV cache
+//! ([`nets::decode_step`]). Decode's per-step cache reads (the
+//! attention ops' weight operands) and writes
+//! ([`graph::OpKind::KvAppend`]) are explicit DRAM traffic through the
+//! TaskGraph IR, so the workload is memory-bound where the CNN zoo is
+//! compute-bound — widening `SocBuilder::dram_channels` moves decode
+//! latency by a strictly larger ratio than VGG16 (pinned by
+//! `tests/transformer_invariants.rs`):
+//!
+//! ```no_run
+//! use smaug::api::{Scenario, Session, Soc};
+//!
+//! for channels in [1, 4] {
+//!     let soc = Soc::builder().dram_channels(channels).build();
+//!     let report = Session::on(soc)
+//!         .network("decode") // or "bert-tiny"
+//!         .scenario(Scenario::Inference)
+//!         .run()
+//!         .unwrap();
+//!     println!("{channels} DRAM channel(s): {} ns", report.total_ns);
+//! }
+//! ```
+//!
+//! Both nets flow through the same lowering, executors, serving and
+//! cluster machinery as the CNNs; `examples/decode_serving.rs` runs an
+//! open-loop decode tenant through `smaug serve`'s machinery.
+//!
 //! ## Parallel sweeps and the layer-timing cache
 //!
 //! Design-space sweeps are the simulator's hottest path, so

@@ -11,6 +11,7 @@ mod elu;
 mod lenet5;
 mod minerva;
 mod resnet50;
+mod transformer;
 mod vgg16;
 
 pub use cnn10::cnn10;
@@ -18,19 +19,24 @@ pub use elu::{elu16, elu24};
 pub use lenet5::lenet5;
 pub use minerva::minerva;
 pub use resnet50::resnet50;
+pub use transformer::{bert_encoder, bert_tiny, decode, decode_step};
 pub use vgg16::vgg16;
 
 use crate::graph::Graph;
 use anyhow::{bail, Result};
 
-/// All network names, in the paper's Table III order.
+/// All network names: the paper's Table III zoo, then the transformer
+/// family (ROADMAP item 5).
 pub const ALL_NETWORKS: &[&str] = &[
     "minerva", "lenet5", "cnn10", "vgg16", "elu16", "elu24", "resnet50",
+    "bert-tiny", "decode",
 ];
 
 /// Networks small enough for quick CI runs (everything but ResNet50).
-pub const FAST_NETWORKS: &[&str] =
-    &["minerva", "lenet5", "cnn10", "vgg16", "elu16", "elu24"];
+pub const FAST_NETWORKS: &[&str] = &[
+    "minerva", "lenet5", "cnn10", "vgg16", "elu16", "elu24", "bert-tiny",
+    "decode",
+];
 
 /// Build a network by name (fused, ready to simulate).
 pub fn build_network(name: &str) -> Result<Graph> {
@@ -42,6 +48,8 @@ pub fn build_network(name: &str) -> Result<Graph> {
         "elu16" => elu16(),
         "elu24" => elu24(),
         "resnet50" => resnet50(),
+        "bert-tiny" => bert_tiny(),
+        "decode" => decode(),
         other => bail!("unknown network '{other}' (try one of {ALL_NETWORKS:?})"),
     };
     g.fuse();

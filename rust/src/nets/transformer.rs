@@ -1,0 +1,207 @@
+//! Transformer workloads (ROADMAP item 5): a BERT-class encoder and an
+//! autoregressive KV-cache decode step.
+//!
+//! Both are built from the non-conv operator set (embedding gather,
+//! LayerNorm, batched GEMM, per-head attention, softmax, GELU, residual
+//! add) and flow through the same tiling/lowering/scheduling machinery
+//! as the CNN zoo. The decode step is the memory-bound counterpoint to
+//! the conv nets: its per-step KV-cache reads (attention score/context
+//! weight operands) and writes ([`crate::graph::OpKind::KvAppend`]) are
+//! explicit DRAM traffic, so `--dram-channels` / `--link-gbps` sweeps
+//! move decode latency where they barely move VGG16.
+
+use crate::graph::{Activation, Graph, GraphBuilder, TensorId};
+
+/// Default `bert-tiny` geometry: 2 layers, 2 heads, d_model 128,
+/// FFN 512, sequence 128, vocab 2048.
+pub fn bert_tiny() -> Graph {
+    bert_encoder("bert-tiny", 2, 2, 128, 512, 128, 2048)
+}
+
+/// Default `decode` geometry: one autoregressive step of the bert-tiny
+/// stack against a 512-entry KV cache.
+pub fn decode() -> Graph {
+    decode_step("decode", 2, 2, 128, 512, 512, 2048)
+}
+
+/// One pre-LN block: self-attention (Q/K/V projected from one
+/// LayerNorm) + FFN, both with residuals. Returns the block output.
+#[allow(clippy::too_many_arguments)]
+fn attn_ffn_block(
+    g: &mut GraphBuilder,
+    l: usize,
+    x: TensorId,
+    k: TensorId,
+    v: TensorId,
+    q_src: TensorId,
+    heads: usize,
+    d_model: usize,
+    d_ffn: usize,
+) -> TensorId {
+    let d_head = d_model / heads;
+    let q = g.linear(&format!("l{l}_q"), q_src, d_model, None);
+    let s = g.attn_scores(&format!("l{l}_scores"), q, k, heads, d_head);
+    let p = g.softmax(&format!("l{l}_softmax"), s);
+    let ctx = g.attn_context(&format!("l{l}_ctx"), p, v, heads, d_head);
+    let proj = g.linear(&format!("l{l}_proj"), ctx, d_model, None);
+    let res1 = g.add(&format!("l{l}_res1"), proj, x, None);
+    let ln2 = g.layer_norm(&format!("l{l}_ln2"), res1);
+    let ff1 = g.linear(&format!("l{l}_ff1"), ln2, d_ffn, Some(Activation::Gelu));
+    let ff2 = g.linear(&format!("l{l}_ff2"), ff1, d_model, None);
+    g.add(&format!("l{l}_res2"), ff2, res1, None)
+}
+
+/// Configurable BERT-class encoder: token ids -> embedding -> `layers`
+/// pre-LN blocks -> final LayerNorm -> vocab-sized head.
+pub fn bert_encoder(
+    name: &str,
+    layers: usize,
+    heads: usize,
+    d_model: usize,
+    d_ffn: usize,
+    seq: usize,
+    vocab: usize,
+) -> Graph {
+    assert_eq!(d_model % heads, 0, "d_model must divide into heads");
+    let mut g = GraphBuilder::new(name);
+    let ids = g.input_nc("ids", seq, 1);
+    let mut x = g.embedding("embed", ids, vocab, d_model);
+    for l in 0..layers {
+        let ln1 = g.layer_norm(&format!("l{l}_ln1"), x);
+        let k = g.linear(&format!("l{l}_k"), ln1, d_model, None);
+        let v = g.linear(&format!("l{l}_v"), ln1, d_model, None);
+        x = attn_ffn_block(&mut g, l, x, k, v, ln1, heads, d_model, d_ffn);
+    }
+    let lnf = g.layer_norm("final_ln", x);
+    g.linear("head", lnf, vocab, None);
+    g.build()
+}
+
+/// One autoregressive decode step at KV-cache length `cache_len`: a
+/// single token embeds, attends over the DRAM-resident per-layer
+/// K/V caches (explicit inputs — their reads are the attention ops'
+/// weight-operand traffic), appends its fresh K/V rows
+/// ([`crate::graph::OpKind::KvAppend`] — the write traffic), and
+/// projects to vocab logits.
+pub fn decode_step(
+    name: &str,
+    layers: usize,
+    heads: usize,
+    d_model: usize,
+    d_ffn: usize,
+    cache_len: usize,
+    vocab: usize,
+) -> Graph {
+    assert_eq!(d_model % heads, 0, "d_model must divide into heads");
+    let d_head = d_model / heads;
+    let mut g = GraphBuilder::new(name);
+    let tok = g.input_nc("token", 1, 1);
+    let mut x = g.embedding("embed", tok, vocab, d_model);
+    for l in 0..layers {
+        let kcache = g.input_nc(&format!("l{l}_kcache"), cache_len, d_model);
+        let vcache = g.input_nc(&format!("l{l}_vcache"), cache_len, d_model);
+        let ln1 = g.layer_norm(&format!("l{l}_ln1"), x);
+        let q = g.linear(&format!("l{l}_q"), ln1, d_model, None);
+        let k_new = g.linear(&format!("l{l}_k"), ln1, d_model, None);
+        let v_new = g.linear(&format!("l{l}_v"), ln1, d_model, None);
+        // Sink op: models this step's cache-write DRAM traffic.
+        g.kv_append(&format!("l{l}_kv"), k_new, v_new);
+        let s = g.attn_scores(&format!("l{l}_scores"), q, kcache, heads, d_head);
+        let p = g.softmax(&format!("l{l}_softmax"), s);
+        let ctx = g.attn_context(&format!("l{l}_ctx"), p, vcache, heads, d_head);
+        let proj = g.linear(&format!("l{l}_proj"), ctx, d_model, None);
+        let res1 = g.add(&format!("l{l}_res1"), proj, x, None);
+        let ln2 = g.layer_norm(&format!("l{l}_ln2"), res1);
+        let ff1 = g.linear(&format!("l{l}_ff1"), ln2, d_ffn, Some(Activation::Gelu));
+        let ff2 = g.linear(&format!("l{l}_ff2"), ff1, d_model, None);
+        x = g.add(&format!("l{l}_res2"), ff2, res1, None);
+    }
+    let lnf = g.layer_norm("final_ln", x);
+    g.linear("lm_head", lnf, vocab, None);
+    g.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    fn count(g: &Graph, pred: impl Fn(&OpKind) -> bool) -> usize {
+        g.ops.iter().filter(|o| pred(&o.kind)).count()
+    }
+
+    #[test]
+    fn bert_tiny_structure() {
+        let g = bert_tiny();
+        assert_eq!(g.topo_order().len(), g.ops.len()); // DAG
+        assert_eq!(count(&g, |k| matches!(k, OpKind::AttnScores { .. })), 2);
+        assert_eq!(count(&g, |k| matches!(k, OpKind::AttnContext { .. })), 2);
+        assert_eq!(count(&g, |k| matches!(k, OpKind::Softmax { .. })), 2);
+        // Per layer: ln1 + ln2, plus the final LN.
+        assert_eq!(count(&g, |k| matches!(k, OpKind::LayerNorm { .. })), 5);
+        // Per layer: k, v, q, proj, ff1, ff2; plus the head.
+        assert_eq!(count(&g, |k| matches!(k, OpKind::Linear { .. })), 13);
+        assert_eq!(count(&g, |k| matches!(k, OpKind::Embedding { .. })), 1);
+        assert_eq!(count(&g, |k| matches!(k, OpKind::KvAppend { .. })), 0);
+    }
+
+    #[test]
+    fn bert_tiny_param_footprint() {
+        let g = bert_tiny();
+        let (l, d, f, v) = (2usize, 128usize, 512usize, 2048usize);
+        let per_layer = 2 * 2 * d // two LayerNorms' gamma/beta
+            + 4 * (d * d + d)      // q, k, v, proj
+            + (d * f + f)          // ff1
+            + (f * d + d); // ff2
+        let expect = v * d          // embedding table
+            + l * per_layer
+            + 2 * d                 // final LN
+            + d * v + v; // head
+        assert_eq!(g.param_elems(), expect);
+    }
+
+    #[test]
+    fn decode_kv_traffic_scales_with_cache_len() {
+        // The KV-cache bytes an attention step reads are linear in the
+        // cache length — the decode memory-bound signature.
+        let short = decode_step("d256", 2, 2, 128, 512, 256, 2048);
+        let long = decode_step("d512", 2, 2, 128, 512, 512, 2048);
+        let kv_elems = |g: &Graph| -> usize {
+            g.ops
+                .iter()
+                .filter_map(|o| match &o.kind {
+                    OpKind::AttnScores { params } | OpKind::AttnContext { params } => {
+                        Some(params.seq_kv * params.heads * params.d_head)
+                    }
+                    _ => None,
+                })
+                .sum()
+        };
+        assert_eq!(kv_elems(&long), 2 * kv_elems(&short));
+    }
+
+    #[test]
+    fn decode_appends_fresh_kv_every_layer() {
+        let g = decode();
+        let appends: Vec<_> = g
+            .ops
+            .iter()
+            .filter_map(|o| match o.kind {
+                OpKind::KvAppend { elems } => Some(elems),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(appends, vec![128, 128]); // one [1, d_model] K row each
+    }
+
+    #[test]
+    fn decode_has_per_layer_cache_inputs() {
+        let g = decode();
+        let inputs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Input))
+            .count();
+        assert_eq!(inputs, 1 + 2 * 2); // token + K/V cache per layer
+    }
+}

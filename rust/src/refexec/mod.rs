@@ -23,6 +23,14 @@ pub fn activate(data: &mut [f32], act: Option<Activation>) {
                 }
             }
         }
+        Some(Activation::Gelu) => {
+            // tanh approximation: 0.5x(1 + tanh(√(2/π)(x + 0.044715x³))).
+            const C: f32 = 0.797_884_6; // sqrt(2/pi)
+            for v in data.iter_mut() {
+                let x = *v;
+                *v = 0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh());
+            }
+        }
     }
 }
 
@@ -197,6 +205,140 @@ pub fn eltwise_add(a: &[f32], b: &[f32]) -> Vec<f32> {
     a.iter().zip(b).map(|(x, y)| x + y).collect()
 }
 
+/// Row-wise numerically-stable softmax over an (rows, cols) matrix.
+pub fn softmax_rows(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        let mut sum = 0.0f32;
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - max).exp();
+            sum += *o;
+        }
+        let inv = 1.0 / sum;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Row-wise LayerNorm over an (rows, cols) matrix with per-column
+/// `gamma`/`beta` (eps = 1e-5).
+pub fn layer_norm(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    cols: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(gamma.len(), cols);
+    assert_eq!(beta.len(), cols);
+    const EPS: f32 = 1e-5;
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var =
+            row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            orow[c] = (row[c] - mean) * inv * gamma[c] + beta[c];
+        }
+    }
+    out
+}
+
+/// Embedding gather: `ids` (tokens) of normalized row positions into a
+/// (vocab, dim) table — `|id|` in [0, 1) scales to a row index, larger
+/// magnitudes wrap. (The functional harness feeds uniform [-1, 1) ids,
+/// so tokens spread across the whole table.)
+pub fn embedding_gather(
+    ids: &[f32],
+    table: &[f32],
+    vocab: usize,
+    dim: usize,
+) -> Vec<f32> {
+    assert_eq!(table.len(), vocab * dim);
+    let mut out = vec![0.0f32; ids.len() * dim];
+    for (t, &id) in ids.iter().enumerate() {
+        let row = (id.abs() * vocab as f32) as usize % vocab;
+        out[t * dim..(t + 1) * dim]
+            .copy_from_slice(&table[row * dim..(row + 1) * dim]);
+    }
+    out
+}
+
+/// Attention scores `Q @ K^T / sqrt(d_head)` per head: `q` is
+/// (seq_q, heads*d_head), `k` is (seq_kv, heads*d_head); output is
+/// (heads*seq_q, seq_kv) with head blocks stacked along rows.
+pub fn attn_scores(
+    q: &[f32],
+    k: &[f32],
+    heads: usize,
+    seq_q: usize,
+    seq_kv: usize,
+    d_head: usize,
+) -> Vec<f32> {
+    assert_eq!(q.len(), seq_q * heads * d_head);
+    assert_eq!(k.len(), seq_kv * heads * d_head);
+    let width = heads * d_head;
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let mut out = vec![0.0f32; heads * seq_q * seq_kv];
+    for h in 0..heads {
+        for i in 0..seq_q {
+            let qrow = &q[i * width + h * d_head..i * width + (h + 1) * d_head];
+            for j in 0..seq_kv {
+                let krow =
+                    &k[j * width + h * d_head..j * width + (h + 1) * d_head];
+                let dot: f32 =
+                    qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                out[(h * seq_q + i) * seq_kv + j] = dot * scale;
+            }
+        }
+    }
+    out
+}
+
+/// Attention context `P @ V` per head: `probs` is (heads*seq_q, seq_kv)
+/// head-stacked, `v` is (seq_kv, heads*d_head); output is
+/// (seq_q, heads*d_head) with heads re-interleaved along columns.
+pub fn attn_context(
+    probs: &[f32],
+    v: &[f32],
+    heads: usize,
+    seq_q: usize,
+    seq_kv: usize,
+    d_head: usize,
+) -> Vec<f32> {
+    assert_eq!(probs.len(), heads * seq_q * seq_kv);
+    assert_eq!(v.len(), seq_kv * heads * d_head);
+    let width = heads * d_head;
+    let mut out = vec![0.0f32; seq_q * width];
+    for h in 0..heads {
+        for i in 0..seq_q {
+            let prow = &probs[(h * seq_q + i) * seq_kv..(h * seq_q + i + 1) * seq_kv];
+            for (j, &p) in prow.iter().enumerate() {
+                if p == 0.0 {
+                    continue;
+                }
+                let vrow = &v[j * width + h * d_head..j * width + (h + 1) * d_head];
+                let orow =
+                    &mut out[i * width + h * d_head..i * width + (h + 1) * d_head];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,6 +466,73 @@ mod tests {
     }
 
     #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let s = softmax_rows(&x, 2, 3);
+        for r in 0..2 {
+            let sum: f32 = s[r * 3..(r + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        // Monotone in the logits.
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let out = layer_norm(&x, &[1.0; 4], &[0.0; 4], 1, 4);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn embedding_gathers_rows() {
+        let table = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]; // vocab=3, dim=2
+        // 0.4 -> row 1, 0.0 -> row 0, -0.9 -> row 2 (sign-blind).
+        let out = embedding_gather(&[0.4, 0.0, -0.9], &table, 3, 2);
+        assert_eq!(out, vec![1.0, 1.0, 0.0, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn attention_matches_manual_single_head() {
+        // 1 head, d_head=2: scores = q.k/sqrt(2), context = softmax@v.
+        let q = vec![1.0, 0.0]; // seq_q=1
+        let k = vec![1.0, 0.0, 0.0, 1.0]; // seq_kv=2
+        let s = attn_scores(&q, &k, 1, 1, 2, 2);
+        let inv = 1.0 / 2.0f32.sqrt();
+        assert!((s[0] - inv).abs() < 1e-6 && s[1].abs() < 1e-6);
+        let p = softmax_rows(&s, 1, 2);
+        let v = vec![10.0, 0.0, 0.0, 10.0];
+        let ctx = attn_context(&p, &v, 1, 1, 2, 2);
+        assert!((ctx[0] + ctx[1] - 10.0).abs() < 1e-4);
+        assert!(ctx[0] > ctx[1], "higher score row dominates");
+    }
+
+    #[test]
+    fn multi_head_attention_is_per_head_blocked() {
+        // Two heads with orthogonal Q: each head's scores depend only on
+        // its own column block.
+        let mut rng = Rng::new(3);
+        let (heads, sq, skv, dh) = (2, 3, 4, 2);
+        let q = rng.vec_f32(sq * heads * dh, -1.0, 1.0);
+        let k = rng.vec_f32(skv * heads * dh, -1.0, 1.0);
+        let s = attn_scores(&q, &k, heads, sq, skv, dh);
+        assert_eq!(s.len(), heads * sq * skv);
+        // Head 0's block must equal a single-head run on the sliced data.
+        let q0: Vec<f32> = (0..sq).flat_map(|i| {
+            q[i * heads * dh..i * heads * dh + dh].to_vec()
+        }).collect();
+        let k0: Vec<f32> = (0..skv).flat_map(|j| {
+            k[j * heads * dh..j * heads * dh + dh].to_vec()
+        }).collect();
+        let s0 = attn_scores(&q0, &k0, 1, sq, skv, dh);
+        let diff = crate::util::max_abs_diff(&s[..sq * skv], &s0);
+        assert!(diff < 1e-6, "diff {diff}");
+    }
+
+    #[test]
     fn relu_and_elu() {
         let mut d = vec![-1.0, 0.5];
         activate(&mut d, Some(Activation::Relu));
@@ -332,5 +541,10 @@ mod tests {
         activate(&mut d, Some(Activation::Elu));
         assert!((d[0] - (-0.632_120_56)).abs() < 1e-6);
         assert_eq!(d[1], 0.5);
+        let mut d = vec![0.0f32, 1.0, -1.0];
+        activate(&mut d, Some(Activation::Gelu));
+        assert_eq!(d[0], 0.0);
+        assert!((d[1] - 0.841_192).abs() < 1e-3, "gelu(1) = {}", d[1]);
+        assert!((d[2] + 0.158_808).abs() < 1e-3, "gelu(-1) = {}", d[2]);
     }
 }

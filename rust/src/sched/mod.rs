@@ -70,7 +70,10 @@ use crate::mem::{MemorySystem, Route, TrafficClass, TransferReq, LLC_USABLE_FRAC
 use crate::stats::{
     Breakdown, OpRecord, PipelineStats, RequestRecord, ServeReport, ServingStats, SimReport,
 };
-use crate::tiling::{plan_conv, plan_eltwise, plan_fc, plan_pool, TilingPlan};
+use crate::tiling::{
+    plan_attn_context, plan_attn_scores, plan_conv, plan_eltwise, plan_embedding,
+    plan_fc, plan_gemm, plan_pool, TilingPlan,
+};
 use crate::trace::{EventKind, Lane, Timeline};
 
 /// The runtime scheduler and its SoC state.
@@ -163,6 +166,37 @@ pub fn plan_op(op: &Op, graph: &Graph, soc: &SocConfig) -> Option<PlannedOp> {
                 class: KernelClass::Eltwise { ops: 1 },
             })
         }
+        OpKind::Linear { params, .. } => Some(PlannedOp {
+            plan: plan_gemm(params, soc),
+            class: KernelClass::BatchGemm,
+        }),
+        OpKind::AttnScores { params } => Some(PlannedOp {
+            plan: plan_attn_scores(params, soc),
+            class: KernelClass::BatchGemm,
+        }),
+        OpKind::AttnContext { params } => Some(PlannedOp {
+            plan: plan_attn_context(params, soc),
+            class: KernelClass::BatchGemm,
+        }),
+        // Softmax: exp + running sum + divide + max-subtract ≈ 4 vector
+        // ops per element. LayerNorm: mean/var accumulate + normalize +
+        // scale/shift ≈ 4 ops per element.
+        OpKind::Softmax { rows, cols } | OpKind::LayerNorm { rows, cols } => {
+            Some(PlannedOp {
+                plan: plan_eltwise(rows * cols, 1, soc),
+                class: KernelClass::Eltwise { ops: 4 },
+            })
+        }
+        OpKind::Embedding { dim, tokens, .. } => Some(PlannedOp {
+            plan: plan_embedding(*dim, *tokens, soc),
+            class: KernelClass::Eltwise { ops: 1 },
+        }),
+        // KV append streams the fresh K and V rows through and writes
+        // them back to the DRAM-resident cache: 2*elems read + written.
+        OpKind::KvAppend { elems } => Some(PlannedOp {
+            plan: plan_eltwise(2 * elems, 1, soc),
+            class: KernelClass::Eltwise { ops: 1 },
+        }),
         OpKind::Input | OpKind::Flatten => None,
     }
 }

@@ -12,7 +12,10 @@ use crate::graph::{Activation, Graph, Op, OpKind};
 use crate::refexec;
 use crate::runtime::GemmExec;
 use crate::tensor::{Tensor, TensorDesc};
-use crate::tiling::{extract_region_padded, insert_region, plan_conv, plan_fc};
+use crate::tiling::{
+    extract_region_padded, insert_region, plan_attn_context, plan_attn_scores,
+    plan_conv, plan_fc, plan_gemm,
+};
 use crate::util::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
@@ -34,6 +37,14 @@ pub struct OpParams {
 /// direct and tiled paths agree).
 pub fn gen_params(graph: &Graph, seed: u64) -> HashMap<usize, OpParams> {
     let mut map = HashMap::new();
+    // The first Input op carries the run's input tensor; any further
+    // Input ops (e.g. decode's KV-cache operands) get deterministic
+    // synthetic contents here so both forward paths agree.
+    let primary_input = graph
+        .ops
+        .iter()
+        .find(|o| matches!(o.kind, OpKind::Input))
+        .map(|o| o.id);
     for op in &graph.ops {
         let mut rng =
             Rng::new(seed ^ (op.id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
@@ -63,6 +74,31 @@ pub fn gen_params(graph: &Graph, seed: u64) -> HashMap<usize, OpParams> {
                     ..Default::default()
                 }
             }
+            OpKind::Linear { params, .. } => {
+                let scale = 1.0 / (params.k as f32).sqrt();
+                OpParams {
+                    weights: rng.vec_f32(params.k * params.n, -scale, scale),
+                    bias: rng.vec_f32(params.n, -0.05, 0.05),
+                    ..Default::default()
+                }
+            }
+            OpKind::LayerNorm { cols, .. } => OpParams {
+                bn_scale: rng.vec_f32(*cols, 0.8, 1.2),
+                bn_shift: rng.vec_f32(*cols, -0.1, 0.1),
+                ..Default::default()
+            },
+            OpKind::Embedding { vocab, dim, .. } => OpParams {
+                weights: rng.vec_f32(vocab * dim, -1.0, 1.0),
+                ..Default::default()
+            },
+            OpKind::Input if Some(op.id) != primary_input => OpParams {
+                weights: rng.vec_f32(
+                    graph.tensors[op.output].shape.elems(),
+                    -1.0,
+                    1.0,
+                ),
+                ..Default::default()
+            },
             _ => OpParams::default(),
         };
         map.insert(op.id, p);
@@ -107,6 +143,11 @@ pub fn direct_forward(
         let op = &graph.ops[oid];
         let p = &params[&op.id];
         let out = match &op.kind {
+            // Primary input (empty weights) carries the run's tensor;
+            // auxiliary inputs (KV caches) carry their synthetic contents.
+            OpKind::Input if !p.weights.is_empty() => {
+                Tensor::from_data(graph.tensors[op.output].clone(), p.weights.clone())
+            }
             OpKind::Input => input.clone(),
             OpKind::Conv { params: cp, activation } => {
                 let x = get(&outs, op.inputs[0]);
@@ -142,6 +183,55 @@ pub fn direct_forward(
             OpKind::Flatten => {
                 let x = get(&outs, op.inputs[0]);
                 Tensor::from_data(graph.tensors[op.output].clone(), x.data)
+            }
+            OpKind::Linear { params: gp, activation } => {
+                let x = get(&outs, op.inputs[0]);
+                let mut y = refexec::gemm(&x.data, &p.weights, gp.m, gp.k, gp.n);
+                for i in 0..gp.m {
+                    for j in 0..gp.n {
+                        y[i * gp.n + j] += p.bias[j];
+                    }
+                }
+                refexec::activate(&mut y, *activation);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::AttnScores { params: ap } => {
+                let q = get(&outs, op.inputs[0]);
+                let k = get(&outs, op.inputs[1]);
+                let y = refexec::attn_scores(
+                    &q.data, &k.data, ap.heads, ap.seq_q, ap.seq_kv, ap.d_head,
+                );
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::AttnContext { params: ap } => {
+                let probs = get(&outs, op.inputs[0]);
+                let v = get(&outs, op.inputs[1]);
+                let y = refexec::attn_context(
+                    &probs.data, &v.data, ap.heads, ap.seq_q, ap.seq_kv, ap.d_head,
+                );
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::Softmax { rows, cols } => {
+                let x = get(&outs, op.inputs[0]);
+                let y = refexec::softmax_rows(&x.data, *rows, *cols);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::LayerNorm { rows, cols } => {
+                let x = get(&outs, op.inputs[0]);
+                let y = refexec::layer_norm(&x.data, &p.bn_scale, &p.bn_shift, *rows, *cols);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::Embedding { vocab, dim, .. } => {
+                let ids = get(&outs, op.inputs[0]);
+                let y = refexec::embedding_gather(&ids.data, &p.weights, *vocab, *dim);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::KvAppend { .. } => {
+                let k = get(&outs, op.inputs[0]);
+                let v = get(&outs, op.inputs[1]);
+                let mut y = k.data.clone();
+                y.extend_from_slice(&v.data);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
             }
         };
         outs.insert(op.id, out);
@@ -195,6 +285,9 @@ pub fn tiled_forward(
         let op = &graph.ops[oid];
         let p = &params[&op.id];
         let out: Tensor = match &op.kind {
+            OpKind::Input if !p.weights.is_empty() => {
+                Tensor::from_data(graph.tensors[op.output].clone(), p.weights.clone())
+            }
             OpKind::Input => input.clone(),
             OpKind::Conv { params: cp, activation } => {
                 let x = outs[&producer[&op.inputs[0]]].clone();
@@ -311,6 +404,147 @@ pub fn tiled_forward(
                 let x = outs[&producer[&op.inputs[0]]].clone();
                 Tensor::from_data(graph.tensors[op.output].clone(), x.data)
             }
+            OpKind::Linear { params: gp, activation } => {
+                let x = outs[&producer[&op.inputs[0]]].clone();
+                let plan = plan_gemm(gp, soc);
+                let mut y = Tensor::zeros(graph.tensors[op.output].clone());
+                let mut acc: HashMap<u32, Vec<f32>> = HashMap::new();
+                for item in &plan.items {
+                    let (m0, k0c) = (item.in_region.off[0], item.c_range.0);
+                    let (m, kd, n) = (item.gemm.m, item.gemm.k, item.gemm.n);
+                    let (n0, _) = item.k_range;
+                    // Input block: rows m0.., contraction cols k0c..
+                    let mut a = vec![0.0f32; m * kd];
+                    for i in 0..m {
+                        a[i * kd..(i + 1) * kd].copy_from_slice(
+                            &x.data[(m0 + i) * gp.k + k0c..(m0 + i) * gp.k + k0c + kd],
+                        );
+                    }
+                    // Weight block of the (k x n) row-major matrix.
+                    let mut wm = vec![0.0f32; kd * n];
+                    for ki in 0..kd {
+                        wm[ki * n..(ki + 1) * n].copy_from_slice(
+                            &p.weights[(k0c + ki) * gp.n + n0..(k0c + ki) * gp.n + n0 + n],
+                        );
+                    }
+                    let res = exec.gemm(&a, &wm, m, kd, n, None, false)?;
+                    let e = acc
+                        .entry(item.reduce_group)
+                        .or_insert_with(|| vec![0.0f32; m * n]);
+                    for (o, v) in e.iter_mut().zip(&res) {
+                        *o += v;
+                    }
+                    if item.last_in_group {
+                        let mut done = acc.remove(&item.reduce_group).unwrap();
+                        for i in 0..m {
+                            for j in 0..n {
+                                done[i * n + j] += p.bias[n0 + j];
+                            }
+                        }
+                        insert_region(&mut y, &item.out_region, &done);
+                    }
+                }
+                refexec::activate(&mut y.data, *activation);
+                y
+            }
+            OpKind::AttnScores { params: ap } => {
+                let q = outs[&producer[&op.inputs[0]]].clone();
+                let k = outs[&producer[&op.inputs[1]]].clone();
+                let plan = plan_attn_scores(ap, soc);
+                let width = ap.heads * ap.d_head;
+                let scale = 1.0 / (ap.d_head as f32).sqrt();
+                let mut y = Tensor::zeros(graph.tensors[op.output].clone());
+                for item in &plan.items {
+                    let (q0, h0) = (item.in_region.off[0], item.c_range.0);
+                    let (v0, _) = item.k_range;
+                    let (m, dh, n) = (item.gemm.m, item.gemm.k, item.gemm.n);
+                    // Q block: rows q0.., this head's column slice.
+                    let mut a = vec![0.0f32; m * dh];
+                    for i in 0..m {
+                        a[i * dh..(i + 1) * dh].copy_from_slice(
+                            &q.data[(q0 + i) * width + h0..(q0 + i) * width + h0 + dh],
+                        );
+                    }
+                    // K^T block: (d_head x kv_t) from the cache rows v0..
+                    let mut wm = vec![0.0f32; dh * n];
+                    for j in 0..n {
+                        for d in 0..dh {
+                            wm[d * n + j] = k.data[(v0 + j) * width + h0 + d];
+                        }
+                    }
+                    let mut res = exec.gemm(&a, &wm, m, dh, n, None, false)?;
+                    for v in res.iter_mut() {
+                        *v *= scale;
+                    }
+                    insert_region(&mut y, &item.out_region, &res);
+                }
+                y
+            }
+            OpKind::AttnContext { params: ap } => {
+                let probs = outs[&producer[&op.inputs[0]]].clone();
+                let v = outs[&producer[&op.inputs[1]]].clone();
+                let plan = plan_attn_context(ap, soc);
+                let width = ap.heads * ap.d_head;
+                let mut y = Tensor::zeros(graph.tensors[op.output].clone());
+                let mut acc: HashMap<u32, Vec<f32>> = HashMap::new();
+                for item in &plan.items {
+                    let p0 = item.in_region.off[0];
+                    let (v0, _) = item.c_range;
+                    let (h0, _) = item.k_range;
+                    let (m, kd, n) = (item.gemm.m, item.gemm.k, item.gemm.n);
+                    // Probability block: head-folded rows p0.., kv cols v0..
+                    let mut a = vec![0.0f32; m * kd];
+                    for i in 0..m {
+                        a[i * kd..(i + 1) * kd].copy_from_slice(
+                            &probs.data
+                                [(p0 + i) * ap.seq_kv + v0..(p0 + i) * ap.seq_kv + v0 + kd],
+                        );
+                    }
+                    // V block: cache rows v0.., this head's column slice.
+                    let mut wm = vec![0.0f32; kd * n];
+                    for j in 0..kd {
+                        wm[j * n..(j + 1) * n].copy_from_slice(
+                            &v.data[(v0 + j) * width + h0..(v0 + j) * width + h0 + n],
+                        );
+                    }
+                    let res = exec.gemm(&a, &wm, m, kd, n, None, false)?;
+                    let e = acc
+                        .entry(item.reduce_group)
+                        .or_insert_with(|| vec![0.0f32; m * n]);
+                    for (o, vv) in e.iter_mut().zip(&res) {
+                        *o += vv;
+                    }
+                    if item.last_in_group {
+                        let done = acc.remove(&item.reduce_group).unwrap();
+                        insert_region(&mut y, &item.out_region, &done);
+                    }
+                }
+                y
+            }
+            // Normalization, gathers and cache appends execute natively
+            // (vector-datapath ops; functional result is backend-identical).
+            OpKind::Softmax { rows, cols } => {
+                let x = &outs[&producer[&op.inputs[0]]];
+                let y = refexec::softmax_rows(&x.data, *rows, *cols);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::LayerNorm { rows, cols } => {
+                let x = &outs[&producer[&op.inputs[0]]];
+                let y = refexec::layer_norm(&x.data, &p.bn_scale, &p.bn_shift, *rows, *cols);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::Embedding { vocab, dim, .. } => {
+                let ids = &outs[&producer[&op.inputs[0]]];
+                let y = refexec::embedding_gather(&ids.data, &p.weights, *vocab, *dim);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
+            OpKind::KvAppend { .. } => {
+                let k = &outs[&producer[&op.inputs[0]]];
+                let v = &outs[&producer[&op.inputs[1]]];
+                let mut y = k.data.clone();
+                y.extend_from_slice(&v.data);
+                Tensor::from_data(graph.tensors[op.output].clone(), y)
+            }
         };
         let _ = conv_act(op);
         outs.insert(op.id, out);
@@ -356,6 +590,16 @@ mod tests {
     #[test]
     fn minerva_tiled_matches_direct() {
         check_net("minerva", 1e-3);
+    }
+
+    #[test]
+    fn bert_tiny_tiled_matches_direct() {
+        check_net("bert-tiny", 1e-3);
+    }
+
+    #[test]
+    fn decode_tiled_matches_direct() {
+        check_net("decode", 1e-3);
     }
 
     #[test]

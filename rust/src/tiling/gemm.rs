@@ -1,0 +1,470 @@
+//! Tiling plans for the transformer operators: batched/tall GEMMs
+//! (linear projections), per-head attention GEMMs, and embedding
+//! gathers.
+//!
+//! The plans follow the same contract as [`super::simple`]: every work
+//! item fits the scratchpads, reduction groups chain contraction blocks
+//! in order on one accelerator, and the per-item byte claims are exact
+//! so work-conservation invariants hold across executors. The per-head
+//! attention plans mirror the flash-attention tiling discipline — Q
+//! tiles stay resident while K/V stream through in scratchpad-sized
+//! blocks — but here only the *traffic and cycle* consequences are
+//! modeled; numerics run in the reference executor.
+
+use super::{
+    region_copy_stats, CopyStats, GemmDims, Region, TilingPlan, TilingStrategy,
+    WorkItem,
+};
+use crate::config::SocConfig;
+use crate::tensor::Shape;
+use crate::util::ceil_div;
+
+/// Multi-head attention geometry shared by the score and context GEMMs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnParams {
+    /// Number of attention heads.
+    pub heads: usize,
+    /// Query sequence length (1 for autoregressive decode).
+    pub seq_q: usize,
+    /// Key/value sequence length (the KV-cache length for decode).
+    pub seq_kv: usize,
+    /// Per-head feature dimension.
+    pub d_head: usize,
+}
+
+impl AttnParams {
+    /// MACs of the score GEMMs: `heads * seq_q * d_head * seq_kv`.
+    pub fn score_macs(&self) -> u64 {
+        (self.heads * self.seq_q * self.d_head * self.seq_kv) as u64
+    }
+
+    /// MACs of the context GEMMs: `heads * seq_q * seq_kv * d_head`.
+    pub fn context_macs(&self) -> u64 {
+        self.score_macs()
+    }
+}
+
+/// Pick the largest PE-multiple `n` tile with `k_t * n_t <= spad`.
+fn n_tile(k_t: usize, n: usize, soc: &SocConfig) -> usize {
+    let n_cap = crate::runtime::CANONICAL_N[crate::runtime::CANONICAL_N.len() - 1];
+    let max_n = (soc.spad_elems() / k_t).max(1).min(n_cap);
+    if max_n >= soc.nvdla_pes {
+        (max_n / soc.nvdla_pes) * soc.nvdla_pes
+    } else {
+        max_n
+    }
+    .min(n)
+}
+
+/// FC-style lane utilization: contraction rounds to MACC width, output
+/// features to PEs.
+fn gemm_utilization(k: usize, n: usize, soc: &SocConfig) -> f64 {
+    let occ_k = ceil_div(k, soc.nvdla_macc_width) * soc.nvdla_macc_width;
+    let occ_n = ceil_div(n, soc.nvdla_pes) * soc.nvdla_pes;
+    (k as f64 / occ_k as f64) * (n as f64 / occ_n as f64)
+}
+
+/// Plan a weighted GEMM `[m, k] @ [k, n]` (transformer linear layer):
+/// [`plan_fc`](super::plan_fc) generalized to `m > 1` output rows. Rows
+/// tile so the input block fits the scratchpad; the contraction and
+/// output features tile exactly like FC.
+pub fn plan_gemm(g: &GemmDims, soc: &SocConfig) -> TilingPlan {
+    let spad = soc.spad_elems();
+    let eb = soc.elem_bytes;
+    let k_cap = crate::runtime::CANONICAL_K[crate::runtime::CANONICAL_K.len() - 1];
+    let m_cap = crate::runtime::CANONICAL_M[crate::runtime::CANONICAL_M.len() - 1];
+    let k_t = g.k.min(spad).min(k_cap);
+    // Rows: largest tile with an input block m_t * k_t in one scratchpad.
+    let mut m_t = g.m.min(m_cap).min((spad / k_t).max(1));
+    let n_t = n_tile(k_t, g.n, soc);
+    // Output block m_t * n_t must also fit.
+    while m_t > 1 && m_t * n_t > spad {
+        m_t = ceil_div(m_t, 2);
+    }
+    let (n_m, n_k, n_n) = (ceil_div(g.m, m_t), ceil_div(g.k, k_t), ceil_div(g.n, n_t));
+
+    let in_shape = Shape::nc(g.m, g.k);
+    let out_shape = Shape::nc(g.m, g.n);
+    let mut items = Vec::new();
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut prep_tasks: Vec<CopyStats> = Vec::new();
+    let mut finalize_tasks: Vec<CopyStats> = Vec::new();
+    let mut group = 0u32;
+    // `nb` outermost keeps the lowering's prep chunking exact: item i's
+    // input block equals prep task i mod (n_m * n_k).
+    for nb in 0..n_n {
+        let n0 = nb * n_t;
+        let n1 = (n0 + n_t).min(g.n);
+        for mb in 0..n_m {
+            let m0 = mb * m_t;
+            let m1 = (m0 + m_t).min(g.m);
+            let out_region = Region::new(&[m0, n0], &[m1 - m0, n1 - n0]);
+            let fstat = region_copy_stats(&out_shape, &out_region, eb);
+            finalize.add(fstat);
+            finalize_tasks.push(fstat);
+            for kb in 0..n_k {
+                let k0 = kb * k_t;
+                let k1 = (k0 + k_t).min(g.k);
+                let in_region = Region::new(&[m0, k0], &[m1 - m0, k1 - k0]);
+                if nb == 0 {
+                    let pstat = region_copy_stats(&in_shape, &in_region, eb);
+                    prep.add(pstat);
+                    prep_tasks.push(pstat);
+                }
+                let last = kb == n_k - 1;
+                let (m, k, n) = (m1 - m0, k1 - k0, n1 - n0);
+                items.push(WorkItem {
+                    in_region,
+                    pad_lo: [0; 4],
+                    pad_hi: [0; 4],
+                    out_region: out_region.clone(),
+                    c_range: (k0, k1),
+                    k_range: (n0, n1),
+                    reduce_group: group,
+                    last_in_group: last,
+                    gemm: GemmDims { m, k, n },
+                    macs: (m * k * n) as u64,
+                    in_bytes: (m * k * eb) as u64,
+                    wgt_bytes: (k * n * eb) as u64,
+                    out_bytes: if last { (m * n * eb) as u64 } else { 0 },
+                });
+            }
+            group += 1;
+        }
+    }
+    TilingPlan {
+        strategy: TilingStrategy::new(false, n_k > 1, n_m > 1, false),
+        items,
+        prep,
+        finalize,
+        prep_tasks,
+        finalize_tasks,
+        weight_bytes: (g.k * g.n * eb) as u64,
+        num_reduce_groups: group,
+        utilization: gemm_utilization(g.k, g.n, soc),
+    }
+}
+
+/// Plan the attention score GEMMs `scores[h] = Q[h] @ K[h]^T`: per head,
+/// a Q row block stays scratchpad-resident while KV-cache key blocks
+/// stream through as the weight operand — every byte of K read per step
+/// is explicit accelerator traffic (the decode read side of the KV
+/// cache). The contraction (`d_head`) is never tiled, so every item is
+/// its own reduction group.
+pub fn plan_attn_scores(p: &AttnParams, soc: &SocConfig) -> TilingPlan {
+    let spad = soc.spad_elems();
+    let eb = soc.elem_bytes;
+    let dh = p.d_head.min(spad);
+    // K blocks: kv_t keys of dh features each; Q blocks: q_t resident rows.
+    let kv_t = n_tile(dh, p.seq_kv, soc);
+    let mut q_t = p.seq_q.min((spad / dh).max(1));
+    while q_t > 1 && q_t * kv_t > spad {
+        q_t = ceil_div(q_t, 2);
+    }
+    let (n_q, n_kv) = (ceil_div(p.seq_q, q_t), ceil_div(p.seq_kv, kv_t));
+
+    let q_shape = Shape::nc(p.seq_q, p.heads * p.d_head);
+    let out_shape = Shape::nc(p.heads * p.seq_q, p.seq_kv);
+    let mut items = Vec::new();
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut prep_tasks: Vec<CopyStats> = Vec::new();
+    let mut finalize_tasks: Vec<CopyStats> = Vec::new();
+    let mut group = 0u32;
+    let mut weight_bytes = 0u64;
+    // `kvb` outermost keeps prep chunking exact: the Q tile of item i is
+    // prep task i mod (heads * n_q).
+    for kvb in 0..n_kv {
+        let v0 = kvb * kv_t;
+        let v1 = (v0 + kv_t).min(p.seq_kv);
+        for h in 0..p.heads {
+            for qb in 0..n_q {
+                let q0 = qb * q_t;
+                let q1 = (q0 + q_t).min(p.seq_q);
+                let in_region =
+                    Region::new(&[q0, h * p.d_head], &[q1 - q0, p.d_head]);
+                if kvb == 0 {
+                    let pstat = region_copy_stats(&q_shape, &in_region, eb);
+                    prep.add(pstat);
+                    prep_tasks.push(pstat);
+                }
+                let out_region =
+                    Region::new(&[h * p.seq_q + q0, v0], &[q1 - q0, v1 - v0]);
+                let fstat = region_copy_stats(&out_shape, &out_region, eb);
+                finalize.add(fstat);
+                finalize_tasks.push(fstat);
+                let (m, k, n) = (q1 - q0, p.d_head, v1 - v0);
+                let wgt = (k * n * eb) as u64; // K-cache block read
+                weight_bytes += wgt;
+                items.push(WorkItem {
+                    in_region,
+                    pad_lo: [0; 4],
+                    pad_hi: [0; 4],
+                    out_region,
+                    c_range: (h * p.d_head, (h + 1) * p.d_head),
+                    k_range: (v0, v1),
+                    reduce_group: group,
+                    last_in_group: true,
+                    gemm: GemmDims { m, k, n },
+                    macs: (m * k * n) as u64,
+                    in_bytes: (m * k * eb) as u64,
+                    wgt_bytes: wgt,
+                    out_bytes: (m * n * eb) as u64,
+                });
+                group += 1;
+            }
+        }
+    }
+    TilingPlan {
+        strategy: TilingStrategy::new(false, false, n_q > 1, n_kv > 1),
+        items,
+        prep,
+        finalize,
+        prep_tasks,
+        finalize_tasks,
+        weight_bytes,
+        num_reduce_groups: group,
+        utilization: gemm_utilization(p.d_head, p.seq_kv.min(kv_t), soc),
+    }
+}
+
+/// Plan the attention context GEMMs `out[h] = P[h] @ V[h]`: per head and
+/// Q block, one reduction group chains KV-cache value blocks as the
+/// contraction — partial outputs accumulate in the scratchpad while V is
+/// streamed (the other read side of the KV cache).
+pub fn plan_attn_context(p: &AttnParams, soc: &SocConfig) -> TilingPlan {
+    let spad = soc.spad_elems();
+    let eb = soc.elem_bytes;
+    let dh = p.d_head.min(spad);
+    // V blocks: kv_t values of dh features; P blocks: q_t x kv_t probs.
+    let mut kv_t = p.seq_kv.min((spad / dh).max(1));
+    let mut q_t = p.seq_q.min((spad / kv_t.max(1)).max(1));
+    while q_t > 1 && q_t * dh > spad {
+        q_t = ceil_div(q_t, 2);
+    }
+    while kv_t > 1 && q_t * kv_t > spad {
+        kv_t = ceil_div(kv_t, 2);
+    }
+    let (n_q, n_kv) = (ceil_div(p.seq_q, q_t), ceil_div(p.seq_kv, kv_t));
+
+    let probs_shape = Shape::nc(p.heads * p.seq_q, p.seq_kv);
+    let out_shape = Shape::nc(p.seq_q, p.heads * p.d_head);
+    let mut items = Vec::new();
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut prep_tasks: Vec<CopyStats> = Vec::new();
+    let mut finalize_tasks: Vec<CopyStats> = Vec::new();
+    let mut group = 0u32;
+    let mut weight_bytes = 0u64;
+    for h in 0..p.heads {
+        for qb in 0..n_q {
+            let q0 = qb * q_t;
+            let q1 = (q0 + q_t).min(p.seq_q);
+            let out_region =
+                Region::new(&[q0, h * p.d_head], &[q1 - q0, p.d_head]);
+            let fstat = region_copy_stats(&out_shape, &out_region, eb);
+            finalize.add(fstat);
+            finalize_tasks.push(fstat);
+            for kvb in 0..n_kv {
+                let v0 = kvb * kv_t;
+                let v1 = (v0 + kv_t).min(p.seq_kv);
+                // Probability block: rows of this head's fold, kv columns.
+                let in_region =
+                    Region::new(&[h * p.seq_q + q0, v0], &[q1 - q0, v1 - v0]);
+                let pstat = region_copy_stats(&probs_shape, &in_region, eb);
+                prep.add(pstat);
+                prep_tasks.push(pstat);
+                let last = kvb == n_kv - 1;
+                let (m, k, n) = (q1 - q0, v1 - v0, p.d_head);
+                let wgt = (k * n * eb) as u64; // V-cache block read
+                weight_bytes += wgt;
+                items.push(WorkItem {
+                    in_region,
+                    pad_lo: [0; 4],
+                    pad_hi: [0; 4],
+                    out_region: out_region.clone(),
+                    c_range: (v0, v1),
+                    k_range: (h * p.d_head, (h + 1) * p.d_head),
+                    reduce_group: group,
+                    last_in_group: last,
+                    gemm: GemmDims { m, k, n },
+                    macs: (m * k * n) as u64,
+                    in_bytes: (m * k * eb) as u64,
+                    wgt_bytes: wgt,
+                    out_bytes: if last { (m * n * eb) as u64 } else { 0 },
+                });
+            }
+            group += 1;
+        }
+    }
+    TilingPlan {
+        strategy: TilingStrategy::new(false, n_kv > 1, n_q > 1, false),
+        items,
+        prep,
+        finalize,
+        prep_tasks,
+        finalize_tasks,
+        weight_bytes,
+        num_reduce_groups: group,
+        utilization: gemm_utilization(p.seq_kv.min(kv_t), p.d_head, soc),
+    }
+}
+
+/// Plan an embedding gather: token-id chunks sized so the gathered rows
+/// fit the scratchpad. The gathered table rows are the op's weight
+/// traffic — `tokens * dim` elements regardless of vocabulary size (the
+/// table itself stays DRAM-resident).
+pub fn plan_embedding(
+    dim: usize,
+    tokens: usize,
+    soc: &SocConfig,
+) -> TilingPlan {
+    let spad = soc.spad_elems();
+    let eb = soc.elem_bytes;
+    let t_chunk = tokens.min((spad / dim.max(1)).max(1));
+    let n_t = ceil_div(tokens, t_chunk);
+    let ids_shape = Shape::nc(tokens, 1);
+    let out_shape = Shape::nc(tokens, dim);
+    let mut items = Vec::new();
+    let mut prep = CopyStats::default();
+    let mut finalize = CopyStats::default();
+    let mut prep_tasks: Vec<CopyStats> = Vec::new();
+    let mut finalize_tasks: Vec<CopyStats> = Vec::new();
+    let mut weight_bytes = 0u64;
+    for t in 0..n_t {
+        let t0 = t * t_chunk;
+        let t1 = (t0 + t_chunk).min(tokens);
+        let in_region = Region::new(&[t0, 0], &[t1 - t0, 1]);
+        let out_region = Region::new(&[t0, 0], &[t1 - t0, dim]);
+        let pstat = region_copy_stats(&ids_shape, &in_region, eb);
+        prep.add(pstat);
+        prep_tasks.push(pstat);
+        let fstat = region_copy_stats(&out_shape, &out_region, eb);
+        finalize.add(fstat);
+        finalize_tasks.push(fstat);
+        let n_tok = t1 - t0;
+        let wgt = (n_tok * dim * eb) as u64; // gathered table rows
+        weight_bytes += wgt;
+        items.push(WorkItem {
+            in_region,
+            pad_lo: [0; 4],
+            pad_hi: [0; 4],
+            out_region,
+            c_range: (t0, t1),
+            k_range: (0, dim),
+            reduce_group: t as u32,
+            last_in_group: true,
+            gemm: GemmDims {
+                m: n_tok * dim,
+                k: 1,
+                n: 1,
+            },
+            macs: (n_tok * dim) as u64,
+            in_bytes: (n_tok * eb) as u64,
+            wgt_bytes: wgt,
+            out_bytes: (n_tok * dim * eb) as u64,
+        });
+    }
+    TilingPlan {
+        strategy: if n_t > 1 {
+            TilingStrategy::new(false, false, true, false)
+        } else {
+            TilingStrategy::NONE
+        },
+        items,
+        prep,
+        finalize,
+        prep_tasks,
+        finalize_tasks,
+        weight_bytes,
+        num_reduce_groups: n_t as u32,
+        utilization: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn soc() -> SocConfig {
+        SocConfig::default()
+    }
+
+    fn check_spad(plan: &TilingPlan) {
+        let spad = soc().spad_elems();
+        for i in &plan.items {
+            assert!(i.gemm.m * i.gemm.k <= spad, "input tile too big: {i:?}");
+            assert!(i.gemm.k * i.gemm.n <= spad, "weight tile too big: {i:?}");
+            assert!(i.gemm.m * i.gemm.n <= spad, "output tile too big: {i:?}");
+        }
+    }
+
+    #[test]
+    fn gemm_plan_covers_all_macs() {
+        let g = GemmDims { m: 128, k: 128, n: 512 };
+        let plan = plan_gemm(&g, &soc());
+        assert_eq!(plan.total_macs(), (g.m * g.k * g.n) as u64);
+        check_spad(&plan);
+        // Row blocks write the full output exactly once.
+        let out: u64 = plan.items.iter().map(|i| i.out_bytes).sum();
+        assert_eq!(out, (g.m * g.n * soc().elem_bytes) as u64);
+    }
+
+    #[test]
+    fn gemm_prep_chunking_is_exact() {
+        // The IR chunks prep when items[i].in_region ==
+        // prep_tasks[i % n_prep]'s region; the nb-outermost loop order
+        // guarantees it.
+        let g = GemmDims { m: 512, k: 768, n: 768 };
+        let plan = plan_gemm(&g, &soc());
+        let n_prep = plan.prep_tasks.len();
+        assert!(n_prep > 0 && plan.items.len() % n_prep == 0);
+        for (i, item) in plan.items.iter().enumerate() {
+            assert_eq!(item.in_region, plan.items[i % n_prep].in_region);
+        }
+    }
+
+    #[test]
+    fn attn_scores_decode_reads_whole_k_cache() {
+        // Decode: one query token against a 512-entry KV cache. The K
+        // bytes streamed must equal the whole per-head cache, every step.
+        let p = AttnParams { heads: 4, seq_q: 1, seq_kv: 512, d_head: 64 };
+        let plan = plan_attn_scores(&p, &soc());
+        let kv_read: u64 = plan.items.iter().map(|i| i.wgt_bytes).sum();
+        assert_eq!(
+            kv_read,
+            (p.heads * p.seq_kv * p.d_head * soc().elem_bytes) as u64
+        );
+        assert_eq!(plan.total_macs(), p.score_macs());
+        check_spad(&plan);
+    }
+
+    #[test]
+    fn attn_context_chains_kv_blocks_per_group() {
+        let p = AttnParams { heads: 2, seq_q: 128, seq_kv: 512, d_head: 64 };
+        let plan = plan_attn_context(&p, &soc());
+        assert_eq!(plan.total_macs(), p.context_macs());
+        check_spad(&plan);
+        // Each group ends with exactly one write-back.
+        let writes = plan.items.iter().filter(|i| i.last_in_group).count();
+        assert_eq!(writes as u32, plan.num_reduce_groups);
+        // Every (head, q-block) group streams the whole per-head V slice.
+        let v_read: u64 = plan.items.iter().map(|i| i.wgt_bytes).sum();
+        assert_eq!(
+            v_read,
+            plan.num_reduce_groups as u64
+                * (p.seq_kv * p.d_head * soc().elem_bytes) as u64
+        );
+    }
+
+    #[test]
+    fn embedding_gathers_exactly_tokens_times_dim() {
+        let plan = plan_embedding(128, 384, &soc());
+        let gathered: u64 = plan.items.iter().map(|i| i.wgt_bytes).sum();
+        assert_eq!(gathered, (384 * 128 * soc().elem_bytes) as u64);
+        assert_eq!(plan.weight_bytes, gathered);
+        let out: usize = plan.items.iter().map(|i| i.out_region.elems()).sum();
+        assert_eq!(out, 384 * 128);
+    }
+}

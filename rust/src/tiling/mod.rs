@@ -13,10 +13,14 @@
 //! tiles), estimates software + compute cost for each, and picks the best.
 
 mod conv;
+mod gemm;
 mod memcpy;
 mod simple;
 
 pub use conv::{plan_conv, ConvParams};
+pub use gemm::{
+    plan_attn_context, plan_attn_scores, plan_embedding, plan_gemm, AttnParams,
+};
 pub use memcpy::{
     extract_region_padded, insert_region, region_copy_stats, CopyStats, Region,
 };

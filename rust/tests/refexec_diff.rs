@@ -26,8 +26,11 @@ use smaug::nets;
 /// Absolute tolerance on max |tiled - direct| over all op outputs.
 const TOL: f32 = 1e-3;
 
-/// Nets cheap enough for every `cargo test` run (MNIST/CIFAR scale).
-const SMALL_NETS: &[&str] = &["minerva", "lenet5", "cnn10", "elu16"];
+/// Nets cheap enough for every `cargo test` run (MNIST/CIFAR scale,
+/// plus the transformer family — attention/LayerNorm/GEMM ops are
+/// covered on every run, not just nightlies).
+const SMALL_NETS: &[&str] =
+    &["minerva", "lenet5", "cnn10", "elu16", "bert-tiny", "decode"];
 
 fn max_divergence(net: &str) -> f32 {
     let report = Session::on(Soc::default())

@@ -4,6 +4,10 @@
 Used by CI after `smaug run/serve ... --report json` to make sure the
 unified report serializer keeps its schema contract: versioned schema id,
 the full scenario-invariant key set, and populated scenario sections.
+
+The prose specification of every key and coupling rule lives in
+docs/REPORT_SCHEMA.md — keep that file and the constants below in
+lockstep.
 """
 import json
 import sys
